@@ -1,0 +1,78 @@
+//! Compression example: the QSALR pipeline (Table 6) applied to the base
+//! model at several operating points — dense f32, 50% bitmap, NF4, and
+//! 20%-sparse + NF4 (QSALR) — with byte-exact file sizes and roundtrip
+//! error per encoding.
+//!
+//! Run: `cargo run --release --example compress_model` (after `make artifacts`)
+
+use anyhow::Result;
+use salr::eval::ExpContext;
+use salr::model::{load_model, save_model, Encoding};
+use salr::salr::{Baseline, BaselineSpec};
+use salr::tensor::sub;
+
+fn main() -> Result<()> {
+    salr::util::logger::init();
+    if std::env::var("SALR_PRETRAIN_STEPS").is_err() {
+        std::env::set_var("SALR_PRETRAIN_STEPS", "60");
+    }
+    let ctx = ExpContext::new("artifacts", "tiny", "results")?;
+    let base = ctx.base_model()?;
+    let adapted: std::collections::HashSet<String> =
+        ctx.cfg.adapted_layers().into_iter().collect();
+
+    println!("== model compression operating points ==");
+    println!(
+        "{:<26} {:>12} {:>8} {:>12}",
+        "encoding", "bytes", "ratio", "weight rel-err"
+    );
+    let dir = ctx.results_dir.join("compress_demo");
+    std::fs::create_dir_all(&dir)?;
+
+    let mut dense_bytes = 0u64;
+    for (label, sparsity, enc) in [
+        ("dense f32", 0.0, Encoding::Dense),
+        ("bitmap @50%", 0.5, Encoding::Bitmap),
+        ("NF4 (dense)", 0.0, Encoding::Nf4),
+        ("QSALR: 20% + NF4", 0.2, Encoding::SparseNf4),
+        ("bitmap+NF4 @50%", 0.5, Encoding::SparseNf4),
+    ] {
+        // Prune (if requested) with SALR's static Method-1 mask.
+        let store = if sparsity > 0.0 {
+            BaselineSpec::build(&ctx.cfg, &base, Baseline::Salr, sparsity, 3).params
+        } else {
+            base.clone()
+        };
+        let path = dir.join(format!("{}.salr", label.replace([' ', ':', '%', '+'], "_")));
+        let bytes = save_model(&path, &store, |name, t| {
+            if adapted.contains(name) && t.ndim() == 2 {
+                enc
+            } else {
+                Encoding::Dense
+            }
+        })?;
+        if dense_bytes == 0 {
+            dense_bytes = bytes;
+        }
+        // Roundtrip error on one representative layer.
+        let back = load_model(&path)?;
+        let name = "layer0.w_in";
+        let (orig, got) = (store.get(name).unwrap(), back.get(name).unwrap());
+        let rel = if orig.fro_norm() > 0.0 {
+            sub(got, orig).fro_norm() / orig.fro_norm()
+        } else {
+            0.0
+        };
+        println!(
+            "{:<26} {:>12} {:>7.2}x {:>11.3}%",
+            label,
+            salr::util::human_bytes(bytes),
+            dense_bytes as f64 / bytes as f64,
+            rel * 100.0
+        );
+    }
+    println!("\npaper Table 6 shape: QSALR ≈5x smaller than dense with minimal accuracy cost;");
+    println!("bitmap @50% alone gives the paper's 2x (Fig. 1 / Table 3).");
+    println!("compress_model OK");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Serving example: start the batching TCP server over a SALR-deployed
+//! model (bitmap pipeline backend), fire concurrent client requests, and
+//! report latency/throughput — the paper's deployment story end to end.
+//!
+//! Run: `cargo run --release --example serve_batch` (after `make artifacts`)
+
+use anyhow::Result;
+use salr::eval::{deploy_engine, ExpContext, RunKey, Task};
+use salr::server::{serve, BatchPolicy, Client};
+use salr::util::json::Json;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    salr::util::logger::init();
+    // Keep the demo snappy: a lightly-trained model is fine for serving.
+    if std::env::var("SALR_STEPS").is_err() {
+        std::env::set_var("SALR_STEPS", "40");
+    }
+    if std::env::var("SALR_PRETRAIN_STEPS").is_err() {
+        std::env::set_var("SALR_PRETRAIN_STEPS", "60");
+    }
+    let ctx = ExpContext::new("artifacts", "tiny", "results")?;
+    let key = RunKey {
+        baseline: salr::salr::Baseline::Salr,
+        task: Task::Math,
+        sparsity: 0.5,
+    };
+    let (spec, adapters, _) = ctx.run(&key)?;
+    let engine = deploy_engine(&ctx.cfg, &spec, &adapters, None)?;
+
+    // Start the server on an ephemeral port.
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve(
+            engine,
+            "127.0.0.1:0",
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(4),
+            },
+            Some(tx),
+        )
+    });
+    let addr = rx.recv()?;
+    println!("server up on {addr}");
+
+    // Fire 24 concurrent requests from 8 client threads.
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..8 {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<Vec<Json>> {
+            let mut client = Client::connect(&addr)?;
+            let mut replies = Vec::new();
+            for i in 0..3 {
+                let a = 10 + c * 7 + i;
+                let b = 20 + i * 3;
+                let reply = client.generate(&format!("Q: {a}+{b}=? A: "), 5)?;
+                replies.push(reply);
+            }
+            Ok(replies)
+        }));
+    }
+    let mut total_tokens = 0usize;
+    let mut n = 0usize;
+    for h in handles {
+        for reply in h.join().unwrap()? {
+            n += 1;
+            total_tokens += reply.get("tokens").and_then(Json::as_usize).unwrap_or(0);
+            if n <= 4 {
+                println!(
+                    "  sample reply: text={:?} queue={:.1}ms compute={:.1}ms",
+                    reply.get("text").and_then(Json::as_str).unwrap_or(""),
+                    reply.get("queue_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                    reply.get("compute_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                );
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Pull server-side metrics, then shut down.
+    let mut client = Client::connect(&addr.to_string())?;
+    let metrics = client.metrics()?;
+    println!("\n== serving metrics ==");
+    println!(
+        "  requests: {}  mean batch: {:.2}",
+        metrics.get("requests").and_then(Json::as_usize).unwrap_or(0),
+        metrics
+            .get("mean_batch_size")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0),
+    );
+    println!(
+        "  latency p50/p90/p99: {:.1} / {:.1} / {:.1} ms",
+        metrics.get("latency_p50_ms").and_then(Json::as_f64).unwrap_or(0.0),
+        metrics.get("latency_p90_ms").and_then(Json::as_f64).unwrap_or(0.0),
+        metrics.get("latency_p99_ms").and_then(Json::as_f64).unwrap_or(0.0),
+    );
+    println!(
+        "  client-side: {n} requests, {total_tokens} tokens in {wall:.2}s → {:.1} tokens/s",
+        total_tokens as f64 / wall
+    );
+    client.shutdown()?;
+    server.join().unwrap()?;
+    println!("serve_batch OK");
+    Ok(())
+}

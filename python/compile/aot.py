@@ -1,0 +1,259 @@
+"""AOT lowering: JAX → HLO text artifacts + manifest for the rust runtime.
+
+HLO *text* (not ``.serialize()``): jax ≥ 0.5 emits HloModuleProtos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the rust binary is self-contained after.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--configs tiny,small]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import CONFIGS, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dict_specs(cfg: ModelConfig, keys, shapes_of):
+    return {k: _spec(shapes_of(k)) for k in keys}
+
+
+def _base_shape(cfg: ModelConfig, key: str):
+    if key == "embed":
+        return (cfg.vocab_size, cfg.d_model)
+    if key == "pos_embed":
+        return (cfg.max_seq_len, cfg.d_model)
+    if key == "lm_head":
+        return (cfg.d_model, cfg.vocab_size)
+    if key.endswith(("attn_norm", "mlp_norm")) or key == "final_norm":
+        return (cfg.d_model,)
+    if key.endswith(".mask"):
+        lin = key.split(".")[1]
+        return cfg.linear_shape(lin)
+    lin = key.split(".")[1]
+    return cfg.linear_shape(lin)
+
+
+def _trainable_shape(cfg: ModelConfig, key: str):
+    name, kind = key.rsplit(".", 1)
+    lin = name.split(".")[1]
+    d_in, d_out = cfg.linear_shape(lin)
+    if kind == "lora_a":
+        return (d_in, cfg.rank)
+    if kind == "lora_b":
+        return (cfg.rank, d_out)
+    if kind == "res_a":
+        return (d_in, cfg.residual_rank)
+    if kind == "res_b":
+        return (cfg.residual_rank, d_out)
+    raise ValueError(key)
+
+
+def _io_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def lower_pretrain(cfg: ModelConfig):
+    step = M.pretrain_step(cfg)
+    base_keys = M.frozen_keys(cfg, "lora")  # base params only (no masks)
+    params = _dict_specs(cfg, base_keys, lambda k: _base_shape(cfg, k))
+    m = params
+    v = params
+    tokens = _spec((cfg.batch_size, cfg.max_seq_len), jnp.int32)
+    mask = _spec((cfg.batch_size, cfg.max_seq_len))
+    t = _spec(())
+    lr = _spec(())
+    lowered = jax.jit(step, keep_unused=True).lower(params, m, v, t, tokens, mask, lr)
+    inputs = (
+        [_io_entry(f"param:{k}", _base_shape(cfg, k)) for k in base_keys]
+        + [_io_entry(f"m:{k}", _base_shape(cfg, k)) for k in base_keys]
+        + [_io_entry(f"v:{k}", _base_shape(cfg, k)) for k in base_keys]
+        + [
+            _io_entry("t", ()),
+            _io_entry("tokens", (cfg.batch_size, cfg.max_seq_len), "i32"),
+            _io_entry("loss_mask", (cfg.batch_size, cfg.max_seq_len)),
+            _io_entry("lr", ()),
+        ]
+    )
+    outputs = (
+        [_io_entry(f"param:{k}", _base_shape(cfg, k)) for k in base_keys]
+        + [_io_entry(f"m:{k}", _base_shape(cfg, k)) for k in base_keys]
+        + [_io_entry(f"v:{k}", _base_shape(cfg, k)) for k in base_keys]
+        + [_io_entry("loss", ())]
+    )
+    return lowered, inputs, outputs
+
+
+def lower_finetune(cfg: ModelConfig, variant: str):
+    step = M.finetune_step(cfg, variant)
+    fkeys = M.frozen_keys(cfg, variant)
+    tkeys = M.trainable_keys(cfg, variant)
+    frozen = _dict_specs(cfg, fkeys, lambda k: _base_shape(cfg, k))
+    trainable = _dict_specs(cfg, tkeys, lambda k: _trainable_shape(cfg, k))
+    tokens = _spec((cfg.batch_size, cfg.max_seq_len), jnp.int32)
+    mask = _spec((cfg.batch_size, cfg.max_seq_len))
+    scalar = _spec(())
+    lowered = jax.jit(step, keep_unused=True).lower(
+        frozen, trainable, trainable, trainable, scalar, tokens, mask, scalar, scalar
+    )
+    inputs = (
+        [_io_entry(f"frozen:{k}", _base_shape(cfg, k)) for k in fkeys]
+        + [_io_entry(f"train:{k}", _trainable_shape(cfg, k)) for k in tkeys]
+        + [_io_entry(f"m:{k}", _trainable_shape(cfg, k)) for k in tkeys]
+        + [_io_entry(f"v:{k}", _trainable_shape(cfg, k)) for k in tkeys]
+        + [
+            _io_entry("t", ()),
+            _io_entry("tokens", (cfg.batch_size, cfg.max_seq_len), "i32"),
+            _io_entry("loss_mask", (cfg.batch_size, cfg.max_seq_len)),
+            _io_entry("lr", ()),
+            _io_entry("eta", ()),
+        ]
+    )
+    outputs = (
+        [_io_entry(f"train:{k}", _trainable_shape(cfg, k)) for k in tkeys]
+        + [_io_entry(f"m:{k}", _trainable_shape(cfg, k)) for k in tkeys]
+        + [_io_entry(f"v:{k}", _trainable_shape(cfg, k)) for k in tkeys]
+        + [_io_entry("loss", ())]
+    )
+    return lowered, inputs, outputs
+
+
+def lower_eval(cfg: ModelConfig, variant: str, batch: int):
+    step = M.eval_logits(cfg, variant)
+    fkeys = M.frozen_keys(cfg, variant)
+    tkeys = M.trainable_keys(cfg, variant)
+    frozen = _dict_specs(cfg, fkeys, lambda k: _base_shape(cfg, k))
+    trainable = _dict_specs(cfg, tkeys, lambda k: _trainable_shape(cfg, k))
+    tokens = _spec((batch, cfg.max_seq_len), jnp.int32)
+    lowered = jax.jit(step, keep_unused=True).lower(frozen, trainable, tokens)
+    inputs = (
+        [_io_entry(f"frozen:{k}", _base_shape(cfg, k)) for k in fkeys]
+        + [_io_entry(f"train:{k}", _trainable_shape(cfg, k)) for k in tkeys]
+        + [_io_entry("tokens", (batch, cfg.max_seq_len), "i32")]
+    )
+    outputs = [
+        _io_entry("logits", (batch, cfg.max_seq_len, cfg.vocab_size))
+    ]
+    return lowered, inputs, outputs
+
+
+def lower_salr_kernel(cfg: ModelConfig):
+    """Pallas SALR-linear microbench artifact (interpret-mode kernel)."""
+    d_in, d_out = cfg.d_model, cfg.d_ff
+    nnz_pad = d_in * d_out  # worst-case padding, runtime passes real nnz
+    rank_total = cfg.rank + cfg.residual_rank
+    m_rows = cfg.batch_size * cfg.max_seq_len
+    wpr = (d_out + 31) // 32
+
+    def fn(x, words, values, offs, a_cat, b_cat):
+        return M.salr_linear_pallas(x, words, values, offs, a_cat, b_cat, d_out)
+
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        _spec((m_rows, d_in)),
+        _spec((d_in, wpr), jnp.uint32),
+        _spec((nnz_pad,)),
+        _spec((d_in,), jnp.int32),
+        _spec((d_in, rank_total)),
+        _spec((rank_total, d_out)),
+    )
+    inputs = [
+        _io_entry("x", (m_rows, d_in)),
+        _io_entry("mask_words", (d_in, wpr), "u32"),
+        _io_entry("values", (nnz_pad,)),
+        _io_entry("row_offsets", (d_in,), "i32"),
+        _io_entry("a_cat", (d_in, rank_total)),
+        _io_entry("b_cat", (rank_total, d_out)),
+    ]
+    outputs = [_io_entry("y", (m_rows, d_out))]
+    return lowered, inputs, outputs
+
+
+# Artifact plan: which steps to lower per config.
+PLAN = {
+    "tiny": [
+        "pretrain",
+        "train_lora",
+        "train_salr",
+        "train_losa",
+        "train_sparselora",
+        "eval_lora",
+        "eval_salr",
+        "eval_losa",
+        "salr_kernel_pallas",
+    ],
+    "small": ["pretrain", "train_lora", "train_salr", "eval_lora", "eval_salr"],
+}
+
+
+def build(outdir: str, config_names):
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"format": 1, "configs": {}, "artifacts": []}
+    for cname in config_names:
+        cfg = CONFIGS[cname]
+        manifest["configs"][cname] = cfg.to_dict()
+        for item in PLAN[cname]:
+            if item == "pretrain":
+                lowered, ins, outs = lower_pretrain(cfg)
+            elif item.startswith("train_"):
+                lowered, ins, outs = lower_finetune(cfg, item[len("train_"):])
+            elif item.startswith("eval_"):
+                lowered, ins, outs = lower_eval(cfg, item[len("eval_"):], cfg.batch_size)
+            elif item == "salr_kernel_pallas":
+                lowered, ins, outs = lower_salr_kernel(cfg)
+            else:
+                raise ValueError(item)
+            name = f"{item}_{cname}"
+            path = f"{name}.hlo.txt"
+            text = to_hlo_text(lowered)
+            with open(os.path.join(outdir, path), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "config": cname,
+                    "kind": item,
+                    "file": path,
+                    "inputs": ins,
+                    "outputs": outs,
+                }
+            )
+            print(f"lowered {name}: {len(text) / 1e6:.2f} MB, "
+                  f"{len(ins)} inputs, {len(outs)} outputs")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {os.path.join(outdir, 'manifest.json')} "
+          f"({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    args = ap.parse_args()
+    build(args.out, [c for c in args.configs.split(",") if c])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Model configurations shared between the JAX build path and (via the
+artifact manifest) the rust coordinator.
+
+Python is build-time only: these configs exist to shape the AOT-lowered
+HLO executables. The rust side reads everything it needs from
+``artifacts/manifest.json``; it never imports this module.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A decoder-only transformer with SALR-adapted linear layers."""
+
+    name: str = "tiny"
+    vocab_size: int = 256  # byte-level tokenizer
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq_len: int = 64
+    # LoRA adapter rank and scaling (alpha / rank).
+    rank: int = 8
+    lora_alpha: float = 16.0
+    # Sparsity-preservation residual adapter rank (Theorem 3's r).
+    residual_rank: int = 16
+    # Train-step batch shape (fixed at lowering time).
+    batch_size: int = 16
+    # SparseLoRA-style contextual sparsity: fraction of input channels kept.
+    ctx_keep: float = 0.5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def lora_scaling(self) -> float:
+        return self.lora_alpha / self.rank
+
+    def adapted_layers(self):
+        """Names of the linear layers that receive SALR treatment, in
+        canonical order. Mirrored by rust's ``model::params``."""
+        names = []
+        for layer in range(self.n_layers):
+            for lin in ("wq", "wk", "wv", "wo", "w_in", "w_out"):
+                names.append(f"layer{layer}.{lin}")
+        return names
+
+    def linear_shape(self, lin: str):
+        """(d_in, d_out) of an adapted linear by suffix name."""
+        if lin in ("wq", "wk", "wv", "wo"):
+            return (self.d_model, self.d_model)
+        if lin == "w_in":
+            return (self.d_model, self.d_ff)
+        if lin == "w_out":
+            return (self.d_ff, self.d_model)
+        raise ValueError(f"unknown linear {lin}")
+
+    def param_count(self) -> int:
+        n = 2 * self.vocab_size * self.d_model  # embedding + lm head
+        n += self.max_seq_len * self.d_model  # learned positions
+        n += self.n_layers * (
+            4 * self.d_model * self.d_model
+            + 2 * self.d_model * self.d_ff
+            + 2 * self.d_model  # two rmsnorm gains
+        )
+        n += self.d_model  # final norm
+        return n
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# Named configurations. "tiny" drives the unit tests and the table
+# experiments (fast enough to fine-tune many variants); "small" is the
+# end-to-end example model; "bench" stretches the serving benchmarks.
+CONFIGS = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(
+        name="small",
+        d_model=256,
+        n_layers=4,
+        n_heads=8,
+        d_ff=1024,
+        max_seq_len=128,
+        rank=16,
+        residual_rank=32,
+        batch_size=8,
+    ),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    return CONFIGS[name]

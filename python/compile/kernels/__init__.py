@@ -1,0 +1,21 @@
+# L1: Pallas kernels for the paper's compute hot-spots, plus pure-jnp
+# oracles (ref.py). All kernels run with interpret=True — the CPU PJRT
+# client cannot execute Mosaic custom-calls; TPU mapping rationale lives
+# in each module's docstring and DESIGN.md §Hardware-Adaptation.
+
+from . import ref
+from .bitmap_decode import bitmap_decode, bitmap_matmul
+from .fused_adapter import fused_adapter, sequential_adapters
+from .nf4 import nf4_dequant, nf4_matmul
+from .salr_matmul import salr_linear
+
+__all__ = [
+    "ref",
+    "bitmap_decode",
+    "bitmap_matmul",
+    "fused_adapter",
+    "sequential_adapters",
+    "nf4_dequant",
+    "nf4_matmul",
+    "salr_linear",
+]

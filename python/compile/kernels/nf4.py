@@ -1,0 +1,70 @@
+"""Pallas kernel: NF4 dequantize (+ matmul) for QSALR (Table 6).
+
+4-bit NormalFloat codes are unpacked (two per byte), mapped through the
+16-entry codebook and rescaled by per-block absmax — then fed to the MXU.
+TPU mapping: the codebook lookup is a 16-wide gather, a native VPU
+operation; the unpack is shift/AND vector work, overlapped with the dot
+via the grid pipeline as in ``bitmap_decode``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NF4_CODEBOOK
+
+
+def _dequant_rows(codes_rows, scales, codebook, row0, cols, block):
+    """Dequantize a panel of rows. ``codes_rows``: uint8[bk, cols//2]."""
+    bk = codes_rows.shape[0]
+    lo = (codes_rows & 0x0F).astype(jnp.int32)
+    hi = (codes_rows >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=2).reshape(bk, cols)
+    vals = codebook[idx]
+    # Global element index of each entry → block scale index.
+    elem = (row0 + jnp.arange(bk))[:, None] * cols + jnp.arange(cols)[None, :]
+    scale = scales[jnp.clip(elem // block, 0, scales.shape[0] - 1)]
+    return vals * scale
+
+
+def _dequant_kernel(codes_ref, scales_ref, codebook_ref, o_ref, *, cols, block, bk):
+    row0 = pl.program_id(0) * bk
+    o_ref[...] = _dequant_rows(
+        codes_ref[...], scales_ref[...], codebook_ref[...], row0, cols, block
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols", "block", "block_k"))
+def nf4_dequant(codes, scales, rows: int, cols: int, block: int, block_k: int = 256):
+    """Dequantize row-major packed NF4 codes to dense f32[rows, cols].
+
+    Args:
+      codes: uint8[rows, cols//2] packed codes (low nibble first). ``cols``
+        must be even (weight matrices here always are).
+      scales: f32[ceil(rows*cols/block)] per-block absmax scales.
+    """
+    assert cols % 2 == 0, "nf4 kernel requires even column count"
+    assert codes.shape == (rows, cols // 2), codes.shape
+    bk = min(block_k, rows)
+    grid = (pl.cdiv(rows, bk),)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, cols=cols, block=block, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, cols // 2), lambda i: (i, 0)),
+            pl.BlockSpec(scales.shape, lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bk, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(codes, scales, NF4_CODEBOOK)
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols", "block"))
+def nf4_matmul(x, codes, scales, rows: int, cols: int, block: int):
+    """``y = x @ dequant(codes)`` (dequant kernel + XLA dot)."""
+    w = nf4_dequant(codes, scales, rows, cols, block)
+    return x @ w

@@ -1,0 +1,98 @@
+"""Pallas kernel: the complete SALR linear layer.
+
+``y = x @ Ŵ + (x @ A_cat) @ B_cat`` — sparse pruned base weight (bitmap
+decoded per K-panel) plus the fused concatenated adapters (LoRA +
+sparsity-preservation residual), in one kernel.
+
+This is the paper's serving hot spot: the adapter GEMM executes on the
+first grid step while the first weight panel streams in ("the LoRA module
+participates in GEMM computation" during decode), then each subsequent
+step overlaps panel decode with the MXU dot via the Pallas pipeline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .bitmap_decode import _decode_block
+
+
+def _salr_kernel(
+    x_ref, xfull_ref, words_ref, values_ref, offs_ref, a_ref, b_ref, o_ref,
+    acc_ref, *, cols, k_total, bk
+):
+    kp = pl.program_id(1)
+
+    @pl.when(kp == 0)
+    def _init():
+        # Stage overlap: the fused adapter update is computed while the
+        # first sparse panel decodes (on TPU both issue; the MXU dot of the
+        # adapters hides the VPU decode latency). The adapter contracts the
+        # full K dimension, so it reads the unblocked x view.
+        u = jnp.dot(xfull_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+        acc_ref[...] = jnp.dot(u, b_ref[...], preferred_element_type=jnp.float32)
+
+    w_panel = _decode_block(words_ref[...], values_ref[...], offs_ref[...], cols)
+    # Zero padded rows of a ragged final panel (see bitmap_decode).
+    valid = (kp * bk + jnp.arange(bk)) < k_total
+    w_panel = jnp.where(valid[:, None], w_panel, 0.0)
+    # Interpret-mode pads ragged blocks with NaN; zero both sides (NaN*0=NaN).
+    x_blk = jnp.where(valid[None, :], x_ref[...], 0.0)
+    acc_ref[...] += jnp.dot(
+        x_blk, w_panel, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kp == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("cols", "block_m", "block_k"))
+def salr_linear(
+    x,
+    mask_words,
+    values,
+    row_offsets,
+    a_cat,
+    b_cat,
+    cols: int,
+    block_m: int = 128,
+    block_k: int = 256,
+):
+    """Full SALR linear: sparse base + fused adapters, K-panel pipelined.
+
+    Args:
+      x: f32[m, k] input activations.
+      mask_words/values/row_offsets: bitmap encoding of Ŵ[k, cols].
+      a_cat: f32[k, nr] stacked adapter A factors (LoRA ‖ residual).
+      b_cat: f32[nr, cols] stacked adapter B factors.
+      cols: static output width.
+    """
+    m, k = x.shape
+    nr = a_cat.shape[1]
+    assert a_cat.shape == (k, nr)
+    assert b_cat.shape == (nr, cols)
+    bm = min(block_m, m)
+    bk = min(block_k, k)
+    grid = (pl.cdiv(m, bm), pl.cdiv(k, bk))
+    wpr = mask_words.shape[1]
+    return pl.pallas_call(
+        functools.partial(_salr_kernel, cols=cols, k_total=k, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kp: (i, kp)),
+            pl.BlockSpec((bm, k), lambda i, kp: (i, 0)),
+            pl.BlockSpec((bk, wpr), lambda i, kp: (kp, 0)),
+            pl.BlockSpec(values.shape, lambda i, kp: (0,)),
+            pl.BlockSpec((bk,), lambda i, kp: (kp,)),
+            pl.BlockSpec((k, nr), lambda i, kp: (0, 0)),
+            pl.BlockSpec((nr, cols), lambda i, kp: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, cols), lambda i, kp: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, cols), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, cols), jnp.float32)],
+        interpret=True,
+    )(x, x, mask_words, values, row_offsets, a_cat, b_cat)

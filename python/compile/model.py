@@ -1,0 +1,316 @@
+"""Layer 2: the JAX transformer with SALR-adapted linear layers.
+
+A decoder-only transformer (RMSNorm, causal MHA with learned positions,
+GELU MLP) whose linear layers are adapted according to one of the paper's
+variants:
+
+* ``dense``       — plain ``x @ W`` (pretraining / pretrained eval);
+* ``lora``        — ``x @ W0 + s·(x A) B`` (frozen W0, trainable A,B).
+  Feeding a *pruned* W0 gives the DeepSparse-like baseline;
+* ``salr``        — ``x @ Ŵ + (x A_cat) B_cat`` where A_cat/B_cat stack the
+  LoRA adapter (scaled) and the sparsity-preservation residual adapter
+  (paper: adapter concatenation). Ŵ is the statically pruned base weight
+  (Theorem 2, Method 1); the residual adapter is initialized from the
+  truncated SVD of the pruning residual (Theorem 3) and trained with the
+  Theorem-4 step size;
+* ``losa``        — ``x @ ((W0 + s·A B) ⊙ M)`` with a dynamic mask M on the
+  merged weight (Theorem 2, Method 3) — the paper's LoSA baseline. Note the
+  two dense GEMMs (ΔW = A·B materialized) this forces per layer: that is
+  exactly the fine-tuning inefficiency Table 3 charges LoSA with;
+* ``sparselora``  — contextual sparsity on the *base* branch during
+  training (per-token top-k input channels), dense deployment — the
+  SparseLoRA baseline (training-only wins).
+
+All steps are AOT-lowered by ``aot.py``; the rust coordinator executes the
+HLO and never runs python.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+VARIANTS = ("dense", "lora", "salr", "losa", "sparselora")
+# Trainable-key suffixes for the residual (Theorem-4 SGD) vs LoRA (Adam).
+RES_SUFFIXES = (".res_a", ".res_b")
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def init_base_params(cfg: ModelConfig, key) -> dict:
+    """Dense base parameters (the 'pretrained model' to be)."""
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+    p = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model)) * 0.02,
+        "pos_embed": jax.random.normal(keys[1], (cfg.max_seq_len, cfg.d_model)) * 0.02,
+        "lm_head": jax.random.normal(keys[2], (cfg.d_model, cfg.vocab_size)) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,)),
+    }
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[3 + i], 6)
+        p[f"layer{i}.attn_norm"] = jnp.ones((cfg.d_model,))
+        p[f"layer{i}.mlp_norm"] = jnp.ones((cfg.d_model,))
+        for j, lin in enumerate(("wq", "wk", "wv", "wo", "w_in", "w_out")):
+            d_in, d_out = cfg.linear_shape(lin)
+            scale = d_in ** -0.5
+            p[f"layer{i}.{lin}"] = jax.random.normal(lk[j], (d_in, d_out)) * scale
+    return {k: v.astype(jnp.float32) for k, v in p.items()}
+
+
+def init_adapters(cfg: ModelConfig, key, with_residual: bool) -> dict:
+    """LoRA adapters (A ~ N(0, 1/d_in), B = 0) and, optionally, residual
+    adapter placeholders (overwritten by the SVD of the pruning residual
+    on the rust side before fine-tuning starts)."""
+    t = {}
+    names = cfg.adapted_layers()
+    keys = jax.random.split(key, len(names))
+    for k_, name in zip(keys, names):
+        lin = name.split(".")[1]
+        d_in, d_out = cfg.linear_shape(lin)
+        t[f"{name}.lora_a"] = (
+            jax.random.normal(k_, (d_in, cfg.rank)) * (d_in ** -0.5)
+        ).astype(jnp.float32)
+        t[f"{name}.lora_b"] = jnp.zeros((cfg.rank, d_out), jnp.float32)
+        if with_residual:
+            t[f"{name}.res_a"] = jnp.zeros((d_in, cfg.residual_rank), jnp.float32)
+            t[f"{name}.res_b"] = jnp.zeros((cfg.residual_rank, d_out), jnp.float32)
+    return t
+
+
+def init_masks(cfg: ModelConfig) -> dict:
+    """All-ones masks (stand-ins; rust supplies the real LoSA masks)."""
+    m = {}
+    for name in cfg.adapted_layers():
+        lin = name.split(".")[1]
+        m[f"{name}.mask"] = jnp.ones(cfg.linear_shape(lin), jnp.float32)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _rms_norm(x, gamma, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def _rope(x, positions):
+    """Rotary position embedding (half-split layout).
+
+    x: [B, S, H, hd]; positions: int[S]. Mirrored bit-for-bit by the rust
+    engine (`infer::engine::apply_rope`).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _ctx_sparse_input(x, keep_frac):
+    """SparseLoRA-style contextual sparsity: per token, keep the largest
+    |x| channels (the base-branch GEMM then touches only those weight
+    rows). Gradient flows through the kept values; the mask itself is not
+    differentiated."""
+    d = x.shape[-1]
+    k = max(1, int(d * keep_frac))
+    # The mask is non-differentiable; cut the tangent before the sort so
+    # the selection machinery never enters the backward graph.
+    xa = jax.lax.stop_gradient(jnp.abs(x))
+    thresh = jnp.sort(xa, axis=-1)[..., d - k]
+    mask = (xa >= thresh[..., None]).astype(x.dtype)
+    return x * mask
+
+
+def _adapted_linear(cfg, variant, x, w, tr, masks, name):
+    """One SALR/LoRA/LoSA linear. ``x``: [B, S, d_in] (or [N, d_in])."""
+    s = cfg.lora_scaling
+    if variant == "dense":
+        return x @ w
+    a = tr[f"{name}.lora_a"]
+    b = tr[f"{name}.lora_b"]
+    if variant == "lora":
+        return x @ w + ((x @ a) @ b) * s
+    if variant == "salr":
+        # Adapter concatenation (paper): A_cat = [s·A ‖ A_res],
+        # B_cat = [B ; B_res] — one fused rank-(r+r_res) GEMM pair.
+        a_cat = jnp.concatenate([a * s, tr[f"{name}.res_a"]], axis=1)
+        b_cat = jnp.concatenate([b, tr[f"{name}.res_b"]], axis=0)
+        return x @ w + (x @ a_cat) @ b_cat
+    if variant == "losa":
+        # Dynamic mask on the merged weight: two dense GEMMs (ΔW = A B,
+        # then X (W+ΔW)⊙M) — LoSA's fine-tuning cost structure.
+        w_eff = (w + (a @ b) * s) * masks[f"{name}.mask"]
+        return x @ w_eff
+    if variant == "sparselora":
+        x_sp = _ctx_sparse_input(x, cfg.ctx_keep)
+        return x_sp @ w + ((x @ a) @ b) * s
+    raise ValueError(f"unknown variant {variant}")
+
+
+def forward(cfg: ModelConfig, variant: str, frozen: dict, tr: dict, tokens):
+    """Token logits. ``tokens``: int32[B, S] → f32[B, S, vocab]."""
+    b, s_len = tokens.shape
+    masks = frozen  # losa masks live alongside frozen params
+    x = frozen["embed"][tokens] + frozen["pos_embed"][None, :s_len, :]
+    causal = jnp.tril(jnp.ones((s_len, s_len), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for i in range(cfg.n_layers):
+        h = _rms_norm(x, frozen[f"layer{i}.attn_norm"])
+        q = _adapted_linear(cfg, variant, h, frozen[f"layer{i}.wq"], tr, masks, f"layer{i}.wq")
+        k = _adapted_linear(cfg, variant, h, frozen[f"layer{i}.wk"], tr, masks, f"layer{i}.wk")
+        v = _adapted_linear(cfg, variant, h, frozen[f"layer{i}.wv"], tr, masks, f"layer{i}.wv")
+        hd = cfg.head_dim
+        positions = jnp.arange(s_len)
+        q = _rope(q.reshape(b, s_len, cfg.n_heads, hd), positions).transpose(0, 2, 1, 3)
+        k = _rope(k.reshape(b, s_len, cfg.n_heads, hd), positions).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s_len, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) * (hd ** -0.5)
+        att = jnp.where(causal[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s_len, cfg.d_model)
+        o = _adapted_linear(cfg, variant, o, frozen[f"layer{i}.wo"], tr, masks, f"layer{i}.wo")
+        x = x + o
+        h = _rms_norm(x, frozen[f"layer{i}.mlp_norm"])
+        h = _adapted_linear(cfg, variant, h, frozen[f"layer{i}.w_in"], tr, masks, f"layer{i}.w_in")
+        h = jax.nn.gelu(h)
+        h = _adapted_linear(cfg, variant, h, frozen[f"layer{i}.w_out"], tr, masks, f"layer{i}.w_out")
+        x = x + h
+    x = _rms_norm(x, frozen["final_norm"])
+    return x @ frozen["lm_head"]
+
+
+def loss_fn(cfg, variant, frozen, tr, tokens, loss_mask):
+    """Shifted next-token cross entropy, averaged over unmasked targets."""
+    logits = forward(cfg, variant, frozen, tr, tokens)
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    mask = loss_mask[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer + train steps
+# ---------------------------------------------------------------------------
+
+def _adam_update(p, g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * (g * g)
+    mhat = m / (1 - b1 ** t)
+    vhat = v / (1 - b2 ** t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def pretrain_step(cfg: ModelConfig):
+    """Full-parameter Adam pretraining step (builds the 'pretrained' base).
+
+    Signature: (params, m, v, t, tokens, loss_mask, lr) ->
+               (params', m', v', loss)
+    """
+
+    def step(params, m, v, t, tokens, loss_mask, lr):
+        empty = {}
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, "dense", p, empty, tokens, loss_mask)
+        )(params)
+        new_p, new_m, new_v = {}, {}, {}
+        for k in params:
+            new_p[k], new_m[k], new_v[k] = _adam_update(
+                params[k], grads[k], m[k], v[k], t, lr
+            )
+        return new_p, new_m, new_v, loss
+
+    return step
+
+
+def finetune_step(cfg: ModelConfig, variant: str):
+    """Adapter fine-tuning step for ``variant``.
+
+    Signature: (frozen, trainable, m, v, t, tokens, loss_mask, lr, eta) ->
+               (trainable', m', v', loss)
+
+    LoRA adapters update with Adam(lr); the SALR residual adapters update
+    with plain gradient descent at the Theorem-4 step size ``eta``
+    (``eta = 0`` freezes the residual — the Table-5 ablation).
+    """
+    assert variant in ("lora", "salr", "losa", "sparselora")
+
+    def step(frozen, trainable, m, v, t, tokens, loss_mask, lr, eta):
+        loss, grads = jax.value_and_grad(
+            lambda tr: loss_fn(cfg, variant, frozen, tr, tokens, loss_mask)
+        )(trainable)
+        new_t, new_m, new_v = {}, {}, {}
+        for k in trainable:
+            if k.endswith(RES_SUFFIXES):
+                # Theorem 4: convex residual subproblem — SGD at
+                # eta <= 1/σ_max(X)² (estimated by power iteration in rust).
+                new_t[k] = trainable[k] - eta * grads[k]
+                new_m[k], new_v[k] = m[k], v[k]
+            else:
+                new_t[k], new_m[k], new_v[k] = _adam_update(
+                    trainable[k], grads[k], m[k], v[k], t, lr
+                )
+        return new_t, new_m, new_v, loss
+
+    return step
+
+
+def eval_logits(cfg: ModelConfig, variant: str):
+    """Inference forward: (frozen, trainable, tokens) -> logits."""
+
+    def step(frozen, trainable, tokens):
+        return forward(cfg, variant, frozen, trainable, tokens)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Pallas-kernel forward (microbench artifact)
+# ---------------------------------------------------------------------------
+
+def salr_linear_pallas(x, mask_words, values, row_offsets, a_cat, b_cat, cols):
+    """The L1 SALR kernel wrapped for AOT lowering (interpret-mode pallas
+    lowers to plain HLO the rust CPU client can execute)."""
+    from .kernels.salr_matmul import salr_linear
+
+    return salr_linear(x, mask_words, values, row_offsets, a_cat, b_cat, cols)
+
+
+# ---------------------------------------------------------------------------
+# Canonical flat ordering (shared with the manifest / rust)
+# ---------------------------------------------------------------------------
+
+def sorted_keys(d: dict):
+    """jax flattens dicts in sorted-key order; make that explicit."""
+    return sorted(d.keys())
+
+
+def flatten_dict(d: dict):
+    return [d[k] for k in sorted_keys(d)]
+
+
+@functools.lru_cache(maxsize=None)
+def frozen_keys(cfg: ModelConfig, variant: str):
+    """Names of the frozen inputs for a variant, sorted."""
+    base = init_base_params(cfg, jax.random.PRNGKey(0))
+    keys = set(base.keys())
+    if variant == "losa":
+        keys |= set(init_masks(cfg).keys())
+    return sorted(keys)
+
+
+@functools.lru_cache(maxsize=None)
+def trainable_keys(cfg: ModelConfig, variant: str):
+    ad = init_adapters(cfg, jax.random.PRNGKey(0), with_residual=(variant == "salr"))
+    return sorted(ad.keys())

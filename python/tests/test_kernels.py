@@ -1,0 +1,193 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes/sparsities/seeds; assert_allclose is the gate.
+This is the CORE correctness signal for the kernels that get lowered into
+the AOT artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    bitmap_decode,
+    bitmap_matmul,
+    fused_adapter,
+    nf4_dequant,
+    nf4_matmul,
+    ref,
+    salr_linear,
+    sequential_adapters,
+)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def encode_bitmap(w: np.ndarray):
+    """numpy bitmap encoder matching rust's sparse::BitmapMatrix layout
+    (32-bit words, bit t of word b = column 32b+t, row-major values)."""
+    k, n = w.shape
+    wpr = (n + 31) // 32
+    words = np.zeros((k, wpr), dtype=np.uint32)
+    vals, offs = [], []
+    for i in range(k):
+        offs.append(len(vals))
+        row = w[i]
+        nz = np.nonzero(row)[0]
+        for j in nz:
+            words[i, j // 32] |= np.uint32(1) << np.uint32(j % 32)
+            vals.append(row[j])
+    vals.append(0.0)  # guard so values is never empty
+    return words, np.array(vals, dtype=np.float32), np.array(offs, dtype=np.int32)
+
+
+def sparse_matrix(rng, k, n, sparsity):
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    flat = np.abs(w).flatten()
+    thresh = np.quantile(flat, sparsity) if sparsity > 0 else -1.0
+    w[np.abs(w) <= thresh] = 0.0
+    return w
+
+
+@given(
+    k=st.integers(4, 80),
+    n=st.integers(4, 80),
+    sparsity=st.sampled_from([0.0, 0.3, 0.5, 0.9]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_bitmap_decode_matches_ref_and_dense(k, n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = sparse_matrix(rng, k, n, sparsity)
+    words, vals, offs = encode_bitmap(w)
+    dec_ref = np.asarray(ref.bitmap_decode_ref(words, vals, offs, n))
+    np.testing.assert_allclose(dec_ref, w, atol=0)
+    dec_kernel = np.asarray(bitmap_decode(words, vals, offs, n, block_k=16))
+    np.testing.assert_allclose(dec_kernel, w, atol=0)
+
+
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(4, 64),
+    n=st.integers(4, 64),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_bitmap_matmul_matches_dense(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    w = sparse_matrix(rng, k, n, 0.5)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    words, vals, offs = encode_bitmap(w)
+    got = np.asarray(bitmap_matmul(x, words, vals, offs, n, block_m=8, block_k=16))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(4, 48),
+    n=st.integers(4, 48),
+    ranks=st.lists(st.integers(1, 8), min_size=1, max_size=4),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_fused_adapter_equals_sequential_sum(m, k, n, ranks, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    adapters = [
+        (
+            rng.normal(size=(k, r)).astype(np.float32),
+            rng.normal(size=(r, n)).astype(np.float32),
+        )
+        for r in ranks
+    ]
+    a_cat = np.concatenate([a for a, _ in adapters], axis=1)
+    b_cat = np.concatenate([b for _, b in adapters], axis=0)
+    want = np.asarray(sequential_adapters(x, adapters))
+    got_ref = np.asarray(ref.fused_adapter_ref(x, a_cat, b_cat))
+    got_kernel = np.asarray(fused_adapter(x, a_cat, b_cat, block_m=8))
+    np.testing.assert_allclose(got_ref, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_kernel, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.integers(1, 12),
+    k=st.integers(8, 48),
+    n=st.integers(8, 48),
+    r=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_salr_linear_matches_ref(m, k, n, r, seed):
+    rng = np.random.default_rng(seed)
+    w = sparse_matrix(rng, k, n, 0.5)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    a = rng.normal(size=(k, r)).astype(np.float32) * 0.3
+    b = rng.normal(size=(r, n)).astype(np.float32) * 0.3
+    words, vals, offs = encode_bitmap(w)
+    want = np.asarray(ref.salr_linear_ref(x, w, a, b))
+    got = np.asarray(
+        salr_linear(x, words, vals, offs, a, b, n, block_m=8, block_k=16)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(want, x @ w + (x @ a) @ b, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    rows=st.integers(2, 40),
+    cols_half=st.integers(2, 24),
+    block=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_nf4_dequant_kernel_matches_ref(rows, cols_half, block, seed):
+    rng = np.random.default_rng(seed)
+    cols = cols_half * 2
+    codes = rng.integers(0, 256, size=(rows * cols) // 2, dtype=np.uint8)
+    scales = rng.uniform(0.1, 3.0, size=(rows * cols + block - 1) // block).astype(
+        np.float32
+    )
+    want = np.asarray(ref.nf4_dequant_ref(codes, scales, rows, cols, block))
+    got = np.asarray(
+        nf4_dequant(codes.reshape(rows, cols // 2), scales, rows, cols, block, block_k=8)
+    )
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_nf4_matmul_composes():
+    rng = np.random.default_rng(7)
+    rows, cols, block, m = 32, 16, 64, 5
+    codes = rng.integers(0, 256, size=(rows * cols) // 2, dtype=np.uint8)
+    scales = rng.uniform(0.1, 1.0, size=(rows * cols) // block).astype(np.float32)
+    x = rng.normal(size=(m, rows)).astype(np.float32)
+    w = np.asarray(ref.nf4_dequant_ref(codes, scales, rows, cols, block))
+    got = np.asarray(
+        nf4_matmul(x, codes.reshape(rows, cols // 2), scales, rows, cols, block)
+    )
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_bitmap_codebook_agrees_with_rust_layout():
+    """Bit t of word b covers column 32b + t — the exact layout rust's
+    BitmapMatrix serializes via u8 masks (little-endian bit order)."""
+    w = np.zeros((1, 40), dtype=np.float32)
+    w[0, 0] = 1.0
+    w[0, 7] = 2.0
+    w[0, 33] = 3.0
+    words, vals, offs = encode_bitmap(w)
+    assert words[0, 0] == (1 | (1 << 7))
+    assert words[0, 1] == (1 << 1)
+    np.testing.assert_array_equal(vals[:3], [1.0, 2.0, 3.0])
+    dec = np.asarray(ref.bitmap_decode_ref(words, vals, offs, 40))
+    np.testing.assert_allclose(dec, w)
+
+
+def test_decode_all_zero_and_all_dense_rows():
+    w = np.zeros((4, 16), dtype=np.float32)
+    w[2] = np.arange(1, 17, dtype=np.float32)
+    words, vals, offs = encode_bitmap(w)
+    dec = np.asarray(bitmap_decode(words, vals, offs, 16, block_k=2))
+    np.testing.assert_allclose(dec, w)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,226 @@
+"""L2 model correctness: shapes, variant semantics, gradient flow, and the
+optimizer update rules that get baked into the AOT train-step artifacts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import ModelConfig, get_config
+
+CFG = ModelConfig(
+    name="test", d_model=32, n_layers=2, n_heads=2, d_ff=64, max_seq_len=16,
+    rank=4, residual_rank=8, batch_size=2, vocab_size=64,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_base_params(CFG, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (CFG.batch_size, CFG.max_seq_len), 0, CFG.vocab_size
+    )
+    mask = jnp.ones_like(tokens, dtype=jnp.float32)
+    return params, tokens, mask
+
+
+def test_param_shapes_and_count(setup):
+    params, _, _ = setup
+    assert params["embed"].shape == (CFG.vocab_size, CFG.d_model)
+    assert params["lm_head"].shape == (CFG.d_model, CFG.vocab_size)
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    assert total == CFG.param_count()
+
+
+def test_forward_shapes_all_variants(setup):
+    params, tokens, _ = setup
+    for variant in M.VARIANTS:
+        frozen = dict(params)
+        if variant == "losa":
+            frozen.update(M.init_masks(CFG))
+        tr = (
+            {}
+            if variant == "dense"
+            else M.init_adapters(CFG, jax.random.PRNGKey(2), variant == "salr")
+        )
+        logits = M.forward(CFG, variant, frozen, tr, tokens)
+        assert logits.shape == (CFG.batch_size, CFG.max_seq_len, CFG.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_fresh_adapters_are_identity(setup):
+    """B = 0 at init → lora/salr/losa(ones-mask) forward == dense forward."""
+    params, tokens, _ = setup
+    dense = M.forward(CFG, "dense", params, {}, tokens)
+    tr = M.init_adapters(CFG, jax.random.PRNGKey(2), with_residual=True)
+    lora = M.forward(CFG, "lora", params, tr, tokens)
+    np.testing.assert_allclose(np.asarray(lora), np.asarray(dense), atol=1e-5)
+    salr = M.forward(CFG, "salr", params, tr, tokens)
+    np.testing.assert_allclose(np.asarray(salr), np.asarray(dense), atol=1e-5)
+    frozen = dict(params)
+    frozen.update(M.init_masks(CFG))  # all-ones mask
+    losa = M.forward(CFG, "losa", frozen, tr, tokens)
+    np.testing.assert_allclose(np.asarray(losa), np.asarray(dense), atol=1e-5)
+
+
+def test_losa_mask_actually_masks(setup):
+    params, tokens, _ = setup
+    tr = M.init_adapters(CFG, jax.random.PRNGKey(2), False)
+    frozen = dict(params)
+    masks = {k: jnp.zeros_like(v) for k, v in M.init_masks(CFG).items()}
+    frozen.update(masks)
+    # All-zero masks kill every adapted linear: logits become position-only.
+    losa = M.forward(CFG, "losa", frozen, tr, tokens)
+    assert bool(jnp.all(jnp.isfinite(losa)))
+    dense = M.forward(CFG, "dense", params, {}, tokens)
+    assert float(jnp.max(jnp.abs(losa - dense))) > 1e-3
+
+
+def test_salr_concat_equals_separate_adapters(setup):
+    """Adapter concatenation (paper) == sum of separate adapter products."""
+    params, tokens, _ = setup
+    tr = M.init_adapters(CFG, jax.random.PRNGKey(3), with_residual=True)
+    # Give nonzero B and residual factors.
+    tr = {
+        k: (jax.random.normal(jax.random.PRNGKey(i), v.shape) * 0.05).astype(
+            jnp.float32
+        )
+        for i, (k, v) in enumerate(sorted(tr.items()))
+    }
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, CFG.d_model))
+    name = "layer0.wq"
+    w = params[name]
+    got = M._adapted_linear(CFG, "salr", x, w, tr, {}, name)
+    s = CFG.lora_scaling
+    want = (
+        x @ w
+        + (x @ tr[f"{name}.lora_a"]) @ tr[f"{name}.lora_b"] * s
+        + (x @ tr[f"{name}.res_a"]) @ tr[f"{name}.res_b"]
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_pretrain_loss_decreases(setup):
+    params, tokens, mask = setup
+    step = jax.jit(M.pretrain_step(CFG))
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    p = params
+    losses = []
+    for t in range(1, 9):
+        p, m, v, loss = step(p, m, v, jnp.float32(t), tokens, mask, jnp.float32(3e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+@pytest.mark.parametrize("variant", ["lora", "salr", "losa", "sparselora"])
+def test_finetune_updates_only_trainable(variant, setup):
+    params, tokens, mask = setup
+    frozen = dict(params)
+    if variant == "losa":
+        frozen.update(M.init_masks(CFG))
+    tr = M.init_adapters(CFG, jax.random.PRNGKey(2), variant == "salr")
+    step = jax.jit(M.finetune_step(CFG, variant))
+    m = {k: jnp.zeros_like(x) for k, x in tr.items()}
+    v = {k: jnp.zeros_like(x) for k, x in tr.items()}
+    tr2, m2, v2, loss = step(
+        frozen, tr, m, v, jnp.float32(1), tokens, mask, jnp.float32(1e-3), jnp.float32(1e-2)
+    )
+    assert np.isfinite(float(loss))
+    # LoRA A gets a gradient only after B != 0; B always gets one.
+    changed = sum(
+        int(not np.allclose(np.asarray(tr[k]), np.asarray(tr2[k]))) for k in tr
+    )
+    assert changed > 0
+
+
+def test_residual_frozen_when_eta_zero(setup):
+    """eta = 0 freezes the residual adapters (Table-5 ablation switch)."""
+    params, tokens, mask = setup
+    tr = M.init_adapters(CFG, jax.random.PRNGKey(2), with_residual=True)
+    # Make residual nonzero so it would receive gradient.
+    tr["layer0.wq.res_a"] = jnp.ones_like(tr["layer0.wq.res_a"]) * 0.1
+    tr["layer0.wq.res_b"] = jnp.ones_like(tr["layer0.wq.res_b"]) * 0.1
+    step = jax.jit(M.finetune_step(CFG, "salr"))
+    m = {k: jnp.zeros_like(x) for k, x in tr.items()}
+    v = {k: jnp.zeros_like(x) for k, x in tr.items()}
+    tr2, _, _, _ = step(
+        dict(params), tr, m, v, jnp.float32(1), tokens, mask,
+        jnp.float32(1e-3), jnp.float32(0.0),
+    )
+    for k in tr:
+        if k.endswith(M.RES_SUFFIXES):
+            np.testing.assert_array_equal(np.asarray(tr2[k]), np.asarray(tr[k]))
+    # With eta > 0 the (nonzero) residual moves.
+    tr3, _, _, _ = step(
+        dict(params), tr, m, v, jnp.float32(1), tokens, mask,
+        jnp.float32(1e-3), jnp.float32(1e-2),
+    )
+    assert not np.allclose(
+        np.asarray(tr3["layer0.wq.res_a"]), np.asarray(tr["layer0.wq.res_a"])
+    )
+
+
+def test_finetune_loss_decreases_lora(setup):
+    params, tokens, mask = setup
+    tr = M.init_adapters(CFG, jax.random.PRNGKey(2), False)
+    step = jax.jit(M.finetune_step(CFG, "lora"))
+    m = {k: jnp.zeros_like(x) for k, x in tr.items()}
+    v = {k: jnp.zeros_like(x) for k, x in tr.items()}
+    losses = []
+    for t in range(1, 13):
+        tr, m, v, loss = step(
+            dict(params), tr, m, v, jnp.float32(t), tokens, mask,
+            jnp.float32(5e-3), jnp.float32(0.0),
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_loss_mask_excludes_positions(setup):
+    params, tokens, _ = setup
+    full = jnp.ones((CFG.batch_size, CFG.max_seq_len), jnp.float32)
+    half = full.at[:, : CFG.max_seq_len // 2].set(0.0)
+    l_full = float(M.loss_fn(CFG, "dense", params, {}, tokens, full))
+    l_half = float(M.loss_fn(CFG, "dense", params, {}, tokens, half))
+    assert l_full != l_half
+    zero = jnp.zeros_like(full)
+    l_zero = float(M.loss_fn(CFG, "dense", params, {}, tokens, zero))
+    assert l_zero == 0.0
+
+
+def test_causality(setup):
+    """Changing a future token must not change past logits."""
+    params, tokens, _ = setup
+    logits1 = M.forward(CFG, "dense", params, {}, tokens)
+    tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % CFG.vocab_size)
+    logits2 = M.forward(CFG, "dense", params, {}, tokens2)
+    np.testing.assert_allclose(
+        np.asarray(logits1[:, :-1]), np.asarray(logits2[:, :-1]), atol=1e-5
+    )
+
+
+def test_key_ordering_is_sorted():
+    """The manifest/rust contract: dict flattening is sorted-key order."""
+    fkeys = M.frozen_keys(CFG, "lora")
+    tkeys = M.trainable_keys(CFG, "salr")
+    assert fkeys == sorted(fkeys)
+    assert tkeys == sorted(tkeys)
+    assert any(k.endswith(".res_a") for k in tkeys)
+    assert not any(
+        k.endswith(".res_a") for k in M.trainable_keys(CFG, "lora")
+    )
+    losa_fkeys = M.frozen_keys(CFG, "losa")
+    assert any(k.endswith(".mask") for k in losa_fkeys)
+
+
+def test_configs_exist():
+    for name in ("tiny", "small"):
+        cfg = get_config(name)
+        assert cfg.d_model % cfg.n_heads == 0
+        assert cfg.param_count() > 0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,74 @@
+//! Sparse-format microbench: bitmap vs CSR decode throughput and storage
+//! (the paper's "CSR incurs significant indexing overhead" claim), plus
+//! byte-LUT vs branchy bit-iteration decode variants.
+
+use salr::prune::prune_global;
+use salr::sparse::{BitmapMatrix, CsrMatrix};
+use salr::tensor::Tensor;
+use salr::util::bench::{black_box, Bench};
+use salr::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let (k, n) = (1024usize, 1024usize);
+    println!("# bitmap vs CSR — decode {k}x{n} @ varying sparsity\n");
+    for &p in &[0.5f64, 0.7, 0.9] {
+        let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        prune_global(&mut [&mut w], p);
+        let bm = BitmapMatrix::encode(&w);
+        let csr = CsrMatrix::encode(&w);
+        println!(
+            "sparsity {:.0}%: bitmap {} vs csr {} ({} nnz)",
+            p * 100.0,
+            salr::util::human_bytes(bm.storage_bytes() as u64),
+            salr::util::human_bytes(csr.storage_bytes() as u64),
+            bm.nnz()
+        );
+        let mut b = Bench::new();
+        let bytes = (k * n * 4) as f64;
+        let mut out = vec![0.0f32; k * n];
+        b.run_with_work(&format!("bitmap decode p={p}"), bytes, &mut || {
+            bm.decode_rows_into(0, k, &mut out);
+            black_box(&out);
+        });
+        b.run_with_work(&format!("csr decode p={p}"), bytes, &mut || {
+            for i in 0..k {
+                csr.decode_row_into(i, &mut out[i * n..(i + 1) * n]);
+            }
+            black_box(&out);
+        });
+        println!("{}", b.comparison_table(&format!("decode @{:.0}%", p * 100.0)));
+    }
+
+    // Byte-level decode variants (the inner loop of the decode stage).
+    println!("# byte-decode variants (LUT vs branchy), 1M byte-blocks\n");
+    let masks: Vec<u8> = (0..1_000_000).map(|_| rng.next_u64() as u8).collect();
+    let values = vec![1.5f32; 8];
+    let mut out = [0.0f32; 8];
+    let mut b = Bench::new();
+    b.run("decode_byte (LUT)", || {
+        for &m in masks.iter().take(4096) {
+            black_box(salr::sparse::decode_byte(m, &values, &mut out));
+        }
+    });
+    b.run("decode_byte_bits (branchy)", || {
+        for &m in masks.iter().take(4096) {
+            black_box(salr::sparse::lut::decode_byte_bits(m, &values, &mut out));
+        }
+    });
+    println!("{}", b.comparison_table("byte decode"));
+
+    // Serialization roundtrip.
+    let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+    prune_global(&mut [&mut w], 0.5);
+    let bm = BitmapMatrix::encode(&w);
+    let mut b = Bench::new();
+    b.run("bitmap serialize", || {
+        black_box(bm.to_bytes());
+    });
+    let bytes = bm.to_bytes();
+    b.run("bitmap deserialize", || {
+        black_box(BitmapMatrix::from_bytes(&bytes).unwrap());
+    });
+    println!("{}", b.comparison_table("serialization"));
+}

@@ -1,0 +1,49 @@
+//! Adapter concatenation ablation (paper, "Concatenating Multi-LoRA
+//! adapters"): n separate rank-r GEMM pairs vs one fused rank-(n·r) pair.
+
+use salr::gemm::fused::AdapterStack;
+use salr::tensor::Tensor;
+use salr::util::bench::{black_box, Bench};
+use salr::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let (k, n, m) = (1024usize, 1024usize, 8usize);
+    println!("# fused vs sequential adapters (k={k}, n={n}, batch={m})\n");
+    for &(count, r) in &[(2usize, 16usize), (4, 16), (8, 8), (2, 64)] {
+        let adapters: Vec<(Tensor, Tensor)> = (0..count)
+            .map(|_| {
+                (
+                    Tensor::randn(&[k, r], 0.1, &mut rng),
+                    Tensor::randn(&[r, n], 0.1, &mut rng),
+                )
+            })
+            .collect();
+        let refs: Vec<(&Tensor, &Tensor)> = adapters.iter().map(|(a, b)| (a, b)).collect();
+        let stack = AdapterStack::concat(&refs);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let mut out = vec![0.0f32; m * n];
+        let mut b = Bench::new();
+        let work = stack.flops(m);
+        b.run_with_work(
+            &format!("sequential {count}x rank-{r}"),
+            work,
+            &mut || {
+                stack.apply_sequential(x.data(), m, &mut out);
+                black_box(&out);
+            },
+        );
+        b.run_with_work(
+            &format!("fused      {count}x rank-{r} (rank {})", count * r),
+            work,
+            &mut || {
+                stack.apply_fused(x.data(), m, &mut out);
+                black_box(&out);
+            },
+        );
+        println!(
+            "{}",
+            b.comparison_table(&format!("{count} adapters of rank {r}"))
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! Dense GEMM throughput across shapes (the compute stage's roofline on
+//! this machine — the denominator of every speedup claim).
+
+use salr::gemm::dense::{gemm_f32, gemm_flops};
+use salr::tensor::Tensor;
+use salr::util::bench::{black_box, Bench};
+use salr::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(2);
+    println!("# dense GEMM roofline\n");
+    let mut b = Bench::new();
+    for &(m, k, n) in &[
+        (8usize, 512usize, 512usize),   // decode-batch shape
+        (64, 512, 512),
+        (256, 256, 256),
+        (512, 512, 512),
+        (128, 1024, 1024),
+        (1024, 128, 1024),              // adapter-concat-ish tall/skinny
+    ] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut c = vec![0.0f32; m * n];
+        let flops = gemm_flops(m, k, n);
+        let stats = b.run_with_work(&format!("gemm {m}x{k}x{n}"), flops, &mut || {
+            gemm_f32(a.data(), w.data(), &mut c, m, k, n);
+            black_box(&c);
+        });
+        println!("    → {:.2} GFLOP/s", stats.rate() / 1e9);
+    }
+    println!("{}", b.comparison_table("dense GEMM"));
+}

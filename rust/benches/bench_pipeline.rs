@@ -1,0 +1,84 @@
+//! The two-stage pipeline ablation: sequential full-decode, panel-streamed
+//! (no overlap), and the pipelined ring-buffer design at several depths and
+//! panel sizes — the system core of the paper's inference speedup.
+
+use salr::gemm::pipeline::{bitmap_gemm_pipelined, salr_gemm_pipelined, PipelineConfig};
+use salr::gemm::sparse::{bitmap_gemm_panelled, bitmap_gemm_sequential};
+use salr::prune::prune_global;
+use salr::sparse::BitmapMatrix;
+use salr::tensor::Tensor;
+use salr::util::bench::{black_box, Bench};
+use salr::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(4);
+    let (m, k, n) = (8usize, 1024usize, 1024usize);
+    let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+    prune_global(&mut [&mut w], 0.5);
+    let bm = BitmapMatrix::encode(&w);
+    let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let mut c = vec![0.0f32; m * n];
+    let flops = 2.0 * (m * k * n) as f64;
+
+    println!("# decode+GEMM strategies ({m}x{k}x{n} @50%)\n");
+    let mut b = Bench::new();
+    let mut scratch = Vec::new();
+    b.run_with_work("sequential (full decode, then GEMM)", flops, &mut || {
+        bitmap_gemm_sequential(x.data(), &bm, &mut c, m, &mut scratch);
+        black_box(&c);
+    });
+    b.run_with_work("direct (zero-skipping, no decode)", flops, &mut || {
+        salr::gemm::sparse::bitmap_gemm_direct(x.data(), &bm, &mut c, m, &mut scratch);
+        black_box(&c);
+    });
+    b.run_with_work("panelled (streamed, no overlap)", flops, &mut || {
+        bitmap_gemm_panelled(x.data(), &bm, &mut c, m, 64, &mut scratch);
+        black_box(&c);
+    });
+    for &(panel, depth) in &[(32usize, 2usize), (64, 3), (128, 3), (256, 4)] {
+        b.run_with_work(
+            &format!("pipelined panel={panel} depth={depth}"),
+            flops,
+            &mut || {
+                bitmap_gemm_pipelined(
+                    x.data(),
+                    &bm,
+                    &mut c,
+                    m,
+                    PipelineConfig {
+                        panel_k: panel,
+                        ring_depth: depth,
+                    },
+                );
+                black_box(&c);
+            },
+        );
+    }
+    println!("{}", b.comparison_table("two-stage pipeline"));
+
+    // With adapters folded in (the full SALR linear).
+    let r_total = 32usize;
+    let a_cat = Tensor::randn(&[k, r_total], 0.1, &mut rng);
+    let b_cat = Tensor::randn(&[r_total, n], 0.1, &mut rng);
+    let mut b2 = Bench::new();
+    b2.run_with_work("salr linear (pipelined + fused adapters)", flops, &mut || {
+        salr_gemm_pipelined(
+            x.data(),
+            &bm,
+            a_cat.data(),
+            b_cat.data(),
+            r_total,
+            &mut c,
+            m,
+            PipelineConfig::default(),
+        );
+        black_box(&c);
+    });
+    // Dense baseline at the same shape.
+    let dense = bm.decode();
+    b2.run_with_work("dense GEMM (pre-decoded baseline)", flops, &mut || {
+        salr::gemm::dense::gemm_f32(x.data(), dense.data(), &mut c, m, k, n);
+        black_box(&c);
+    });
+    println!("{}", b2.comparison_table("SALR linear vs dense"));
+}

@@ -1,0 +1,126 @@
+//! End-to-end serving bench in the shape of the paper's Table 4: batched
+//! decode throughput (tokens/s) of the native engine under each weight
+//! format/backend, on a freshly initialized model (accuracy columns come
+//! from `salr exp table4`, which uses the fine-tuned checkpoints).
+
+use salr::infer::{Backend, Engine, EngineWeights};
+use salr::model::ParamStore;
+use salr::prune::NmPattern;
+use salr::runtime::ModelCfg;
+use salr::salr::build_salr;
+use salr::util::bench::Bench;
+use salr::util::rng::Rng;
+use std::time::Instant;
+
+fn bench_cfg() -> ModelCfg {
+    ModelCfg {
+        name: "bench".into(),
+        vocab_size: 256,
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        d_ff: 1024,
+        max_seq_len: 128,
+        rank: 16,
+        lora_alpha: 32.0,
+        residual_rank: 32,
+        batch_size: 8,
+        ctx_keep: 0.5,
+    }
+}
+
+fn tps(engine: &Engine, batch: usize, new_tokens: usize) -> f64 {
+    let cfg = &engine.weights.cfg;
+    let prompt_len = 32usize;
+    let prompts: Vec<Vec<i32>> = (0..batch)
+        .map(|i| (0..prompt_len).map(|j| ((i * 31 + j * 7) % 200 + 32) as i32).collect())
+        .collect();
+    let _ = engine.generate_batch(&prompts, 2); // warmup
+    let t0 = Instant::now();
+    let _ = engine.generate_batch(&prompts, new_tokens);
+    let _ = cfg;
+    (batch * new_tokens) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    let mut rng = Rng::new(5);
+    let base = ParamStore::init_base(&cfg, &mut rng);
+    let build = build_salr(&cfg, &base, 0.5, 9);
+    let mut adapters = ParamStore::init_adapters(&cfg, &mut rng, true);
+    for (k, v) in build.residual_adapters.iter() {
+        adapters.insert(k, v.clone());
+    }
+
+    println!(
+        "# Table-4-shaped serving bench: {} params, batch={}, 24 new tokens\n",
+        base.param_count(),
+        cfg.batch_size
+    );
+    let mut rows: Vec<(String, f64, usize)> = Vec::new();
+
+    let dense = Engine::new(
+        EngineWeights::dense_merged(&cfg, &base, Some(&adapters)),
+        Backend::Dense,
+    );
+    rows.push((
+        "LoRA dense".into(),
+        tps(&dense, cfg.batch_size, 24),
+        dense.weights.linear_storage_bytes(),
+    ));
+
+    let seq = Engine::new(
+        EngineWeights::salr(&cfg, &build.params, &adapters, None),
+        Backend::BitmapSequential,
+    );
+    rows.push((
+        "SALR 50% bitmap (sequential)".into(),
+        tps(&seq, cfg.batch_size, 24),
+        seq.weights.linear_storage_bytes(),
+    ));
+
+    let pipe = Engine::new(
+        EngineWeights::salr(&cfg, &build.params, &adapters, None),
+        Backend::BitmapPipelined(Default::default()),
+    );
+    rows.push((
+        "SALR 50% bitmap (pipelined)".into(),
+        tps(&pipe, cfg.batch_size, 24),
+        pipe.weights.linear_storage_bytes(),
+    ));
+
+    let nm = Engine::new(
+        EngineWeights::salr(&cfg, &build.params, &adapters, Some(NmPattern::TWO_FOUR)),
+        Backend::BitmapPipelined(Default::default()),
+    );
+    rows.push((
+        "SALR 2:4 (pipelined)".into(),
+        tps(&nm, cfg.batch_size, 24),
+        nm.weights.linear_storage_bytes(),
+    ));
+
+    let base_tps = rows[0].1;
+    println!(
+        "{:<34} {:>12} {:>9} {:>14}",
+        "configuration", "tokens/s", "speedup", "linear bytes"
+    );
+    for (name, t, bytes) in &rows {
+        println!(
+            "{:<34} {:>12.1} {:>8.2}x {:>14}",
+            name,
+            t,
+            t / base_tps,
+            salr::util::human_bytes(*bytes as u64)
+        );
+    }
+    println!("\npaper shape: sparse pipelined ≥ sequential; ~2x smaller linears.");
+
+    // Batching sweep (the batcher's operating curve).
+    println!("\n# batch-size sweep (pipelined SALR)\n");
+    let mut b = Bench::quick();
+    let _ = &mut b;
+    for &bs in &[1usize, 2, 4, 8, 16] {
+        let t = tps(&pipe, bs, 8);
+        println!("batch {bs:>2}: {t:>8.1} tokens/s");
+    }
+}

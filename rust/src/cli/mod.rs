@@ -1,0 +1,165 @@
+//! Command-line argument parsing (the offline vendor set has no `clap`).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value` and boolean
+//! switches, with typed accessors and automatic usage text.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments: a subcommand, positionals, and flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator (first item must be argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter();
+        let _bin = it.next();
+        let mut args = Args::default();
+        let mut rest: Vec<String> = it.collect();
+        if let Some(first) = rest.first() {
+            if !first.starts_with('-') {
+                args.command = rest.remove(0);
+            }
+        }
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    args.flags.insert(flag.to_string(), rest[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args())
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.flag(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{name}"),
+        }
+    }
+}
+
+/// Usage text for the `salr` binary.
+pub const USAGE: &str = "\
+salr — Sparsity-Aware Low-Rank Representation (paper reproduction)
+
+USAGE: salr <command> [flags]
+
+COMMANDS:
+  exp <id>        run a paper experiment: theory table1..table7 fig1 fig3 all
+  pretrain        pretrain the base model and cache it
+  finetune        fine-tune one baseline (--baseline, --task, --sparsity)
+  serve           start the inference server (--addr, --backend)
+  compress        prune+encode a model, print size accounting
+  info            print manifest + config summary
+
+COMMON FLAGS:
+  --artifacts DIR   artifact directory (default: artifacts)
+  --config NAME     model config (default: tiny)
+  --results DIR     results directory (default: results)
+  --steps N         override fine-tune steps (also SALR_STEPS)
+  --sparsity P      prune ratio (default 0.5)
+  --baseline NAME   lora|losa|sparselora|deepsparse|salr|salr-frozen
+  --task NAME       math|mcq (default math)
+  --addr HOST:PORT  serve address (default 127.0.0.1:7433)
+  --backend NAME    dense|bitmap|pipeline (default pipeline)
+";
+
+/// Parse a baseline name.
+pub fn parse_baseline(s: &str) -> Result<crate::salr::Baseline> {
+    use crate::salr::Baseline::*;
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "pretrained" => Pretrained,
+        "lora" => Lora,
+        "losa" => Losa,
+        "sparselora" => SparseLora,
+        "deepsparse" => DeepSparse,
+        "salr" => Salr,
+        "salr-frozen" | "salr_frozen" => SalrFrozenResidual,
+        other => bail!("unknown baseline {other}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(
+            std::iter::once("salr".to_string()).chain(items.iter().map(|s| s.to_string())),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["exp", "table2", "--steps", "100", "--config=small", "--fast"]);
+        assert_eq!(a.command, "exp");
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.str_or("config", "tiny"), "small");
+        assert!(a.bool("fast"));
+        assert!(!a.bool("slow"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["serve"]);
+        assert_eq!(a.str_or("addr", "127.0.0.1:7433"), "127.0.0.1:7433");
+        assert!(a.require("missing").is_err());
+        let bad = parse(&["x", "--steps", "abc"]);
+        assert!(bad.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn baseline_names() {
+        assert!(parse_baseline("salr").is_ok());
+        assert!(parse_baseline("SALR").is_ok());
+        assert!(parse_baseline("nope").is_err());
+    }
+}

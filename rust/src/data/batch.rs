@@ -1,0 +1,173 @@
+//! Fixed-shape token batches matching the AOT train-step signature:
+//! `tokens: i32[B, S]`, `loss_mask: f32[B, S]` (1 where the position's
+//! *target* contributes to the loss).
+
+use super::tokenizer::{tokenize, PAD};
+use crate::util::rng::Rng;
+
+/// A training batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+}
+
+impl Batch {
+    pub fn zeros(batch: usize, seq: usize) -> Batch {
+        Batch {
+            batch,
+            seq,
+            tokens: vec![PAD; batch * seq],
+            loss_mask: vec![0.0; batch * seq],
+        }
+    }
+}
+
+/// Assembles batches from (prompt, answer) pairs or raw windows.
+pub struct BatchBuilder {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl BatchBuilder {
+    pub fn new(batch: usize, seq: usize) -> BatchBuilder {
+        BatchBuilder { batch, seq }
+    }
+
+    /// Batch of raw corpus windows — every position contributes to loss.
+    pub fn from_windows(&self, windows: &[Vec<i32>]) -> Batch {
+        assert_eq!(windows.len(), self.batch);
+        let mut b = Batch::zeros(self.batch, self.seq);
+        for (i, w) in windows.iter().enumerate() {
+            assert_eq!(w.len(), self.seq);
+            b.tokens[i * self.seq..(i + 1) * self.seq].copy_from_slice(w);
+            b.loss_mask[i * self.seq..(i + 1) * self.seq].fill(1.0);
+        }
+        b
+    }
+
+    /// Supervised batch: loss only on the answer (+ newline) tokens —
+    /// standard SFT masking. Examples longer than `seq` are truncated from
+    /// the left (keeping the answer).
+    pub fn from_pairs(&self, pairs: &[(String, String)]) -> Batch {
+        assert_eq!(pairs.len(), self.batch);
+        let mut b = Batch::zeros(self.batch, self.seq);
+        for (i, (prompt, answer)) in pairs.iter().enumerate() {
+            let p_toks = tokenize(prompt);
+            let a_toks = tokenize(&format!("{answer}\n"));
+            let total = p_toks.len() + a_toks.len();
+            let (p_keep, offset) = if total > self.seq {
+                let cut = total - self.seq;
+                (&p_toks[cut.min(p_toks.len())..], 0usize)
+            } else {
+                (&p_toks[..], 0usize)
+            };
+            let row = &mut b.tokens[i * self.seq..(i + 1) * self.seq];
+            let mrow = &mut b.loss_mask[i * self.seq..(i + 1) * self.seq];
+            let mut pos = offset;
+            for &t in p_keep {
+                row[pos] = t;
+                pos += 1;
+            }
+            for &t in &a_toks {
+                if pos >= self.seq {
+                    break;
+                }
+                row[pos] = t;
+                mrow[pos] = 1.0;
+                pos += 1;
+            }
+        }
+        b
+    }
+
+    /// Sample `batch` training pairs by index with an rng.
+    pub fn sample_pairs<'a, T>(
+        &self,
+        examples: &'a [T],
+        rng: &mut Rng,
+        to_pair: impl Fn(&'a T) -> (String, String),
+    ) -> Batch {
+        let pairs: Vec<(String, String)> = (0..self.batch)
+            .map(|_| to_pair(&examples[rng.below(examples.len())]))
+            .collect();
+        self.from_pairs(&pairs)
+    }
+
+    /// Packed SFT batch: each row concatenates as many (prompt, answer)
+    /// pairs as fit, with loss on answer (+ newline) tokens only — ~6-8x
+    /// the supervision density of one-pair-per-row padding.
+    pub fn sample_packed<'a, T>(
+        &self,
+        examples: &'a [T],
+        rng: &mut Rng,
+        to_pair: impl Fn(&'a T) -> (String, String),
+    ) -> Batch {
+        let mut b = Batch::zeros(self.batch, self.seq);
+        for row_i in 0..self.batch {
+            let row = &mut b.tokens[row_i * self.seq..(row_i + 1) * self.seq];
+            let mrow = &mut b.loss_mask[row_i * self.seq..(row_i + 1) * self.seq];
+            let mut pos = 0usize;
+            loop {
+                let (prompt, answer) = to_pair(&examples[rng.below(examples.len())]);
+                let p_toks = tokenize(&prompt);
+                let a_toks = tokenize(&format!("{answer}\n"));
+                if pos + p_toks.len() + a_toks.len() > self.seq {
+                    break;
+                }
+                for &t in &p_toks {
+                    row[pos] = t;
+                    pos += 1;
+                }
+                for &t in &a_toks {
+                    row[pos] = t;
+                    mrow[pos] = 1.0;
+                    pos += 1;
+                }
+            }
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::detokenize;
+
+    #[test]
+    fn pair_batch_masks_answer_only() {
+        let bb = BatchBuilder::new(2, 32);
+        let b = bb.from_pairs(&[
+            ("Q: 1+1=? A: ".to_string(), "2".to_string()),
+            ("Q: 30-7=? A: ".to_string(), "23".to_string()),
+        ]);
+        // Row 0: mask exactly covers "2\n".
+        let row0_text = detokenize(&b.tokens[..32]);
+        assert!(row0_text.starts_with("Q: 1+1=? A: 2\n"));
+        let masked: usize = b.loss_mask[..32].iter().map(|&m| m as usize).sum();
+        assert_eq!(masked, 2); // "2" + "\n"
+        let prompt_len = "Q: 1+1=? A: ".len();
+        assert_eq!(b.loss_mask[prompt_len], 1.0);
+        assert_eq!(b.loss_mask[prompt_len - 1], 0.0);
+    }
+
+    #[test]
+    fn window_batch_full_mask() {
+        let bb = BatchBuilder::new(1, 8);
+        let b = bb.from_windows(&[vec![65, 66, 67, 68, 69, 70, 71, 72]]);
+        assert!(b.loss_mask.iter().all(|&m| m == 1.0));
+        assert_eq!(detokenize(&b.tokens), "ABCDEFGH");
+    }
+
+    #[test]
+    fn truncation_keeps_answer() {
+        let bb = BatchBuilder::new(1, 16);
+        let long_prompt = "x".repeat(40);
+        let b = bb.from_pairs(&[(format!("{long_prompt}A: "), "77".to_string())]);
+        let text = detokenize(&b.tokens);
+        assert!(text.ends_with("77\n"), "{text}");
+    }
+}

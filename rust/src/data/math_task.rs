@@ -1,0 +1,226 @@
+//! The GSM8K stand-in: multi-digit arithmetic word problems, graded by
+//! exact match on the generated answer string. Difficulty is controlled by
+//! digit count and operator mix; the fine-tuning set uses harder problems
+//! than the pretraining corpus so adaptation is actually required.
+
+use crate::util::rng::Rng;
+
+/// One arithmetic example.
+#[derive(Clone, Debug)]
+pub struct MathExample {
+    pub prompt: String,
+    /// Canonical decimal answer (e.g. "105").
+    pub answer: String,
+    /// Training/generation target: zero-padded to 3 digits, reversed
+    /// (LSB first) — the standard trick that makes char-level arithmetic
+    /// learnable for small decoder-only models.
+    pub target: String,
+}
+
+impl MathExample {
+    /// Full text (prompt + target) for training.
+    pub fn full_text(&self) -> String {
+        format!("{}{}\n", self.prompt, self.target)
+    }
+}
+
+/// Encode an answer value as the reversed zero-padded target string.
+pub fn encode_answer(v: i64) -> String {
+    format!("{:03}", v.max(0)).chars().rev().collect()
+}
+
+/// Decode a generated string back to the numeric answer (reads the first
+/// three digits, un-reverses).
+pub fn decode_answer(s: &str) -> Option<i64> {
+    let digits: String = s
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .take(3)
+        .collect();
+    if digits.len() < 3 {
+        return None;
+    }
+    let canonical: String = digits.chars().rev().collect();
+    canonical.parse().ok()
+}
+
+/// Generator configuration for the math task.
+#[derive(Clone, Debug)]
+pub struct MathTask {
+    pub min_val: i64,
+    pub max_val: i64,
+    /// Include two-step problems (a op b op c).
+    pub two_step: bool,
+    pub seed: u64,
+}
+
+impl MathTask {
+    /// The distribution seeding the pretraining corpus: 2-digit add/sub.
+    /// The base model acquires the skill under-trained (math is only ~40%
+    /// of the corpus) — fine-tuning then sharpens it, mirroring the
+    /// paper's Llama + MetaMath setting where the base model already has
+    /// partial capability.
+    pub fn pretrain() -> MathTask {
+        MathTask {
+            min_val: 0,
+            max_val: 99,
+            two_step: false,
+            seed: 1234,
+        }
+    }
+
+    /// The fine-tuning distribution: same task family, disjoint examples
+    /// (different seed/index space).
+    pub fn finetune() -> MathTask {
+        MathTask {
+            min_val: 10,
+            max_val: 99,
+            two_step: false,
+            seed: 5678,
+        }
+    }
+
+    /// Deterministic i-th example (disjoint train/test via index ranges).
+    pub fn example(&self, index: u64) -> MathExample {
+        let mut rng = Rng::new(self.seed ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let span = (self.max_val - self.min_val + 1) as usize;
+        let a = self.min_val + rng.below(span) as i64;
+        let b = self.min_val + rng.below(span) as i64;
+        let (expr, mut value) = match rng.below(2) {
+            0 => (format!("{a:02}+{b:02}"), a + b),
+            _ => {
+                let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+                (format!("{hi:02}-{lo:02}"), hi - lo)
+            }
+        };
+        let expr = if self.two_step && rng.below(2) == 0 {
+            let c = self.min_val + rng.below(span.min(90)) as i64;
+            value += c;
+            format!("{expr}+{c}")
+        } else {
+            expr
+        };
+        MathExample {
+            prompt: format!("Q {expr}="),
+            answer: format!("{value}"),
+            target: encode_answer(value),
+        }
+    }
+
+    /// A batch of training examples (indices 0..n are the train split;
+    /// test uses indices >= 1<<20 so the splits never collide).
+    pub fn train_examples(&self, n: usize) -> Vec<MathExample> {
+        (0..n as u64).map(|i| self.example(i)).collect()
+    }
+
+    pub fn test_examples(&self, n: usize) -> Vec<MathExample> {
+        (0..n as u64).map(|i| self.example((1 << 20) + i)).collect()
+    }
+}
+
+/// Grade a generated continuation against the gold canonical answer:
+/// exact match after decoding the reversed-padded digits (the GSM8K
+/// protocol, adapted to the target encoding).
+pub fn grade(generated: &str, gold: &str) -> bool {
+    match (decode_answer(generated), gold.parse::<i64>()) {
+        (Some(got), Ok(want)) => got == want,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn examples_are_deterministic_and_correct() {
+        let task = MathTask::finetune();
+        for i in 0..200 {
+            let e1 = task.example(i);
+            let e2 = task.example(i);
+            assert_eq!(e1.prompt, e2.prompt);
+            // Parse the expression and check the recorded answer.
+            let expr = e1
+                .prompt
+                .strip_prefix("Q ")
+                .unwrap()
+                .strip_suffix('=')
+                .unwrap();
+            let val = eval_expr(expr);
+            assert_eq!(val.to_string(), e1.answer, "{expr}");
+            // Target is the reversed zero-padded answer.
+            assert_eq!(e1.target, encode_answer(val));
+            assert_eq!(decode_answer(&e1.target), Some(val));
+        }
+    }
+
+    fn eval_expr(expr: &str) -> i64 {
+        // Left-to-right with * taking immediate operands (matches the
+        // generator's construction: products never mix with +/- wrongly
+        // because * only appears as the first op).
+        let mut total = 0i64;
+        let mut pending_op = '+';
+        let mut cur = String::new();
+        let mut chars = expr.chars().peekable();
+        let mut terms: Vec<(char, i64)> = Vec::new();
+        while let Some(c) = chars.next() {
+            cur.push(c);
+            let next_is_op = matches!(chars.peek(), Some('+') | Some('-') | Some('*') | None)
+                && !cur.is_empty();
+            if next_is_op || chars.peek().is_none() {
+                if let Some(&op) = chars.peek() {
+                    let v: i64 = cur.parse().unwrap();
+                    terms.push((pending_op, v));
+                    pending_op = op;
+                    cur.clear();
+                    chars.next();
+                } else {
+                    let v: i64 = cur.parse().unwrap();
+                    terms.push((pending_op, v));
+                }
+            }
+        }
+        // Apply * first, then +/-.
+        let mut reduced: Vec<(char, i64)> = Vec::new();
+        for (op, v) in terms {
+            if op == '*' {
+                let (lop, lv) = reduced.pop().unwrap();
+                reduced.push((lop, lv * v));
+            } else {
+                reduced.push((op, v));
+            }
+        }
+        for (op, v) in reduced {
+            match op {
+                '+' => total += v,
+                '-' => total -= v,
+                _ => unreachable!(),
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn splits_are_disjoint() {
+        let task = MathTask::pretrain();
+        let train = task.train_examples(50);
+        let test = task.test_examples(50);
+        let train_set: std::collections::HashSet<_> =
+            train.iter().map(|e| e.prompt.clone()).collect();
+        let overlap = test.iter().filter(|e| train_set.contains(&e.prompt)).count();
+        assert!(overlap <= 2, "overlap={overlap}"); // tiny collision chance
+    }
+
+    #[test]
+    fn grading() {
+        // "95" encodes as "590"; "105" as "501".
+        assert_eq!(encode_answer(95), "590");
+        assert!(grade("590", "95"));
+        assert!(grade(" 590\nQ", "95"));
+        assert!(grade("501", "105"));
+        assert!(!grade("593", "95")); // decodes to 395
+        assert!(!grade("59", "95")); // too short
+        assert!(grade("000", "0"));
+    }
+}

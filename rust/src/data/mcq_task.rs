@@ -1,0 +1,156 @@
+//! The MMLU stand-in: multiple-choice questions over a seeded universe of
+//! synthetic facts ("attribute of entity k is v"). The facts appear in the
+//! pretraining corpus; the MC benchmark asks for them with four lettered
+//! choices, scored by choice log-likelihood — the MMLU protocol.
+
+use crate::util::rng::Rng;
+
+const ATTRIBUTES: [&str; 6] = ["color", "shape", "size", "mood", "rank", "kind"];
+const VALUES: [&str; 8] = [
+    "red", "blue", "green", "gold", "round", "flat", "tall", "tiny",
+];
+pub const CHOICES: [char; 4] = ['A', 'B', 'C', 'D'];
+
+/// One multiple-choice example (cloze form: the prompt is the fact prefix
+/// "F e123.color=", the options are candidate values, scored by the
+/// likelihood of each continuation — the MMLU choice-scoring protocol over
+/// knowledge the pretraining corpus actually carries).
+#[derive(Clone, Debug)]
+pub struct McqExample {
+    /// The fact prefix to complete.
+    pub prompt: String,
+    /// The four candidate values.
+    pub options: [String; 4],
+    /// Index of the correct choice (0..4).
+    pub correct: usize,
+    /// The fact sentence as it appears in the pretraining corpus.
+    pub fact: String,
+}
+
+impl McqExample {
+    /// Training text: prompt + correct value (i.e. the fact itself).
+    pub fn full_text(&self) -> String {
+        format!("{}{}\n", self.prompt, self.options[self.correct])
+    }
+
+    /// The SFT answer string.
+    pub fn answer(&self) -> &str {
+        &self.options[self.correct]
+    }
+}
+
+/// Generator over a fixed universe of `n_entities` facts.
+#[derive(Clone, Debug)]
+pub struct McqTask {
+    pub n_entities: usize,
+    pub seed: u64,
+}
+
+impl McqTask {
+    pub fn default_task() -> McqTask {
+        McqTask {
+            n_entities: 400,
+            seed: 424242,
+        }
+    }
+
+    /// The ground-truth value of (entity, attribute) — a deterministic
+    /// function of the seed, so corpus and benchmark agree.
+    fn fact_value(&self, entity: usize, attr: usize) -> usize {
+        let mut rng = Rng::new(
+            self.seed ^ (entity as u64) << 20 ^ (attr as u64).wrapping_mul(0x1000_0193),
+        );
+        rng.below(VALUES.len())
+    }
+
+    /// The i-th benchmark question.
+    pub fn example(&self, index: u64) -> McqExample {
+        let mut rng = Rng::new(self.seed ^ index.wrapping_mul(0xDEAD_BEEF_CAFE_F00D) ^ 0x51);
+        let entity = rng.below(self.n_entities);
+        let attr = rng.below(ATTRIBUTES.len());
+        let correct_value = self.fact_value(entity, attr);
+        // Three distinct distractors.
+        let mut options = vec![correct_value];
+        while options.len() < 4 {
+            let d = rng.below(VALUES.len());
+            if !options.contains(&d) {
+                options.push(d);
+            }
+        }
+        rng.shuffle(&mut options);
+        let correct = options.iter().position(|&v| v == correct_value).unwrap();
+        let fact = format!(
+            "F e{}.{}={}\n",
+            entity, ATTRIBUTES[attr], VALUES[correct_value]
+        );
+        let prompt = format!("F e{}.{}=", entity, ATTRIBUTES[attr]);
+        let opts: Vec<String> = options.iter().map(|&v| VALUES[v].to_string()).collect();
+        McqExample {
+            prompt,
+            options: [
+                opts[0].clone(),
+                opts[1].clone(),
+                opts[2].clone(),
+                opts[3].clone(),
+            ],
+            correct,
+            fact,
+        }
+    }
+
+    /// All fact sentences (the knowledge the pretraining corpus carries).
+    pub fn all_facts(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for e in 0..self.n_entities {
+            for a in 0..ATTRIBUTES.len() {
+                out.push(format!(
+                    "F e{}.{}={}\n",
+                    e,
+                    ATTRIBUTES[a],
+                    VALUES[self.fact_value(e, a)]
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn train_examples(&self, n: usize) -> Vec<McqExample> {
+        (0..n as u64).map(|i| self.example(i)).collect()
+    }
+
+    pub fn test_examples(&self, n: usize) -> Vec<McqExample> {
+        (0..n as u64).map(|i| self.example((1 << 20) + i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn questions_are_consistent_with_facts() {
+        let task = McqTask::default_task();
+        for i in 0..100 {
+            let e = task.example(i);
+            // prompt + correct option reconstructs the corpus fact line.
+            assert_eq!(format!("{}{}\n", e.prompt, e.answer()), e.fact);
+        }
+    }
+
+    #[test]
+    fn four_distinct_options() {
+        let task = McqTask::default_task();
+        for i in 0..50 {
+            let e = task.example(i);
+            let set: std::collections::HashSet<_> = e.options.iter().collect();
+            assert_eq!(set.len(), 4);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let task = McqTask::default_task();
+        assert_eq!(task.example(7).prompt, task.example(7).prompt);
+        assert_eq!(task.all_facts().len(), 400 * 6);
+    }
+}

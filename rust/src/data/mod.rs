@@ -1,0 +1,20 @@
+//! Synthetic data: the stand-ins for MetaMath/GSM8K (arithmetic word
+//! problems, exact-match graded) and MMLU (multiple-choice over seeded
+//! facts), plus the mixed pretraining corpus. See DESIGN.md §Substitutions.
+
+mod batch;
+mod corpus;
+mod math_task;
+mod mcq_task;
+mod tokenizer;
+
+pub use batch::{Batch, BatchBuilder};
+pub use corpus::CorpusGen;
+pub use math_task::{grade, MathExample, MathTask};
+pub use mcq_task::{McqExample, McqTask, CHOICES};
+pub use tokenizer::{detokenize, tokenize, PAD, VOCAB_SIZE};
+
+/// The letter of the i-th multiple-choice option.
+pub fn mcq_letter(i: usize) -> char {
+    CHOICES[i]
+}

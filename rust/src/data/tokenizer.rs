@@ -1,0 +1,42 @@
+//! Byte-level tokenizer: token id = byte value. Vocab 256; byte 0 (NUL,
+//! never produced by the generators) doubles as PAD.
+
+/// Vocabulary size (all byte values).
+pub const VOCAB_SIZE: usize = 256;
+
+/// Padding token (id 0).
+pub const PAD: i32 = 0;
+
+/// Encode a string's bytes as token ids.
+pub fn tokenize(s: &str) -> Vec<i32> {
+    s.bytes().map(|b| b as i32).collect()
+}
+
+/// Decode token ids back to a string (PAD and invalid bytes dropped).
+pub fn detokenize(toks: &[i32]) -> String {
+    let bytes: Vec<u8> = toks
+        .iter()
+        .filter(|&&t| t > 0 && t < 256)
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "Q: 12+34=? A: 46\n";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+
+    #[test]
+    fn pad_dropped() {
+        let mut toks = tokenize("ab");
+        toks.push(PAD);
+        toks.insert(0, PAD);
+        assert_eq!(detokenize(&toks), "ab");
+    }
+}

@@ -1,0 +1,106 @@
+//! Benchmark scoring: exact-match generation accuracy (the GSM8K protocol)
+//! and choice log-likelihood accuracy (the MMLU protocol), over the native
+//! engine — the deployment path.
+
+use crate::data::{grade, tokenize, McqExample, MathExample};
+use crate::infer::Engine;
+use crate::tensor::Tensor;
+
+/// Exact-match accuracy on arithmetic problems: generate greedily, grade
+/// the leading number. Returns (accuracy, per-example correctness).
+pub fn math_accuracy(
+    engine: &Engine,
+    examples: &[MathExample],
+    batch: usize,
+    max_new: usize,
+) -> (f64, Vec<bool>) {
+    let mut correct = Vec::with_capacity(examples.len());
+    for chunk in examples.chunks(batch.max(1)) {
+        let prompts: Vec<Vec<i32>> = chunk.iter().map(|e| tokenize(&e.prompt)).collect();
+        let outs = engine.generate_batch(&prompts, max_new);
+        for (e, out) in chunk.iter().zip(outs) {
+            let text = crate::data::detokenize(&out);
+            correct.push(grade(&text, &e.answer));
+        }
+    }
+    let acc = correct.iter().filter(|&&c| c).count() as f64 / correct.len().max(1) as f64;
+    (acc, correct)
+}
+
+/// Multiple-choice accuracy (cloze scoring, the MMLU protocol): each of
+/// the four candidate continuations is scored by its mean token
+/// log-likelihood after the prompt; the argmax must be the correct value.
+pub fn mcq_accuracy(engine: &Engine, examples: &[McqExample]) -> (f64, Vec<bool>) {
+    let mut correct = Vec::with_capacity(examples.len());
+    for e in examples {
+        let prompt = tokenize(&e.prompt);
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, opt) in e.options.iter().enumerate() {
+            let cont = tokenize(opt);
+            let mut toks = prompt.clone();
+            toks.extend_from_slice(&cont);
+            let logits: Tensor = engine.full_logits(&toks);
+            // Sum logprob of the continuation tokens (teacher forcing).
+            let mut lp = 0.0f32;
+            for (j, &t) in cont.iter().enumerate() {
+                let row = logits.row(prompt.len() + j - 1);
+                // log softmax at the target token.
+                let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let lse: f32 = row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+                lp += row[t as usize] - lse;
+            }
+            let score = lp / cont.len().max(1) as f32;
+            if score > best_v {
+                best_v = score;
+                best = i;
+            }
+        }
+        correct.push(best == e.correct);
+    }
+    let acc = correct.iter().filter(|&&c| c).count() as f64 / correct.len().max(1) as f64;
+    (acc, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{MathTask, McqTask};
+    use crate::infer::{Backend, EngineWeights};
+    use crate::model::ParamStore;
+    use crate::runtime::ModelCfg;
+    use crate::util::rng::Rng;
+
+    fn tiny_engine() -> Engine {
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab_size: 256,
+            d_model: 32,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq_len: 64,
+            rank: 4,
+            lora_alpha: 8.0,
+            residual_rank: 4,
+            batch_size: 2,
+            ctx_keep: 0.5,
+        };
+        let mut rng = Rng::new(600);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense)
+    }
+
+    #[test]
+    fn random_model_scores_near_chance() {
+        let engine = tiny_engine();
+        let math = MathTask::pretrain().test_examples(8);
+        let (acc, flags) = math_accuracy(&engine, &math, 4, 4);
+        assert_eq!(flags.len(), 8);
+        assert!(acc < 0.5, "random weights should not solve math (acc={acc})");
+        let mcq = McqTask::default_task().test_examples(12);
+        let (acc_mc, _) = mcq_accuracy(&engine, &mcq);
+        // Chance is 0.25; allow wide slack for a tiny sample.
+        assert!(acc_mc <= 0.8, "acc_mc={acc_mc}");
+    }
+}

@@ -1,0 +1,260 @@
+//! Shared experiment context: pretraining and fine-tuning runs, cached on
+//! disk so the table drivers can share models instead of retraining.
+
+use crate::data::{MathTask, McqTask};
+use crate::infer::{Backend, Engine, EngineWeights};
+use crate::model::{load_model, save_model, Encoding, ParamStore};
+use crate::prune::NmPattern;
+use crate::runtime::{ModelCfg, Runtime};
+use crate::salr::{Baseline, BaselineSpec};
+use crate::train::{finetune, pretrain, FinetuneData, TrainConfig};
+use anyhow::{Context as _, Result};
+use std::path::PathBuf;
+
+/// Identifies one fine-tuning run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunKey {
+    pub baseline: Baseline,
+    pub task: Task,
+    /// Prune ratio (ignored for dense baselines).
+    pub sparsity: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Math,
+    Mcq,
+}
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Math => "math",
+            Task::Mcq => "mcq",
+        }
+    }
+}
+
+impl RunKey {
+    fn cache_tag(&self) -> String {
+        format!(
+            "{}_{}_{}",
+            self.baseline.name().replace([' ', '(', ')'], "-"),
+            self.task.name(),
+            (self.sparsity * 100.0) as usize
+        )
+    }
+}
+
+/// Environment-tunable experiment scales.
+pub struct ExpScale {
+    pub pretrain_steps: usize,
+    pub finetune_steps: usize,
+    pub eval_n: usize,
+    pub lr: f32,
+}
+
+impl ExpScale {
+    pub fn from_env() -> ExpScale {
+        let get = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        ExpScale {
+            pretrain_steps: get("SALR_PRETRAIN_STEPS", 2000),
+            finetune_steps: get("SALR_STEPS", 500),
+            eval_n: get("SALR_EVAL_N", 96),
+            lr: std::env::var("SALR_LR")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(2e-3),
+        }
+    }
+}
+
+/// The context every experiment driver runs in.
+pub struct ExpContext {
+    pub runtime: Runtime,
+    pub cfg: ModelCfg,
+    pub scale: ExpScale,
+    pub results_dir: PathBuf,
+    cache_dir: PathBuf,
+}
+
+impl ExpContext {
+    pub fn new(artifact_dir: &str, config: &str, results_dir: &str) -> Result<ExpContext> {
+        let runtime = Runtime::new(artifact_dir)?;
+        let cfg = runtime.manifest().config(config)?.clone();
+        let results_dir = PathBuf::from(results_dir);
+        let cache_dir = results_dir.join("cache");
+        std::fs::create_dir_all(&cache_dir)?;
+        Ok(ExpContext {
+            runtime,
+            cfg,
+            scale: ExpScale::from_env(),
+            results_dir,
+            cache_dir,
+        })
+    }
+
+    fn cache_path(&self, tag: &str) -> PathBuf {
+        self.cache_dir.join(format!(
+            "{}_{}_s{}.salr",
+            self.cfg.name, tag, self.scale.finetune_steps
+        ))
+    }
+
+    /// The pretrained base model (cached on disk).
+    pub fn base_model(&self) -> Result<ParamStore> {
+        let path = self.cache_path(&format!("base_p{}", self.scale.pretrain_steps));
+        if path.exists() {
+            log::info!("loading cached base model {path:?}");
+            return load_model(&path);
+        }
+        log::info!(
+            "pretraining base model ({} steps)…",
+            self.scale.pretrain_steps
+        );
+        let tc = TrainConfig {
+            steps: self.scale.pretrain_steps,
+            lr: self.scale.lr,
+            seed: 11,
+            log_every: 100,
+            ..Default::default()
+        };
+        let (params, losses) = pretrain(&self.runtime, &self.cfg, &tc)?;
+        log::info!(
+            "pretrain done: loss {:.3} → {:.3}",
+            losses.first().copied().unwrap_or(0.0),
+            losses.last().copied().unwrap_or(0.0)
+        );
+        save_model(&path, &params, |_, _| Encoding::Dense)?;
+        Ok(params)
+    }
+
+    /// Fine-tune (or load cached) a baseline; returns (spec, adapters,
+    /// final losses). The spec carries the pruned/masked frozen state.
+    pub fn run(&self, key: &RunKey) -> Result<(BaselineSpec, ParamStore, Vec<f32>)> {
+        let base = self.base_model()?;
+        let mut spec = BaselineSpec::build(&self.cfg, &base, key.baseline, key.sparsity, 21);
+        if key.baseline == Baseline::Pretrained {
+            return Ok((spec, ParamStore::new(), Vec::new()));
+        }
+        let path = self.cache_path(&key.cache_tag());
+        if path.exists() {
+            log::info!("loading cached run {path:?}");
+            let adapters = load_model(&path)?;
+            return Ok((spec, adapters, Vec::new()));
+        }
+        let data = self.task_data(key.task);
+        let tc = TrainConfig {
+            steps: self.scale.finetune_steps,
+            lr: self.scale.lr,
+            seed: 31,
+            log_every: 100,
+            ..Default::default()
+        };
+        log::info!(
+            "fine-tuning {} on {} at p={} ({} steps)…",
+            key.baseline.name(),
+            key.task.name(),
+            key.sparsity,
+            tc.steps
+        );
+        let report = finetune(&self.runtime, &self.cfg, &mut spec, &data, &tc)?;
+        log::info!(
+            "finetune[{}] done: loss {:.3} → {:.3} (η={:.2e}, {:.1}s)",
+            key.baseline.name(),
+            report.losses.first().copied().unwrap_or(0.0),
+            report.losses.last().copied().unwrap_or(0.0),
+            report.eta,
+            report.train_secs
+        );
+        save_model(&path, &report.adapters, |_, _| Encoding::Dense)?;
+        Ok((spec, report.adapters, report.losses))
+    }
+
+    /// The fine-tuning dataset for a task.
+    pub fn task_data(&self, task: Task) -> FinetuneData {
+        match task {
+            Task::Math => FinetuneData::Math(MathTask::finetune().train_examples(4096)),
+            Task::Mcq => FinetuneData::Mcq(McqTask::default_task().train_examples(4096)),
+        }
+    }
+
+    /// Accuracy of a deployed run on a task's held-out set.
+    pub fn accuracy(&self, spec: &BaselineSpec, adapters: &ParamStore, task: Task) -> Result<f64> {
+        let engine = deploy_engine(&self.cfg, spec, adapters, None)?;
+        Ok(match task {
+            Task::Math => {
+                let test = MathTask::finetune().test_examples(self.scale.eval_n);
+                super::math_accuracy(&engine, &test, self.cfg.batch_size, 6).0
+            }
+            Task::Mcq => {
+                let test = McqTask::default_task().test_examples(self.scale.eval_n);
+                super::mcq_accuracy(&engine, &test).0
+            }
+        })
+    }
+}
+
+/// Build the deployment engine for a fine-tuned baseline.
+/// `nm` re-prunes to an N:M pattern (Table 4's 2:4 protocol).
+pub fn deploy_engine(
+    cfg: &ModelCfg,
+    spec: &BaselineSpec,
+    adapters: &ParamStore,
+    nm: Option<NmPattern>,
+) -> Result<Engine> {
+    let weights = match spec.baseline {
+        Baseline::Pretrained => EngineWeights::dense_merged(cfg, &spec.params, None),
+        Baseline::Lora | Baseline::SparseLora => {
+            EngineWeights::dense_merged(cfg, &spec.params, Some(adapters))
+        }
+        Baseline::Losa => {
+            // Deploy the masked merged weights sparsely (zero adapters).
+            let mut merged = spec.params.clone();
+            let masks = spec.masks.as_ref().context("losa spec missing masks")?;
+            let s = cfg.lora_scaling();
+            for name in cfg.adapted_layers() {
+                let w = merged.get_mut(&name).unwrap();
+                if let (Some(a), Some(b)) = (
+                    adapters.get(&format!("{name}.lora_a")),
+                    adapters.get(&format!("{name}.lora_b")),
+                ) {
+                    let mut ab = crate::tensor::matmul(a, b);
+                    ab.scale(s);
+                    crate::tensor::axpy(w, 1.0, &ab);
+                }
+                let m = masks.get(&format!("{name}.mask")).unwrap();
+                let masked = crate::tensor::mul(w, m);
+                *w = masked;
+            }
+            let mut zero_adapters = ParamStore::new();
+            for name in cfg.adapted_layers() {
+                let lin = name.split('.').nth(1).unwrap();
+                let (d_in, d_out) = cfg.linear_shape(lin);
+                zero_adapters.insert(
+                    &format!("{name}.lora_a"),
+                    crate::tensor::Tensor::zeros(&[d_in, 1]),
+                );
+                zero_adapters.insert(
+                    &format!("{name}.lora_b"),
+                    crate::tensor::Tensor::zeros(&[1, d_out]),
+                );
+            }
+            return Ok(Engine::new(
+                EngineWeights::salr(cfg, &merged, &zero_adapters, nm),
+                Backend::BitmapPipelined(Default::default()),
+            ));
+        }
+        Baseline::DeepSparse | Baseline::Salr | Baseline::SalrFrozenResidual => {
+            EngineWeights::salr(cfg, &spec.params, adapters, nm)
+        }
+    };
+    let backend = if spec.baseline.deploys_sparse() {
+        Backend::BitmapPipelined(Default::default())
+    } else {
+        Backend::Dense
+    };
+    Ok(Engine::new(weights, backend))
+}

@@ -1,0 +1,14 @@
+//! The experiment harness: every table and figure of the paper has a
+//! driver here (`salr exp <id>`), built on a shared context that
+//! pretrains/fine-tunes once per (baseline, task, sparsity) and caches the
+//! results under `results/cache/`. See DESIGN.md §Experiment-index.
+
+mod accuracy;
+mod context;
+mod report;
+mod tables;
+
+pub use accuracy::{math_accuracy, mcq_accuracy};
+pub use context::{deploy_engine, ExpContext, RunKey, Task};
+pub use report::Report;
+pub use tables::{run_experiment, EXPERIMENTS};

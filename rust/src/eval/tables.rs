@@ -1,0 +1,610 @@
+//! One driver per paper table/figure. Each regenerates the corresponding
+//! result on the synthetic testbed and emits a Report under `results/`.
+//! Paper numbers are quoted in notes for side-by-side comparison —
+//! *shape* (who wins, by roughly what factor) is the reproduction target,
+//! not absolute values (see DESIGN.md §Substitutions).
+
+use super::context::{deploy_engine, ExpContext, RunKey, Task};
+use super::report::{f2, pct, Report};
+use crate::data::MathTask;
+use crate::infer::Engine;
+use crate::linalg::jacobi_svd;
+use crate::model::{save_model, Encoding, ParamStore};
+use crate::prune::{theory, NmPattern};
+use crate::salr::{Baseline, BaselineSpec};
+use crate::tensor::{matmul, sub, Tensor};
+use crate::train::{finetune, TrainConfig};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Registry of experiment ids.
+pub const EXPERIMENTS: [&str; 10] = [
+    "theory", "table1", "table2", "table3", "table4", "table5", "table6", "table7",
+    "fig1", "fig3",
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(ctx: &ExpContext, id: &str) -> Result<()> {
+    match id {
+        "theory" => theory_exp(ctx),
+        "table1" => table1(ctx),
+        "table2" => table2(ctx),
+        "table3" => table3(ctx),
+        "table4" => table4(ctx),
+        "table5" => table5(ctx),
+        "table6" => table6(ctx),
+        "table7" => table7(ctx),
+        "fig1" => fig1(ctx),
+        "fig3" => fig3(ctx),
+        "all" => {
+            for e in EXPERIMENTS {
+                run_experiment(ctx, e)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment {other} (have {EXPERIMENTS:?} or 'all')"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Theorems 1–3 numerics
+// ---------------------------------------------------------------------------
+
+fn theory_exp(ctx: &ExpContext) -> Result<()> {
+    let mut r = Report::new(
+        "theory",
+        "Theorems 1–3: closed forms vs Monte Carlo (σ²=1, τ²=0.25)",
+        &["p", "MSE(p)", "E1", "E2", "E3", "E1 MC", "E2 MC", "E3 MC", "Thm3 r=q/4"],
+    );
+    let (s2, t2) = (1.0, 0.25);
+    let mut rng = Rng::new(777);
+    for &p in &[0.1, 0.3, 0.5, 0.7, 0.9] {
+        let n = 200_000;
+        let v = (s2 + t2_f(t2)).sqrt();
+        let (mut m1, mut m2, mut m3) = (0.0f64, 0.0, 0.0);
+        for _ in 0..n {
+            let w0 = rng.normal();
+            let u = w0 + rng.normal() * t2.sqrt();
+            let e1v = if w0.abs() <= theory::t_p(p) { w0 } else { 0.0 };
+            let e2v = if u.abs() <= v * theory::t_p(p) { w0 } else { 0.0 };
+            let e3v = if u.abs() <= v * theory::t_p(p) { u } else { 0.0 };
+            m1 += e1v * e1v;
+            m2 += e2v * e2v;
+            m3 += e3v * e3v;
+        }
+        let nf = n as f64;
+        r.row(vec![
+            format!("{p:.1}"),
+            format!("{:.4}", theory::mse_prune(p, s2)),
+            format!("{:.4}", theory::e1(p, s2)),
+            format!("{:.4}", theory::e2(p, s2, t2)),
+            format!("{:.4}", theory::e3(p, s2, t2)),
+            format!("{:.4}", m1 / nf),
+            format!("{:.4}", m2 / nf),
+            format!("{:.4}", m3 / nf),
+            format!("{:.4}", theory::mse_prune_svd_bound(p, s2, 16, 64, 64)),
+        ]);
+    }
+    r.note(format!(
+        "paper: MSE(0.5) ≈ 0.072σ²; measured closed form = {:.4}",
+        theory::mse_prune(0.5, 1.0)
+    ));
+    r.note("E1 ≤ E2 and E1 ≤ E3 hold everywhere (the paper's Method-1 claim).");
+    r.note(format!(
+        "paper's secondary claim E3 ≤ E2 fails for large τ²: e.g. p=0.55, σ²=0.5, τ²=2 → E2−E3 = {:.4} (<0); its Comparison step actually derives E2−E1 (see prune::theory docs)",
+        theory::e2_minus_e3(0.55, 0.5, 2.0)
+    ));
+    r.emit(&ctx.results_dir)
+}
+
+fn t2_f(t2: f64) -> f64 {
+    t2
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: qualitative feature matrix
+// ---------------------------------------------------------------------------
+
+fn table1(ctx: &ExpContext) -> Result<()> {
+    let mut r = Report::new(
+        "table1",
+        "Feature matrix (paper Table 1)",
+        &["Method", "Performance", "Model", "Speedup"],
+    );
+    for b in [Baseline::Losa, Baseline::SparseLora, Baseline::Salr] {
+        let perf = match b {
+            Baseline::Losa => "Low",
+            _ => "High",
+        };
+        r.row(vec![
+            b.name().to_string(),
+            perf.to_string(),
+            if b.deploys_sparse() { "Sparse" } else { "Dense" }.to_string(),
+            if b.claims_speedup() { "Y" } else { "N" }.to_string(),
+        ]);
+    }
+    r.note("Performance column validated quantitatively by table2.");
+    r.emit(&ctx.results_dir)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: benchmark accuracy across methods @50% sparsity
+// ---------------------------------------------------------------------------
+
+fn table2(ctx: &ExpContext) -> Result<()> {
+    let mut r = Report::new(
+        "table2",
+        "Accuracy @50% sparsity (paper Table 2; MCQ≈MMLU, Math≈GSM8K)",
+        &["Method", "MCQ acc", "Math acc", "Sparsity"],
+    );
+    let baselines = [
+        Baseline::Pretrained,
+        Baseline::Lora,
+        Baseline::Losa,
+        Baseline::SparseLora,
+        Baseline::DeepSparse,
+        Baseline::Salr,
+    ];
+    for b in baselines {
+        let mut accs = Vec::new();
+        for task in [Task::Mcq, Task::Math] {
+            let key = RunKey {
+                baseline: b,
+                task,
+                sparsity: 0.5,
+            };
+            let (spec, adapters, _) = ctx.run(&key)?;
+            accs.push(ctx.accuracy(&spec, &adapters, task)?);
+        }
+        let sparsity = if b.deploys_sparse() { "50%" } else { "-" };
+        r.row(vec![
+            b.name().to_string(),
+            pct(accs[0]),
+            pct(accs[1]),
+            sparsity.to_string(),
+        ]);
+    }
+    r.note("paper (Llama3-8B): LoRA 69.2/79.5, LoSA 64.4/71.4, SparseLoRA 69.0/72.0, DeepSparse 60.4/47.9, SALR 68.2/79.5");
+    r.note("expected shape: SALR ≈ LoRA > {LoSA, DeepSparse}; SparseLoRA matches on MCQ, degrades on Math.");
+    r.emit(&ctx.results_dir)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3: fine-tuning memory + throughput + compression
+// ---------------------------------------------------------------------------
+
+fn table3(ctx: &ExpContext) -> Result<()> {
+    let mut r = Report::new(
+        "table3",
+        "Fine-tuning footprint (paper Table 3)",
+        &["Method", "step ms", "GFLOP/s", "Δ            RSS MB", "# Comp"],
+    );
+    let base = ctx.base_model()?;
+    let steps = 12usize;
+    let data = ctx.task_data(Task::Math);
+    for b in [Baseline::Lora, Baseline::Losa, Baseline::Salr] {
+        let mut spec = BaselineSpec::build(&ctx.cfg, &base, b, 0.5, 41);
+        let tc = TrainConfig {
+            steps,
+            lr: 1e-3,
+            seed: 5,
+            log_every: 0,
+            mask_refresh: 0,
+            ..Default::default()
+        };
+        let rss_before = crate::util::mem::rss_bytes();
+        let report = finetune(&ctx.runtime, &ctx.cfg, &mut spec, &data, &tc)?;
+        let rss_after = crate::util::mem::rss_bytes();
+        let step_ms = report.train_secs / steps as f64 * 1e3;
+        let flops = flops_per_step(&ctx.cfg, b);
+        let comp = compression_rate(ctx, &spec)?;
+        r.row(vec![
+            b.name().to_string(),
+            f2(step_ms),
+            f2(flops / (report.train_secs / steps as f64) / 1e9),
+            f2((rss_after.saturating_sub(rss_before)) as f64 / 1e6),
+            format!("{comp:.1}x"),
+        ]);
+    }
+    r.note("paper: LoRA 26.7GB/91.9TF, LoSA 27.1GB/74.5TF, SALR 19.2GB/89.2TF, 2.0x comp @50%");
+    r.note("expected shape: LoSA slowest (materializes ΔW=AB densely per layer per step); SALR ≈ LoRA throughput; 2x compression.");
+    r.emit(&ctx.results_dir)
+}
+
+/// Analytic FLOPs per optimization step (adapted linears only — the terms
+/// that differ across methods).
+fn flops_per_step(cfg: &crate::runtime::ModelCfg, b: Baseline) -> f64 {
+    let tokens = (cfg.batch_size * cfg.max_seq_len) as f64;
+    let mut fl = 0.0;
+    for name in cfg.adapted_layers() {
+        let lin = name.split('.').nth(1).unwrap();
+        let (d_in, d_out) = cfg.linear_shape(lin);
+        let (d_in, d_out) = (d_in as f64, d_out as f64);
+        let r = cfg.rank as f64;
+        // Frozen base: fwd (2) + input-grad (2) MACs.
+        fl += 4.0 * tokens * d_in * d_out;
+        // Adapters: fwd + full bwd (weight grads) = 6 on both factors.
+        fl += 6.0 * tokens * r * (d_in + d_out);
+        match b {
+            Baseline::Losa => {
+                // ΔW = A·B materialization + mask each step (the paper's
+                // charged inefficiency).
+                fl += 2.0 * r * d_in * d_out + d_in * d_out;
+            }
+            Baseline::Salr => {
+                let rr = cfg.residual_rank as f64;
+                fl += 6.0 * tokens * rr * (d_in + d_out);
+            }
+            _ => {}
+        }
+    }
+    fl
+}
+
+/// Serialized compression of the deployed model vs dense f32.
+fn compression_rate(ctx: &ExpContext, spec: &BaselineSpec) -> Result<f64> {
+    let dense_bytes = spec.params.dense_bytes() as f64;
+    let adapted: std::collections::HashSet<String> =
+        ctx.cfg.adapted_layers().into_iter().collect();
+    let path = ctx.results_dir.join("cache").join(format!(
+        "size_probe_{}.salr",
+        spec.baseline.name().replace([' ', '(', ')'], "-")
+    ));
+    let enc = |name: &str, _t: &Tensor| -> Encoding {
+        if adapted.contains(name) && spec.baseline.deploys_sparse() {
+            Encoding::Bitmap
+        } else {
+            Encoding::Dense
+        }
+    };
+    let bytes = save_model(&path, &spec.params, enc)? as f64;
+    let _ = std::fs::remove_file(&path);
+    Ok(dense_bytes / bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: inference accuracy + throughput under 2:4
+// ---------------------------------------------------------------------------
+
+fn table4(ctx: &ExpContext) -> Result<()> {
+    let mut r = Report::new(
+        "table4",
+        "Inference under 2:4 sparsity (paper Table 4)",
+        &["Method (sparsity)", "Math acc", "tokens/s", "speedup"],
+    );
+    let test = MathTask::finetune().test_examples(ctx.scale.eval_n.min(32));
+    let mut base_tps = 0.0f64;
+    for (label, b, nm) in [
+        ("LoRA (N/A)", Baseline::Lora, None),
+        ("SparseLoRA (N/A)", Baseline::SparseLora, None),
+        ("LoSA (2:4)", Baseline::Losa, Some(NmPattern::TWO_FOUR)),
+        ("SALR (2:4)", Baseline::Salr, Some(NmPattern::TWO_FOUR)),
+    ] {
+        let key = RunKey {
+            baseline: b,
+            task: Task::Math,
+            sparsity: 0.5,
+        };
+        let (spec, mut adapters, _) = ctx.run(&key)?;
+        // SALR's deploy-time N:M re-prune *recaptures* the newly pruned
+        // mass in the residual adapter (Theorem 3 applied at deployment) —
+        // the mechanism LoSA lacks.
+        if b == Baseline::Salr && nm.is_some() {
+            recapture_nm_residual(ctx, &spec, &mut adapters, NmPattern::TWO_FOUR);
+        }
+        let engine = deploy_engine(&ctx.cfg, &spec, &adapters, nm)?;
+        let (acc, _) = super::math_accuracy(&engine, &test, ctx.cfg.batch_size, 6);
+        let tps = measure_decode_tps(&engine, ctx.cfg.batch_size, 24);
+        if base_tps == 0.0 {
+            base_tps = tps;
+        }
+        r.row(vec![
+            label.to_string(),
+            pct(acc),
+            f2(tps),
+            format!("{:.2}x", tps / base_tps),
+        ]);
+    }
+    r.note("paper (RTX4090): LoRA 79.5/60.1 t/s, SparseLoRA 72/60.1, LoSA 69.4/113.5 (1.9x), SALR 78.9/104.9 (1.7x)");
+    r.note("expected shape: sparse deployments faster; SALR holds accuracy via residual recapture, LoSA drops.");
+    r.emit(&ctx.results_dir)
+}
+
+/// Fold the N:M re-pruning error back into the residual adapter:
+/// res' = truncated_svd(res·resᵀ-product + (Ŵ − NM(Ŵ)), r).
+fn recapture_nm_residual(
+    ctx: &ExpContext,
+    spec: &BaselineSpec,
+    adapters: &mut ParamStore,
+    pat: NmPattern,
+) {
+    for name in ctx.cfg.adapted_layers() {
+        let w_hat = spec.params.get(&name).unwrap();
+        let mut w_nm = w_hat.clone();
+        crate::prune::prune_nm(&mut w_nm, pat);
+        let extra = sub(w_hat, &w_nm);
+        let (ra_k, rb_k) = (format!("{name}.res_a"), format!("{name}.res_b"));
+        if let (Some(ra), Some(rb)) = (adapters.get(&ra_k), adapters.get(&rb_k)) {
+            let old = matmul(ra, rb);
+            let target = crate::tensor::add(&old, &extra);
+            let svd = crate::linalg::truncated_svd(&target, ctx.cfg.residual_rank, 97);
+            let (na, nb) = svd.into_adapter();
+            adapters.insert(&ra_k, na);
+            adapters.insert(&rb_k, nb);
+        }
+    }
+}
+
+/// Sustained batched decode throughput (tokens/s).
+fn measure_decode_tps(engine: &Engine, batch: usize, new_tokens: usize) -> f64 {
+    let cfg = &engine.weights.cfg;
+    let prompt_len = (cfg.max_seq_len / 2).min(cfg.max_seq_len - new_tokens - 1);
+    let prompts: Vec<Vec<i32>> = (0..batch)
+        .map(|i| (0..prompt_len).map(|j| ((i * 31 + j * 7) % 200 + 32) as i32).collect())
+        .collect();
+    // Warm up once, then measure.
+    let _ = engine.generate_batch(&prompts, 4);
+    let t0 = Instant::now();
+    let _ = engine.generate_batch(&prompts, new_tokens);
+    let secs = t0.elapsed().as_secs_f64();
+    (batch * new_tokens) as f64 / secs
+}
+
+// ---------------------------------------------------------------------------
+// Table 5: residual frozen vs trainable
+// ---------------------------------------------------------------------------
+
+fn table5(ctx: &ExpContext) -> Result<()> {
+    let mut r = Report::new(
+        "table5",
+        "Residual-update ablation on MCQ (paper Table 5)",
+        &["Method", "MCQ acc"],
+    );
+    for b in [
+        Baseline::Lora,
+        Baseline::SalrFrozenResidual,
+        Baseline::Salr,
+    ] {
+        let key = RunKey {
+            baseline: b,
+            task: Task::Mcq,
+            sparsity: 0.5,
+        };
+        let (spec, adapters, _) = ctx.run(&key)?;
+        let acc = ctx.accuracy(&spec, &adapters, Task::Mcq)?;
+        r.row(vec![b.name().to_string(), pct(acc)]);
+    }
+    r.note("paper (Llama3-8B MMLU): LoRA 69.2, frozen 66.8 (−2.4), trainable 68.2");
+    r.note("expected shape: frozen < trainable ≤ LoRA.");
+    r.emit(&ctx.results_dir)
+}
+
+// ---------------------------------------------------------------------------
+// Table 6: QSALR (20% sparsity + NF4)
+// ---------------------------------------------------------------------------
+
+fn table6(ctx: &ExpContext) -> Result<()> {
+    let mut r = Report::new(
+        "table6",
+        "QSALR: 20% sparsity + NF4 (paper Table 6)",
+        &["Method", "Math acc", "Model size", "ratio"],
+    );
+    // LoRA dense reference.
+    let key = RunKey {
+        baseline: Baseline::Lora,
+        task: Task::Math,
+        sparsity: 0.0,
+    };
+    let (spec, adapters, _) = ctx.run(&key)?;
+    let acc_lora = ctx.accuracy(&spec, &adapters, Task::Math)?;
+    let dense_path = ctx.results_dir.join("lora_dense_model.salr");
+    let dense_bytes = save_model(&dense_path, &spec.params, |_, _| Encoding::Dense)?;
+
+    // QSALR: 20% static sparsity + NF4 on the kept values.
+    let key_q = RunKey {
+        baseline: Baseline::Salr,
+        task: Task::Math,
+        sparsity: 0.2,
+    };
+    let (spec_q, adapters_q, _) = ctx.run(&key_q)?;
+    let adapted: std::collections::HashSet<String> =
+        ctx.cfg.adapted_layers().into_iter().collect();
+    let q_path = ctx.results_dir.join("qsalr_model.salr");
+    let q_bytes = save_model(&q_path, &spec_q.params, |name, t| {
+        if adapted.contains(name) {
+            Encoding::SparseNf4
+        } else if t.ndim() == 2 {
+            Encoding::Nf4
+        } else {
+            Encoding::Dense
+        }
+    })?;
+    // Accuracy with quantized+sparse weights actually deployed.
+    let dequant = crate::model::load_model(&q_path)?;
+    let mut spec_deq = spec_q;
+    spec_deq.params = dequant;
+    let acc_q = ctx.accuracy(&spec_deq, &adapters_q, Task::Math)?;
+
+    r.row(vec![
+        "LoRA".into(),
+        pct(acc_lora),
+        crate::util::human_bytes(dense_bytes),
+        "1.0x".into(),
+    ]);
+    r.row(vec![
+        "QSALR (20% + NF4)".into(),
+        pct(acc_q),
+        crate::util::human_bytes(q_bytes),
+        format!("{:.1}x", dense_bytes as f64 / q_bytes as f64),
+    ]);
+    r.note("paper: DeepSeek-V2 31.8→6.5 GB (−0.6 acc); Mixtral 93.9→19.2 GB (0.0 acc) — ~5x");
+    r.emit(&ctx.results_dir)
+}
+
+// ---------------------------------------------------------------------------
+// Table 7: sparsity sweep
+// ---------------------------------------------------------------------------
+
+fn table7(ctx: &ExpContext) -> Result<()> {
+    let mut r = Report::new(
+        "table7",
+        "Sparsity–accuracy trade-off (paper Table 7)",
+        &["Method (sparsity)", "Math acc"],
+    );
+    let key = RunKey {
+        baseline: Baseline::Lora,
+        task: Task::Math,
+        sparsity: 0.0,
+    };
+    let (spec, adapters, _) = ctx.run(&key)?;
+    r.row(vec!["LoRA (N/A)".into(), pct(ctx.accuracy(&spec, &adapters, Task::Math)?)]);
+    for p in [0.1, 0.3, 0.5] {
+        let key = RunKey {
+            baseline: Baseline::Salr,
+            task: Task::Math,
+            sparsity: p,
+        };
+        let (spec, adapters, _) = ctx.run(&key)?;
+        let acc = ctx.accuracy(&spec, &adapters, Task::Math)?;
+        r.row(vec![format!("SALR ({:.0}%)", p * 100.0), pct(acc)]);
+    }
+    r.note("paper: LoRA 79.5; SALR 79.5/80.1/79.5 at 10/30/50% — flat up to 50%.");
+    r.emit(&ctx.results_dir)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1: memory–accuracy trade-off
+// ---------------------------------------------------------------------------
+
+fn fig1(ctx: &ExpContext) -> Result<()> {
+    let mut r = Report::new(
+        "fig1",
+        "Memory–accuracy trade-off @50% (paper Fig. 1)",
+        &["Method", "Math acc", "Model bytes", "rel size"],
+    );
+    let adapted: std::collections::HashSet<String> =
+        ctx.cfg.adapted_layers().into_iter().collect();
+    let mut dense_bytes = 0u64;
+    for (b, p) in [
+        (Baseline::Lora, 0.0),
+        (Baseline::Losa, 0.5),
+        (Baseline::Salr, 0.5),
+    ] {
+        let key = RunKey {
+            baseline: b,
+            task: Task::Math,
+            sparsity: p,
+        };
+        let (spec, adapters, _) = ctx.run(&key)?;
+        let acc = ctx.accuracy(&spec, &adapters, Task::Math)?;
+        // Serialize the deployable model (LoSA: masked merged weights).
+        let path = ctx.results_dir.join(format!("fig1_{}.salr", b.name().replace(' ', "-")));
+        let store = deploy_store(ctx, &spec, &adapters)?;
+        let bytes = save_model(&path, &store, |name, t| {
+            if b.deploys_sparse() && adapted.contains(name) && t.ndim() == 2 {
+                Encoding::Bitmap
+            } else {
+                Encoding::Dense
+            }
+        })?;
+        if b == Baseline::Lora {
+            dense_bytes = bytes;
+        }
+        r.row(vec![
+            b.name().to_string(),
+            pct(acc),
+            crate::util::human_bytes(bytes),
+            format!("{:.2}", bytes as f64 / dense_bytes as f64),
+        ]);
+    }
+    r.note("paper: LoRA 79.5 @15.5GB; SALR 79.5 @7.98GB; LoSA 71.4 @~8GB");
+    r.note("expected shape: SALR keeps LoRA accuracy at ~55% the bytes; LoSA same bytes, lower accuracy.");
+    r.emit(&ctx.results_dir)
+}
+
+/// The store a baseline actually ships (merged for LoSA, pruned + factored
+/// adapters folded separately for SALR — here we fold adapters dense for a
+/// conservative size).
+fn deploy_store(ctx: &ExpContext, spec: &BaselineSpec, adapters: &ParamStore) -> Result<ParamStore> {
+    let mut store = spec.params.clone();
+    if spec.baseline == Baseline::Losa {
+        let masks = spec.masks.as_ref().unwrap();
+        let s = ctx.cfg.lora_scaling();
+        for name in ctx.cfg.adapted_layers() {
+            let w = store.get_mut(&name).unwrap();
+            if let (Some(a), Some(b)) = (
+                adapters.get(&format!("{name}.lora_a")),
+                adapters.get(&format!("{name}.lora_b")),
+            ) {
+                let mut ab = matmul(a, b);
+                ab.scale(s);
+                crate::tensor::axpy(w, 1.0, &ab);
+            }
+            let masked = crate::tensor::mul(w, masks.get(&format!("{name}.mask")).unwrap());
+            *w = masked;
+        }
+    } else {
+        // Ship factored adapters alongside (they are small).
+        for (k, v) in adapters.iter() {
+            store.insert(k, v.clone());
+        }
+    }
+    Ok(store)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3: singular-energy spectra of the residual corrections
+// ---------------------------------------------------------------------------
+
+fn fig3(ctx: &ExpContext) -> Result<()> {
+    let mut r = Report::new(
+        "fig3",
+        "Cumulative singular energy of residual corrections (paper Fig. 3)",
+        &["rank i", "LoSA cum-energy", "SALR cum-energy"],
+    );
+    // The *correction matrix* each method uses to compensate pruning, for a
+    // representative layer: LoSA has only its LoRA product s·A·B; SALR has
+    // the concatenated LoRA + sparsity-preservation residual adapters.
+    let layer = "layer0.w_in";
+    let s_scale = ctx.cfg.lora_scaling();
+    let correction_of = |b: Baseline| -> Result<Tensor> {
+        let key = RunKey {
+            baseline: b,
+            task: Task::Math,
+            sparsity: 0.5,
+        };
+        let (_spec, adapters, _) = ctx.run(&key)?;
+        let a = adapters.get(&format!("{layer}.lora_a")).unwrap();
+        let bb = adapters.get(&format!("{layer}.lora_b")).unwrap();
+        let mut corr = matmul(a, bb);
+        corr.scale(s_scale);
+        if let (Some(ra), Some(rb)) = (
+            adapters.get(&format!("{layer}.res_a")),
+            adapters.get(&format!("{layer}.res_b")),
+        ) {
+            let res = matmul(ra, rb);
+            corr = crate::tensor::add(&corr, &res);
+        }
+        Ok(corr)
+    };
+    let losa_corr = correction_of(Baseline::Losa)?;
+    let salr_corr = correction_of(Baseline::Salr)?;
+    let ce_losa = jacobi_svd(&losa_corr).cumulative_energy();
+    let ce_salr = jacobi_svd(&salr_corr).cumulative_energy();
+    let q = ce_losa.len().min(ce_salr.len());
+    let i99 = |ce: &[f64]| ce.iter().position(|&e| e >= 0.99).map(|i| i + 1).unwrap_or(q);
+    for i in (0..q.min(48)).step_by(2) {
+        r.row(vec![
+            format!("{}", i + 1),
+            format!("{:.4}", ce_losa[i]),
+            format!("{:.4}", ce_salr[i]),
+        ]);
+    }
+    r.note(format!(
+        "i_0.99: LoSA = {}, SALR = {} (paper: i99_LoSA ≪ i99_SALR — SALR retains a larger spectrum tail via the rank-r residual, Theorem 3)",
+        i99(&ce_losa),
+        i99(&ce_salr)
+    ));
+    r.emit(&ctx.results_dir)
+}

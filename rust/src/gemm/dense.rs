@@ -1,0 +1,286 @@
+//! Blocked, register-tiled dense f32 GEMM.
+//!
+//! Row-major `C[m,n] = A[m,k] @ B[k,n]`. The kernel tiles M×N into 4×16
+//! register blocks accumulated over a K panel, with an L2-friendly outer
+//! blocking. This is the compute stage of the two-stage sparse pipeline and
+//! the dense baseline for every speedup table, so it needs to be fast enough
+//! that the *pipeline*, not the MACs, is what the benchmarks compare.
+
+/// Outer cache blocking (elements).
+pub const MC: usize = 64;
+pub const KC: usize = 256;
+pub const NC: usize = 512;
+
+/// Register micro-tile.
+const MR: usize = 4;
+const NR: usize = 16;
+
+/// `C = A @ B` (C overwritten).
+pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    c.fill(0.0);
+    gemm_f32_acc(a, b, c, m, k, n);
+}
+
+/// `C += A @ B`.
+pub fn gemm_f32_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert!(a.len() >= m * k, "A too small");
+    assert!(b.len() >= k * n, "B too small");
+    assert!(c.len() >= m * n, "C too small");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    // Small problems: skip blocking overhead.
+    if m * n * k <= 32 * 32 * 32 {
+        return gemm_small_acc(a, b, c, m, k, n);
+    }
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                block_kernel(a, b, c, m, k, n, ic, pc, jc, mb, kb, nb);
+                let _ = m;
+            }
+        }
+    }
+}
+
+/// One (mb × nb) block over a kb panel, micro-tiled MR×NR.
+#[allow(clippy::too_many_arguments)]
+fn block_kernel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    _m: usize,
+    k: usize,
+    n: usize,
+    ic: usize,
+    pc: usize,
+    jc: usize,
+    mb: usize,
+    kb: usize,
+    nb: usize,
+) {
+    let mut i = 0;
+    while i < mb {
+        let mr = MR.min(mb - i);
+        let mut j = 0;
+        while j < nb {
+            let nr = NR.min(nb - j);
+            if mr == MR && nr == NR {
+                micro_4x16(a, b, c, k, n, ic + i, pc, jc + j, kb);
+            } else {
+                micro_edge(a, b, c, k, n, ic + i, pc, jc + j, mr, kb, nr);
+            }
+            j += NR;
+        }
+        i += MR;
+    }
+}
+
+/// 4×16 register-tiled micro-kernel: C[i0..i0+4, j0..j0+16] += A-panel @ B-panel.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_4x16(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    n: usize,
+    i0: usize,
+    p0: usize,
+    j0: usize,
+    kb: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kb {
+        let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + NR];
+        // Unrolled over the 4 A rows; the NR-wide inner loop vectorizes.
+        let a0 = a[i0 * k + p0 + p];
+        let a1 = a[(i0 + 1) * k + p0 + p];
+        let a2 = a[(i0 + 2) * k + p0 + p];
+        let a3 = a[(i0 + 3) * k + p0 + p];
+        for jj in 0..NR {
+            let bv = brow[jj];
+            acc[0][jj] += a0 * bv;
+            acc[1][jj] += a1 * bv;
+            acc[2][jj] += a2 * bv;
+            acc[3][jj] += a3 * bv;
+        }
+    }
+    for (ii, accrow) in acc.iter().enumerate() {
+        let crow = &mut c[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + NR];
+        for jj in 0..NR {
+            crow[jj] += accrow[jj];
+        }
+    }
+}
+
+/// Edge micro-kernel for ragged tiles.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_edge(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    n: usize,
+    i0: usize,
+    p0: usize,
+    j0: usize,
+    mr: usize,
+    kb: usize,
+    nr: usize,
+) {
+    for ii in 0..mr {
+        for p in 0..kb {
+            let av = a[(i0 + ii) * k + p0 + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + nr];
+            let crow = &mut c[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nr];
+            for jj in 0..nr {
+                crow[jj] += av * brow[jj];
+            }
+        }
+    }
+}
+
+/// Simple ikj kernel for small problems.
+fn gemm_small_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..p * n + n];
+            let crow = &mut c[i * n..i * n + n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `y = x @ W` for a single row vector `x[k]`, `W[k,n]` — the decode hot path.
+pub fn gemv_row(x: &[f32], w: &[f32], y: &mut [f32], k: usize, n: usize) {
+    y.fill(0.0);
+    gemv_row_acc(x, w, y, k, n);
+}
+
+/// `y += x @ W` for a single row vector.
+pub fn gemv_row_acc(x: &[f32], w: &[f32], y: &mut [f32], k: usize, n: usize) {
+    assert!(x.len() >= k && w.len() >= k * n && y.len() >= n);
+    for p in 0..k {
+        let xv = x[p];
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w[p * n..p * n + n];
+        for j in 0..n {
+            y[j] += xv * wrow[j];
+        }
+    }
+}
+
+/// FLOPs of an `m×k×n` GEMM (2 per MAC).
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul_naive, max_abs_diff, Tensor};
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        let mut rng = Rng::new(10);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 16, 16),
+            (5, 17, 33),
+            (64, 256, 64),
+            (65, 257, 130),
+            (128, 128, 128),
+        ] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let mut c = vec![0.0; m * n];
+            gemm_f32(a.data(), b.data(), &mut c, m, k, n);
+            let c = Tensor::from_vec(&[m, n], c);
+            let want = matmul_naive(&a, &b);
+            let diff = max_abs_diff(&c, &want);
+            assert!(diff < 1e-2 * (k as f32).sqrt(), "({m},{k},{n}) diff={diff}");
+        }
+    }
+
+    #[test]
+    fn acc_accumulates() {
+        let mut rng = Rng::new(11);
+        let a = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let b = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let mut c = vec![1.0f32; 64];
+        gemm_f32_acc(a.data(), b.data(), &mut c, 8, 8, 8);
+        let want = matmul_naive(&a, &b);
+        for i in 0..64 {
+            assert!((c[i] - 1.0 - want.data()[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemv_matches_gemm() {
+        let mut rng = Rng::new(12);
+        let x = Tensor::randn(&[1, 100], 1.0, &mut rng);
+        let w = Tensor::randn(&[100, 37], 1.0, &mut rng);
+        let mut y = vec![0.0; 37];
+        gemv_row(x.data(), w.data(), &mut y, 100, 37);
+        let want = matmul_naive(&x, &w);
+        for j in 0..37 {
+            assert!((y[j] - want.data()[j]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn prop_gemm_matches_naive() {
+        Prop::new(24).check(
+            "gemm == naive",
+            |rng| {
+                let m = 1 + rng.below(40);
+                let k = 1 + rng.below(70);
+                let n = 1 + rng.below(40);
+                let a = Tensor::randn(&[m, k], 1.0, rng);
+                let b = Tensor::randn(&[k, n], 1.0, rng);
+                (a, b)
+            },
+            |(a, b)| {
+                let (m, k, n) = (a.rows(), a.cols(), b.cols());
+                let mut c = vec![0.0; m * n];
+                gemm_f32(a.data(), b.data(), &mut c, m, k, n);
+                let c = Tensor::from_vec(&[m, n], c);
+                let want = matmul_naive(a, b);
+                let diff = max_abs_diff(&c, &want);
+                if diff < 1e-2 {
+                    Ok(())
+                } else {
+                    Err(format!("diff={diff}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn zero_dims_are_noops() {
+        let mut c = vec![5.0f32; 0];
+        gemm_f32(&[], &[], &mut c, 0, 0, 0);
+        let mut c2 = vec![0.0f32; 4];
+        gemm_f32(&[], &[], &mut c2, 2, 0, 2);
+        assert_eq!(c2, vec![0.0; 4]);
+    }
+}

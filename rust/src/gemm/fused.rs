@@ -1,0 +1,210 @@
+//! Concatenated multi-adapter GEMM (paper, "Concatenating Multi-LoRA
+//! adapters"): n adapters `(A_i ∈ R^{k×r}, B_i ∈ R^{r×n})` sharing an input
+//! are fused into `A_cat ∈ R^{k×nr}`, `B_cat ∈ R^{nr×n}` so the cumulative
+//! update `Δy = Σ (x A_i) B_i` costs two GEMMs instead of 2n.
+
+use crate::gemm::dense;
+use crate::tensor::Tensor;
+
+/// A set of same-shape low-rank adapters over a shared input.
+#[derive(Clone, Debug)]
+pub struct AdapterStack {
+    /// `A_cat[k, total_rank]` — columns of all A_i side by side.
+    pub a_cat: Tensor,
+    /// `B_cat[total_rank, n]` — rows of all B_i stacked.
+    pub b_cat: Tensor,
+    /// Rank of each constituent adapter, in order.
+    pub ranks: Vec<usize>,
+}
+
+impl AdapterStack {
+    /// Build from individual adapter pairs (all must share k and n).
+    pub fn concat(adapters: &[(&Tensor, &Tensor)]) -> AdapterStack {
+        assert!(!adapters.is_empty());
+        let k = adapters[0].0.rows();
+        let n = adapters[0].1.cols();
+        let mut ranks = Vec::with_capacity(adapters.len());
+        let total_rank: usize = adapters
+            .iter()
+            .map(|(a, b)| {
+                assert_eq!(a.rows(), k, "adapter k mismatch");
+                assert_eq!(b.cols(), n, "adapter n mismatch");
+                assert_eq!(a.cols(), b.rows(), "adapter rank mismatch");
+                a.cols()
+            })
+            .collect::<Vec<_>>()
+            .iter()
+            .inspect(|&&r| ranks.push(r))
+            .sum();
+        let mut a_cat = Tensor::zeros(&[k, total_rank]);
+        let mut b_cat = Tensor::zeros(&[total_rank, n]);
+        let mut off = 0usize;
+        for (a, b) in adapters {
+            let r = a.cols();
+            for i in 0..k {
+                for j in 0..r {
+                    a_cat.set(i, off + j, a.at(i, j));
+                }
+            }
+            for i in 0..r {
+                b_cat.row_mut(off + i).copy_from_slice(b.row(i));
+            }
+            off += r;
+        }
+        AdapterStack {
+            a_cat,
+            b_cat,
+            ranks,
+        }
+    }
+
+    pub fn total_rank(&self) -> usize {
+        self.ranks.iter().sum()
+    }
+
+    pub fn k(&self) -> usize {
+        self.a_cat.rows()
+    }
+
+    pub fn n(&self) -> usize {
+        self.b_cat.cols()
+    }
+
+    /// Fused update: `Δy[m,n] = (X A_cat) B_cat` — two GEMMs total.
+    pub fn apply_fused(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        let (k, n, tr) = (self.k(), self.n(), self.total_rank());
+        let mut u = vec![0.0f32; m * tr];
+        dense::gemm_f32(x, self.a_cat.data(), &mut u, m, k, tr);
+        dense::gemm_f32(&u, self.b_cat.data(), out, m, tr, n);
+    }
+
+    /// Fused accumulate variant (`out += Δy`).
+    pub fn apply_fused_acc(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        let (k, n, tr) = (self.k(), self.n(), self.total_rank());
+        if tr == 0 {
+            return;
+        }
+        let mut u = vec![0.0f32; m * tr];
+        dense::gemm_f32(x, self.a_cat.data(), &mut u, m, k, tr);
+        dense::gemm_f32_acc(&u, self.b_cat.data(), out, m, tr, n);
+    }
+
+    /// Sequential baseline: apply each adapter as two small GEMMs,
+    /// accumulating — 2n kernel invocations (paper's inefficient case).
+    pub fn apply_sequential(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        let (k, n) = (self.k(), self.n());
+        out[..m * n].fill(0.0);
+        let mut off = 0usize;
+        for &r in &self.ranks {
+            // Slice A_i out of a_cat (strided copy), B_i out of b_cat.
+            let mut a_i = vec![0.0f32; k * r];
+            for i in 0..k {
+                for j in 0..r {
+                    a_i[i * r + j] = self.a_cat.at(i, off + j);
+                }
+            }
+            let b_i = &self.b_cat.data()[off * n..(off + r) * n];
+            let mut u = vec![0.0f32; m * r];
+            dense::gemm_f32(x, &a_i, &mut u, m, k, r);
+            dense::gemm_f32_acc(&u, b_i, out, m, r, n);
+            off += r;
+        }
+    }
+
+    /// FLOPs of the fused update for batch m.
+    pub fn flops(&self, m: usize) -> f64 {
+        dense::gemm_flops(m, self.k(), self.total_rank())
+            + dense::gemm_flops(m, self.total_rank(), self.n())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, max_abs_diff};
+    use crate::util::rng::Rng;
+
+    fn random_adapters(
+        rng: &mut Rng,
+        k: usize,
+        n: usize,
+        ranks: &[usize],
+    ) -> Vec<(Tensor, Tensor)> {
+        ranks
+            .iter()
+            .map(|&r| {
+                (
+                    Tensor::randn(&[k, r], 0.5, rng),
+                    Tensor::randn(&[r, n], 0.5, rng),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_equals_sum_of_adapters() {
+        let mut rng = Rng::new(130);
+        let (k, n, m) = (48usize, 36usize, 5usize);
+        let adapters = random_adapters(&mut rng, k, n, &[4, 8, 2]);
+        let refs: Vec<(&Tensor, &Tensor)> = adapters.iter().map(|(a, b)| (a, b)).collect();
+        let stack = AdapterStack::concat(&refs);
+        assert_eq!(stack.total_rank(), 14);
+
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        // Reference: sum of individual updates.
+        let mut want = Tensor::zeros(&[m, n]);
+        for (a, b) in &adapters {
+            let u = matmul(&x, a);
+            let d = matmul(&u, b);
+            want = crate::tensor::add(&want, &d);
+        }
+        let mut fused = vec![0.0f32; m * n];
+        stack.apply_fused(x.data(), m, &mut fused);
+        let fused = Tensor::from_vec(&[m, n], fused);
+        assert!(max_abs_diff(&fused, &want) < 1e-3);
+
+        let mut seq = vec![0.0f32; m * n];
+        stack.apply_sequential(x.data(), m, &mut seq);
+        let seq = Tensor::from_vec(&[m, n], seq);
+        assert!(max_abs_diff(&seq, &want) < 1e-3);
+    }
+
+    #[test]
+    fn single_adapter_degenerates_to_lora() {
+        let mut rng = Rng::new(131);
+        let (k, n, m, r) = (32usize, 24usize, 3usize, 8usize);
+        let a = Tensor::randn(&[k, r], 1.0, &mut rng);
+        let b = Tensor::randn(&[r, n], 1.0, &mut rng);
+        let stack = AdapterStack::concat(&[(&a, &b)]);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let want = matmul(&matmul(&x, &a), &b);
+        let mut got = vec![0.0f32; m * n];
+        stack.apply_fused(x.data(), m, &mut got);
+        assert!(max_abs_diff(&Tensor::from_vec(&[m, n], got), &want) < 1e-3);
+    }
+
+    #[test]
+    fn acc_adds_on_top() {
+        let mut rng = Rng::new(132);
+        let adapters = random_adapters(&mut rng, 16, 12, &[4]);
+        let stack = AdapterStack::concat(&[(&adapters[0].0, &adapters[0].1)]);
+        let x = Tensor::randn(&[2, 16], 1.0, &mut rng);
+        let mut base = vec![1.0f32; 2 * 12];
+        stack.apply_fused_acc(x.data(), 2, &mut base);
+        let mut delta = vec![0.0f32; 2 * 12];
+        stack.apply_fused(x.data(), 2, &mut delta);
+        for i in 0..24 {
+            assert!((base[i] - 1.0 - delta[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "adapter k mismatch")]
+    fn mismatched_shapes_panic() {
+        let a1 = Tensor::zeros(&[8, 2]);
+        let b1 = Tensor::zeros(&[2, 4]);
+        let a2 = Tensor::zeros(&[9, 2]);
+        let b2 = Tensor::zeros(&[2, 4]);
+        AdapterStack::concat(&[(&a1, &b1), (&a2, &b2)]);
+    }
+}

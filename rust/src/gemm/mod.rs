@@ -1,0 +1,18 @@
+//! GEMM engines for the native serving path.
+//!
+//! The paper's deployment contribution is that bitmap-encoded sparse weights
+//! can be *decoded and multiplied* at dense-GEMM throughput by overlapping
+//! the two stages. This module provides:
+//!
+//! * [`dense`] — a blocked, register-tiled f32 GEMM (the baseline and the
+//!   compute stage of the pipeline);
+//! * [`sparse`] — bitmap-decode-then-GEMM, sequential (the naive deployment);
+//! * [`pipeline`] — the paper's two-stage design: decode worker(s) fill a
+//!   ring buffer of dense K-panels while the GEMM stage consumes them;
+//! * [`fused`] — the concatenated multi-adapter GEMM (`A_cat`/`B_cat`)
+//!   versus n sequential small GEMMs.
+
+pub mod dense;
+pub mod fused;
+pub mod pipeline;
+pub mod sparse;

@@ -1,0 +1,345 @@
+//! The paper's **two-stage pipelined decode+GEMM**.
+//!
+//! Stage 1 (decode): worker thread(s) reconstruct dense K-panels of the
+//! bitmap-encoded weight matrix using the byte-mask/LUT rule.
+//! Stage 2 (GEMM): the compute thread multiplies each reconstructed panel
+//! into the accumulator.
+//!
+//! The two stages communicate through a fixed-depth **ring buffer** of
+//! pre-allocated panel slots: while the GEMM stage multiplies panel `b`,
+//! the decode stage fills panel `b+1` (paper, "Pipeline Design"). On GPU
+//! the stages are CUDA cores vs Tensor Cores; here they are OS threads, but
+//! the overlap structure and the ring buffer are identical.
+
+use crate::gemm::sparse::panel_acc;
+use crate::sparse::BitmapMatrix;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// True when the host has a second hardware thread to run the decode
+/// stage on. On a single-core host the two-stage overlap has no parallel
+/// resource and the panel-streamed path is strictly better.
+fn overlap_available() -> bool {
+    std::thread::available_parallelism()
+        .map(|n| n.get() >= 2)
+        .unwrap_or(false)
+}
+
+/// Bounded wait: brief spin, then yield to let the other stage run (on
+/// SMT/single-core hosts pure spinning starves the producer).
+#[inline]
+fn stage_wait(iters: &mut u32) {
+    *iters += 1;
+    if *iters < 64 {
+        std::hint::spin_loop();
+    } else {
+        std::thread::yield_now();
+    }
+}
+
+/// A fixed-capacity ring of panel buffers shared between the decode and
+/// GEMM stages. Slots cycle through EMPTY -> FULL -> EMPTY.
+struct PanelRing {
+    slots: Vec<Mutex<Vec<f32>>>,
+    /// Sequence number of the next panel the decoder will produce.
+    produced: AtomicUsize,
+    /// Sequence number of the next panel the consumer will take.
+    consumed: AtomicUsize,
+    /// Set if either side panicked / finished early.
+    dead: AtomicBool,
+    depth: usize,
+}
+
+impl PanelRing {
+    fn new(depth: usize, panel_elems: usize) -> Self {
+        PanelRing {
+            slots: (0..depth)
+                .map(|_| Mutex::new(vec![0.0f32; panel_elems]))
+                .collect(),
+            produced: AtomicUsize::new(0),
+            consumed: AtomicUsize::new(0),
+            dead: AtomicBool::new(false),
+            depth,
+        }
+    }
+}
+
+/// Configuration of the two-stage pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Rows of W decoded per panel (K-panel height).
+    pub panel_k: usize,
+    /// Ring buffer depth (>= 2 for any overlap).
+    pub ring_depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            panel_k: 64,
+            ring_depth: 3,
+        }
+    }
+}
+
+/// `C[m,n] = X[m,k] @ W[k,n]` with bitmap `W`, decode and GEMM overlapped.
+///
+/// The decoder thread walks K-panels of `W` writing into ring slots; the
+/// calling thread consumes panels in order and accumulates into `C`.
+pub fn bitmap_gemm_pipelined(
+    x: &[f32],
+    w: &BitmapMatrix,
+    c: &mut [f32],
+    m: usize,
+    cfg: PipelineConfig,
+) {
+    let (k, n) = (w.rows(), w.cols());
+    assert!(x.len() >= m * k && c.len() >= m * n);
+    c[..m * n].fill(0.0);
+    if k == 0 || n == 0 || m == 0 {
+        return;
+    }
+    let panel_k = cfg.panel_k.max(1).min(k);
+    let npanels = k.div_ceil(panel_k);
+    if npanels == 1 || cfg.ring_depth < 2 || !overlap_available() {
+        // Degenerate: no overlap possible; run sequentially.
+        let mut scratch = Vec::new();
+        crate::gemm::sparse::bitmap_gemm_panelled(x, w, c, m, panel_k, &mut scratch);
+        return;
+    }
+    let ring = PanelRing::new(cfg.ring_depth, panel_k * n);
+
+    crossbeam_utils::thread::scope(|scope| {
+        // ---- Stage 1: decode worker ----
+        let ring_ref = &ring;
+        scope.spawn(move |_| {
+            for pi in 0..npanels {
+                // Wait for a free slot: decoder may run at most `depth`
+                // panels ahead of the consumer.
+                let mut waited = 0u32;
+                while pi >= ring_ref.consumed.load(Ordering::Acquire) + ring_ref.depth {
+                    if ring_ref.dead.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    stage_wait(&mut waited);
+                }
+                let slot = &ring_ref.slots[pi % ring_ref.depth];
+                {
+                    let mut buf = slot.lock().unwrap();
+                    let r0 = pi * panel_k;
+                    let r1 = (r0 + panel_k).min(k);
+                    w.decode_rows_into(r0, r1, &mut buf);
+                }
+                ring_ref.produced.store(pi + 1, Ordering::Release);
+            }
+        });
+
+        // ---- Stage 2: GEMM consumer (this thread) ----
+        for pi in 0..npanels {
+            let mut waited = 0u32;
+            while ring.produced.load(Ordering::Acquire) <= pi {
+                stage_wait(&mut waited);
+            }
+            let r0 = pi * panel_k;
+            let r1 = (r0 + panel_k).min(k);
+            let kb = r1 - r0;
+            {
+                let buf = ring.slots[pi % ring.depth].lock().unwrap();
+                panel_acc(x, &buf[..kb * n], c, m, k, n, r0, kb);
+            }
+            ring.consumed.store(pi + 1, Ordering::Release);
+        }
+    })
+    .unwrap();
+}
+
+/// Fold the low-rank adapter update into the same call:
+/// `C = X @ W_sparse + (X @ A_cat) @ B_cat` with the adapter GEMM executed
+/// on the consumer thread *while the first panel decodes* — mirroring the
+/// paper's note that "the LoRA module participates in GEMM computation"
+/// during the decode stage.
+#[allow(clippy::too_many_arguments)]
+pub fn salr_gemm_pipelined(
+    x: &[f32],
+    w: &BitmapMatrix,
+    a_cat: &[f32],
+    b_cat: &[f32],
+    rank_total: usize,
+    c: &mut [f32],
+    m: usize,
+    cfg: PipelineConfig,
+) {
+    let (k, n) = (w.rows(), w.cols());
+    c[..m * n].fill(0.0);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let panel_k = cfg.panel_k.max(1).min(k.max(1));
+    let npanels = k.div_ceil(panel_k.max(1)).max(1);
+    if !overlap_available() {
+        // Single hardware thread: run the stages back to back (panel-
+        // streamed), adapters first.
+        if rank_total > 0 {
+            let mut u = vec![0.0f32; m * rank_total];
+            crate::gemm::dense::gemm_f32(x, a_cat, &mut u, m, k, rank_total);
+            crate::gemm::dense::gemm_f32_acc(&u, b_cat, c, m, rank_total, n);
+        }
+        let mut scratch = Vec::new();
+        let mut base = vec![0.0f32; m * n];
+        crate::gemm::sparse::bitmap_gemm_panelled(x, w, &mut base, m, panel_k, &mut scratch);
+        for (ci, bi) in c.iter_mut().zip(&base) {
+            *ci += bi;
+        }
+        return;
+    }
+    let ring = PanelRing::new(cfg.ring_depth.max(2), panel_k * n);
+
+    crossbeam_utils::thread::scope(|scope| {
+        let ring_ref = &ring;
+        scope.spawn(move |_| {
+            for pi in 0..npanels {
+                let mut waited = 0u32;
+                while pi >= ring_ref.consumed.load(Ordering::Acquire) + ring_ref.depth {
+                    stage_wait(&mut waited);
+                }
+                let slot = &ring_ref.slots[pi % ring_ref.depth];
+                {
+                    let mut buf = slot.lock().unwrap();
+                    let r0 = pi * panel_k;
+                    let r1 = (r0 + panel_k).min(k);
+                    w.decode_rows_into(r0, r1, &mut buf);
+                }
+                ring_ref.produced.store(pi + 1, Ordering::Release);
+            }
+        });
+
+        // Adapter GEMM overlaps the first panel's decode.
+        if rank_total > 0 {
+            let mut u = vec![0.0f32; m * rank_total];
+            crate::gemm::dense::gemm_f32(x, a_cat, &mut u, m, k, rank_total);
+            crate::gemm::dense::gemm_f32_acc(&u, b_cat, c, m, rank_total, n);
+        }
+
+        for pi in 0..npanels {
+            let mut waited = 0u32;
+            while ring.produced.load(Ordering::Acquire) <= pi {
+                stage_wait(&mut waited);
+            }
+            let r0 = pi * panel_k;
+            let r1 = (r0 + panel_k).min(k);
+            let kb = r1 - r0;
+            {
+                let buf = ring.slots[pi % ring.depth].lock().unwrap();
+                panel_acc(x, &buf[..kb * n], c, m, k, n, r0, kb);
+            }
+            ring.consumed.store(pi + 1, Ordering::Release);
+        }
+    })
+    .unwrap();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::prune_global;
+    use crate::tensor::{add, matmul, matmul_naive, max_abs_diff, Tensor};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pipelined_matches_dense() {
+        let mut rng = Rng::new(120);
+        for &(m, k, n, pk, depth) in &[
+            (4usize, 64usize, 32usize, 16usize, 2usize),
+            (8, 200, 48, 33, 3),
+            (1, 512, 64, 64, 4),
+            (5, 10, 10, 4, 2),
+        ] {
+            let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+            prune_global(&mut [&mut w], 0.5);
+            let bm = BitmapMatrix::encode(&w);
+            let want = matmul_naive(&x, &w);
+            let mut c = vec![0.0f32; m * n];
+            bitmap_gemm_pipelined(
+                x.data(),
+                &bm,
+                &mut c,
+                m,
+                PipelineConfig {
+                    panel_k: pk,
+                    ring_depth: depth,
+                },
+            );
+            let c = Tensor::from_vec(&[m, n], c);
+            assert!(
+                max_abs_diff(&c, &want) < 1e-3,
+                "({m},{k},{n},{pk},{depth})"
+            );
+        }
+    }
+
+    #[test]
+    fn salr_pipelined_includes_adapters() {
+        let mut rng = Rng::new(121);
+        let (m, k, n, r) = (6usize, 96usize, 40usize, 8usize);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        prune_global(&mut [&mut w], 0.5);
+        let a = Tensor::randn(&[k, r], 0.1, &mut rng);
+        let b = Tensor::randn(&[r, n], 0.1, &mut rng);
+        let bm = BitmapMatrix::encode(&w);
+        let want = add(&matmul_naive(&x, &w), &matmul(&matmul(&x, &a), &b));
+        let mut c = vec![0.0f32; m * n];
+        salr_gemm_pipelined(
+            x.data(),
+            &bm,
+            a.data(),
+            b.data(),
+            r,
+            &mut c,
+            m,
+            PipelineConfig::default(),
+        );
+        let c = Tensor::from_vec(&[m, n], c);
+        assert!(max_abs_diff(&c, &want) < 1e-2, "diff={}", max_abs_diff(&c, &want));
+    }
+
+    #[test]
+    fn ring_depth_one_falls_back() {
+        let mut rng = Rng::new(122);
+        let x = Tensor::randn(&[3, 32], 1.0, &mut rng);
+        let mut w = Tensor::randn(&[32, 16], 1.0, &mut rng);
+        prune_global(&mut [&mut w], 0.5);
+        let bm = BitmapMatrix::encode(&w);
+        let want = matmul_naive(&x, &w);
+        let mut c = vec![0.0f32; 3 * 16];
+        bitmap_gemm_pipelined(
+            x.data(),
+            &bm,
+            &mut c,
+            3,
+            PipelineConfig {
+                panel_k: 8,
+                ring_depth: 1,
+            },
+        );
+        let c = Tensor::from_vec(&[3, 16], c);
+        assert!(max_abs_diff(&c, &want) < 1e-3);
+    }
+
+    #[test]
+    fn repeated_runs_are_deterministic() {
+        let mut rng = Rng::new(123);
+        let x = Tensor::randn(&[4, 128], 1.0, &mut rng);
+        let mut w = Tensor::randn(&[128, 32], 1.0, &mut rng);
+        prune_global(&mut [&mut w], 0.5);
+        let bm = BitmapMatrix::encode(&w);
+        let mut first = vec![0.0f32; 4 * 32];
+        bitmap_gemm_pipelined(x.data(), &bm, &mut first, 4, PipelineConfig::default());
+        for _ in 0..10 {
+            let mut c = vec![0.0f32; 4 * 32];
+            bitmap_gemm_pipelined(x.data(), &bm, &mut c, 4, PipelineConfig::default());
+            assert_eq!(c, first, "pipeline must be deterministic");
+        }
+    }
+}

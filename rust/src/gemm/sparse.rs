@@ -1,0 +1,196 @@
+//! Sequential bitmap-decode-then-GEMM: the naive deployment of bitmap
+//! weights (decode everything, then multiply). The two-stage pipeline in
+//! [`super::pipeline`] overlaps the same two phases.
+
+use crate::gemm::dense;
+use crate::sparse::BitmapMatrix;
+
+/// `C[m,n] = X[m,k] @ W[k,n]` where `W` is bitmap-encoded.
+/// Fully decodes `W` into a scratch buffer first (sequential baseline).
+pub fn bitmap_gemm_sequential(
+    x: &[f32],
+    w: &BitmapMatrix,
+    c: &mut [f32],
+    m: usize,
+    scratch: &mut Vec<f32>,
+) {
+    let (k, n) = (w.rows(), w.cols());
+    scratch.clear();
+    scratch.resize(k * n, 0.0);
+    w.decode_rows_into(0, k, scratch);
+    dense::gemm_f32(x, scratch, c, m, k, n);
+}
+
+/// Panel-streamed variant: decode a K-panel of `W`, multiply, move on —
+/// same total work but bounded scratch (`panel_k × n`), no overlap.
+pub fn bitmap_gemm_panelled(
+    x: &[f32],
+    w: &BitmapMatrix,
+    c: &mut [f32],
+    m: usize,
+    panel_k: usize,
+    scratch: &mut Vec<f32>,
+) {
+    let (k, n) = (w.rows(), w.cols());
+    c[..m * n].fill(0.0);
+    scratch.clear();
+    scratch.resize(panel_k * n, 0.0);
+    let mut p0 = 0;
+    while p0 < k {
+        let p1 = (p0 + panel_k).min(k);
+        let kb = p1 - p0;
+        w.decode_rows_into(p0, p1, scratch);
+        // C += X[:, p0..p1] @ panel — strided A access via a gathered copy.
+        panel_acc(x, &scratch[..kb * n], c, m, k, n, p0, kb);
+        p0 = p1;
+    }
+}
+
+/// Direct sparse GEMM: `C[m,n] = X[m,k] @ W` touching only the nonzero
+/// weights (≈ nnz·m MACs instead of k·n·m) — never materializes a dense
+/// panel. This is the decode-batch hot path of the native engine: at the
+/// small m of autoregressive decode it beats the dense GEMM because it
+/// does `(1−p)` of the multiply-adds *and* `(1−p)` of the weight traffic.
+///
+/// Internally works on transposed X/C scratch so the m-loop is contiguous
+/// and vectorizes.
+pub fn bitmap_gemm_direct(
+    x: &[f32],
+    w: &BitmapMatrix,
+    c: &mut [f32],
+    m: usize,
+    scratch: &mut Vec<f32>,
+) {
+    let (k, n) = (w.rows(), w.cols());
+    assert!(x.len() >= m * k && c.len() >= m * n);
+    if m == 0 {
+        return;
+    }
+    // scratch = [ xT (k*m) | cT (n*m) ]
+    scratch.clear();
+    scratch.resize(k * m + n * m, 0.0);
+    let (xt, ct) = scratch.split_at_mut(k * m);
+    for i in 0..m {
+        for p in 0..k {
+            xt[p * m + i] = x[i * k + p];
+        }
+    }
+    let masks = w.masks();
+    let values = w.values();
+    let bpr = w.bytes_per_row();
+    let mut voff = 0usize;
+    for p in 0..k {
+        let xcol = &xt[p * m..(p + 1) * m];
+        let row_masks = &masks[p * bpr..(p + 1) * bpr];
+        for (b, &mask) in row_masks.iter().enumerate() {
+            let mut mbits = mask;
+            while mbits != 0 {
+                let t = mbits.trailing_zeros() as usize;
+                let j = b * 8 + t;
+                let v = values[voff];
+                voff += 1;
+                let crow = &mut ct[j * m..(j + 1) * m];
+                for i in 0..m {
+                    crow[i] += xcol[i] * v;
+                }
+                mbits &= mbits - 1;
+            }
+        }
+    }
+    for i in 0..m {
+        for j in 0..n {
+            c[i * n + j] = ct[j * m + i];
+        }
+    }
+}
+
+/// `C += X[:, p0..p0+kb] @ P[kb, n]` with X row-major `m × k`.
+pub(crate) fn panel_acc(
+    x: &[f32],
+    panel: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p0: usize,
+    kb: usize,
+) {
+    for i in 0..m {
+        let xrow = &x[i * k + p0..i * k + p0 + kb];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..kb {
+            let xv = xrow[p];
+            if xv == 0.0 {
+                continue;
+            }
+            let prow = &panel[p * n..p * n + n];
+            for j in 0..n {
+                crow[j] += xv * prow[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::prune_global;
+    use crate::tensor::{matmul_naive, max_abs_diff, Tensor};
+    use crate::util::rng::Rng;
+
+    fn setup(rng: &mut Rng, m: usize, k: usize, n: usize) -> (Tensor, Tensor, BitmapMatrix) {
+        let x = Tensor::randn(&[m, k], 1.0, rng);
+        let mut w = Tensor::randn(&[k, n], 1.0, rng);
+        prune_global(&mut [&mut w], 0.5);
+        let bm = BitmapMatrix::encode(&w);
+        (x, w, bm)
+    }
+
+    #[test]
+    fn sequential_matches_dense() {
+        let mut rng = Rng::new(110);
+        let (x, w, bm) = setup(&mut rng, 9, 64, 33);
+        let want = matmul_naive(&x, &w);
+        let mut c = vec![0.0f32; 9 * 33];
+        let mut scratch = Vec::new();
+        bitmap_gemm_sequential(x.data(), &bm, &mut c, 9, &mut scratch);
+        let c = Tensor::from_vec(&[9, 33], c);
+        assert!(max_abs_diff(&c, &want) < 1e-3);
+    }
+
+    #[test]
+    fn direct_matches_dense() {
+        let mut rng = Rng::new(112);
+        for &(m, k, n, p) in &[
+            (1usize, 64usize, 48usize, 0.5f64),
+            (8, 128, 96, 0.5),
+            (16, 100, 33, 0.9),
+            (3, 17, 8, 0.0),
+        ] {
+            let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+            crate::prune::prune_global(&mut [&mut w], p);
+            let bm = BitmapMatrix::encode(&w);
+            let want = matmul_naive(&x, &w);
+            let mut c = vec![0.0f32; m * n];
+            let mut scratch = Vec::new();
+            bitmap_gemm_direct(x.data(), &bm, &mut c, m, &mut scratch);
+            let c = Tensor::from_vec(&[m, n], c);
+            assert!(max_abs_diff(&c, &want) < 1e-3, "({m},{k},{n},{p})");
+        }
+    }
+
+    #[test]
+    fn panelled_matches_dense_various_panels() {
+        let mut rng = Rng::new(111);
+        let (x, w, bm) = setup(&mut rng, 7, 100, 25);
+        let want = matmul_naive(&x, &w);
+        for &panel in &[1usize, 8, 33, 100, 200] {
+            let mut c = vec![0.0f32; 7 * 25];
+            let mut scratch = Vec::new();
+            bitmap_gemm_panelled(x.data(), &bm, &mut c, 7, panel, &mut scratch);
+            let c = Tensor::from_vec(&[7, 25], c);
+            assert!(max_abs_diff(&c, &want) < 1e-3, "panel={panel}");
+        }
+    }
+}

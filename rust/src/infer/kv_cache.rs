@@ -1,0 +1,79 @@
+//! Per-sequence key/value cache for autoregressive decode.
+
+/// KV cache for one transformer layer and one sequence: rows are time
+/// steps, `d_model` columns split across heads by the engine.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub keys: Vec<f32>,
+    pub values: Vec<f32>,
+    pub len: usize,
+    d_model: usize,
+    capacity: usize,
+}
+
+impl KvCache {
+    pub fn new(capacity: usize, d_model: usize) -> KvCache {
+        KvCache {
+            keys: vec![0.0; capacity * d_model],
+            values: vec![0.0; capacity * d_model],
+            len: 0,
+            d_model,
+            capacity,
+        }
+    }
+
+    /// Append one time step.
+    pub fn push(&mut self, k: &[f32], v: &[f32]) {
+        assert!(self.len < self.capacity, "kv cache overflow");
+        assert_eq!(k.len(), self.d_model);
+        assert_eq!(v.len(), self.d_model);
+        let off = self.len * self.d_model;
+        self.keys[off..off + self.d_model].copy_from_slice(k);
+        self.values[off..off + self.d_model].copy_from_slice(v);
+        self.len += 1;
+    }
+
+    /// Key row at time `t`.
+    #[inline]
+    pub fn key(&self, t: usize) -> &[f32] {
+        &self.keys[t * self.d_model..(t + 1) * self.d_model]
+    }
+
+    #[inline]
+    pub fn value(&self, t: usize) -> &[f32] {
+        &self.values[t * self.d_model..(t + 1) * self.d_model]
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_read() {
+        let mut c = KvCache::new(4, 3);
+        c.push(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        c.push(&[7.0, 8.0, 9.0], &[1.5, 2.5, 3.5]);
+        assert_eq!(c.len, 2);
+        assert_eq!(c.key(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.value(1), &[1.5, 2.5, 3.5]);
+        c.reset();
+        assert_eq!(c.len, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut c = KvCache::new(1, 2);
+        c.push(&[0.0, 0.0], &[0.0, 0.0]);
+        c.push(&[0.0, 0.0], &[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Native inference engine: the deployment path where SALR's sparsity
+//! actually pays. The transformer forward runs in rust with KV-cached
+//! decode; adapted linears execute either densely (LoRA baseline) or via
+//! the bitmap two-stage pipeline (SALR), so Table 4's tokens/s compares
+//! the same engine with different weight formats.
+
+mod engine;
+mod kv_cache;
+
+pub use engine::{Backend, Engine, EngineWeights};
+pub use kv_cache::KvCache;

@@ -1,0 +1,42 @@
+//! # SALR — Sparsity-Aware Low-Rank Representation
+//!
+//! Reproduction of *"SALR: Sparsity-Aware Low-Rank Representation for
+//! Efficient Fine-Tuning of Large Language Models"* (Zhang et al., 2026) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: pruning, bitmap sparse
+//!   codec, truncated-SVD residual adapters, adapter concatenation, the
+//!   two-stage decode+GEMM pipeline, a fine-tuning driver, a native
+//!   inference engine, and a batching server. Python never runs on the
+//!   request path.
+//! * **Layer 2** — a JAX transformer (`python/compile/model.py`) whose
+//!   train / eval / generate steps are AOT-lowered to HLO text and executed
+//!   through the PJRT CPU client (`runtime`).
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
+//!   bitmap-decode matmul, the fused concatenated-adapter GEMM and NF4
+//!   dequantization, validated against pure-jnp oracles.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a driver in [`eval`].
+
+pub mod cli;
+pub mod data;
+pub mod eval;
+pub mod gemm;
+pub mod infer;
+pub mod linalg;
+pub mod model;
+pub mod prune;
+pub mod quant;
+pub mod runtime;
+pub mod salr;
+pub mod server;
+pub mod sparse;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,15 @@
+//! Numerical linear algebra for the SALR model-surgery path: QR
+//! factorization, power iteration (the `σ_max(X)` estimate behind the
+//! Theorem-4 residual learning rate), one-sided Jacobi SVD, and the
+//! randomized truncated SVD that turns pruning residuals into rank-r
+//! adapters (Theorem 3).
+//!
+//! Built from scratch: the offline vendor set has no LAPACK binding, and
+//! `jnp.linalg.svd` lowers to a LAPACK custom-call the PJRT interchange
+//! cannot carry — so the coordinator owns its own SVD.
+
+mod qr;
+mod svd;
+
+pub use qr::{orthogonality_error, qr_thin, PowerIter};
+pub use svd::{jacobi_svd, truncated_svd, Svd};

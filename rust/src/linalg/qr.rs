@@ -1,0 +1,228 @@
+//! Thin QR via modified Gram–Schmidt (with re-orthogonalization) and the
+//! power-iteration estimator for `σ_max` used by the Theorem-4 step size.
+
+use crate::tensor::{matmul, Tensor};
+use crate::util::rng::Rng;
+
+/// Thin QR of `A[m,n]` (m >= n typically): returns `Q[m,n]` with
+/// orthonormal columns and upper-triangular `R[n,n]` with `A ≈ Q R`.
+///
+/// Modified Gram–Schmidt with one re-orthogonalization pass — numerically
+/// adequate for the randomized-SVD range-finder (the only consumer).
+pub fn qr_thin(a: &Tensor) -> (Tensor, Tensor) {
+    let (m, n) = (a.rows(), a.cols());
+    let mut q = a.clone();
+    let mut r = Tensor::zeros(&[n, n]);
+    for j in 0..n {
+        // Two MGS passes for stability.
+        for _pass in 0..2 {
+            for i in 0..j {
+                // proj = q_i . q_j
+                let mut dot = 0.0f64;
+                for t in 0..m {
+                    dot += q.at(t, i) as f64 * q.at(t, j) as f64;
+                }
+                r.set(i, j, r.at(i, j) + dot as f32);
+                for t in 0..m {
+                    let v = q.at(t, j) - dot as f32 * q.at(t, i);
+                    q.set(t, j, v);
+                }
+            }
+        }
+        let mut norm = 0.0f64;
+        for t in 0..m {
+            norm += (q.at(t, j) as f64).powi(2);
+        }
+        let norm = norm.sqrt() as f32;
+        r.set(j, j, norm);
+        if norm > 1e-12 {
+            let inv = 1.0 / norm;
+            for t in 0..m {
+                q.set(t, j, q.at(t, j) * inv);
+            }
+        } else {
+            // Rank-deficient column: replace with a fresh random direction
+            // orthogonal to previous ones (keeps Q full column rank).
+            let mut rng = Rng::new(0x9E37 + j as u64);
+            for t in 0..m {
+                q.set(t, j, rng.normal_f32());
+            }
+            for i in 0..j {
+                let mut dot = 0.0f64;
+                for t in 0..m {
+                    dot += q.at(t, i) as f64 * q.at(t, j) as f64;
+                }
+                for t in 0..m {
+                    let v = q.at(t, j) - dot as f32 * q.at(t, i);
+                    q.set(t, j, v);
+                }
+            }
+            let mut nn = 0.0f64;
+            for t in 0..m {
+                nn += (q.at(t, j) as f64).powi(2);
+            }
+            let nn = (nn.sqrt() as f32).max(1e-12);
+            for t in 0..m {
+                q.set(t, j, q.at(t, j) / nn);
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Power iteration for the dominant singular value of `X[m,n]`.
+///
+/// This is exactly the estimator Theorem 4 prescribes for the residual
+/// step size `η*_SVD = 1/σ_max(X)²`: a few iterations of
+/// `v ← normalize(Xᵀ X v)` on a representative mini-batch.
+pub struct PowerIter {
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for PowerIter {
+    fn default() -> Self {
+        PowerIter { iters: 12, seed: 7 }
+    }
+}
+
+impl PowerIter {
+    /// Estimate `σ_max(x)`.
+    pub fn sigma_max(&self, x: &Tensor) -> f64 {
+        let (m, n) = (x.rows(), x.cols());
+        if m == 0 || n == 0 {
+            return 0.0;
+        }
+        let mut rng = Rng::new(self.seed);
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        normalize(&mut v);
+        let mut sigma = 0.0f64;
+        let mut u = vec![0.0f64; m];
+        for _ in 0..self.iters {
+            // u = X v
+            for i in 0..m {
+                let row = x.row(i);
+                let mut s = 0.0f64;
+                for j in 0..n {
+                    s += row[j] as f64 * v[j];
+                }
+                u[i] = s;
+            }
+            sigma = norm(&u);
+            if sigma < 1e-30 {
+                return 0.0;
+            }
+            // v = Xᵀ u / |Xᵀ u|
+            for vj in v.iter_mut() {
+                *vj = 0.0;
+            }
+            for i in 0..m {
+                let row = x.row(i);
+                let ui = u[i];
+                for j in 0..n {
+                    v[j] += row[j] as f64 * ui;
+                }
+            }
+            normalize(&mut v);
+        }
+        sigma
+    }
+
+    /// The Theorem-4 optimal residual step size `1/σ_max(X)²`.
+    pub fn eta_svd(&self, x: &Tensor) -> f64 {
+        let s = self.sigma_max(x);
+        if s < 1e-30 {
+            0.0
+        } else {
+            1.0 / (s * s)
+        }
+    }
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm(v);
+    if n > 1e-30 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+/// `QᵀQ` deviation from identity, for tests.
+pub fn orthogonality_error(q: &Tensor) -> f32 {
+    let qtq = matmul(&q.transpose(), q);
+    let n = qtq.rows();
+    let mut err = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            err = err.max((qtq.at(i, j) - want).abs());
+        }
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::max_abs_diff;
+
+    #[test]
+    fn qr_reconstructs_and_orthonormal() {
+        let mut rng = Rng::new(21);
+        for &(m, n) in &[(8, 8), (20, 5), (33, 17)] {
+            let a = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let (q, r) = qr_thin(&a);
+            assert!(orthogonality_error(&q) < 1e-4, "Q not orthonormal");
+            let qr = matmul(&q, &r);
+            assert!(max_abs_diff(&qr, &a) < 1e-3, "QR != A");
+            // R upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert!(r.at(i, j).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qr_handles_rank_deficiency() {
+        // Two identical columns.
+        let a = Tensor::from_vec(&[3, 2], vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        let (q, _r) = qr_thin(&a);
+        assert!(orthogonality_error(&q) < 1e-4);
+    }
+
+    #[test]
+    fn power_iteration_matches_known_sigma() {
+        // diag(5, 3, 1) embedded in a rotation-free matrix.
+        let a = Tensor::from_vec(
+            &[3, 3],
+            vec![5.0, 0.0, 0.0, 0.0, 3.0, 0.0, 0.0, 0.0, 1.0],
+        );
+        let s = PowerIter::default().sigma_max(&a);
+        assert!((s - 5.0).abs() < 1e-3, "sigma={s}");
+    }
+
+    #[test]
+    fn power_iteration_random_vs_frobenius_bounds() {
+        let mut rng = Rng::new(22);
+        let a = Tensor::randn(&[40, 30], 1.0, &mut rng);
+        let s = PowerIter { iters: 40, seed: 3 }.sigma_max(&a);
+        let fro = a.fro_norm();
+        // sigma_max <= ||A||_F <= sqrt(rank) * sigma_max
+        assert!(s <= fro * 1.0001);
+        assert!(fro <= s * (30f64).sqrt() * 1.05);
+    }
+
+    #[test]
+    fn eta_svd_is_inverse_square() {
+        let a = Tensor::from_vec(&[2, 2], vec![2.0, 0.0, 0.0, 1.0]);
+        let eta = PowerIter::default().eta_svd(&a);
+        assert!((eta - 0.25).abs() < 1e-4);
+    }
+}

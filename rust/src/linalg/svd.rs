@@ -1,0 +1,358 @@
+//! Singular value decomposition: one-sided Jacobi for small/full problems
+//! and a randomized range-finder truncated SVD for the rank-r residual
+//! adapters of Theorem 3.
+
+use super::qr::qr_thin;
+use crate::tensor::{matmul, Tensor};
+use crate::util::rng::Rng;
+
+/// An SVD factorization `A ≈ U · diag(s) · Vᵀ`.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    /// `U[m,r]` — left singular vectors (orthonormal columns).
+    pub u: Tensor,
+    /// Singular values, descending.
+    pub s: Vec<f32>,
+    /// `Vt[r,n]` — right singular vectors, transposed.
+    pub vt: Tensor,
+}
+
+impl Svd {
+    /// Reconstruct `U diag(s) Vt`.
+    pub fn reconstruct(&self) -> Tensor {
+        let r = self.s.len();
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            for j in 0..r {
+                let v = us.at(i, j) * self.s[j];
+                us.set(i, j, v);
+            }
+        }
+        matmul(&us, &self.vt)
+    }
+
+    /// Split into adapter factors `(A, B)` with `A B ≈ input`:
+    /// `A = U·diag(√s) ∈ R^{m×r}`, `B = diag(√s)·Vt ∈ R^{r×n}`.
+    /// Balanced splitting keeps both factors at comparable scale, which
+    /// matters when the residual adapter is subsequently *trained* (Thm 4).
+    pub fn into_adapter(self) -> (Tensor, Tensor) {
+        let r = self.s.len();
+        let mut a = self.u;
+        let mut b = self.vt;
+        for j in 0..r {
+            let sq = self.s[j].max(0.0).sqrt();
+            for i in 0..a.rows() {
+                let v = a.at(i, j) * sq;
+                a.set(i, j, v);
+            }
+            for k in 0..b.cols() {
+                let v = b.at(j, k) * sq;
+                b.set(j, k, v);
+            }
+        }
+        (a, b)
+    }
+
+    /// Energy captured by the top-i singular values: Σ_{j<=i} σ_j² / Σ σ_j².
+    pub fn cumulative_energy(&self) -> Vec<f64> {
+        let total: f64 = self.s.iter().map(|&x| (x as f64).powi(2)).sum();
+        let mut acc = 0.0;
+        self.s
+            .iter()
+            .map(|&x| {
+                acc += (x as f64).powi(2);
+                if total > 0.0 {
+                    acc / total
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+}
+
+/// Full SVD of `A[m,n]` by one-sided Jacobi on the thinner side.
+///
+/// Complexity O(min(m,n)² · max(m,n) · sweeps); intended for matrices up to
+/// a few hundred on a side (enough for Gram matrices of rank-r factors and
+/// the Fig-3 spectra, which operate on residual-correction factors).
+pub fn jacobi_svd(a: &Tensor) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    if m < n {
+        // SVD(Aᵀ) = V S Uᵀ.
+        let svd_t = jacobi_svd(&a.transpose());
+        return Svd {
+            u: svd_t.vt.transpose(),
+            s: svd_t.s,
+            vt: svd_t.u.transpose(),
+        };
+    }
+    // One-sided Jacobi: orthogonalize columns of W = A (m >= n).
+    let mut w = a.clone();
+    let mut v = Tensor::eye(n);
+    let max_sweeps = 30;
+    let tol = 1e-10f64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram entries.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let wp = w.at(i, p) as f64;
+                    let wq = w.at(i, q) as f64;
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w.at(i, p);
+                    let wq = w.at(i, q);
+                    w.set(i, p, (c * wp as f64 - s * wq as f64) as f32);
+                    w.set(i, q, (s * wp as f64 + c * wq as f64) as f32);
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    v.set(i, p, (c * vp as f64 - s * vq as f64) as f32);
+                    v.set(i, q, (s * vp as f64 + c * vq as f64) as f32);
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+    // Singular values = column norms of W; U = W normalized.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigmas = vec![0.0f32; n];
+    for j in 0..n {
+        let mut s = 0.0f64;
+        for i in 0..m {
+            s += (w.at(i, j) as f64).powi(2);
+        }
+        sigmas[j] = s.sqrt() as f32;
+    }
+    order.sort_by(|&x, &y| sigmas[y].partial_cmp(&sigmas[x]).unwrap());
+    let mut u = Tensor::zeros(&[m, n]);
+    let mut vt = Tensor::zeros(&[n, n]);
+    let mut s_sorted = vec![0.0f32; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let s = sigmas[old_j];
+        s_sorted[new_j] = s;
+        let inv = if s > 1e-20 { 1.0 / s } else { 0.0 };
+        for i in 0..m {
+            u.set(i, new_j, w.at(i, old_j) * inv);
+        }
+        for i in 0..n {
+            vt.set(new_j, i, v.at(i, old_j));
+        }
+    }
+    Svd {
+        u,
+        s: s_sorted,
+        vt,
+    }
+}
+
+/// Randomized truncated SVD: best-effort rank-r approximation of `A[m,n]`.
+///
+/// Halko–Martinsson–Tropp range finder with `oversample` extra columns and
+/// `power_iters` subspace iterations, then an exact Jacobi SVD on the small
+/// projected matrix. This is what converts a pruning residual `E = W − Ŵ`
+/// into the rank-r sparsity-preservation adapter.
+pub fn truncated_svd(a: &Tensor, r: usize, seed: u64) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    let r = r.min(m).min(n);
+    if r == 0 {
+        return Svd {
+            u: Tensor::zeros(&[m, 0]),
+            s: vec![],
+            vt: Tensor::zeros(&[0, n]),
+        };
+    }
+    let oversample = (r / 4).clamp(4, 16);
+    let l = (r + oversample).min(m).min(n);
+    let power_iters = 2;
+
+    let mut rng = Rng::new(seed ^ 0x5AD1);
+    // Range finder: Y = A Ω, Ω ∈ R^{n×l}.
+    let omega = Tensor::randn(&[n, l], 1.0, &mut rng);
+    let mut y = matmul(a, &omega);
+    // Subspace (power) iterations with re-orthogonalization: Y ← A (Aᵀ Q).
+    for _ in 0..power_iters {
+        let (q, _) = qr_thin(&y);
+        let z = matmul(&a.transpose(), &q);
+        let (qz, _) = qr_thin(&z);
+        y = matmul(a, &qz);
+    }
+    let (q, _) = qr_thin(&y); // Q[m,l]
+    // Project: B = Qᵀ A ∈ R^{l×n}; SVD of small B.
+    let b = matmul(&q.transpose(), a);
+    let svd_b = jacobi_svd(&b);
+    // U = Q · U_b, truncated to r.
+    let ub = take_cols(&svd_b.u, r);
+    let u = matmul(&q, &ub);
+    let s = svd_b.s[..r].to_vec();
+    let vt = take_rows(&svd_b.vt, r);
+    Svd { u, s, vt }
+}
+
+fn take_cols(t: &Tensor, r: usize) -> Tensor {
+    let (m, n) = (t.rows(), t.cols());
+    let r = r.min(n);
+    let mut out = Tensor::zeros(&[m, r]);
+    for i in 0..m {
+        for j in 0..r {
+            out.set(i, j, t.at(i, j));
+        }
+    }
+    out
+}
+
+fn take_rows(t: &Tensor, r: usize) -> Tensor {
+    let (_m, n) = (t.rows(), t.cols());
+    let r = r.min(t.rows());
+    let mut out = Tensor::zeros(&[r, n]);
+    for i in 0..r {
+        out.row_mut(i).copy_from_slice(t.row(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthogonality_error;
+    use crate::tensor::{max_abs_diff, sub};
+    use crate::util::prop::Prop;
+
+    fn make_low_rank(m: usize, n: usize, r: usize, rng: &mut Rng) -> Tensor {
+        let a = Tensor::randn(&[m, r], 1.0, rng);
+        let b = Tensor::randn(&[r, n], 1.0, rng);
+        matmul(&a, &b)
+    }
+
+    #[test]
+    fn jacobi_svd_reconstructs() {
+        let mut rng = Rng::new(31);
+        for &(m, n) in &[(6, 6), (10, 4), (4, 10), (25, 13)] {
+            let a = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let svd = jacobi_svd(&a);
+            let rec = svd.reconstruct();
+            assert!(
+                max_abs_diff(&rec, &a) < 1e-3,
+                "({m},{n}) diff={}",
+                max_abs_diff(&rec, &a)
+            );
+            // Descending singular values.
+            for w in svd.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-5);
+            }
+            assert!(orthogonality_error(&svd.u) < 1e-3);
+            assert!(orthogonality_error(&svd.vt.transpose()) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn jacobi_svd_known_diagonal() {
+        let a = Tensor::from_vec(&[3, 3], vec![3.0, 0.0, 0.0, 0.0, 7.0, 0.0, 0.0, 0.0, 1.0]);
+        let svd = jacobi_svd(&a);
+        assert!((svd.s[0] - 7.0).abs() < 1e-4);
+        assert!((svd.s[1] - 3.0).abs() < 1e-4);
+        assert!((svd.s[2] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn truncated_svd_recovers_low_rank_exactly() {
+        let mut rng = Rng::new(32);
+        let a = make_low_rank(40, 30, 5, &mut rng);
+        let svd = truncated_svd(&a, 5, 1);
+        let rec = svd.reconstruct();
+        let rel = sub(&rec, &a).fro_norm() / a.fro_norm();
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn truncated_svd_satisfies_eckart_young_bound_loosely() {
+        // Error of rank-r approx must not exceed the tail energy by much.
+        let mut rng = Rng::new(33);
+        let a = Tensor::randn(&[30, 30], 1.0, &mut rng);
+        let full = jacobi_svd(&a);
+        for &r in &[1usize, 5, 15] {
+            let tr = truncated_svd(&a, r, 2);
+            let err = sub(&tr.reconstruct(), &a).sq_sum();
+            let tail: f64 = full.s[r..].iter().map(|&x| (x as f64).powi(2)).sum();
+            assert!(
+                err <= tail * 1.15 + 1e-6,
+                "r={r} err={err} tail={tail} (randomized SVD should be near-optimal)"
+            );
+        }
+    }
+
+    #[test]
+    fn adapter_split_multiplies_back() {
+        let mut rng = Rng::new(34);
+        let a = make_low_rank(20, 25, 4, &mut rng);
+        let svd = truncated_svd(&a, 4, 3);
+        let (fa, fb) = svd.into_adapter();
+        assert_eq!(fa.shape(), &[20, 4]);
+        assert_eq!(fb.shape(), &[4, 25]);
+        let rec = matmul(&fa, &fb);
+        let rel = sub(&rec, &a).fro_norm() / a.fro_norm();
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn cumulative_energy_monotone_to_one() {
+        let mut rng = Rng::new(35);
+        let a = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        let ce = svd.cumulative_energy();
+        for w in ce.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+        assert!((ce.last().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_rank_is_empty() {
+        let a = Tensor::zeros(&[5, 5]);
+        let svd = truncated_svd(&a, 0, 0);
+        assert!(svd.s.is_empty());
+    }
+
+    #[test]
+    fn prop_truncated_svd_error_bounded_by_tail() {
+        Prop::new(10).check(
+            "randomized svd near Eckart-Young",
+            |rng| {
+                let m = 8 + rng.below(20);
+                let n = 8 + rng.below(20);
+                let t = Tensor::randn(&[m, n], 1.0, rng);
+                let r = 1 + rng.below(6.min(m.min(n)));
+                (t, r)
+            },
+            |(a, r)| {
+                let full = jacobi_svd(a);
+                let tr = truncated_svd(a, *r, 9);
+                let err = sub(&tr.reconstruct(), a).sq_sum();
+                let tail: f64 = full.s[*r..].iter().map(|&x| (x as f64).powi(2)).sum();
+                if err <= tail * 1.25 + 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("err={err} tail={tail}"))
+                }
+            },
+        );
+    }
+}

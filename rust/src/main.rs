@@ -1,0 +1,177 @@
+//! `salr` — the coordinator binary: experiments, training, compression and
+//! serving, all over the AOT artifacts + native engine (no python on any
+//! code path here).
+
+use anyhow::{bail, Result};
+use salr::cli::{parse_baseline, Args, USAGE};
+use salr::eval::{deploy_engine, ExpContext, RunKey, Task};
+use salr::infer::Backend;
+use salr::model::{save_model, Encoding};
+use salr::salr::BaselineSpec;
+use salr::server::{serve, BatchPolicy};
+use salr::train::TrainConfig;
+
+fn main() {
+    salr::util::logger::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e:#}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn ctx_from(args: &Args) -> Result<ExpContext> {
+    if let Some(steps) = args.flag("steps") {
+        std::env::set_var("SALR_STEPS", steps);
+    }
+    ExpContext::new(
+        &args.str_or("artifacts", "artifacts"),
+        &args.str_or("config", "tiny"),
+        &args.str_or("results", "results"),
+    )
+}
+
+fn parse_task(s: &str) -> Result<Task> {
+    match s {
+        "math" => Ok(Task::Math),
+        "mcq" => Ok(Task::Mcq),
+        other => bail!("unknown task {other} (math|mcq)"),
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "exp" => {
+            let ctx = ctx_from(args)?;
+            let id = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            salr::eval::run_experiment(&ctx, id)
+        }
+        "pretrain" => {
+            let ctx = ctx_from(args)?;
+            let params = ctx.base_model()?;
+            println!(
+                "base model ready: {} tensors, {} params",
+                params.len(),
+                params.param_count()
+            );
+            Ok(())
+        }
+        "finetune" => {
+            let ctx = ctx_from(args)?;
+            let key = RunKey {
+                baseline: parse_baseline(&args.str_or("baseline", "salr"))?,
+                task: parse_task(&args.str_or("task", "math"))?,
+                sparsity: args.f64_or("sparsity", 0.5)?,
+            };
+            let (spec, adapters, losses) = ctx.run(&key)?;
+            let acc = ctx.accuracy(&spec, &adapters, key.task)?;
+            println!(
+                "{} on {} @p={}: accuracy {:.1}% ({} loss points)",
+                key.baseline.name(),
+                key.task.name(),
+                key.sparsity,
+                acc * 100.0,
+                losses.len()
+            );
+            Ok(())
+        }
+        "serve" => {
+            let ctx = ctx_from(args)?;
+            let key = RunKey {
+                baseline: parse_baseline(&args.str_or("baseline", "salr"))?,
+                task: parse_task(&args.str_or("task", "math"))?,
+                sparsity: args.f64_or("sparsity", 0.5)?,
+            };
+            let (spec, adapters, _) = ctx.run(&key)?;
+            let mut engine = deploy_engine(&ctx.cfg, &spec, &adapters, None)?;
+            engine.backend = match args.str_or("backend", "pipeline").as_str() {
+                "dense" => Backend::Dense,
+                "bitmap" => Backend::BitmapSequential,
+                "pipeline" => Backend::BitmapPipelined(Default::default()),
+                other => bail!("unknown backend {other}"),
+            };
+            let policy = BatchPolicy {
+                max_batch: args.usize_or("max-batch", 8)?,
+                max_wait: std::time::Duration::from_millis(
+                    args.usize_or("max-wait-ms", 5)? as u64,
+                ),
+            };
+            serve(engine, &args.str_or("addr", "127.0.0.1:7433"), policy, None)
+        }
+        "compress" => {
+            let ctx = ctx_from(args)?;
+            let sparsity = args.f64_or("sparsity", 0.5)?;
+            let base = ctx.base_model()?;
+            let spec = BaselineSpec::build(
+                &ctx.cfg,
+                &base,
+                salr::salr::Baseline::Salr,
+                sparsity,
+                13,
+            );
+            let adapted: std::collections::HashSet<String> =
+                ctx.cfg.adapted_layers().into_iter().collect();
+            let out = ctx.results_dir.join("compressed_model.salr");
+            let dense = base.dense_bytes() as u64;
+            let bytes = save_model(&out, &spec.params, |name, t| {
+                if adapted.contains(name) && t.ndim() == 2 {
+                    if args.bool("nf4") {
+                        Encoding::SparseNf4
+                    } else {
+                        Encoding::Bitmap
+                    }
+                } else {
+                    Encoding::Dense
+                }
+            })?;
+            println!(
+                "compressed @p={sparsity}: {} -> {} ({:.2}x) at {:?}",
+                salr::util::human_bytes(dense),
+                salr::util::human_bytes(bytes),
+                dense as f64 / bytes as f64,
+                out
+            );
+            Ok(())
+        }
+        "info" => {
+            let ctx = ctx_from(args)?;
+            let man = ctx.runtime.manifest();
+            println!("configs:");
+            for c in &man.configs {
+                println!(
+                    "  {}: d_model={} layers={} heads={} d_ff={} seq={} rank={} res_rank={}",
+                    c.name, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.max_seq_len,
+                    c.rank, c.residual_rank
+                );
+            }
+            println!("artifacts:");
+            for a in &man.artifacts {
+                println!(
+                    "  {:<28} {:>3} in / {:>3} out   {}",
+                    a.name,
+                    a.inputs.len(),
+                    a.outputs.len(),
+                    a.file
+                );
+            }
+            let tc = TrainConfig::default();
+            println!("default train config: {tc:?}");
+            Ok(())
+        }
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other}\n\n{USAGE}"),
+    }
+}

@@ -1,0 +1,10 @@
+//! Model state owned by the coordinator: a named parameter store whose
+//! canonical (sorted-key) order matches the jax pytree flattening in the
+//! AOT artifacts, plus byte-exact compressed serialization — the "model
+//! size" numbers of Fig. 1 / Tables 3 & 6 come from [`serialize`].
+
+mod params;
+mod serialize;
+
+pub use params::ParamStore;
+pub use serialize::{load_model, save_model, Encoding, ModelFile, TensorRecord};

@@ -1,0 +1,240 @@
+//! Named parameter store with jax-compatible canonical ordering.
+
+use crate::runtime::ModelCfg;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// A sorted name → tensor map. Iteration order (BTreeMap) equals the
+/// sorted-key order jax uses when flattening dict pytrees, which is the
+/// flat input order of every AOT artifact.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    pub fn new() -> ParamStore {
+        ParamStore::default()
+    }
+
+    /// Initialize dense base parameters with the same shapes (and init
+    /// scales) as python's `init_base_params`.
+    pub fn init_base(cfg: &ModelCfg, rng: &mut Rng) -> ParamStore {
+        let mut p = ParamStore::new();
+        p.insert(
+            "embed",
+            Tensor::randn(&[cfg.vocab_size, cfg.d_model], 0.02, rng),
+        );
+        p.insert(
+            "pos_embed",
+            Tensor::randn(&[cfg.max_seq_len, cfg.d_model], 0.02, rng),
+        );
+        p.insert(
+            "lm_head",
+            Tensor::randn(&[cfg.d_model, cfg.vocab_size], 0.02, rng),
+        );
+        p.insert("final_norm", Tensor::full(&[cfg.d_model], 1.0));
+        for i in 0..cfg.n_layers {
+            p.insert(
+                &format!("layer{i}.attn_norm"),
+                Tensor::full(&[cfg.d_model], 1.0),
+            );
+            p.insert(
+                &format!("layer{i}.mlp_norm"),
+                Tensor::full(&[cfg.d_model], 1.0),
+            );
+            for lin in ["wq", "wk", "wv", "wo", "w_in", "w_out"] {
+                let (d_in, d_out) = cfg.linear_shape(lin);
+                let scale = (d_in as f32).powf(-0.5);
+                p.insert(
+                    &format!("layer{i}.{lin}"),
+                    Tensor::randn(&[d_in, d_out], scale, rng),
+                );
+            }
+        }
+        p
+    }
+
+    /// Initialize LoRA (+ optional residual) adapters: A ~ N(0, 1/√d_in),
+    /// B = 0 (standard LoRA init — adapters start as the identity).
+    pub fn init_adapters(cfg: &ModelCfg, rng: &mut Rng, with_residual: bool) -> ParamStore {
+        let mut p = ParamStore::new();
+        for name in cfg.adapted_layers() {
+            let lin = name.split('.').nth(1).unwrap();
+            let (d_in, d_out) = cfg.linear_shape(lin);
+            let scale = (d_in as f32).powf(-0.5);
+            p.insert(
+                &format!("{name}.lora_a"),
+                Tensor::randn(&[d_in, cfg.rank], scale, rng),
+            );
+            p.insert(&format!("{name}.lora_b"), Tensor::zeros(&[cfg.rank, d_out]));
+            if with_residual {
+                p.insert(
+                    &format!("{name}.res_a"),
+                    Tensor::zeros(&[d_in, cfg.residual_rank]),
+                );
+                p.insert(
+                    &format!("{name}.res_b"),
+                    Tensor::zeros(&[cfg.residual_rank, d_out]),
+                );
+            }
+        }
+        p
+    }
+
+    /// All-ones LoSA masks (refreshed dynamically by the trainer).
+    pub fn init_masks(cfg: &ModelCfg) -> ParamStore {
+        let mut p = ParamStore::new();
+        for name in cfg.adapted_layers() {
+            let lin = name.split('.').nth(1).unwrap();
+            let (d_in, d_out) = cfg.linear_shape(lin);
+            p.insert(&format!("{name}.mask"), Tensor::full(&[d_in, d_out], 1.0));
+        }
+        p
+    }
+
+    /// Zero tensors with the same shapes (optimizer state).
+    pub fn zeros_like(&self) -> ParamStore {
+        let mut p = ParamStore::new();
+        for (k, v) in &self.map {
+            p.map.insert(k.clone(), Tensor::zeros(v.shape()));
+        }
+        p
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.map.get_mut(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.map.remove(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Sorted names (the canonical flat order).
+    pub fn names(&self) -> Vec<&str> {
+        self.map.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.map.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&String, &mut Tensor)> {
+        self.map.iter_mut()
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Dense f32 byte size.
+    pub fn dense_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    /// Merge another store (consumes it; keys must not collide).
+    pub fn absorb(&mut self, other: ParamStore) {
+        for (k, v) in other.map {
+            let prev = self.map.insert(k.clone(), v);
+            assert!(prev.is_none(), "duplicate param {k}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq_len: 16,
+            rank: 4,
+            lora_alpha: 16.0,
+            residual_rank: 8,
+            batch_size: 2,
+            ctx_keep: 0.5,
+        }
+    }
+
+    #[test]
+    fn base_param_count_matches_formula() {
+        let cfg = test_cfg();
+        let mut rng = Rng::new(1);
+        let p = ParamStore::init_base(&cfg, &mut rng);
+        // Mirror python's ModelConfig.param_count().
+        let want = 2 * cfg.vocab_size * cfg.d_model
+            + cfg.max_seq_len * cfg.d_model
+            + cfg.n_layers
+                * (4 * cfg.d_model * cfg.d_model
+                    + 2 * cfg.d_model * cfg.d_ff
+                    + 2 * cfg.d_model)
+            + cfg.d_model;
+        assert_eq!(p.param_count(), want);
+    }
+
+    #[test]
+    fn names_are_sorted() {
+        let cfg = test_cfg();
+        let mut rng = Rng::new(2);
+        let p = ParamStore::init_base(&cfg, &mut rng);
+        let names: Vec<_> = p.names();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn adapters_shapes_and_identity_init() {
+        let cfg = test_cfg();
+        let mut rng = Rng::new(3);
+        let a = ParamStore::init_adapters(&cfg, &mut rng, true);
+        assert_eq!(a.len(), 12 * 4);
+        let b = a.get("layer0.wq.lora_b").unwrap();
+        assert_eq!(b.shape(), &[4, 32]);
+        assert_eq!(b.nnz(), 0, "B must start at zero");
+        let ra = a.get("layer1.w_out.res_a").unwrap();
+        assert_eq!(ra.shape(), &[64, 8]);
+        let lora_only = ParamStore::init_adapters(&cfg, &mut rng, false);
+        assert_eq!(lora_only.len(), 12 * 2);
+    }
+
+    #[test]
+    fn zeros_like_preserves_shapes() {
+        let cfg = test_cfg();
+        let mut rng = Rng::new(4);
+        let p = ParamStore::init_base(&cfg, &mut rng);
+        let z = p.zeros_like();
+        assert_eq!(z.param_count(), p.param_count());
+        for (k, v) in z.iter() {
+            assert_eq!(v.nnz(), 0, "{k}");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Magnitude-based pruning: `Ŵ_ij = W_ij if |W_ij| > T_p else 0`, with the
+//! threshold chosen so a target fraction `p` of entries is pruned
+//! (paper, Preliminary section).
+
+use crate::tensor::Tensor;
+
+/// Exact global threshold: the `⌈p·n⌉`-th smallest |value| across all
+/// tensors. Uses quickselect (O(n) average) over a copied magnitude buffer.
+pub fn global_threshold(tensors: &[&Tensor], p: f64) -> f32 {
+    assert!((0.0..1.0).contains(&p), "prune ratio must be in [0,1)");
+    if p == 0.0 {
+        return -1.0; // threshold below any magnitude: nothing pruned
+    }
+    let total: usize = tensors.iter().map(|t| t.len()).sum();
+    if total == 0 {
+        return -1.0;
+    }
+    let mut mags: Vec<f32> = Vec::with_capacity(total);
+    for t in tensors {
+        mags.extend(t.data().iter().map(|x| x.abs()));
+    }
+    let k = ((p * total as f64).ceil() as usize).clamp(1, total) - 1;
+    *order_stat(&mut mags, k)
+}
+
+/// k-th order statistic (0-based) via in-place quickselect.
+fn order_stat(xs: &mut [f32], k: usize) -> &f32 {
+    let (mut lo, mut hi) = (0usize, xs.len());
+    let mut k = k;
+    loop {
+        if hi - lo <= 1 {
+            return &xs[lo];
+        }
+        // Median-of-three pivot.
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (xs[lo], xs[mid], xs[hi - 1]);
+        let pivot = a.max(b.min(c)).min(b.max(c));
+        // Three-way partition.
+        let (mut lt, mut i, mut gt) = (lo, lo, hi);
+        while i < gt {
+            if xs[i] < pivot {
+                xs.swap(i, lt);
+                lt += 1;
+                i += 1;
+            } else if xs[i] > pivot {
+                gt -= 1;
+                xs.swap(i, gt);
+            } else {
+                i += 1;
+            }
+        }
+        let (nlt, neq) = (lt - lo, gt - lt);
+        if k < nlt {
+            hi = lt;
+        } else if k < nlt + neq {
+            return &xs[lt];
+        } else {
+            k -= nlt + neq;
+            lo = gt;
+        }
+    }
+}
+
+/// Prune a tensor in place with an explicit threshold; returns pruned count.
+/// Entries with `|w| <= threshold` are zeroed (matches the paper's `≤ T_p`).
+pub fn prune_with_threshold(t: &mut Tensor, threshold: f32) -> usize {
+    let mut pruned = 0;
+    for v in t.data_mut() {
+        if v.abs() <= threshold {
+            if *v != 0.0 {
+                // count newly-zeroed and already-zero uniformly below
+            }
+            *v = 0.0;
+            pruned += 1;
+        }
+    }
+    pruned
+}
+
+/// Globally prune a set of tensors to ratio `p`; returns the threshold used.
+pub fn prune_global(tensors: &mut [&mut Tensor], p: f64) -> f32 {
+    let views: Vec<&Tensor> = tensors.iter().map(|t| &**t).collect();
+    let threshold = global_threshold(&views, p);
+    drop(views);
+    for t in tensors.iter_mut() {
+        prune_with_threshold(t, threshold);
+    }
+    threshold
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn threshold_achieves_ratio() {
+        let mut rng = Rng::new(40);
+        let mut t = Tensor::randn(&[100, 100], 1.0, &mut rng);
+        let th = prune_global(&mut [&mut t], 0.5);
+        assert!(th > 0.0);
+        let sparsity = t.sparsity();
+        assert!(
+            (sparsity - 0.5).abs() < 0.01,
+            "sparsity={sparsity} threshold={th}"
+        );
+    }
+
+    #[test]
+    fn zero_ratio_prunes_nothing() {
+        let mut rng = Rng::new(41);
+        let mut t = Tensor::randn(&[10, 10], 1.0, &mut rng);
+        let orig = t.clone();
+        prune_global(&mut [&mut t], 0.0);
+        assert_eq!(t, orig);
+    }
+
+    #[test]
+    fn global_across_tensors_prunes_smaller_tensor_more() {
+        // t_small has tiny entries, t_big has large: global 50% should wipe
+        // mostly t_small.
+        let mut rng = Rng::new(42);
+        let mut t_small = Tensor::randn(&[50, 50], 0.01, &mut rng);
+        let mut t_big = Tensor::randn(&[50, 50], 10.0, &mut rng);
+        prune_global(&mut [&mut t_small, &mut t_big], 0.5);
+        assert!(t_small.sparsity() > 0.95);
+        assert!(t_big.sparsity() < 0.05);
+    }
+
+    #[test]
+    fn order_stat_matches_sort() {
+        let mut rng = Rng::new(43);
+        for _ in 0..20 {
+            let n = 1 + rng.below(500);
+            let mut xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let k = rng.below(n);
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let got = *order_stat(&mut xs, k);
+            assert_eq!(got, sorted[k]);
+        }
+    }
+
+    #[test]
+    fn prop_sparsity_close_to_p() {
+        Prop::new(16).check(
+            "prune ratio achieved",
+            |rng| {
+                let n = 20 + rng.below(80);
+                let p = 0.05 + rng.uniform() * 0.9;
+                (Tensor::randn(&[n, n], 1.0, rng), p)
+            },
+            |(t, p)| {
+                let mut t = t.clone();
+                prune_global(&mut [&mut t], *p);
+                let s = t.sparsity();
+                // Exact up to ties + ceil: within 1 element / n^2 + epsilon.
+                let tol = 2.0 / (t.len() as f64) + 1e-9;
+                if s >= *p - tol && s <= *p + 0.02 {
+                    Ok(())
+                } else {
+                    Err(format!("p={p} sparsity={s}"))
+                }
+            },
+        );
+    }
+}

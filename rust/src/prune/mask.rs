@@ -1,0 +1,210 @@
+//! Pruning masks and the three mask *policies* of Theorem 2:
+//!
+//! * **Method 1** — static mask from `|W0|` (SALR's choice; lowest MSE);
+//! * **Method 2** — mask driven by `|U| = |W0 + AB|` but applied to `W0` only;
+//! * **Method 3** — mask on the full `U` applied to everything (LoSA-style).
+
+use crate::prune::magnitude::global_threshold;
+use crate::tensor::{add, Tensor};
+
+/// A binary keep-mask stored as packed u64 words (1 = keep).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    rows: usize,
+    cols: usize,
+    words: Vec<u64>,
+}
+
+impl Mask {
+    pub fn new_ones(rows: usize, cols: usize) -> Mask {
+        let nbits = rows * cols;
+        let nwords = nbits.div_ceil(64);
+        let mut words = vec![u64::MAX; nwords];
+        // Clear tail bits beyond nbits.
+        let tail = nbits % 64;
+        if tail != 0 {
+            if let Some(last) = words.last_mut() {
+                *last = (1u64 << tail) - 1;
+            }
+        }
+        Mask { rows, cols, words }
+    }
+
+    pub fn new_zeros(rows: usize, cols: usize) -> Mask {
+        let nwords = (rows * cols).div_ceil(64);
+        Mask {
+            rows,
+            cols,
+            words: vec![0; nwords],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        let bit = i * self.cols + j;
+        (self.words[bit / 64] >> (bit % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, keep: bool) {
+        let bit = i * self.cols + j;
+        if keep {
+            self.words[bit / 64] |= 1 << (bit % 64);
+        } else {
+            self.words[bit / 64] &= !(1 << (bit % 64));
+        }
+    }
+
+    /// Number of kept (1) entries.
+    pub fn count_kept(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Fraction pruned.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.count_kept() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Storage size of the packed mask in bytes.
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+/// Build a keep-mask from a dense tensor and threshold (|x| > T kept).
+pub fn mask_from_dense(t: &Tensor, threshold: f32) -> Mask {
+    let (r, c) = (t.rows(), t.cols());
+    let mut m = Mask::new_zeros(r, c);
+    for i in 0..r {
+        for j in 0..c {
+            if t.at(i, j).abs() > threshold {
+                m.set(i, j, true);
+            }
+        }
+    }
+    m
+}
+
+/// Zero out entries of `t` where the mask is 0.
+pub fn apply_mask(t: &mut Tensor, mask: &Mask) {
+    assert_eq!(t.rows(), mask.rows);
+    assert_eq!(t.cols(), mask.cols);
+    for i in 0..t.rows() {
+        let row = t.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            if !mask.get(i, j) {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// The three Theorem-2 policies for deriving a mask in the LoRA setting
+/// `W = W0 + AB`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaskPolicy {
+    /// Method 1: static mask from `|W0|` alone (SALR).
+    StaticW0,
+    /// Method 2: mask from `|W0 + AB|`, applied to `W0` only.
+    DynamicUOnW0,
+    /// Method 3: mask from `|W0 + AB|`, applied to the merged `U` (LoSA).
+    DynamicU,
+}
+
+impl MaskPolicy {
+    /// Derive a keep-mask at global rate `p` for base weights `w0` and
+    /// (optional) adapter product `ab`.
+    pub fn derive(&self, w0: &Tensor, ab: Option<&Tensor>, p: f64) -> Mask {
+        match self {
+            MaskPolicy::StaticW0 => {
+                let th = global_threshold(&[w0], p);
+                mask_from_dense(w0, th)
+            }
+            MaskPolicy::DynamicUOnW0 | MaskPolicy::DynamicU => {
+                let u = match ab {
+                    Some(ab) => add(w0, ab),
+                    None => w0.clone(),
+                };
+                let th = global_threshold(&[&u], p);
+                mask_from_dense(&u, th)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mask_bit_ops() {
+        let mut m = Mask::new_zeros(3, 70); // crosses word boundary
+        assert_eq!(m.count_kept(), 0);
+        m.set(0, 0, true);
+        m.set(1, 69, true);
+        m.set(2, 35, true);
+        assert!(m.get(0, 0) && m.get(1, 69) && m.get(2, 35));
+        assert!(!m.get(0, 1));
+        assert_eq!(m.count_kept(), 3);
+        m.set(1, 69, false);
+        assert_eq!(m.count_kept(), 2);
+    }
+
+    #[test]
+    fn ones_mask_tail_bits_clean() {
+        let m = Mask::new_ones(3, 33); // 99 bits, 2 words
+        assert_eq!(m.count_kept(), 99);
+        assert!((m.sparsity() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_mask_zeroes() {
+        let mut rng = Rng::new(50);
+        let mut t = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let th = global_threshold(&[&t], 0.5);
+        let m = mask_from_dense(&t, th);
+        apply_mask(&mut t, &m);
+        assert!((t.sparsity() - 0.5).abs() < 0.02);
+        // Every kept entry exceeds the threshold.
+        for i in 0..16 {
+            for j in 0..16 {
+                if m.get(i, j) {
+                    assert!(t.at(i, j).abs() > th);
+                } else {
+                    assert_eq!(t.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn policies_differ_when_adapter_large() {
+        let mut rng = Rng::new(51);
+        let w0 = Tensor::randn(&[32, 32], 1.0, &mut rng);
+        let ab = Tensor::randn(&[32, 32], 2.0, &mut rng);
+        let m1 = MaskPolicy::StaticW0.derive(&w0, Some(&ab), 0.5);
+        let m3 = MaskPolicy::DynamicU.derive(&w0, Some(&ab), 0.5);
+        assert_ne!(m1, m3, "large adapter should shift the dynamic mask");
+        assert!((m1.sparsity() - 0.5).abs() < 0.02);
+        assert!((m3.sparsity() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn storage_is_one_bit_per_entry() {
+        let m = Mask::new_ones(128, 128);
+        assert_eq!(m.storage_bytes(), 128 * 128 / 8);
+    }
+}

@@ -1,0 +1,13 @@
+//! Pruning: magnitude-based unstructured pruning, the three mask policies
+//! analysed in Theorem 2, N:M semi-structured pruning (2:4), and the
+//! closed-form MSE theory of Theorems 1–2 (with its own erf/Φ
+//! implementation — no libm special functions in the vendor set).
+
+pub mod magnitude;
+pub mod mask;
+pub mod nm;
+pub mod theory;
+
+pub use magnitude::{global_threshold, prune_global, prune_with_threshold};
+pub use mask::{apply_mask, mask_from_dense, Mask, MaskPolicy};
+pub use nm::{prune_nm, NmPattern};

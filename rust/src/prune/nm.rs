@@ -1,0 +1,139 @@
+//! N:M semi-structured pruning (e.g. 2:4): within every group of `m`
+//! consecutive weights along the input dimension, keep the `n` largest by
+//! magnitude. This is the deployment pattern of the paper's Table 4
+//! (inference speedup follows the N:M sparsity protocol of LoSA).
+
+use crate::tensor::Tensor;
+
+/// An N:M sparsity pattern (`n` kept out of every `m`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NmPattern {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl NmPattern {
+    pub const TWO_FOUR: NmPattern = NmPattern { n: 2, m: 4 };
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.n as f64 / self.m as f64
+    }
+}
+
+/// Prune `t` in place to the N:M pattern along rows (row-major groups of m).
+/// Returns the number of zeroed entries.
+pub fn prune_nm(t: &mut Tensor, pat: NmPattern) -> usize {
+    assert!(pat.n <= pat.m && pat.m > 0);
+    let cols = t.cols();
+    let mut zeroed = 0;
+    let mut idx: Vec<usize> = Vec::with_capacity(pat.m);
+    for r in 0..t.rows() {
+        let row = t.row_mut(r);
+        let mut g = 0;
+        while g < cols {
+            let end = (g + pat.m).min(cols);
+            let glen = end - g;
+            let keep = pat.n.min(glen);
+            idx.clear();
+            idx.extend(g..end);
+            // Partial selection: keep the `keep` largest magnitudes.
+            idx.sort_by(|&a, &b| row[b].abs().partial_cmp(&row[a].abs()).unwrap());
+            for &i in idx.iter().skip(keep) {
+                if row[i] != 0.0 {
+                    zeroed += 1;
+                }
+                row[i] = 0.0;
+            }
+            g = end;
+        }
+    }
+    zeroed
+}
+
+/// Verify a tensor satisfies the N:M constraint (each full group of m has at
+/// most n nonzeros).
+pub fn check_nm(t: &Tensor, pat: NmPattern) -> bool {
+    let cols = t.cols();
+    for r in 0..t.rows() {
+        let row = t.row(r);
+        let mut g = 0;
+        while g + pat.m <= cols {
+            let nnz = row[g..g + pat.m].iter().filter(|&&x| x != 0.0).count();
+            if nnz > pat.n {
+                return false;
+            }
+            g += pat.m;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn two_four_halves_density() {
+        let mut rng = Rng::new(60);
+        let mut t = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        prune_nm(&mut t, NmPattern::TWO_FOUR);
+        assert!(check_nm(&t, NmPattern::TWO_FOUR));
+        assert!((t.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn keeps_the_largest_in_each_group() {
+        let mut t = Tensor::from_vec(&[1, 4], vec![0.1, -5.0, 3.0, 0.2]);
+        prune_nm(&mut t, NmPattern::TWO_FOUR);
+        assert_eq!(t.data(), &[0.0, -5.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn ragged_tail_group_handled() {
+        let mut t = Tensor::from_vec(&[1, 6], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        prune_nm(&mut t, NmPattern::TWO_FOUR);
+        // First group keeps 3,4; tail group of 2 keeps both (n=2).
+        assert_eq!(t.data(), &[0.0, 0.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn prop_nm_invariant_and_magnitude_optimality() {
+        Prop::new(24).check(
+            "n:m pattern holds and kept >= dropped per group",
+            |rng| {
+                let r = 1 + rng.below(10);
+                let c = 4 * (1 + rng.below(10));
+                Tensor::randn(&[r, c], 1.0, rng)
+            },
+            |t| {
+                let mut p = t.clone();
+                prune_nm(&mut p, NmPattern::TWO_FOUR);
+                if !check_nm(&p, NmPattern::TWO_FOUR) {
+                    return Err("pattern violated".into());
+                }
+                // Within each group, min kept magnitude >= max dropped.
+                for r in 0..t.rows() {
+                    for g in (0..t.cols()).step_by(4) {
+                        let orig = &t.row(r)[g..g + 4];
+                        let kept = &p.row(r)[g..g + 4];
+                        let min_kept = kept
+                            .iter()
+                            .filter(|&&x| x != 0.0)
+                            .fold(f32::INFINITY, |m, &x| m.min(x.abs()));
+                        let max_dropped = orig
+                            .iter()
+                            .zip(kept)
+                            .filter(|(_, &k)| k == 0.0)
+                            .fold(0.0f32, |m, (&o, _)| m.max(o.abs()));
+                        if min_kept < max_dropped {
+                            return Err(format!("kept {min_kept} < dropped {max_dropped}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

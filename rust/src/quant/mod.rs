@@ -1,0 +1,6 @@
+//! NF4 ("NormalFloat-4") quantization, as used by the paper's QSALR
+//! ablation (Table 6: 20% sparsity + NF4 → ~5× model-size reduction).
+
+pub mod nf4;
+
+pub use nf4::{Nf4Matrix, NF4_CODEBOOK};

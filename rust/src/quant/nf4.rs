@@ -1,0 +1,280 @@
+//! NF4 quantization (QLoRA's NormalFloat-4): a 16-level codebook of
+//! normal-distribution quantiles, applied blockwise with absmax scaling,
+//! two 4-bit codes packed per byte.
+//!
+//! QSALR (paper Table 6) composes this with a 20% static sparsity mask:
+//! the *kept* values are NF4-quantized, the mask stays a bitmap.
+
+use crate::tensor::Tensor;
+
+/// The standard NF4 codebook (QLoRA, Dettmers et al. 2023): 16 values in
+/// [-1, 1], quantiles of N(0,1) normalized to unit absmax, asymmetric with
+/// an exact zero.
+pub const NF4_CODEBOOK: [f32; 16] = [
+    -1.0,
+    -0.6961928009986877,
+    -0.5250730514526367,
+    -0.39491748809814453,
+    -0.28444138169288635,
+    -0.18477343022823334,
+    -0.09105003625154495,
+    0.0,
+    0.07958029955625534,
+    0.16093020141124725,
+    0.24611230194568634,
+    0.33791524171829224,
+    0.44070982933044434,
+    0.5626170039176941,
+    0.7229568362236023,
+    1.0,
+];
+
+/// Blockwise-NF4-quantized matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Nf4Matrix {
+    rows: usize,
+    cols: usize,
+    block: usize,
+    /// Packed 4-bit codes, two per byte, row-major over elements.
+    codes: Vec<u8>,
+    /// One f32 absmax scale per block.
+    scales: Vec<f32>,
+}
+
+/// Nearest codebook index for a value in [-1, 1].
+#[inline]
+fn nearest_code(x: f32) -> u8 {
+    // Binary search over the sorted codebook, then pick nearer neighbor.
+    let mut lo = 0usize;
+    let mut hi = NF4_CODEBOOK.len() - 1;
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if NF4_CODEBOOK[mid] <= x {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    if (x - NF4_CODEBOOK[lo]).abs() <= (NF4_CODEBOOK[hi] - x).abs() {
+        lo as u8
+    } else {
+        hi as u8
+    }
+}
+
+impl Nf4Matrix {
+    /// Quantize with the given block size (64 is the QLoRA default).
+    pub fn quantize(t: &Tensor, block: usize) -> Nf4Matrix {
+        assert!(block > 0);
+        let n = t.len();
+        let data = t.data();
+        let nblocks = n.div_ceil(block);
+        let mut scales = Vec::with_capacity(nblocks);
+        let mut codes = vec![0u8; n.div_ceil(2)];
+        for bi in 0..nblocks {
+            let s = bi * block;
+            let e = (s + block).min(n);
+            let absmax = data[s..e].iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = if absmax > 0.0 { absmax } else { 1.0 };
+            scales.push(scale);
+            let inv = 1.0 / scale;
+            for (k, &x) in data[s..e].iter().enumerate() {
+                let code = nearest_code(x * inv);
+                let idx = s + k;
+                if idx % 2 == 0 {
+                    codes[idx / 2] |= code;
+                } else {
+                    codes[idx / 2] |= code << 4;
+                }
+            }
+        }
+        Nf4Matrix {
+            rows: t.rows(),
+            cols: t.cols(),
+            block,
+            codes,
+            scales,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Dequantize to dense f32.
+    pub fn dequantize(&self) -> Tensor {
+        let n = self.rows * self.cols;
+        let mut out = vec![0.0f32; n];
+        for (idx, o) in out.iter_mut().enumerate() {
+            let code = if idx % 2 == 0 {
+                self.codes[idx / 2] & 0x0F
+            } else {
+                self.codes[idx / 2] >> 4
+            };
+            let scale = self.scales[idx / self.block];
+            *o = NF4_CODEBOOK[code as usize] * scale;
+        }
+        Tensor::from_vec(&[self.rows, self.cols], out)
+    }
+
+    /// Serialized size: codes + scales (+20B header).
+    pub fn storage_bytes(&self) -> usize {
+        20 + self.codes.len() + self.scales.len() * 4
+    }
+
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_bytes() as f64 / self.storage_bytes() as f64
+    }
+
+    /// Serialize (header + codes + scales).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.storage_bytes());
+        out.extend_from_slice(&(self.rows as u32).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u32).to_le_bytes());
+        out.extend_from_slice(&(self.block as u32).to_le_bytes());
+        out.extend_from_slice(&(self.scales.len() as u32).to_le_bytes());
+        out.extend_from_slice(&0x4E46u32.to_le_bytes()); // "NF"
+        out.extend_from_slice(&self.codes);
+        for &s in &self.scales {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Nf4Matrix> {
+        use anyhow::{bail, ensure};
+        ensure!(bytes.len() >= 20, "nf4: truncated header");
+        let rows = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+        let cols = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let block = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+        let nscales = u32::from_le_bytes(bytes[12..16].try_into()?) as usize;
+        let magic = u32::from_le_bytes(bytes[16..20].try_into()?);
+        if magic != 0x4E46 {
+            bail!("nf4: bad magic");
+        }
+        let ncodes = (rows * cols).div_ceil(2);
+        ensure!(
+            bytes.len() == 20 + ncodes + nscales * 4,
+            "nf4: bad payload size"
+        );
+        let codes = bytes[20..20 + ncodes].to_vec();
+        let mut scales = Vec::with_capacity(nscales);
+        let mut p = 20 + ncodes;
+        for _ in 0..nscales {
+            scales.push(f32::from_le_bytes(bytes[p..p + 4].try_into()?));
+            p += 4;
+        }
+        Ok(Nf4Matrix {
+            rows,
+            cols,
+            block,
+            codes,
+            scales,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn codebook_is_sorted_with_zero() {
+        for w in NF4_CODEBOOK.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(NF4_CODEBOOK[7], 0.0);
+        assert_eq!(NF4_CODEBOOK[0], -1.0);
+        assert_eq!(NF4_CODEBOOK[15], 1.0);
+    }
+
+    #[test]
+    fn nearest_code_exact_hits() {
+        for (i, &c) in NF4_CODEBOOK.iter().enumerate() {
+            assert_eq!(nearest_code(c) as usize, i);
+        }
+        assert_eq!(nearest_code(-2.0), 0);
+        assert_eq!(nearest_code(2.0), 15);
+    }
+
+    #[test]
+    fn quantization_error_is_small_for_gaussian() {
+        let mut rng = Rng::new(100);
+        let t = Tensor::randn(&[64, 64], 0.02, &mut rng);
+        let q = Nf4Matrix::quantize(&t, 64);
+        let dq = q.dequantize();
+        let rel = crate::tensor::sub(&dq, &t).fro_norm() / t.fro_norm();
+        // NF4 on gaussian data: typical relative error ~6-9%.
+        assert!(rel < 0.12, "rel={rel}");
+    }
+
+    #[test]
+    fn zeros_roundtrip_exactly() {
+        let t = Tensor::zeros(&[10, 10]);
+        let q = Nf4Matrix::quantize(&t, 64);
+        assert_eq!(q.dequantize(), t);
+    }
+
+    #[test]
+    fn compression_near_8x() {
+        let mut rng = Rng::new(101);
+        let t = Tensor::randn(&[256, 256], 1.0, &mut rng);
+        let q = Nf4Matrix::quantize(&t, 64);
+        // 4 bits + f32 scale / 64 elems = 4.5 bits/elem → ~7.1x
+        let ratio = q.compression_ratio();
+        assert!(ratio > 6.5 && ratio < 8.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut rng = Rng::new(102);
+        let t = Tensor::randn(&[17, 31], 1.0, &mut rng);
+        let q = Nf4Matrix::quantize(&t, 32);
+        let back = Nf4Matrix::from_bytes(&q.to_bytes()).unwrap();
+        assert_eq!(back, q);
+        assert_eq!(back.dequantize(), q.dequantize());
+    }
+
+    #[test]
+    fn prop_dequantized_within_block_absmax() {
+        Prop::new(24).check(
+            "nf4 |dq - x| <= scale * max_gap/2",
+            |rng| {
+                let r = 1 + rng.below(12);
+                let c = 1 + rng.below(40);
+                Tensor::randn(&[r, c], 0.5, rng)
+            },
+            |t| {
+                let q = Nf4Matrix::quantize(t, 16);
+                let dq = q.dequantize();
+                // Per-entry error bounded by half the widest codebook gap
+                // times the block scale.
+                let max_gap = NF4_CODEBOOK
+                    .windows(2)
+                    .map(|w| w[1] - w[0])
+                    .fold(0.0f32, f32::max);
+                for idx in 0..t.len() {
+                    let scale = t.data()
+                        [idx / 16 * 16..((idx / 16 + 1) * 16).min(t.len())]
+                        .iter()
+                        .fold(0.0f32, |m, &x| m.max(x.abs()));
+                    let err = (dq.data()[idx] - t.data()[idx]).abs();
+                    if err > scale * max_gap / 2.0 + 1e-6 {
+                        return Err(format!("idx={idx} err={err} scale={scale}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

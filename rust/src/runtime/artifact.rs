@@ -1,0 +1,289 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Describes every lowered HLO executable — its file, its
+//! flat input/output tensor order (jax flattens dicts sorted by key), and
+//! the model configuration it was lowered for.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One input or output tensor of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub config: String,
+    pub kind: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    /// Index of an input by name.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|i| i.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|i| i.name == name)
+    }
+}
+
+/// Model configuration mirrored from python's `ModelConfig`.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq_len: usize,
+    pub rank: usize,
+    pub lora_alpha: f64,
+    pub residual_rank: usize,
+    pub batch_size: usize,
+    pub ctx_keep: f64,
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn lora_scaling(&self) -> f32 {
+        (self.lora_alpha / self.rank as f64) as f32
+    }
+
+    /// Adapted linear names in canonical order (mirrors python).
+    pub fn adapted_layers(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for layer in 0..self.n_layers {
+            for lin in ["wq", "wk", "wv", "wo", "w_in", "w_out"] {
+                out.push(format!("layer{layer}.{lin}"));
+            }
+        }
+        out
+    }
+
+    /// (d_in, d_out) of an adapted linear by its suffix.
+    pub fn linear_shape(&self, lin: &str) -> (usize, usize) {
+        match lin {
+            "wq" | "wk" | "wv" | "wo" => (self.d_model, self.d_model),
+            "w_in" => (self.d_model, self.d_ff),
+            "w_out" => (self.d_ff, self.d_model),
+            other => panic!("unknown linear {other}"),
+        }
+    }
+
+    fn from_json(name: &str, j: &Json) -> Result<ModelCfg> {
+        let u = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("config {name} missing {k}"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("config {name} missing {k}"))
+        };
+        Ok(ModelCfg {
+            name: name.to_string(),
+            vocab_size: u("vocab_size")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            d_ff: u("d_ff")?,
+            max_seq_len: u("max_seq_len")?,
+            rank: u("rank")?,
+            lora_alpha: f("lora_alpha")?,
+            residual_rank: u("residual_rank")?,
+            batch_size: u("batch_size")?,
+            ctx_keep: f("ctx_keep")?,
+        })
+    }
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: Vec<ModelCfg>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("format").and_then(Json::as_usize) != Some(1) {
+            bail!("unsupported manifest format");
+        }
+        let mut configs = Vec::new();
+        for (name, cj) in j.get("configs").and_then(Json::as_obj).context("configs")? {
+            configs.push(ModelCfg::from_json(name, cj)?);
+        }
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("artifacts")?
+        {
+            artifacts.push(parse_artifact(a)?);
+        }
+        Ok(Manifest {
+            dir,
+            configs,
+            artifacts,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelCfg> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .with_context(|| format!("config {name} not in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    pub fn artifact_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .context("io name")?
+        .to_string();
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("io shape")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim"))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match j.get("dtype").and_then(Json::as_str) {
+        Some("f32") => Dtype::F32,
+        Some("i32") => Dtype::I32,
+        Some("u32") => Dtype::U32,
+        other => bail!("unsupported dtype {other:?} for {name}"),
+    };
+    Ok(IoSpec { name, shape, dtype })
+}
+
+fn parse_artifact(j: &Json) -> Result<ArtifactSpec> {
+    let s = |k: &str| -> Result<String> {
+        Ok(j.get(k)
+            .and_then(Json::as_str)
+            .with_context(|| format!("artifact field {k}"))?
+            .to_string())
+    };
+    Ok(ArtifactSpec {
+        name: s("name")?,
+        config: s("config")?,
+        kind: s("kind")?,
+        file: s("file")?,
+        inputs: j
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .context("inputs")?
+            .iter()
+            .map(parse_io)
+            .collect::<Result<Vec<_>>>()?,
+        outputs: j
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .context("outputs")?
+            .iter()
+            .map(parse_io)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_is_consistent() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.config("tiny").is_ok());
+        let cfg = man.config("tiny").unwrap();
+        assert_eq!(cfg.d_model % cfg.n_heads, 0);
+        for a in &man.artifacts {
+            assert!(man.artifact_path(a).exists(), "{} missing", a.file);
+            assert!(!a.inputs.is_empty());
+            assert!(!a.outputs.is_empty());
+        }
+        // The SALR train step must expose the residual adapters + eta.
+        let salr = man.artifact("train_salr_tiny").unwrap();
+        assert!(salr.inputs.iter().any(|i| i.name.ends_with(".res_a")));
+        assert!(salr.input_index("eta").is_some());
+        assert!(salr.output_index("loss").is_some());
+    }
+
+    #[test]
+    fn adapted_layer_shapes() {
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab_size: 256,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq_len: 64,
+            rank: 8,
+            lora_alpha: 16.0,
+            residual_rank: 16,
+            batch_size: 16,
+            ctx_keep: 0.5,
+        };
+        assert_eq!(cfg.adapted_layers().len(), 12);
+        assert_eq!(cfg.linear_shape("w_in"), (128, 512));
+        assert_eq!(cfg.linear_shape("w_out"), (512, 128));
+        assert_eq!(cfg.lora_scaling(), 2.0);
+    }
+}

@@ -1,0 +1,205 @@
+//! The PJRT executor: compile-once, execute-many wrappers around the `xla`
+//! crate, with named-tensor packing that follows the manifest's flat I/O
+//! order.
+
+use super::artifact::{ArtifactSpec, Dtype, Manifest};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A value bound to one artifact input.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Scalar(f32),
+}
+
+impl From<&Tensor> for Value {
+    fn from(t: &Tensor) -> Value {
+        Value::F32(t.data().to_vec())
+    }
+}
+
+/// One compiled executable plus its spec.
+pub struct Executor {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with inputs supplied by name. Every manifest input must be
+    /// bound; shapes are validated against the spec.
+    pub fn run(&self, bindings: &HashMap<&str, Value>) -> Result<Vec<Tensor>> {
+        let mut literals = Vec::with_capacity(self.spec.inputs.len());
+        for io in &self.spec.inputs {
+            let v = bindings
+                .get(io.name.as_str())
+                .with_context(|| format!("missing input binding {}", io.name))?;
+            literals.push(to_literal(io, v)?);
+        }
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-packed literals in manifest order.
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        ensure!(
+            literals.len() == self.spec.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            literals.len()
+        );
+        let result = self.exe.execute::<xla::Literal>(literals)?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: one tuple of all outputs.
+        let parts = tuple.to_tuple().context("untupling outputs")?;
+        ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {} declared {} outputs, got {}",
+            self.spec.name,
+            self.spec.outputs.len(),
+            parts.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, io) in parts.iter().zip(&self.spec.outputs) {
+            let shape = if io.shape.is_empty() {
+                vec![1]
+            } else {
+                io.shape.clone()
+            };
+            let data: Vec<f32> = match io.dtype {
+                Dtype::F32 => lit.to_vec::<f32>()?,
+                Dtype::I32 => lit.to_vec::<i32>()?.into_iter().map(|x| x as f32).collect(),
+                Dtype::U32 => lit.to_vec::<u32>()?.into_iter().map(|x| x as f32).collect(),
+            };
+            ensure!(
+                data.len() == shape.iter().product::<usize>(),
+                "output {} size mismatch",
+                io.name
+            );
+            out.push(Tensor::from_vec(&shape, data));
+        }
+        Ok(out)
+    }
+
+    /// Pack a named input into a literal (public for pipelined callers).
+    pub fn literal_for(&self, name: &str, v: &Value) -> Result<xla::Literal> {
+        let io = self
+            .spec
+            .inputs
+            .iter()
+            .find(|i| i.name == name)
+            .with_context(|| format!("no input {name}"))?;
+        to_literal(io, v)
+    }
+}
+
+fn to_literal(io: &super::IoSpec, v: &Value) -> Result<xla::Literal> {
+    let dims: Vec<i64> = io.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (io.dtype, v) {
+        (Dtype::F32, Value::F32(data)) => {
+            ensure!(data.len() == io.elems(), "input {} size mismatch", io.name);
+            if io.shape.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        }
+        (Dtype::F32, Value::Scalar(s)) => {
+            ensure!(io.shape.is_empty(), "scalar bound to non-scalar {}", io.name);
+            xla::Literal::scalar(*s)
+        }
+        (Dtype::I32, Value::I32(data)) => {
+            ensure!(data.len() == io.elems(), "input {} size mismatch", io.name);
+            if io.shape.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        }
+        (Dtype::U32, Value::U32(data)) => {
+            ensure!(data.len() == io.elems(), "input {} size mismatch", io.name);
+            if io.shape.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        }
+        (want, got) => anyhow::bail!(
+            "dtype mismatch for input {}: manifest {:?}, bound {:?}",
+            io.name,
+            want,
+            std::mem::discriminant(got)
+        ),
+    };
+    Ok(lit)
+}
+
+/// The runtime: a PJRT CPU client plus a compile-once executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executor>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "pjrt client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load + compile an artifact (cached after the first call).
+    pub fn executor(&self, name: &str) -> Result<std::sync::Arc<Executor>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.artifact_path(&spec);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        log::info!(
+            "compiled {name} in {:.2}s ({} inputs, {} outputs)",
+            t0.elapsed().as_secs_f64(),
+            spec.inputs.len(),
+            spec.outputs.len()
+        );
+        let executor = std::sync::Arc::new(Executor { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executor.clone());
+        Ok(executor)
+    }
+}

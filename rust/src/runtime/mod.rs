@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! HLO **text** is the interchange format (jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids — see DESIGN.md). After `make artifacts`, the rust binary
+//! is fully self-contained: python never runs on the request path.
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactSpec, Dtype, IoSpec, Manifest, ModelCfg};
+pub use executor::{Executor, Runtime, Value};

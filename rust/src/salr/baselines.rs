@@ -1,0 +1,284 @@
+//! Baseline constructions used by the paper's comparisons (Table 2/4):
+//!
+//! * **LoRA** — dense frozen base, adapters only;
+//! * **LoSA-like** — dynamic mask on the merged `U = W0 + s·A·B`
+//!   (Theorem 2, Method 3), mask refreshed by the trainer; deploys sparse
+//!   *merged* weights;
+//! * **SparseLoRA-like** — contextual compute sparsity during training,
+//!   dense deployment (no compression, no inference speedup);
+//! * **DeepSparse-like** — one-shot static prune of W0, LoRA on top, *no*
+//!   residual recovery (SALR minus its Theorem-3 component).
+
+use crate::model::ParamStore;
+use crate::prune::{global_threshold, prune_with_threshold, MaskPolicy};
+use crate::runtime::ModelCfg;
+use crate::tensor::{add, matmul, Tensor};
+
+/// Which method a fine-tuning run reproduces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Baseline {
+    Pretrained,
+    Lora,
+    Losa,
+    SparseLora,
+    DeepSparse,
+    Salr,
+    /// SALR with the residual adapter frozen (Table-5 ablation).
+    SalrFrozenResidual,
+}
+
+impl Baseline {
+    pub fn all() -> [Baseline; 7] {
+        [
+            Baseline::Pretrained,
+            Baseline::Lora,
+            Baseline::Losa,
+            Baseline::SparseLora,
+            Baseline::DeepSparse,
+            Baseline::Salr,
+            Baseline::SalrFrozenResidual,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Baseline::Pretrained => "Pretrained",
+            Baseline::Lora => "LoRA",
+            Baseline::Losa => "LoSA",
+            Baseline::SparseLora => "SparseLoRA",
+            Baseline::DeepSparse => "DeepSparse",
+            Baseline::Salr => "SALR",
+            Baseline::SalrFrozenResidual => "SALR (frozen residual)",
+        }
+    }
+
+    /// Which AOT train-step variant drives this baseline.
+    pub fn train_variant(&self) -> Option<&'static str> {
+        match self {
+            Baseline::Pretrained => None,
+            Baseline::Lora => Some("lora"),
+            Baseline::Losa => Some("losa"),
+            Baseline::SparseLora => Some("sparselora"),
+            // DeepSparse = LoRA step over a pruned frozen base.
+            Baseline::DeepSparse => Some("lora"),
+            Baseline::Salr | Baseline::SalrFrozenResidual => Some("salr"),
+        }
+    }
+
+    /// Which eval artifact scores this baseline.
+    pub fn eval_variant(&self) -> &'static str {
+        match self {
+            Baseline::Salr | Baseline::SalrFrozenResidual => "salr",
+            Baseline::Losa => "losa",
+            _ => "lora",
+        }
+    }
+
+    /// Does the deployed model end up sparse?
+    pub fn deploys_sparse(&self) -> bool {
+        matches!(
+            self,
+            Baseline::Losa
+                | Baseline::DeepSparse
+                | Baseline::Salr
+                | Baseline::SalrFrozenResidual
+        )
+    }
+
+    /// Does the method claim an inference speedup (Table 1)?
+    pub fn claims_speedup(&self) -> bool {
+        self.deploys_sparse()
+    }
+}
+
+/// Everything the trainer needs to set a baseline up.
+pub struct BaselineSpec {
+    pub baseline: Baseline,
+    /// Frozen base (pruned for DeepSparse/SALR).
+    pub params: ParamStore,
+    /// Extra frozen inputs: LoSA masks.
+    pub masks: Option<ParamStore>,
+    /// SVD residual adapters (SALR only).
+    pub residual: Option<ParamStore>,
+    /// Residual learning rate η (0 freezes it).
+    pub eta_scale: f64,
+}
+
+impl BaselineSpec {
+    /// Construct the frozen state for a baseline at prune ratio `p`.
+    pub fn build(cfg: &ModelCfg, base: &ParamStore, b: Baseline, p: f64, seed: u64) -> BaselineSpec {
+        match b {
+            Baseline::Pretrained | Baseline::Lora | Baseline::SparseLora => BaselineSpec {
+                baseline: b,
+                params: base.clone(),
+                masks: None,
+                residual: None,
+                eta_scale: 0.0,
+            },
+            Baseline::DeepSparse => {
+                // One-shot static prune, no residual recovery.
+                let mut params = base.clone();
+                let names = cfg.adapted_layers();
+                let views: Vec<&Tensor> =
+                    names.iter().map(|n| base.get(n).unwrap()).collect();
+                let th = global_threshold(&views, p);
+                for n in &names {
+                    prune_with_threshold(params.get_mut(n).unwrap(), th);
+                }
+                BaselineSpec {
+                    baseline: b,
+                    params,
+                    masks: None,
+                    residual: None,
+                    eta_scale: 0.0,
+                }
+            }
+            Baseline::Losa => {
+                // Dynamic mask (Method 3) — initial mask derived from W0
+                // (adapters are zero at t=0), refreshed during training.
+                let mut masks = ParamStore::new();
+                for n in cfg.adapted_layers() {
+                    let w = base.get(&n).unwrap();
+                    let m = MaskPolicy::DynamicU.derive(w, None, p);
+                    masks.insert(&format!("{n}.mask"), mask_to_tensor(&m));
+                }
+                BaselineSpec {
+                    baseline: b,
+                    params: base.clone(),
+                    masks: Some(masks),
+                    residual: None,
+                    eta_scale: 0.0,
+                }
+            }
+            Baseline::Salr | Baseline::SalrFrozenResidual => {
+                let build = crate::salr::build_salr(cfg, base, p, seed);
+                BaselineSpec {
+                    baseline: b,
+                    params: build.params,
+                    masks: None,
+                    residual: Some(build.residual_adapters),
+                    eta_scale: if b == Baseline::SalrFrozenResidual { 0.0 } else { 1.0 },
+                }
+            }
+        }
+    }
+
+    /// Refresh the LoSA dynamic masks from the current merged weights
+    /// `U = W0 + s·A·B` (the "dynamic" in dynamic low-rank sparse
+    /// adaptation), keeping the global ratio `p`.
+    pub fn refresh_losa_masks(
+        &mut self,
+        cfg: &ModelCfg,
+        adapters: &ParamStore,
+        p: f64,
+    ) {
+        let masks = match &mut self.masks {
+            Some(m) => m,
+            None => return,
+        };
+        let s = cfg.lora_scaling();
+        for n in cfg.adapted_layers() {
+            let w = self.params.get(&n).unwrap();
+            let a = adapters.get(&format!("{n}.lora_a")).unwrap();
+            let b = adapters.get(&format!("{n}.lora_b")).unwrap();
+            let mut ab = matmul(a, b);
+            ab.scale(s);
+            let u = add(w, &ab);
+            let m = MaskPolicy::DynamicU.derive(&u, None, p);
+            masks.insert(&format!("{n}.mask"), mask_to_tensor(&m));
+        }
+    }
+}
+
+fn mask_to_tensor(m: &crate::prune::Mask) -> Tensor {
+    let mut t = Tensor::zeros(&[m.rows(), m.cols()]);
+    for i in 0..m.rows() {
+        for j in 0..m.cols() {
+            if m.get(i, j) {
+                t.set(i, j, 1.0);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn test_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq_len: 16,
+            rank: 4,
+            lora_alpha: 8.0,
+            residual_rank: 8,
+            batch_size: 2,
+            ctx_keep: 0.5,
+        }
+    }
+
+    #[test]
+    fn table1_feature_matrix() {
+        // The qualitative Table-1 claims, encoded.
+        assert!(!Baseline::SparseLora.deploys_sparse());
+        assert!(!Baseline::SparseLora.claims_speedup());
+        assert!(Baseline::Losa.deploys_sparse());
+        assert!(Baseline::Salr.deploys_sparse() && Baseline::Salr.claims_speedup());
+    }
+
+    #[test]
+    fn deepsparse_prunes_base() {
+        let cfg = test_cfg();
+        let mut rng = Rng::new(320);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let spec = BaselineSpec::build(&cfg, &base, Baseline::DeepSparse, 0.5, 1);
+        let w = spec.params.get("layer0.wq").unwrap();
+        assert!((w.sparsity() - 0.5).abs() < 0.05);
+        assert!(spec.residual.is_none());
+    }
+
+    #[test]
+    fn salr_has_residual_deepsparse_does_not() {
+        let cfg = test_cfg();
+        let mut rng = Rng::new(321);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let salr = BaselineSpec::build(&cfg, &base, Baseline::Salr, 0.5, 2);
+        assert!(salr.residual.is_some());
+        assert_eq!(salr.eta_scale, 1.0);
+        let frozen = BaselineSpec::build(&cfg, &base, Baseline::SalrFrozenResidual, 0.5, 2);
+        assert_eq!(frozen.eta_scale, 0.0);
+    }
+
+    #[test]
+    fn losa_masks_and_refresh() {
+        let cfg = test_cfg();
+        let mut rng = Rng::new(322);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let mut spec = BaselineSpec::build(&cfg, &base, Baseline::Losa, 0.5, 3);
+        let m0 = spec
+            .masks
+            .as_ref()
+            .unwrap()
+            .get("layer0.wq.mask")
+            .unwrap()
+            .clone();
+        assert!((m0.sparsity() - 0.5).abs() < 0.05);
+        // Large trained adapters shift the dynamic mask.
+        let mut adapters = ParamStore::init_adapters(&cfg, &mut rng, false);
+        for (_, t) in adapters.iter_mut() {
+            let mut r = Rng::new(99);
+            r.fill_normal(t.data_mut(), 1.0);
+        }
+        spec.refresh_losa_masks(&cfg, &adapters, 0.5);
+        let m1 = spec.masks.as_ref().unwrap().get("layer0.wq.mask").unwrap();
+        assert_ne!(&m0, m1, "dynamic mask should move with the adapters");
+        assert!((m1.sparsity() - 0.5).abs() < 0.05);
+    }
+}

@@ -1,0 +1,11 @@
+//! The SALR algorithm: sparsity-preservation pruning (static W0 mask +
+//! truncated-SVD residual adapter), adapter concatenation, and the
+//! baseline constructions (LoSA / SparseLoRA / DeepSparse analogues).
+
+mod baselines;
+mod builder;
+mod layer;
+
+pub use baselines::{Baseline, BaselineSpec};
+pub use builder::{build_salr, theoretical_mse, SalrBuild, SalrLayerStats};
+pub use layer::SalrLayer;

@@ -1,0 +1,9 @@
+//! Serving: a TCP inference server with dynamic batching over the native
+//! engine. The request path is pure rust (no python, no HLO retracing):
+//! socket → batcher queue → engine decode → response.
+
+mod batcher;
+mod tcp;
+
+pub use batcher::{BatchPolicy, Batcher, Request, Response, ServerMetrics};
+pub use tcp::{serve, Client};

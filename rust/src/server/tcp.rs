@@ -1,0 +1,164 @@
+//! TCP front-end: newline-delimited JSON over a socket.
+//!
+//! Request:  `{"prompt": "...", "max_tokens": 8}\n`
+//! Response: `{"text": "...", "queue_ms": .., "compute_ms": .., "tokens": ..}\n`
+//! `{"cmd": "metrics"}` returns aggregate serving metrics;
+//! `{"cmd": "shutdown"}` stops the server.
+
+use super::batcher::{BatchPolicy, Batcher, Request};
+use crate::infer::Engine;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Serve `engine` on `addr` until a shutdown command arrives. Connections
+/// are handled on their own threads; generation requests funnel through
+/// the shared dynamic batcher. If `ready` is provided, the bound address
+/// is sent once listening (use port 0 for tests/examples).
+pub fn serve(
+    engine: Engine,
+    addr: &str,
+    policy: BatchPolicy,
+    ready: Option<std::sync::mpsc::Sender<std::net::SocketAddr>>,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    log::info!("serving on {local}");
+    if let Some(tx) = ready {
+        let _ = tx.send(local);
+    }
+    let batcher = Batcher::new(policy);
+    let b_worker = batcher.clone();
+    let worker = std::thread::spawn(move || b_worker.worker_loop(&engine));
+    let next_id = Arc::new(AtomicU64::new(1));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = stream?;
+        let batcher = batcher.clone();
+        let next_id = next_id.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            match handle_conn(stream, &batcher, &next_id) {
+                Ok(true) => {
+                    // Shutdown requested: set the flag and poke the
+                    // listener so accept() returns.
+                    stop.store(true, Ordering::SeqCst);
+                    let _ = TcpStream::connect(local);
+                }
+                Ok(false) => {}
+                Err(e) => log::warn!("connection error: {e:#}"),
+            }
+        });
+    }
+    batcher.shutdown();
+    worker.join().unwrap();
+    Ok(())
+}
+
+/// Handle one connection; returns Ok(true) if a shutdown was requested.
+fn handle_conn(stream: TcpStream, batcher: &Batcher, next_id: &AtomicU64) -> Result<bool> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(false); // client closed
+        }
+        let msg = match Json::parse(line.trim()) {
+            Ok(m) => m,
+            Err(e) => {
+                let err = Json::obj().set("error", format!("bad json: {e}"));
+                writeln!(stream, "{}", err.to_string_compact())?;
+                continue;
+            }
+        };
+        match msg.get("cmd").and_then(Json::as_str) {
+            Some("shutdown") => {
+                writeln!(stream, "{}", Json::obj().set("ok", true).to_string_compact())?;
+                return Ok(true);
+            }
+            Some("metrics") => {
+                let (p50, p90, p99) = batcher.metrics.latency_percentiles();
+                let reply = Json::obj()
+                    .set("requests", batcher.metrics.requests.load(Ordering::Relaxed))
+                    .set("tokens_out", batcher.metrics.tokens_out.load(Ordering::Relaxed))
+                    .set("tokens_per_sec", batcher.metrics.tokens_per_sec())
+                    .set("mean_batch_size", batcher.metrics.mean_batch_size())
+                    .set("latency_p50_ms", p50)
+                    .set("latency_p90_ms", p90)
+                    .set("latency_p99_ms", p99);
+                writeln!(stream, "{}", reply.to_string_compact())?;
+            }
+            _ => {
+                let prompt = msg
+                    .get("prompt")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string();
+                let max_tokens = msg
+                    .get("max_tokens")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(8)
+                    .max(1);
+                let resp = batcher.submit(Request {
+                    id: next_id.fetch_add(1, Ordering::Relaxed),
+                    prompt,
+                    max_tokens,
+                });
+                let reply = Json::obj()
+                    .set("text", resp.text)
+                    .set("queue_ms", resp.queue_ms)
+                    .set("compute_ms", resp.compute_ms)
+                    .set("tokens", resp.tokens);
+                writeln!(stream, "{}", reply.to_string_compact())?;
+            }
+        }
+    }
+}
+
+/// A minimal blocking client for the wire protocol (examples + tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            stream,
+        })
+    }
+
+    pub fn call(&mut self, msg: &Json) -> Result<Json> {
+        writeln!(self.stream, "{}", msg.to_string_compact())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+
+    pub fn generate(&mut self, prompt: &str, max_tokens: usize) -> Result<Json> {
+        self.call(
+            &Json::obj()
+                .set("prompt", prompt)
+                .set("max_tokens", max_tokens),
+        )
+    }
+
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.call(&Json::obj().set("cmd", "metrics"))
+    }
+
+    pub fn shutdown(&mut self) -> Result<Json> {
+        self.call(&Json::obj().set("cmd", "shutdown"))
+    }
+}

@@ -1,0 +1,395 @@
+//! The paper's bitmap sparse matrix: a `{0,1}^{d_in × d_out}` bitmap packed
+//! into bytes (8 columns per byte block, row-major) plus a compact value
+//! array `v ∈ R^{nnz}` in row-major order. True compression: at 50%
+//! sparsity the format stores 1 bit + 0.5·32 bits per entry ≈ 0.53× the
+//! dense f32 size; the paper's "2× model compression".
+
+use crate::sparse::lut::decode_byte;
+use crate::tensor::Tensor;
+
+/// Bitmap-encoded sparse matrix (row-major, byte-blocked columns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitmapMatrix {
+    rows: usize,
+    cols: usize,
+    /// `bytes_per_row = ceil(cols / 8)` masks per row.
+    masks: Vec<u8>,
+    /// Nonzero values, row-major.
+    values: Vec<f32>,
+    /// Per-row offsets into `values` (len = rows + 1) for O(1) row access.
+    row_offsets: Vec<u32>,
+}
+
+impl BitmapMatrix {
+    /// Encode a dense matrix (exact zeros are pruned positions).
+    pub fn encode(t: &Tensor) -> BitmapMatrix {
+        let (rows, cols) = (t.rows(), t.cols());
+        let bpr = cols.div_ceil(8);
+        let mut masks = vec![0u8; rows * bpr];
+        let mut values = Vec::with_capacity(t.nnz());
+        let mut row_offsets = Vec::with_capacity(rows + 1);
+        row_offsets.push(0u32);
+        for i in 0..rows {
+            let row = t.row(i);
+            for (b, chunk) in row.chunks(8).enumerate() {
+                let mut mask = 0u8;
+                for (tbit, &v) in chunk.iter().enumerate() {
+                    if v != 0.0 {
+                        mask |= 1 << tbit;
+                        values.push(v);
+                    }
+                }
+                masks[i * bpr + b] = mask;
+            }
+            row_offsets.push(values.len() as u32);
+        }
+        BitmapMatrix {
+            rows,
+            cols,
+            masks,
+            values,
+            row_offsets,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Bytes per row of bitmap.
+    pub fn bytes_per_row(&self) -> usize {
+        self.cols.div_ceil(8)
+    }
+
+    pub fn masks(&self) -> &[u8] {
+        &self.masks
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    pub fn row_offsets(&self) -> &[u32] {
+        &self.row_offsets
+    }
+
+    /// Serialized size in bytes: bitmap + values + offsets (+16B header).
+    pub fn storage_bytes(&self) -> usize {
+        16 + self.masks.len() + self.values.len() * 4 + self.row_offsets.len() * 4
+    }
+
+    /// Size of the equivalent dense f32 matrix.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// Compression ratio dense/bitmap.
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_bytes() as f64 / self.storage_bytes() as f64
+    }
+
+    /// Decode the full matrix to dense.
+    pub fn decode(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        let cols = self.cols;
+        for i in 0..self.rows {
+            self.decode_row_into(i, &mut out.data_mut()[i * cols..(i + 1) * cols]);
+        }
+        out
+    }
+
+    /// Decode one row into a caller-provided buffer of length `cols`
+    /// (byte-block LUT decode — the paper's reconstruction rule).
+    pub fn decode_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert!(out.len() >= self.cols);
+        let bpr = self.bytes_per_row();
+        let mut voff = self.row_offsets[i] as usize;
+        let mut scratch = [0.0f32; 8];
+        for b in 0..bpr {
+            let mask = self.masks[i * bpr + b];
+            let base = b * 8;
+            let lanes = (self.cols - base).min(8);
+            if lanes == 8 {
+                voff += decode_byte(mask, &self.values[voff..], &mut out[base..base + 8]);
+            } else {
+                // Ragged tail block.
+                let n = decode_byte(mask, &self.values[voff..], &mut scratch);
+                out[base..base + lanes].copy_from_slice(&scratch[..lanes]);
+                voff += n;
+            }
+        }
+    }
+
+    /// Decode a contiguous block of rows `[r0, r1)` into `out`
+    /// (row-major, `(r1-r0) × cols`). This is the unit of work handed to the
+    /// two-stage pipeline's decode stage.
+    pub fn decode_rows_into(&self, r0: usize, r1: usize, out: &mut [f32]) {
+        let cols = self.cols;
+        for (k, i) in (r0..r1).enumerate() {
+            self.decode_row_into(i, &mut out[k * cols..(k + 1) * cols]);
+        }
+    }
+
+    /// Random access to a single element (tests / debugging; O(1) via
+    /// popcount of the mask prefix).
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let bpr = self.bytes_per_row();
+        let b = j / 8;
+        let t = j % 8;
+        let mask = self.masks[i * bpr + b];
+        if (mask >> t) & 1 == 0 {
+            return 0.0;
+        }
+        // Count nonzeros in the row before this byte block.
+        let mut off = self.row_offsets[i] as usize;
+        for bb in 0..b {
+            off += self.masks[i * bpr + bb].count_ones() as usize;
+        }
+        off += (mask & ((1u16 << t) as u8).wrapping_sub(1)).count_ones() as usize;
+        self.values[off]
+    }
+
+    /// Overwrite the nonzero values from a dense tensor with the *same*
+    /// sparsity pattern (used when the trained residual is folded back).
+    pub fn refill_values(&mut self, t: &Tensor) {
+        assert_eq!(t.rows(), self.rows);
+        assert_eq!(t.cols(), self.cols);
+        let mut k = 0usize;
+        let bpr = self.bytes_per_row();
+        for i in 0..self.rows {
+            let row = t.row(i);
+            for b in 0..bpr {
+                let mask = self.masks[i * bpr + b];
+                let mut m = mask;
+                while m != 0 {
+                    let tbit = m.trailing_zeros() as usize;
+                    self.values[k] = row[b * 8 + tbit];
+                    k += 1;
+                    m &= m - 1;
+                }
+            }
+        }
+        debug_assert_eq!(k, self.values.len());
+    }
+
+    /// Serialize only the sparsity *pattern* (header + masks; offsets are
+    /// recomputed on load). Pair with an external value codec (e.g. NF4
+    /// for QSALR) via [`BitmapMatrix::from_pattern_and_values`].
+    pub fn pattern_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.masks.len());
+        out.extend_from_slice(&(self.rows as u32).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u32).to_le_bytes());
+        out.extend_from_slice(&(self.values.len() as u32).to_le_bytes());
+        out.extend_from_slice(&0xB17Bu32.to_le_bytes()); // pattern magic
+        out.extend_from_slice(&self.masks);
+        out
+    }
+
+    /// Rebuild from a pattern (see [`BitmapMatrix::pattern_bytes`]) plus a
+    /// row-major value array of length nnz.
+    pub fn from_pattern_and_values(bytes: &[u8], values: Vec<f32>) -> anyhow::Result<BitmapMatrix> {
+        use anyhow::{bail, ensure};
+        ensure!(bytes.len() >= 16, "bitmap pattern: truncated header");
+        let rows = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+        let cols = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let nnz = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+        let magic = u32::from_le_bytes(bytes[12..16].try_into()?);
+        if magic != 0xB17B {
+            bail!("bitmap pattern: bad magic {magic:#x}");
+        }
+        let bpr = cols.div_ceil(8);
+        ensure!(bytes.len() == 16 + rows * bpr, "bitmap pattern: bad size");
+        ensure!(values.len() == nnz, "bitmap pattern: value count mismatch");
+        let masks = bytes[16..].to_vec();
+        let mut row_offsets = Vec::with_capacity(rows + 1);
+        row_offsets.push(0u32);
+        let mut acc = 0u32;
+        for i in 0..rows {
+            for b in 0..bpr {
+                acc += masks[i * bpr + b].count_ones();
+            }
+            row_offsets.push(acc);
+        }
+        ensure!(acc as usize == nnz, "bitmap pattern: popcount != nnz");
+        Ok(BitmapMatrix {
+            rows,
+            cols,
+            masks,
+            values,
+            row_offsets,
+        })
+    }
+
+    /// Serialize to bytes (header, masks, offsets, values — little endian).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.storage_bytes());
+        out.extend_from_slice(&(self.rows as u32).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u32).to_le_bytes());
+        out.extend_from_slice(&(self.values.len() as u32).to_le_bytes());
+        out.extend_from_slice(&0xB17Au32.to_le_bytes()); // magic
+        out.extend_from_slice(&self.masks);
+        for &o in &self.row_offsets {
+            out.extend_from_slice(&o.to_le_bytes());
+        }
+        for &v in &self.values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize from `to_bytes` output.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<BitmapMatrix> {
+        use anyhow::{bail, ensure};
+        ensure!(bytes.len() >= 16, "bitmap: truncated header");
+        let rows = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+        let cols = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let nnz = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+        let magic = u32::from_le_bytes(bytes[12..16].try_into()?);
+        if magic != 0xB17A {
+            bail!("bitmap: bad magic {magic:#x}");
+        }
+        let bpr = cols.div_ceil(8);
+        let masks_len = rows * bpr;
+        let offsets_len = (rows + 1) * 4;
+        let need = 16 + masks_len + offsets_len + nnz * 4;
+        ensure!(bytes.len() == need, "bitmap: size {} != {need}", bytes.len());
+        let masks = bytes[16..16 + masks_len].to_vec();
+        let mut row_offsets = Vec::with_capacity(rows + 1);
+        let mut p = 16 + masks_len;
+        for _ in 0..=rows {
+            row_offsets.push(u32::from_le_bytes(bytes[p..p + 4].try_into()?));
+            p += 4;
+        }
+        let mut values = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            values.push(f32::from_le_bytes(bytes[p..p + 4].try_into()?));
+            p += 4;
+        }
+        Ok(BitmapMatrix {
+            rows,
+            cols,
+            masks,
+            values,
+            row_offsets,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::prune_global;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, r: usize, c: usize, p: f64) -> Tensor {
+        let mut t = Tensor::randn(&[r, c], 1.0, rng);
+        prune_global(&mut [&mut t], p);
+        t
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Rng::new(80);
+        for &(r, c, p) in &[(8, 8, 0.5), (16, 100, 0.5), (7, 13, 0.3), (1, 1, 0.0), (5, 9, 0.9)] {
+            let t = random_sparse(&mut rng, r, c, p);
+            let bm = BitmapMatrix::encode(&t);
+            assert_eq!(bm.decode(), t, "({r},{c},{p})");
+            assert_eq!(bm.nnz(), t.nnz());
+        }
+    }
+
+    #[test]
+    fn random_access_matches_dense() {
+        let mut rng = Rng::new(81);
+        let t = random_sparse(&mut rng, 20, 37, 0.6);
+        let bm = BitmapMatrix::encode(&t);
+        for i in 0..20 {
+            for j in 0..37 {
+                assert_eq!(bm.get(i, j), t.at(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn compression_near_two_x_at_half_sparsity() {
+        let mut rng = Rng::new(82);
+        let t = random_sparse(&mut rng, 512, 512, 0.5);
+        let bm = BitmapMatrix::encode(&t);
+        let ratio = bm.compression_ratio();
+        // dense = 32 bits/entry; bitmap = 1 + 0.5*32 ≈ 17 bits → ratio ≈ 1.88
+        assert!(ratio > 1.8 && ratio < 2.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut rng = Rng::new(83);
+        let t = random_sparse(&mut rng, 33, 65, 0.5);
+        let bm = BitmapMatrix::encode(&t);
+        let bytes = bm.to_bytes();
+        assert_eq!(bytes.len(), bm.storage_bytes());
+        let back = BitmapMatrix::from_bytes(&bytes).unwrap();
+        assert_eq!(back, bm);
+        assert!(BitmapMatrix::from_bytes(&bytes[..10]).is_err());
+        let mut corrupt = bytes.clone();
+        corrupt[12] = 0xFF;
+        assert!(BitmapMatrix::from_bytes(&corrupt).is_err());
+    }
+
+    #[test]
+    fn refill_preserves_pattern() {
+        let mut rng = Rng::new(84);
+        let t = random_sparse(&mut rng, 12, 24, 0.5);
+        let mut bm = BitmapMatrix::encode(&t);
+        let t2 = t.map(|x| x * 3.0);
+        bm.refill_values(&t2);
+        assert_eq!(bm.decode(), t2);
+    }
+
+    #[test]
+    fn decode_rows_block() {
+        let mut rng = Rng::new(85);
+        let t = random_sparse(&mut rng, 16, 40, 0.5);
+        let bm = BitmapMatrix::encode(&t);
+        let mut buf = vec![0.0f32; 4 * 40];
+        bm.decode_rows_into(4, 8, &mut buf);
+        for k in 0..4 {
+            assert_eq!(&buf[k * 40..(k + 1) * 40], t.row(4 + k));
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_any_shape_and_sparsity() {
+        Prop::new(32).check(
+            "bitmap roundtrip",
+            |rng| {
+                let r = 1 + rng.below(30);
+                let c = 1 + rng.below(70);
+                let p = rng.uniform() * 0.95;
+                let mut t = Tensor::randn(&[r, c], 1.0, rng);
+                prune_global(&mut [&mut t], p);
+                t
+            },
+            |t| {
+                let bm = BitmapMatrix::encode(t);
+                if bm.decode() == *t && BitmapMatrix::from_bytes(&bm.to_bytes()).unwrap() == bm {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

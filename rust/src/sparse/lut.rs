@@ -1,0 +1,92 @@
+//! The paper's byte-mask lookup table:
+//! `LUT: {0..255} → {-1,0,…,7}⁸` where, for a byte mask `m`, `LUT(m)[t]` is
+//! the index of bit `t` within the compacted nonzero segment of that byte
+//! (i.e. `popcount(m & ((1<<t)-1))`) if bit `t` is set, and `-1` otherwise.
+
+/// Precomputed decode LUT, 256 masks × 8 lane indices.
+pub static DECODE_LUT: once_cell::sync::Lazy<[[i8; 8]; 256]> =
+    once_cell::sync::Lazy::new(build_lut);
+
+fn build_lut() -> [[i8; 8]; 256] {
+    let mut lut = [[-1i8; 8]; 256];
+    for mask in 0..256usize {
+        let mut idx = 0i8;
+        for t in 0..8 {
+            if (mask >> t) & 1 == 1 {
+                lut[mask][t] = idx;
+                idx += 1;
+            }
+        }
+    }
+    lut
+}
+
+/// Decode one byte-block: scatter up to 8 packed values into `out[0..8]`
+/// according to `mask`; returns the number of values consumed
+/// (= popcount(mask)). `out` lanes with a 0 bit are set to 0.0.
+#[inline]
+pub fn decode_byte(mask: u8, values: &[f32], out: &mut [f32]) -> usize {
+    let lanes = &DECODE_LUT[mask as usize];
+    for t in 0..8 {
+        let l = lanes[t];
+        out[t] = if l >= 0 { values[l as usize] } else { 0.0 };
+    }
+    mask.count_ones() as usize
+}
+
+/// Branchless variant used on the hot path: iterates set bits only.
+#[inline]
+pub fn decode_byte_bits(mask: u8, values: &[f32], out: &mut [f32]) -> usize {
+    out[..8].fill(0.0);
+    let mut m = mask;
+    let mut i = 0usize;
+    while m != 0 {
+        let t = m.trailing_zeros() as usize;
+        out[t] = values[i];
+        i += 1;
+        m &= m - 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_matches_popcount_prefix() {
+        for mask in 0..256usize {
+            let lanes = &DECODE_LUT[mask];
+            for t in 0..8 {
+                if (mask >> t) & 1 == 1 {
+                    let want = (mask & ((1 << t) - 1)).count_ones() as i8;
+                    assert_eq!(lanes[t], want, "mask={mask:08b} t={t}");
+                } else {
+                    assert_eq!(lanes[t], -1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_byte_scatters() {
+        let vals = [1.0, 2.0, 3.0];
+        let mut out = [9.0f32; 8];
+        let consumed = decode_byte(0b1010_0010, &vals, &mut out);
+        assert_eq!(consumed, 3);
+        assert_eq!(out, [0.0, 1.0, 0.0, 0.0, 0.0, 2.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn decode_variants_agree() {
+        let vals = [5.0, -1.5, 2.25, 7.0, 0.5, 3.0, -2.0, 8.0];
+        for mask in 0..256usize {
+            let mut a = [0.0f32; 8];
+            let mut b = [0.0f32; 8];
+            let ca = decode_byte(mask as u8, &vals, &mut a);
+            let cb = decode_byte_bits(mask as u8, &vals, &mut b);
+            assert_eq!(ca, cb);
+            assert_eq!(a, b, "mask={mask:08b}");
+        }
+    }
+}

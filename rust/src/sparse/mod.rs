@@ -1,0 +1,16 @@
+//! Sparse weight representations.
+//!
+//! The paper's deployment format is a **bitmap encoding**: one bit per
+//! element plus a compact row-major array of the nonzero values. Decoding
+//! is byte-block-wise with a precomputed 256-entry lookup table
+//! (paper, "Mapping Sparse Weights"). A CSR implementation is included as
+//! the baseline the paper argues against (indexing overhead), and a
+//! block decoder feeds the two-stage pipeline in [`crate::gemm::pipeline`].
+
+pub mod bitmap;
+pub mod csr;
+pub mod lut;
+
+pub use bitmap::BitmapMatrix;
+pub use csr::CsrMatrix;
+pub use lut::{decode_byte, DECODE_LUT};

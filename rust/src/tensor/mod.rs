@@ -1,0 +1,12 @@
+//! Dense `f32` tensors and the host-side numerical ops the coordinator
+//! needs (pruning, SVD, bitmap codecs, model surgery, the native serving
+//! engine). This is intentionally a small, explicit implementation — the
+//! heavy training math lives in the AOT-compiled HLO executables; these ops
+//! exist so the *request path* and the *model-surgery path* never touch
+//! python.
+
+mod ops;
+mod tensor;
+
+pub use ops::*;
+pub use tensor::Tensor;

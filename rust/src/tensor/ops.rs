@@ -1,0 +1,265 @@
+//! Host-side numerical ops over [`Tensor`]: matmul (thin wrapper over the
+//! optimized `gemm` module), elementwise arithmetic, reductions, softmax,
+//! layer-norm — everything the native inference engine and model surgery
+//! need.
+
+use super::Tensor;
+
+/// `C = A @ B` for 2-D tensors.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    assert_eq!(a.cols(), b.rows(), "matmul inner dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Tensor::zeros(&[m, n]);
+    crate::gemm::dense::gemm_f32(a.data(), b.data(), c.data_mut(), m, k, n);
+    c
+}
+
+/// `C = A @ B + C0` (accumulating variant; `c` is consumed and returned).
+pub fn matmul_acc(a: &Tensor, b: &Tensor, mut c: Tensor) -> Tensor {
+    assert_eq!(a.cols(), b.rows());
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    crate::gemm::dense::gemm_f32_acc(a.data(), b.data(), c.data_mut(), m, k, n);
+    c
+}
+
+/// Elementwise `a + b`.
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x + y).collect();
+    Tensor::from_vec(a.shape(), data)
+}
+
+/// Elementwise `a - b`.
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x - y).collect();
+    Tensor::from_vec(a.shape(), data)
+}
+
+/// Elementwise `a * b` (Hadamard).
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x * y).collect();
+    Tensor::from_vec(a.shape(), data)
+}
+
+/// `a + alpha * b`, in place on `a`.
+pub fn axpy(a: &mut Tensor, alpha: f32, b: &Tensor) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += alpha * y;
+    }
+}
+
+/// Row-wise softmax of a 2-D tensor.
+pub fn softmax_rows(t: &Tensor) -> Tensor {
+    let (r, c) = (t.rows(), t.cols());
+    let mut out = Tensor::zeros(&[r, c]);
+    for i in 0..r {
+        let row = t.row(i);
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        let orow = out.row_mut(i);
+        for j in 0..c {
+            let e = (row[j] - m).exp();
+            orow[j] = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for v in orow {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// Layer norm over the last axis of a 2-D tensor: `g * (x-mu)/sigma + b`.
+pub fn layer_norm(t: &Tensor, gamma: &[f32], beta: &[f32], eps: f32) -> Tensor {
+    let (r, c) = (t.rows(), t.cols());
+    assert_eq!(gamma.len(), c);
+    assert_eq!(beta.len(), c);
+    let mut out = Tensor::zeros(&[r, c]);
+    for i in 0..r {
+        let row = t.row(i);
+        let mean: f32 = row.iter().sum::<f32>() / c as f32;
+        let var: f32 = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / c as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..c {
+            orow[j] = gamma[j] * (row[j] - mean) * inv + beta[j];
+        }
+    }
+    out
+}
+
+/// RMS norm over the last axis (no mean subtraction), as used by Llama-style
+/// blocks: `g * x / rms(x)`.
+pub fn rms_norm(t: &Tensor, gamma: &[f32], eps: f32) -> Tensor {
+    let (r, c) = (t.rows(), t.cols());
+    assert_eq!(gamma.len(), c);
+    let mut out = Tensor::zeros(&[r, c]);
+    for i in 0..r {
+        let row = t.row(i);
+        let ms: f32 = row.iter().map(|&x| x * x).sum::<f32>() / c as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..c {
+            orow[j] = gamma[j] * row[j] * inv;
+        }
+    }
+    out
+}
+
+/// GELU activation (tanh approximation, matches jax.nn.gelu default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Elementwise GELU.
+pub fn gelu_t(t: &Tensor) -> Tensor {
+    t.map(gelu)
+}
+
+/// SiLU (swish) activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Argmax over a slice.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean squared difference between two tensors (per entry).
+pub fn mse(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let n = a.len().max(1) as f64;
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / n
+}
+
+/// Maximum absolute difference.
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape(), b.shape());
+    a.data()
+        .iter()
+        .zip(b.data())
+        .fold(0.0f32, |m, (&x, &y)| m.max((x - y).abs()))
+}
+
+/// Naive triple-loop matmul — the oracle the optimized GEMM is tested against.
+pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(k, b.rows());
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.at(i, p);
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c.data_mut()[i * n + j] += av * b.at(p, j);
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(1, 1, 1), (2, 3, 4), (17, 31, 13), (64, 64, 64)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let c1 = matmul(&a, &b);
+            let c2 = matmul_naive(&a, &b);
+            assert!(
+                max_abs_diff(&c1, &c2) < 1e-3,
+                "({m},{k},{n}) diff={}",
+                max_abs_diff(&c1, &c2)
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(4);
+        let t = Tensor::randn(&[5, 9], 3.0, &mut rng);
+        let s = softmax_rows(&t);
+        for i in 0..5 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(s.row(i).iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(5);
+        let t = Tensor::randn(&[4, 64], 2.5, &mut rng);
+        let g = vec![1.0; 64];
+        let b = vec![0.0; 64];
+        let n = layer_norm(&t, &g, &b, 1e-5);
+        for i in 0..4 {
+            let row = n.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn arith_ops() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(add(&a, &b).data(), &[6.0, 8.0, 10.0, 12.0]);
+        assert_eq!(sub(&b, &a).data(), &[4.0, 4.0, 4.0, 4.0]);
+        assert_eq!(mul(&a, &b).data(), &[5.0, 12.0, 21.0, 32.0]);
+        let mut c = a.clone();
+        axpy(&mut c, 2.0, &b);
+        assert_eq!(c.data(), &[11.0, 14.0, 17.0, 20.0]);
+    }
+
+    #[test]
+    fn mse_and_argmax() {
+        let a = Tensor::from_vec(&[1, 3], vec![0.0, 0.0, 0.0]);
+        let b = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 2.0]);
+        assert!((mse(&a, &b) - 3.0).abs() < 1e-12);
+        assert_eq!(argmax(b.data()), 1);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-3);
+        assert!((silu(0.0)).abs() < 1e-7);
+    }
+}

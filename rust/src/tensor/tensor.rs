@@ -1,0 +1,271 @@
+//! The `Tensor` type: a reference-counted-free, owned, row-major `f32`
+//! n-d array with shape tracking and 2-D conveniences.
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Owned row-major `f32` tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    /// Tensor from existing data (must match the shape product).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data len {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// I.i.d. `N(0, sigma^2)` entries.
+    pub fn randn(shape: &[usize], sigma: f32, rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, sigma);
+        t
+    }
+
+    /// Identity matrix `n x n`.
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rows of a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "rows() on non-2D tensor");
+        self.shape[0]
+    }
+
+    /// Columns of a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "cols() on non-2D tensor");
+        self.shape[1]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D element access.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// 2-D element assignment.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Row slice of a 2-D tensor.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Reshape in place (product must be preserved).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?} mismatch",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D transpose (copies).
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Sum of squares.
+    pub fn sq_sum(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Max |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Count of exact zeros.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Fraction of zero entries.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.len().max(1) as f64
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place elementwise scaling.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Tensor{:?} [{}]",
+            self.shape,
+            self.data
+                .iter()
+                .take(6)
+                .map(|x| format!("{x:.4}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        )?;
+        if self.data.len() > 6 {
+            write!(f, " …({} elems)", self.data.len())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        t.set(1, 2, 5.0);
+        assert_eq!(t.at(1, 2), 5.0);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let tt = t.transpose().transpose();
+        assert_eq!(t, tt);
+    }
+
+    #[test]
+    fn eye_matmul_identity_like() {
+        let e = Tensor::eye(4);
+        assert_eq!(e.at(2, 2), 1.0);
+        assert_eq!(e.at(2, 3), 0.0);
+        assert_eq!(e.nnz(), 4);
+        assert!((e.sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::from_vec(&[2, 2], vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((t.fro_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(t.abs_max(), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn reshape_checks_product() {
+        Tensor::zeros(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn randn_stats() {
+        let mut rng = Rng::new(2);
+        let t = Tensor::randn(&[100, 100], 2.0, &mut rng);
+        let mean: f64 = t.data().iter().map(|&x| x as f64).sum::<f64>() / t.len() as f64;
+        let var: f64 =
+            t.data().iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / t.len() as f64;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 4.0).abs() < 0.2);
+    }
+}

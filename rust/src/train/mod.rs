@@ -1,0 +1,12 @@
+//! Fine-tuning driver: executes the AOT train-step artifacts in a loop,
+//! owning all state (params, optimizer moments, batches) on the rust side.
+//! Implements the paper's training protocol: Adam on the LoRA adapters,
+//! Theorem-4 SGD (η = 1/σ_max(X)², power-iteration estimated) on the
+//! sparsity-preservation residual, and periodic dynamic-mask refresh for
+//! the LoSA baseline.
+
+mod driver;
+mod step;
+
+pub use driver::{finetune, pretrain, FinetuneData, FinetuneReport, TrainConfig};
+pub use step::StepLoop;

@@ -1,0 +1,168 @@
+//! `StepLoop`: compile-once / execute-many wrapper around a train-step
+//! artifact. Keeps every input as a packed literal; per step only the
+//! changing inputs (batch, scalars, updated trainables) are re-packed —
+//! the large frozen weights are packed exactly once.
+
+use crate::data::Batch;
+use crate::model::ParamStore;
+use crate::runtime::{Dtype, Executor, Runtime, Value};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A reusable train-step execution loop.
+pub struct StepLoop {
+    exec: Arc<Executor>,
+    /// Packed literals in manifest input order.
+    literals: Vec<xla::Literal>,
+    /// input name → index.
+    pos: HashMap<String, usize>,
+    /// (output index, input index, name) for state that feeds back
+    /// (train/m/v for finetune, param/m/v for pretrain).
+    feedback: Vec<(usize, usize, String)>,
+    loss_index: usize,
+    /// Shadow copies of the fed-back state, keyed by full name.
+    state: HashMap<String, Tensor>,
+    /// Step counter (drives Adam bias correction).
+    t: f32,
+}
+
+impl StepLoop {
+    /// Prepare a loop for the named artifact. `stores` binds input-name
+    /// prefixes to parameter stores, e.g.
+    /// `[("frozen:", &spec.params), ("train:", &adapters), ...]`.
+    pub fn new(
+        runtime: &Runtime,
+        artifact: &str,
+        stores: &[(&str, &ParamStore)],
+    ) -> Result<StepLoop> {
+        let exec = runtime.executor(artifact)?;
+        let spec = exec.spec().clone();
+        let mut pos = HashMap::new();
+        for (i, io) in spec.inputs.iter().enumerate() {
+            pos.insert(io.name.clone(), i);
+        }
+        let mut literals: Vec<Option<xla::Literal>> = Vec::new();
+        for _ in &spec.inputs {
+            literals.push(None);
+        }
+        for io in &spec.inputs {
+            let i = pos[&io.name];
+            // Tensor inputs come from the bound stores; the per-step
+            // inputs (t/tokens/loss_mask/lr/eta) start as zeros.
+            let mut bound = false;
+            for (prefix, store) in stores {
+                if let Some(key) = io.name.strip_prefix(prefix) {
+                    if let Some(t) = store.get(key) {
+                        ensure!(
+                            t.shape() == io.shape.as_slice(),
+                            "shape mismatch for {}: store {:?} vs manifest {:?}",
+                            io.name,
+                            t.shape(),
+                            io.shape
+                        );
+                        literals[i] = Some(exec.literal_for(&io.name, &t.into())?);
+                        bound = true;
+                        break;
+                    }
+                }
+            }
+            if !bound {
+                let v = match io.dtype {
+                    Dtype::F32 => {
+                        Value::F32(vec![0.0; io.elems()])
+                    }
+                    Dtype::I32 => {
+                        Value::I32(vec![0; io.elems()])
+                    }
+                    Dtype::U32 => {
+                        Value::U32(vec![0; io.elems()])
+                    }
+                };
+                literals[i] = Some(exec.literal_for(&io.name, &v)?);
+            }
+        }
+        // Feedback wiring: any output whose name is also an input.
+        let mut feedback = Vec::new();
+        let mut state = HashMap::new();
+        for (oi, out) in spec.outputs.iter().enumerate() {
+            if let Some(&ii) = pos.get(&out.name) {
+                feedback.push((oi, ii, out.name.clone()));
+                // Seed the shadow state from the bound stores.
+                for (prefix, store) in stores {
+                    if let Some(key) = out.name.strip_prefix(prefix) {
+                        if let Some(t) = store.get(key) {
+                            state.insert(out.name.clone(), t.clone());
+                        }
+                    }
+                }
+            }
+        }
+        let loss_index = spec
+            .output_index("loss")
+            .context("artifact has no loss output")?;
+        Ok(StepLoop {
+            exec,
+            literals: literals.into_iter().map(Option::unwrap).collect(),
+            pos,
+            feedback,
+            loss_index,
+            state,
+            t: 0.0,
+        })
+    }
+
+    /// Rebind one named input (e.g. refreshed LoSA masks).
+    pub fn rebind(&mut self, name: &str, t: &Tensor) -> Result<()> {
+        let &i = self
+            .pos
+            .get(name)
+            .with_context(|| format!("no input {name}"))?;
+        self.literals[i] = self.exec.literal_for(name, &t.into())?;
+        Ok(())
+    }
+
+    /// Run one optimization step; returns the loss. `eta` is ignored by
+    /// artifacts without an `eta` input (pretrain / non-SALR variants).
+    pub fn step(&mut self, batch: &Batch, lr: f32, eta: f32) -> Result<f32> {
+        self.t += 1.0;
+        self.set("t", Value::F32(vec![self.t]))?;
+        self.set("tokens", Value::I32(batch.tokens.clone()))?;
+        self.set("loss_mask", Value::F32(batch.loss_mask.clone()))?;
+        self.set("lr", Value::F32(vec![lr]))?;
+        if self.pos.contains_key("eta") {
+            self.set("eta", Value::F32(vec![eta]))?;
+        }
+        let outputs = self.exec.run_literals(&self.literals)?;
+        for (oi, ii, name) in &self.feedback {
+            let t = &outputs[*oi];
+            self.literals[*ii] = self.exec.literal_for(name, &t.into())?;
+            self.state.insert(name.clone(), t.clone());
+        }
+        Ok(outputs[self.loss_index].data()[0])
+    }
+
+    fn set(&mut self, name: &str, v: Value) -> Result<()> {
+        if let Some(&i) = self.pos.get(name) {
+            self.literals[i] = self.exec.literal_for(name, &v)?;
+        }
+        Ok(())
+    }
+
+    /// Extract the current fed-back state for a prefix (e.g. `"train:"`).
+    pub fn extract(&self, prefix: &str) -> ParamStore {
+        let mut out = ParamStore::new();
+        for (name, t) in &self.state {
+            if let Some(key) = name.strip_prefix(prefix) {
+                out.insert(key, t.clone());
+            }
+        }
+        out
+    }
+
+    /// Number of optimizer steps taken.
+    pub fn steps_taken(&self) -> usize {
+        self.t as usize
+    }
+}

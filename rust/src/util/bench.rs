@@ -1,0 +1,219 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, reports
+//! mean / median / p10 / p90 and median absolute deviation, and renders
+//! aligned comparison tables. Used by every `rust/benches/*.rs` target
+//! (`harness = false`) and by the table-reproduction drivers in `eval`.
+
+use std::time::Instant;
+
+/// Result statistics of one benchmark case (all times in seconds/iteration).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean: f64,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub mad: f64,
+    /// Optional work units per iteration (e.g. FLOPs or bytes) for rates.
+    pub work_per_iter: f64,
+}
+
+impl Stats {
+    /// Work units per second (0 if `work_per_iter` unset).
+    pub fn rate(&self) -> f64 {
+        if self.work_per_iter > 0.0 {
+            self.work_per_iter / self.median
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Benchmark runner with warmup and sample-based statistics.
+pub struct Bench {
+    /// Target total measurement time per case (seconds).
+    pub measure_secs: f64,
+    /// Warmup time per case (seconds).
+    pub warmup_secs: f64,
+    /// Number of samples (batches of iterations) to collect.
+    pub samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            measure_secs: read_env_f64("SALR_BENCH_SECS", 1.0),
+            warmup_secs: 0.3,
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+fn read_env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode harness for CI: ~10x shorter runs.
+    pub fn quick() -> Self {
+        Bench {
+            measure_secs: 0.1,
+            warmup_secs: 0.02,
+            samples: 8,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE iteration of work per call.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> Stats {
+        self.run_with_work(name, 0.0, &mut f)
+    }
+
+    /// Benchmark with a known amount of work per iteration (for rates).
+    pub fn run_with_work(&mut self, name: &str, work_per_iter: f64, f: &mut dyn FnMut()) -> Stats {
+        // Calibrate: how many iters fit in one sample slot?
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_secs {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let sample_time = self.measure_secs / self.samples as f64;
+        let iters_per_sample = ((sample_time / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = percentile(&samples, 50.0);
+        let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            name: name.to_string(),
+            iters: iters_per_sample * self.samples as u64,
+            mean: samples.iter().sum::<f64>() / samples.len() as f64,
+            median,
+            p10: percentile(&samples, 10.0),
+            p90: percentile(&samples, 90.0),
+            mad: percentile(&devs, 50.0),
+            work_per_iter,
+        };
+        println!("{}", format_stat_line(&stats));
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// All results collected so far.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Render a comparison table with speedups relative to the first row.
+    pub fn comparison_table(&self, title: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== {title} ==\n"));
+        out.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>9}\n",
+            "case", "median", "p10", "p90", "speedup"
+        ));
+        let base = self.results.first().map(|s| s.median).unwrap_or(1.0);
+        for s in &self.results {
+            out.push_str(&format!(
+                "{:<44} {:>12} {:>12} {:>12} {:>8.2}x\n",
+                s.name,
+                crate::util::human_secs(s.median),
+                crate::util::human_secs(s.p10),
+                crate::util::human_secs(s.p90),
+                base / s.median
+            ));
+        }
+        out
+    }
+}
+
+fn format_stat_line(s: &Stats) -> String {
+    let rate = if s.work_per_iter > 0.0 {
+        format!("  ({:.2} Gunits/s)", s.rate() / 1e9)
+    } else {
+        String::new()
+    };
+    format!(
+        "bench {:<44} median {:>10}  p90 {:>10}  (n={}){}",
+        s.name,
+        crate::util::human_secs(s.median),
+        crate::util::human_secs(s.p90),
+        s.iters,
+        rate
+    )
+}
+
+/// Linear-interpolated percentile of a **sorted** slice.
+pub fn percentile(sorted: &[f64], pct: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi.min(sorted.len() - 1)] * frac
+}
+
+/// Prevent the optimizer from eliding a benchmarked computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_and_orders() {
+        let mut b = Bench {
+            measure_secs: 0.02,
+            warmup_secs: 0.002,
+            samples: 4,
+            results: Vec::new(),
+        };
+        let s_fast = b.run("fast", || {
+            black_box(1 + 1);
+        });
+        let mut acc = 0u64;
+        let s_slow = b.run("slow", || {
+            for i in 0..3000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(s_slow.median > s_fast.median);
+        assert_eq!(b.results().len(), 2);
+        assert!(b.comparison_table("t").contains("fast"));
+    }
+}

@@ -1,0 +1,44 @@
+//! Simple leveled stderr logger wired into the `log` facade.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+
+struct StderrLogger {
+    level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:>9.3}s {:<5} {}] {}",
+                START.elapsed().as_secs_f64(),
+                record.level(),
+                record.target().split("::").last().unwrap_or(""),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger. Level comes from `SALR_LOG` (error..trace), default info.
+pub fn init() {
+    let level = match std::env::var("SALR_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(StderrLogger { level }));
+    log::set_max_level(LevelFilter::Trace);
+    once_cell::sync::Lazy::force(&START);
+}

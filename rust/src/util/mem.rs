@@ -1,0 +1,62 @@
+//! Process memory accounting from `/proc` (Linux), used by the Table-3
+//! fine-tuning-memory experiment.
+
+/// Current resident set size in bytes, or 0 if unavailable.
+pub fn rss_bytes() -> u64 {
+    read_statm().map(|(_, rss_pages)| rss_pages * page_size()).unwrap_or(0)
+}
+
+/// Peak resident set size in bytes (VmHWM), or 0 if unavailable.
+pub fn peak_rss_bytes() -> u64 {
+    let status = match std::fs::read_to_string("/proc/self/status") {
+        Ok(s) => s,
+        Err(_) => return 0,
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+fn read_statm() -> Option<(u64, u64)> {
+    let s = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let mut it = s.split_whitespace();
+    let size: u64 = it.next()?.parse().ok()?;
+    let rss: u64 = it.next()?.parse().ok()?;
+    Some((size, rss))
+}
+
+fn page_size() -> u64 {
+    4096
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        // We're always on linux in this environment.
+        assert!(rss_bytes() > 0);
+        assert!(peak_rss_bytes() >= rss_bytes() / 2);
+    }
+
+    #[test]
+    fn rss_grows_with_allocation() {
+        let before = rss_bytes();
+        let v = vec![1u8; 64 << 20];
+        // Touch pages so they are actually resident.
+        let sum: u64 = v.iter().step_by(4096).map(|&b| b as u64).sum();
+        assert_eq!(sum, (64 << 20) / 4096);
+        let after = rss_bytes();
+        assert!(after > before, "rss before={before} after={after}");
+    }
+}

@@ -1,0 +1,63 @@
+//! Foundational utilities built from scratch (the offline vendor set has no
+//! `rand`, `serde`, `criterion` or `proptest`): a PCG64 PRNG, a JSON codec,
+//! a micro-benchmark harness, a property-test driver, a logger and process
+//! memory accounting.
+
+pub mod bench;
+pub mod json;
+pub mod logger;
+pub mod mem;
+pub mod prop;
+pub mod rng;
+
+pub use bench::Bench;
+pub use json::Json;
+pub use rng::Rng;
+
+/// Format a byte count as a human-readable string (`12.3 MiB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in seconds adaptively (`1.23 ms`, `4.5 s`).
+pub fn human_secs(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(0.5e-9 * 2.0), "1.0 ns");
+        assert_eq!(human_secs(2.5e-3), "2.50 ms");
+        assert_eq!(human_secs(3.0), "3.00 s");
+    }
+}

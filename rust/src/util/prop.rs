@@ -1,0 +1,139 @@
+//! Tiny property-testing driver (the offline vendor set has no `proptest`).
+//!
+//! `check` runs a property over `cases` randomly generated inputs and, on
+//! failure, greedily shrinks the failing input via a user-supplied shrinker
+//! before panicking with the minimal counterexample it found.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop {
+            cases: std::env::var("SALR_PROP_CASES")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(64),
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop {
+            cases,
+            ..Default::default()
+        }
+    }
+
+    /// Check `property(gen(rng))` for `self.cases` random inputs.
+    /// `property` returns `Err(reason)` on failure.
+    pub fn check<T: std::fmt::Debug>(
+        &self,
+        name: &str,
+        mut gen: impl FnMut(&mut Rng) -> T,
+        mut property: impl FnMut(&T) -> Result<(), String>,
+    ) {
+        let mut rng = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let input = gen(&mut rng);
+            if let Err(reason) = property(&input) {
+                panic!(
+                    "property '{name}' failed at case {case}/{}:\n  reason: {reason}\n  input: {input:?}",
+                    self.cases
+                );
+            }
+        }
+    }
+
+    /// Like `check`, but with a shrinker that proposes smaller variants.
+    pub fn check_shrink<T: std::fmt::Debug + Clone>(
+        &self,
+        name: &str,
+        mut gen: impl FnMut(&mut Rng) -> T,
+        shrink: impl Fn(&T) -> Vec<T>,
+        mut property: impl FnMut(&T) -> Result<(), String>,
+    ) {
+        let mut rng = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let input = gen(&mut rng);
+            if let Err(first_reason) = property(&input) {
+                // Greedy shrink: repeatedly take the first failing candidate.
+                let mut best = input.clone();
+                let mut reason = first_reason;
+                'outer: for _round in 0..64 {
+                    for cand in shrink(&best) {
+                        if let Err(r) = property(&cand) {
+                            best = cand;
+                            reason = r;
+                            continue 'outer;
+                        }
+                    }
+                    break;
+                }
+                panic!(
+                    "property '{name}' failed at case {case}/{} (shrunk):\n  reason: {reason}\n  input: {best:?}",
+                    self.cases
+                );
+            }
+        }
+    }
+}
+
+/// Generate a random shape `(rows, cols)` within bounds, biased small.
+pub fn gen_shape(rng: &mut Rng, max_dim: usize) -> (usize, usize) {
+    let r = 1 + rng.below(max_dim);
+    let c = 1 + rng.below(max_dim);
+    (r, c)
+}
+
+/// Generate a random f32 matrix as a flat vec.
+pub fn gen_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Vec<f32> {
+    (0..rows * cols).map(|_| rng.normal_f32() * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new(32).check(
+            "reverse-reverse",
+            |rng| (0..rng.below(20)).map(|_| rng.below(100)).collect::<Vec<_>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-small' failed")]
+    fn failing_property_shrinks() {
+        Prop::new(64).check_shrink(
+            "always-small",
+            |rng| rng.below(1000),
+            |&n| if n > 0 { vec![n / 2, n - 1] } else { vec![] },
+            |&n| {
+                if n < 10 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} >= 10"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,260 @@
+//! Cross-layer integration: the rust coordinator (L3), the AOT-lowered JAX
+//! model (L2) and the Pallas kernel (L1) must agree numerically.
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are absent).
+
+use salr::data::tokenize;
+use salr::infer::{Backend, Engine, EngineWeights};
+use salr::model::ParamStore;
+use salr::runtime::{Runtime, Value};
+use salr::salr::build_salr;
+use salr::sparse::BitmapMatrix;
+use salr::tensor::{max_abs_diff, Tensor};
+use salr::util::rng::Rng;
+use std::collections::HashMap;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+/// L2 vs L3: the HLO eval artifact and the native rust engine must produce
+/// the same logits for the same parameters.
+#[test]
+fn hlo_eval_matches_native_engine() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest().config("tiny").unwrap().clone();
+    let mut rng = Rng::new(900);
+    let base = ParamStore::init_base(&cfg, &mut rng);
+    // Nonzero adapters so the LoRA path is actually exercised.
+    let mut adapters = ParamStore::init_adapters(&cfg, &mut rng, false);
+    for (_, t) in adapters.iter_mut() {
+        let mut r2 = Rng::new(7);
+        r2.fill_normal(t.data_mut(), 0.05);
+    }
+
+    let exec = rt.executor("eval_lora_tiny").unwrap();
+    let mut bindings: HashMap<&str, Value> = HashMap::new();
+    let mut names: Vec<String> = Vec::new();
+    for io in &exec.spec().inputs {
+        names.push(io.name.clone());
+    }
+    let tokens: Vec<i32> = (0..cfg.batch_size * cfg.max_seq_len)
+        .map(|i| ((i * 37) % 200 + 32) as i32)
+        .collect();
+    for name in &names {
+        if let Some(key) = name.strip_prefix("frozen:") {
+            bindings.insert(name, Value::F32(base.get(key).unwrap().data().to_vec()));
+        } else if let Some(key) = name.strip_prefix("train:") {
+            bindings.insert(name, Value::F32(adapters.get(key).unwrap().data().to_vec()));
+        } else if name == "tokens" {
+            bindings.insert(name, Value::I32(tokens.clone()));
+        }
+    }
+    let outputs = exec.run(&bindings).expect("hlo eval");
+    let hlo_logits = &outputs[0]; // [B, S, V]
+
+    let engine = Engine::new(
+        EngineWeights::dense_merged(&cfg, &base, Some(&adapters)),
+        Backend::Dense,
+    );
+    for b in 0..cfg.batch_size.min(2) {
+        let seq = &tokens[b * cfg.max_seq_len..(b + 1) * cfg.max_seq_len];
+        let native = engine.full_logits(seq);
+        // Slice the HLO logits for this batch row.
+        let v = cfg.vocab_size;
+        let start = b * cfg.max_seq_len * v;
+        let hlo_row = Tensor::from_vec(
+            &[cfg.max_seq_len, v],
+            hlo_logits.data()[start..start + cfg.max_seq_len * v].to_vec(),
+        );
+        let diff = max_abs_diff(&native, &hlo_row);
+        assert!(
+            diff < 5e-3,
+            "L2 (HLO) and L3 (native) disagree: max|Δlogit| = {diff}"
+        );
+    }
+}
+
+/// L1 vs L3: the AOT-lowered Pallas SALR kernel and the rust two-stage
+/// pipeline must compute the same SALR linear.
+#[test]
+fn pallas_kernel_artifact_matches_rust_pipeline() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest().config("tiny").unwrap().clone();
+    let exec = rt.executor("salr_kernel_pallas_tiny").unwrap();
+    let spec = exec.spec();
+    // Shapes from the manifest.
+    let d_in = cfg.d_model;
+    let d_out = cfg.d_ff;
+    let m = cfg.batch_size * cfg.max_seq_len;
+    let rank_total = cfg.rank + cfg.residual_rank;
+    let nnz_pad = spec
+        .inputs
+        .iter()
+        .find(|i| i.name == "values")
+        .unwrap()
+        .elems();
+    let wpr = d_out.div_ceil(32);
+
+    let mut rng = Rng::new(901);
+    let mut w = Tensor::randn(&[d_in, d_out], 1.0, &mut rng);
+    salr::prune::prune_global(&mut [&mut w], 0.5);
+    let bm = BitmapMatrix::encode(&w);
+    let x = Tensor::randn(&[m, d_in], 1.0, &mut rng);
+    let a_cat = Tensor::randn(&[d_in, rank_total], 0.1, &mut rng);
+    let b_cat = Tensor::randn(&[rank_total, d_out], 0.1, &mut rng);
+
+    // Convert the u8 byte masks into the kernel's u32 words (little-endian
+    // bit order matches: bit t of word w = column 32w + t).
+    let bpr = bm.bytes_per_row();
+    let mut words = vec![0u32; d_in * wpr];
+    for i in 0..d_in {
+        for b in 0..bpr {
+            let byte = bm.masks()[i * bpr + b] as u32;
+            words[i * wpr + b / 4] |= byte << (8 * (b % 4));
+        }
+    }
+    let mut values = bm.values().to_vec();
+    values.resize(nnz_pad, 0.0);
+    let offsets: Vec<i32> = bm.row_offsets()[..d_in].iter().map(|&o| o as i32).collect();
+
+    let mut bindings: HashMap<&str, Value> = HashMap::new();
+    bindings.insert("x", Value::F32(x.data().to_vec()));
+    bindings.insert("mask_words", Value::U32(words));
+    bindings.insert("values", Value::F32(values));
+    bindings.insert("row_offsets", Value::I32(offsets));
+    bindings.insert("a_cat", Value::F32(a_cat.data().to_vec()));
+    bindings.insert("b_cat", Value::F32(b_cat.data().to_vec()));
+    let out = exec.run(&bindings).expect("pallas kernel artifact");
+    let kernel_y = &out[0];
+
+    // Rust pipeline reference.
+    let mut rust_y = vec![0.0f32; m * d_out];
+    salr::gemm::pipeline::salr_gemm_pipelined(
+        x.data(),
+        &bm,
+        a_cat.data(),
+        b_cat.data(),
+        rank_total,
+        &mut rust_y,
+        m,
+        Default::default(),
+    );
+    let rust_y = Tensor::from_vec(&[m, d_out], rust_y);
+    let diff = max_abs_diff(kernel_y, &rust_y);
+    assert!(
+        diff < 2e-2,
+        "L1 (Pallas) and L3 (rust pipeline) disagree: max|Δ| = {diff}"
+    );
+}
+
+/// The losa eval artifact honors masks (sanity of the mask plumbing).
+#[test]
+fn losa_eval_artifact_masks_weights() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest().config("tiny").unwrap().clone();
+    let mut rng = Rng::new(902);
+    let base = ParamStore::init_base(&cfg, &mut rng);
+    let adapters = ParamStore::init_adapters(&cfg, &mut rng, false);
+    let exec = rt.executor("eval_losa_tiny").unwrap();
+    let tokens: Vec<i32> = (0..cfg.batch_size * cfg.max_seq_len)
+        .map(|i| ((i * 13) % 200 + 32) as i32)
+        .collect();
+
+    let run_with_masks = |fill: f32| -> Tensor {
+        let mut bindings: HashMap<&str, Value> = HashMap::new();
+        let names: Vec<String> = exec.spec().inputs.iter().map(|i| i.name.clone()).collect();
+        for name in &names {
+            if let Some(key) = name.strip_prefix("frozen:") {
+                if key.ends_with(".mask") {
+                    let lin = key.split('.').nth(1).unwrap();
+                    let (di, dо) = cfg.linear_shape(lin);
+                    bindings.insert(name, Value::F32(vec![fill; di * dо]));
+                } else {
+                    bindings.insert(name, Value::F32(base.get(key).unwrap().data().to_vec()));
+                }
+            } else if let Some(key) = name.strip_prefix("train:") {
+                bindings
+                    .insert(name, Value::F32(adapters.get(key).unwrap().data().to_vec()));
+            } else if name == "tokens" {
+                bindings.insert(name, Value::I32(tokens.clone()));
+            }
+        }
+        exec.run(&bindings).unwrap().remove(0)
+    };
+    let ones = run_with_masks(1.0);
+    let zeros = run_with_masks(0.0);
+    let diff = max_abs_diff(&ones, &zeros);
+    assert!(diff > 1e-3, "masks had no effect (diff={diff})");
+}
+
+/// SALR build → HLO salr eval == native SALR engine (residual included).
+#[test]
+fn salr_eval_artifact_matches_native_salr_engine() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest().config("tiny").unwrap().clone();
+    let mut rng = Rng::new(903);
+    let base = ParamStore::init_base(&cfg, &mut rng);
+    let build = build_salr(&cfg, &base, 0.5, 77);
+    let mut adapters = ParamStore::init_adapters(&cfg, &mut rng, true);
+    for (k, v) in build.residual_adapters.iter() {
+        adapters.insert(k, v.clone());
+    }
+    let exec = rt.executor("eval_salr_tiny").unwrap();
+    let tokens: Vec<i32> = (0..cfg.batch_size * cfg.max_seq_len)
+        .map(|i| ((i * 41) % 200 + 32) as i32)
+        .collect();
+    let mut bindings: HashMap<&str, Value> = HashMap::new();
+    let names: Vec<String> = exec.spec().inputs.iter().map(|i| i.name.clone()).collect();
+    for name in &names {
+        if let Some(key) = name.strip_prefix("frozen:") {
+            bindings.insert(
+                name,
+                Value::F32(build.params.get(key).unwrap().data().to_vec()),
+            );
+        } else if let Some(key) = name.strip_prefix("train:") {
+            bindings.insert(name, Value::F32(adapters.get(key).unwrap().data().to_vec()));
+        } else if name == "tokens" {
+            bindings.insert(name, Value::I32(tokens.clone()));
+        }
+    }
+    let hlo = exec.run(&bindings).unwrap().remove(0);
+
+    let engine = Engine::new(
+        EngineWeights::salr(&cfg, &build.params, &adapters, None),
+        Backend::BitmapPipelined(Default::default()),
+    );
+    let seq = &tokens[..cfg.max_seq_len];
+    let native = engine.full_logits(seq);
+    let v = cfg.vocab_size;
+    let hlo_row = Tensor::from_vec(
+        &[cfg.max_seq_len, v],
+        hlo.data()[..cfg.max_seq_len * v].to_vec(),
+    );
+    let diff = max_abs_diff(&native, &hlo_row);
+    assert!(diff < 5e-3, "SALR L2 vs L3 disagree: {diff}");
+}
+
+/// Generation path sanity over tokens from the tokenizer.
+#[test]
+fn tokenized_generation_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest().config("tiny").unwrap().clone();
+    let mut rng = Rng::new(904);
+    let base = ParamStore::init_base(&cfg, &mut rng);
+    let engine = Engine::new(
+        EngineWeights::dense_merged(&cfg, &base, None),
+        Backend::Dense,
+    );
+    let prompt = tokenize("Q: 1+1=? A: ");
+    let out = engine.generate_batch(&[prompt], 4);
+    assert_eq!(out[0].len(), 4);
+    for &t in &out[0] {
+        assert!((0..256).contains(&t));
+    }
+}
