@@ -37,6 +37,7 @@ fn main() -> Result<()> {
             BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_millis(4),
+                ..Default::default()
             },
             Some(tx),
         )

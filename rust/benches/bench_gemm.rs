@@ -1,32 +1,121 @@
-//! Dense GEMM throughput across shapes (the compute stage's roofline on
-//! this machine — the denominator of every speedup claim).
+//! Dense GEMM throughput across shapes **and thread counts** (the compute
+//! stage's roofline on this machine — the denominator of every speedup
+//! claim), plus the pipelined SALR GEMM vs the sequential bitmap baseline
+//! at the same thread counts.
+//!
+//! Set `SALR_BENCH_JSON=path.json` to emit machine-readable results (the
+//! `BENCH_gemm.json` perf-trajectory file is regenerated this way).
 
-use salr::gemm::dense::{gemm_f32, gemm_flops};
+use salr::gemm::dense::{gemm_f32_acc_pool, gemm_f32_pool, gemm_flops};
+use salr::gemm::pipeline::{salr_gemm_pipelined, PipelineConfig};
+use salr::gemm::sparse::bitmap_gemm_sequential_pool;
+use salr::prune::prune_global;
+use salr::sparse::BitmapMatrix;
 use salr::tensor::Tensor;
 use salr::util::bench::{black_box, Bench};
+use salr::util::json::Json;
+use salr::util::pool::WorkerPool;
 use salr::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 4];
 
 fn main() {
     let mut rng = Rng::new(2);
-    println!("# dense GEMM roofline\n");
     let mut b = Bench::new();
+
+    println!("# dense GEMM roofline — thread scaling\n");
     for &(m, k, n) in &[
-        (8usize, 512usize, 512usize),   // decode-batch shape
+        (8usize, 512usize, 512usize), // decode-batch shape
         (64, 512, 512),
         (256, 256, 256),
         (512, 512, 512),
         (128, 1024, 1024),
-        (1024, 128, 1024),              // adapter-concat-ish tall/skinny
+        (1024, 128, 1024), // adapter-concat-ish tall/skinny
     ] {
         let a = Tensor::randn(&[m, k], 1.0, &mut rng);
         let w = Tensor::randn(&[k, n], 1.0, &mut rng);
         let mut c = vec![0.0f32; m * n];
         let flops = gemm_flops(m, k, n);
-        let stats = b.run_with_work(&format!("gemm {m}x{k}x{n}"), flops, &mut || {
-            gemm_f32(a.data(), w.data(), &mut c, m, k, n);
+        for &t in &THREADS {
+            let pool = WorkerPool::with_threads(t);
+            let stats = b.run_with_work(&format!("dense {m}x{k}x{n} t={t}"), flops, &mut || {
+                gemm_f32_pool(a.data(), w.data(), &mut c, m, k, n, &pool);
+                black_box(&c);
+            });
+            println!("    → {:.2} GFLOP/s", stats.rate() / 1e9);
+        }
+    }
+    println!("{}", b.comparison_table("dense GEMM (thread scaling)"));
+
+    // Pipelined SALR GEMM at 50% sparsity vs the sequential bitmap
+    // baseline, per thread count.
+    let (m, k, n, r) = (64usize, 1024usize, 1024usize, 32usize);
+    let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+    prune_global(&mut [&mut w], 0.5);
+    let bm = BitmapMatrix::encode(&w);
+    let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let a_cat = Tensor::randn(&[k, r], 0.1, &mut rng);
+    let b_cat = Tensor::randn(&[r, n], 0.1, &mut rng);
+    let mut c = vec![0.0f32; m * n];
+    let mut u = vec![0.0f32; m * r];
+    let flops = gemm_flops(m, k, n);
+    let mut scratch = Vec::new();
+    println!("# pipelined SALR GEMM ({m}x{k}x{n} @50%) vs sequential\n");
+    // Separate harness so the comparison table's speedup column is
+    // relative to the sequential baseline, not the dense rows above.
+    let mut bs = Bench::new();
+    // Sequential baseline does the same math as the pipelined rows (base
+    // GEMM + fused adapter update), pinned to the matching thread count so
+    // the comparison isolates the *overlap*, not the core count.
+    for &t in &THREADS {
+        let pool = WorkerPool::with_threads(t);
+        bs.run_with_work(&format!("salr sequential {m}x{k}x{n}@50% t={t}"), flops, &mut || {
+            bitmap_gemm_sequential_pool(x.data(), &bm, &mut c, m, &mut scratch, &pool);
+            gemm_f32_pool(x.data(), a_cat.data(), &mut u, m, k, r, &pool);
+            gemm_f32_acc_pool(&u, b_cat.data(), &mut c, m, r, n, &pool);
             black_box(&c);
         });
-        println!("    → {:.2} GFLOP/s", stats.rate() / 1e9);
     }
-    println!("{}", b.comparison_table("dense GEMM"));
+    for &t in &THREADS {
+        bs.run_with_work(&format!("salr pipelined {m}x{k}x{n}@50% t={t}"), flops, &mut || {
+            salr_gemm_pipelined(
+                x.data(),
+                &bm,
+                a_cat.data(),
+                b_cat.data(),
+                r,
+                &mut c,
+                m,
+                PipelineConfig {
+                    num_threads: t,
+                    ..Default::default()
+                },
+            );
+            black_box(&c);
+        });
+    }
+    println!("{}", bs.comparison_table("pipelined SALR vs sequential"));
+
+    if let Ok(path) = std::env::var("SALR_BENCH_JSON") {
+        let meta = Json::obj()
+            .set("bench", "gemm")
+            .set(
+                "threads_swept",
+                Json::Arr(THREADS.iter().map(|&t| Json::from(t)).collect()),
+            )
+            .set("provenance", "measured by benches/bench_gemm.rs");
+        let mut all = match b.results_json() {
+            Json::Arr(v) => v,
+            _ => Vec::new(),
+        };
+        if let Json::Arr(v) = bs.results_json() {
+            all.extend(v);
+        }
+        let doc = Json::obj()
+            .set("schema", "salr-bench-v1")
+            .set("meta", meta)
+            .set("results", Json::Arr(all));
+        std::fs::write(&path, doc.to_string_pretty()).expect("write bench json");
+        println!("wrote {path}");
+    }
 }

@@ -1,13 +1,15 @@
 //! The two-stage pipeline ablation: sequential full-decode, panel-streamed
-//! (no overlap), and the pipelined ring-buffer design at several depths and
-//! panel sizes — the system core of the paper's inference speedup.
+//! (no overlap), direct zero-skipping, and the pipelined ring-buffer design
+//! at several depths, panel sizes and worker counts — the system core of
+//! the paper's inference speedup.
 
 use salr::gemm::pipeline::{bitmap_gemm_pipelined, salr_gemm_pipelined, PipelineConfig};
-use salr::gemm::sparse::{bitmap_gemm_panelled, bitmap_gemm_sequential};
+use salr::gemm::sparse::{bitmap_gemm_panelled, bitmap_gemm_sequential_pool};
 use salr::prune::prune_global;
 use salr::sparse::BitmapMatrix;
 use salr::tensor::Tensor;
 use salr::util::bench::{black_box, Bench};
+use salr::util::pool::WorkerPool;
 use salr::util::rng::Rng;
 
 fn main() {
@@ -23,8 +25,11 @@ fn main() {
     println!("# decode+GEMM strategies ({m}x{k}x{n} @50%)\n");
     let mut b = Bench::new();
     let mut scratch = Vec::new();
+    // Pinned to one thread: this row is the genuinely-sequential naive
+    // deployment every other strategy is compared against.
+    let serial = WorkerPool::with_threads(1);
     b.run_with_work("sequential (full decode, then GEMM)", flops, &mut || {
-        bitmap_gemm_sequential(x.data(), &bm, &mut c, m, &mut scratch);
+        bitmap_gemm_sequential_pool(x.data(), &bm, &mut c, m, &mut scratch, &serial);
         black_box(&c);
     });
     b.run_with_work("direct (zero-skipping, no decode)", flops, &mut || {
@@ -48,11 +53,19 @@ fn main() {
                     PipelineConfig {
                         panel_k: panel,
                         ring_depth: depth,
+                        num_threads: 0,
                     },
                 );
                 black_box(&c);
             },
         );
+    }
+    // Worker-count scaling at the default geometry.
+    for &t in &[1usize, 2, 4, 8] {
+        b.run_with_work(&format!("pipelined panel=64 depth=3 t={t}"), flops, &mut || {
+            bitmap_gemm_pipelined(x.data(), &bm, &mut c, m, PipelineConfig::with_threads(t));
+            black_box(&c);
+        });
     }
     println!("{}", b.comparison_table("two-stage pipeline"));
 
@@ -61,19 +74,25 @@ fn main() {
     let a_cat = Tensor::randn(&[k, r_total], 0.1, &mut rng);
     let b_cat = Tensor::randn(&[r_total, n], 0.1, &mut rng);
     let mut b2 = Bench::new();
-    b2.run_with_work("salr linear (pipelined + fused adapters)", flops, &mut || {
-        salr_gemm_pipelined(
-            x.data(),
-            &bm,
-            a_cat.data(),
-            b_cat.data(),
-            r_total,
-            &mut c,
-            m,
-            PipelineConfig::default(),
+    for &t in &[1usize, 2, 4] {
+        b2.run_with_work(
+            &format!("salr linear (pipelined + fused adapters) t={t}"),
+            flops,
+            &mut || {
+                salr_gemm_pipelined(
+                    x.data(),
+                    &bm,
+                    a_cat.data(),
+                    b_cat.data(),
+                    r_total,
+                    &mut c,
+                    m,
+                    PipelineConfig::with_threads(t),
+                );
+                black_box(&c);
+            },
         );
-        black_box(&c);
-    });
+    }
     // Dense baseline at the same shape.
     let dense = bm.decode();
     b2.run_with_work("dense GEMM (pre-decoded baseline)", flops, &mut || {

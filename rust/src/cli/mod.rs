@@ -108,6 +108,7 @@ COMMON FLAGS:
   --task NAME       math|mcq (default math)
   --addr HOST:PORT  serve address (default 127.0.0.1:7433)
   --backend NAME    dense|bitmap|pipeline (default pipeline)
+  --threads N       GEMM + pipeline worker threads (default: all cores)
 ";
 
 /// Parse a baseline name.

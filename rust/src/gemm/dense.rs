@@ -1,10 +1,18 @@
-//! Blocked, register-tiled dense f32 GEMM.
+//! Blocked, register-tiled, multi-core dense f32 GEMM.
 //!
-//! Row-major `C[m,n] = A[m,k] @ B[k,n]`. The kernel tiles M×N into 4×16
-//! register blocks accumulated over a K panel, with an L2-friendly outer
-//! blocking. This is the compute stage of the two-stage sparse pipeline and
-//! the dense baseline for every speedup table, so it needs to be fast enough
-//! that the *pipeline*, not the MACs, is what the benchmarks compare.
+//! Row-major `C[m,n] = A[m,k] @ B[k,n]`. The serial kernel tiles M×N into
+//! 4×16 register blocks accumulated over a K panel, with an L2-friendly
+//! outer blocking and a packed-B layout so the micro-kernel streams
+//! contiguous memory. The parallel entry points partition M into fixed
+//! `BAND`-row bands executed on the persistent worker pool: bands own
+//! disjoint C row blocks, so there is no locking and — because band
+//! boundaries are independent of the thread count — the output is
+//! **bitwise identical** at every pool size. This is the compute stage of
+//! the two-stage sparse pipeline and the dense baseline for every speedup
+//! table, so it needs to be fast enough that the *pipeline*, not the MACs,
+//! is what the benchmarks compare.
+
+use crate::util::pool::{SendPtr, WorkerPool};
 
 /// Outer cache blocking (elements).
 pub const MC: usize = 64;
@@ -15,44 +23,140 @@ pub const NC: usize = 512;
 const MR: usize = 4;
 const NR: usize = 16;
 
-/// `C = A @ B` (C overwritten).
+/// Rows per parallel band. A fixed multiple of `MR` (so tile boundaries
+/// match the serial kernel's) and small enough that a 64-row GEMM still
+/// spreads across 4 workers; the extra per-band B packing costs
+/// `BAND⁻¹ ≈ 6%` of the MAC traffic.
+const BAND: usize = 16;
+
+/// `C = A @ B` (C overwritten), on the process-global pool.
 pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    c.fill(0.0);
+    c[..m * n].fill(0.0);
     gemm_f32_acc(a, b, c, m, k, n);
 }
 
-/// `C += A @ B`.
+/// `C += A @ B`, on the process-global pool.
 pub fn gemm_f32_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_f32_acc_pool(a, b, c, m, k, n, &WorkerPool::global());
+}
+
+/// `C = A @ B` on an explicit pool.
+pub fn gemm_f32_pool(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &WorkerPool,
+) {
+    c[..m * n].fill(0.0);
+    gemm_f32_acc_pool(a, b, c, m, k, n, pool);
+}
+
+/// `C += A @ B` on an explicit pool.
+pub fn gemm_f32_acc_pool(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &WorkerPool,
+) {
     assert!(a.len() >= m * k, "A too small");
     assert!(b.len() >= k * n, "B too small");
     assert!(c.len() >= m * n, "C too small");
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    // Small problems: skip blocking overhead.
+    // Small problems: skip blocking and packing overhead.
     if m * n * k <= 32 * 32 * 32 {
         return gemm_small_acc(a, b, c, m, k, n);
     }
+    let bands = m.div_ceil(BAND);
+    if bands == 1 || pool.threads() == 1 {
+        let mut packed = Vec::new();
+        return gemm_band_acc(a, b, c, m, k, n, &mut packed);
+    }
+    let cptr = SendPtr(c.as_mut_ptr());
+    pool.run(bands, &|bi| {
+        let r0 = bi * BAND;
+        let r1 = ((bi + 1) * BAND).min(m);
+        let rows = r1 - r0;
+        // SAFETY: band `bi` exclusively owns C rows [r0, r1) (and only
+        // reads the matching A rows), so bands race on nothing.
+        let band_c = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), rows * n) };
+        let mut packed = Vec::new();
+        gemm_band_acc(&a[r0 * k..], b, band_c, rows, k, n, &mut packed);
+    });
+}
+
+/// Serial blocked GEMM over one row band (`C[m,n] += A[m,k] @ B[k,n]`),
+/// packing each B panel once per (jc, pc) block.
+#[allow(clippy::too_many_arguments)]
+fn gemm_band_acc(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    packed: &mut Vec<f32>,
+) {
     for jc in (0..n).step_by(NC) {
         let nb = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
             let kb = KC.min(k - pc);
+            pack_b_panels(b, packed, n, pc, jc, kb, nb);
             for ic in (0..m).step_by(MC) {
                 let mb = MC.min(m - ic);
-                block_kernel(a, b, c, m, k, n, ic, pc, jc, mb, kb, nb);
-                let _ = m;
+                block_kernel(a, packed, c, k, n, ic, pc, jc, mb, kb, nb);
             }
         }
     }
 }
 
-/// One (mb × nb) block over a kb panel, micro-tiled MR×NR.
+/// Pack `B[pc..pc+kb, jc..jc+nb]` into NR-wide column panels, panel-major
+/// (`packed[panel][p][lane]`, zero-padded to NR lanes), so the micro-kernel
+/// reads one contiguous NR-row per k step instead of striding by `n`.
+#[allow(clippy::too_many_arguments)]
+fn pack_b_panels(
+    b: &[f32],
+    packed: &mut Vec<f32>,
+    n: usize,
+    pc: usize,
+    jc: usize,
+    kb: usize,
+    nb: usize,
+) {
+    let npanels = nb.div_ceil(NR);
+    let len = npanels * kb * NR;
+    // Zero only when the geometry changes. Stale values in a reused
+    // buffer's padding lanes are harmless: the micro-kernels accumulate
+    // all NR lanes but write back only the `nr` real ones.
+    if packed.len() != len {
+        packed.clear();
+        packed.resize(len, 0.0);
+    }
+    for pj in 0..npanels {
+        let j0 = jc + pj * NR;
+        let lanes = NR.min(jc + nb - j0);
+        let dst_base = pj * kb * NR;
+        for p in 0..kb {
+            let src = (pc + p) * n + j0;
+            let dst = dst_base + p * NR;
+            packed[dst..dst + lanes].copy_from_slice(&b[src..src + lanes]);
+        }
+    }
+}
+
+/// One (mb × nb) block over a kb panel, micro-tiled MR×NR against packed B.
 #[allow(clippy::too_many_arguments)]
 fn block_kernel(
     a: &[f32],
-    b: &[f32],
+    packed: &[f32],
     c: &mut [f32],
-    _m: usize,
     k: usize,
     n: usize,
     ic: usize,
@@ -65,26 +169,29 @@ fn block_kernel(
     let mut i = 0;
     while i < mb {
         let mr = MR.min(mb - i);
-        let mut j = 0;
-        while j < nb {
+        let mut pj = 0;
+        while pj * NR < nb {
+            let j = pj * NR;
             let nr = NR.min(nb - j);
-            if mr == MR && nr == NR {
-                micro_4x16(a, b, c, k, n, ic + i, pc, jc + j, kb);
+            let panel = &packed[pj * kb * NR..(pj + 1) * kb * NR];
+            if mr == MR {
+                micro_4x16(a, panel, c, k, n, ic + i, pc, jc + j, kb, nr);
             } else {
-                micro_edge(a, b, c, k, n, ic + i, pc, jc + j, mr, kb, nr);
+                micro_edge(a, panel, c, k, n, ic + i, pc, jc + j, mr, kb, nr);
             }
-            j += NR;
+            pj += 1;
         }
         i += MR;
     }
 }
 
-/// 4×16 register-tiled micro-kernel: C[i0..i0+4, j0..j0+16] += A-panel @ B-panel.
+/// 4×16 register-tiled micro-kernel over a packed B panel:
+/// `C[i0..i0+4, j0..j0+nr] += A-panel @ B-panel`.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn micro_4x16(
     a: &[f32],
-    b: &[f32],
+    panel: &[f32],
     c: &mut [f32],
     k: usize,
     n: usize,
@@ -92,10 +199,11 @@ fn micro_4x16(
     p0: usize,
     j0: usize,
     kb: usize,
+    nr: usize,
 ) {
     let mut acc = [[0.0f32; NR]; MR];
     for p in 0..kb {
-        let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + NR];
+        let brow = &panel[p * NR..p * NR + NR];
         // Unrolled over the 4 A rows; the NR-wide inner loop vectorizes.
         let a0 = a[i0 * k + p0 + p];
         let a1 = a[(i0 + 1) * k + p0 + p];
@@ -110,19 +218,19 @@ fn micro_4x16(
         }
     }
     for (ii, accrow) in acc.iter().enumerate() {
-        let crow = &mut c[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + NR];
-        for jj in 0..NR {
+        let crow = &mut c[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nr];
+        for jj in 0..nr {
             crow[jj] += accrow[jj];
         }
     }
 }
 
-/// Edge micro-kernel for ragged tiles.
+/// Edge micro-kernel for ragged row tiles (mr < 4), same packed panel.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn micro_edge(
     a: &[f32],
-    b: &[f32],
+    panel: &[f32],
     c: &mut [f32],
     k: usize,
     n: usize,
@@ -133,17 +241,23 @@ fn micro_edge(
     kb: usize,
     nr: usize,
 ) {
-    for ii in 0..mr {
-        for p in 0..kb {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kb {
+        let brow = &panel[p * NR..p * NR + NR];
+        for (ii, accrow) in acc.iter_mut().take(mr).enumerate() {
             let av = a[(i0 + ii) * k + p0 + p];
             if av == 0.0 {
                 continue;
             }
-            let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + nr];
-            let crow = &mut c[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nr];
-            for jj in 0..nr {
-                crow[jj] += av * brow[jj];
+            for jj in 0..NR {
+                accrow[jj] += av * brow[jj];
             }
+        }
+    }
+    for (ii, accrow) in acc.iter().take(mr).enumerate() {
+        let crow = &mut c[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nr];
+        for jj in 0..nr {
+            crow[jj] += accrow[jj];
         }
     }
 }
@@ -282,5 +396,45 @@ mod tests {
         let mut c2 = vec![0.0f32; 4];
         gemm_f32(&[], &[], &mut c2, 2, 0, 2);
         assert_eq!(c2, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn pool_sizes_are_bitwise_identical() {
+        // Band boundaries are fixed at BAND rows regardless of the pool
+        // size, so the thread count must not change a bit of the output.
+        let mut rng = Rng::new(13);
+        for &(m, k, n) in &[(65usize, 257usize, 130usize), (256, 128, 96), (200, 520, 48)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let want = matmul_naive(&a, &b);
+            let mut reference: Option<Vec<f32>> = None;
+            for &t in &[1usize, 2, 3, 4] {
+                let pool = WorkerPool::with_threads(t);
+                let mut c = vec![0.0f32; m * n];
+                gemm_f32_pool(a.data(), b.data(), &mut c, m, k, n, &pool);
+                let ct = Tensor::from_vec(&[m, n], c.clone());
+                let diff = max_abs_diff(&ct, &want);
+                assert!(diff < 1e-2 * (k as f32).sqrt(), "({m},{k},{n}) t={t} diff={diff}");
+                match &reference {
+                    None => reference = Some(c),
+                    Some(r) => assert_eq!(&c, r, "({m},{k},{n}) t={t} changed bits"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn acc_pool_accumulates_on_top() {
+        let mut rng = Rng::new(14);
+        let (m, k, n) = (70usize, 64usize, 40usize);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let pool = WorkerPool::with_threads(3);
+        let mut c = vec![2.0f32; m * n];
+        gemm_f32_acc_pool(a.data(), b.data(), &mut c, m, k, n, &pool);
+        let want = matmul_naive(&a, &b);
+        for i in 0..m * n {
+            assert!((c[i] - 2.0 - want.data()[i]).abs() < 1e-2);
+        }
     }
 }

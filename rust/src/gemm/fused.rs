@@ -78,15 +78,26 @@ impl AdapterStack {
         dense::gemm_f32(&u, self.b_cat.data(), out, m, tr, n);
     }
 
-    /// Fused accumulate variant (`out += Δy`).
+    /// Fused accumulate variant (`out += Δy`), on the process-global pool.
     pub fn apply_fused_acc(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        self.apply_fused_acc_pool(x, m, out, &crate::util::pool::WorkerPool::global());
+    }
+
+    /// Fused accumulate on an explicit pool (the engine's thread knob).
+    pub fn apply_fused_acc_pool(
+        &self,
+        x: &[f32],
+        m: usize,
+        out: &mut [f32],
+        pool: &crate::util::pool::WorkerPool,
+    ) {
         let (k, n, tr) = (self.k(), self.n(), self.total_rank());
         if tr == 0 {
             return;
         }
         let mut u = vec![0.0f32; m * tr];
-        dense::gemm_f32(x, self.a_cat.data(), &mut u, m, k, tr);
-        dense::gemm_f32_acc(&u, self.b_cat.data(), out, m, tr, n);
+        dense::gemm_f32_pool(x, self.a_cat.data(), &mut u, m, k, tr, pool);
+        dense::gemm_f32_acc_pool(&u, self.b_cat.data(), out, m, tr, n, pool);
     }
 
     /// Sequential baseline: apply each adapter as two small GEMMs,

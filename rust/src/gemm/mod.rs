@@ -4,13 +4,21 @@
 //! can be *decoded and multiplied* at dense-GEMM throughput by overlapping
 //! the two stages. This module provides:
 //!
-//! * [`dense`] — a blocked, register-tiled f32 GEMM (the baseline and the
-//!   compute stage of the pipeline);
-//! * [`sparse`] — bitmap-decode-then-GEMM, sequential (the naive deployment);
-//! * [`pipeline`] — the paper's two-stage design: decode worker(s) fill a
-//!   ring buffer of dense K-panels while the GEMM stage consumes them;
+//! * [`dense`] — a blocked, register-tiled, packed-B f32 GEMM,
+//!   parallelized over M row bands on the persistent worker pool (the
+//!   baseline and the compute stage of the pipeline);
+//! * [`sparse`] — bitmap-decode-then-GEMM, sequential (the naive
+//!   deployment), plus the column-stripe kernels the parallel consumers
+//!   share with the fallback paths;
+//! * [`pipeline`] — the paper's two-stage design generalized to P decode
+//!   workers filling a lock-free ring of dense K-panels while C consumer
+//!   workers apply disjoint output stripes;
 //! * [`fused`] — the concatenated multi-adapter GEMM (`A_cat`/`B_cat`)
 //!   versus n sequential small GEMMs.
+//!
+//! All parallel paths are bitwise deterministic across thread counts: work
+//! partitions are fixed (MC row bands, column stripes) and per-element
+//! accumulation order never depends on the worker count.
 
 pub mod dense;
 pub mod fused;

@@ -1,32 +1,35 @@
-//! The paper's **two-stage pipelined decode+GEMM**.
+//! The paper's **two-stage pipelined decode+GEMM**, generalized to
+//! multiple workers per stage.
 //!
-//! Stage 1 (decode): worker thread(s) reconstruct dense K-panels of the
-//! bitmap-encoded weight matrix using the byte-mask/LUT rule.
-//! Stage 2 (GEMM): the compute thread multiplies each reconstructed panel
-//! into the accumulator.
+//! Stage 1 (decode): `P` decode workers reconstruct dense K-panels of the
+//! bitmap-encoded weight matrix (worker `d` owns panels `d, d+P, …`) using
+//! the byte-mask/LUT rule.
+//! Stage 2 (GEMM): `C` consumer workers each own a disjoint stripe of
+//! output columns and apply every panel — in panel order — to their stripe.
 //!
-//! The two stages communicate through a fixed-depth **ring buffer** of
-//! pre-allocated panel slots: while the GEMM stage multiplies panel `b`,
-//! the decode stage fills panel `b+1` (paper, "Pipeline Design"). On GPU
-//! the stages are CUDA cores vs Tensor Cores; here they are OS threads, but
-//! the overlap structure and the ring buffer are identical.
+//! The stages communicate through a fixed-depth **ring buffer** of
+//! pre-allocated panel slots: while consumers multiply panel `b`, decoders
+//! fill panels `b+1 … b+depth-1` (paper, "Pipeline Design"). Slot hand-off
+//! is lock-free: a per-slot `ready` sequence number publishes decoded
+//! panels, and per-consumer progress counters tell decoders when a slot
+//! can be reused. On GPU the stages are CUDA cores vs Tensor Cores; here
+//! they are persistent pool threads, but the overlap structure and the
+//! ring buffer are identical.
+//!
+//! Determinism: each output element accumulates the adapter update first,
+//! then panels in ascending order with a fixed in-panel order — the same
+//! order the single-threaded fallback uses — so results are **bitwise
+//! identical** across thread counts and across runs.
 
-use crate::gemm::sparse::panel_acc;
+use crate::gemm::sparse::{addmul_stripe, panel_acc, panel_acc_stripe};
 use crate::sparse::BitmapMatrix;
+use crate::util::pool::{SendPtr, WorkerPool};
+use crossbeam_utils::CachePadded;
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
-
-/// True when the host has a second hardware thread to run the decode
-/// stage on. On a single-core host the two-stage overlap has no parallel
-/// resource and the panel-streamed path is strictly better.
-fn overlap_available() -> bool {
-    std::thread::available_parallelism()
-        .map(|n| n.get() >= 2)
-        .unwrap_or(false)
-}
 
 /// Bounded wait: brief spin, then yield to let the other stage run (on
-/// SMT/single-core hosts pure spinning starves the producer).
+/// SMT/oversubscribed hosts pure spinning starves the producer).
 #[inline]
 fn stage_wait(iters: &mut u32) {
     *iters += 1;
@@ -37,33 +40,6 @@ fn stage_wait(iters: &mut u32) {
     }
 }
 
-/// A fixed-capacity ring of panel buffers shared between the decode and
-/// GEMM stages. Slots cycle through EMPTY -> FULL -> EMPTY.
-struct PanelRing {
-    slots: Vec<Mutex<Vec<f32>>>,
-    /// Sequence number of the next panel the decoder will produce.
-    produced: AtomicUsize,
-    /// Sequence number of the next panel the consumer will take.
-    consumed: AtomicUsize,
-    /// Set if either side panicked / finished early.
-    dead: AtomicBool,
-    depth: usize,
-}
-
-impl PanelRing {
-    fn new(depth: usize, panel_elems: usize) -> Self {
-        PanelRing {
-            slots: (0..depth)
-                .map(|_| Mutex::new(vec![0.0f32; panel_elems]))
-                .collect(),
-            produced: AtomicUsize::new(0),
-            consumed: AtomicUsize::new(0),
-            dead: AtomicBool::new(false),
-            depth,
-        }
-    }
-}
-
 /// Configuration of the two-stage pipeline.
 #[derive(Clone, Copy, Debug)]
 pub struct PipelineConfig {
@@ -71,6 +47,9 @@ pub struct PipelineConfig {
     pub panel_k: usize,
     /// Ring buffer depth (>= 2 for any overlap).
     pub ring_depth: usize,
+    /// Total worker threads across both stages (0 = the process-global
+    /// pool, i.e. every available core).
+    pub num_threads: usize,
 }
 
 impl Default for PipelineConfig {
@@ -78,14 +57,215 @@ impl Default for PipelineConfig {
         PipelineConfig {
             panel_k: 64,
             ring_depth: 3,
+            num_threads: 0,
         }
     }
 }
 
-/// `C[m,n] = X[m,k] @ W[k,n]` with bitmap `W`, decode and GEMM overlapped.
+impl PipelineConfig {
+    /// Default geometry with an explicit thread count.
+    pub fn with_threads(num_threads: usize) -> Self {
+        PipelineConfig {
+            num_threads,
+            ..Default::default()
+        }
+    }
+}
+
+/// One ring slot: a panel buffer plus the sequence number of its content.
+struct RingSlot {
+    buf: UnsafeCell<Vec<f32>>,
+    /// `panel_id + 1` of the decoded content (0 = empty). Stored with
+    /// Release after the decode writes, loaded with Acquire before reads.
+    ready: CachePadded<AtomicUsize>,
+}
+
+// SAFETY: access to `buf` is serialized by the ready/progress protocol
+// below — a decoder writes only after every consumer has passed the slot's
+// previous panel, and consumers read only after `ready` publishes it.
+unsafe impl Sync for RingSlot {}
+
+/// The fixed-capacity panel ring shared between the two stages.
+struct PanelRing {
+    slots: Vec<RingSlot>,
+    depth: usize,
+    /// Per-consumer progress: consumer `c` has fully applied panels
+    /// `< prog[c]` to its stripe.
+    prog: Vec<CachePadded<AtomicUsize>>,
+    /// Set when any stage panics so the others bail out of their spins.
+    dead: AtomicBool,
+}
+
+impl PanelRing {
+    fn new(depth: usize, panel_elems: usize, consumers: usize) -> PanelRing {
+        PanelRing {
+            slots: (0..depth)
+                .map(|_| RingSlot {
+                    buf: UnsafeCell::new(vec![0.0f32; panel_elems]),
+                    ready: CachePadded::new(AtomicUsize::new(0)),
+                })
+                .collect(),
+            depth,
+            prog: (0..consumers)
+                .map(|_| CachePadded::new(AtomicUsize::new(0)))
+                .collect(),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    /// Slowest consumer's next-needed panel.
+    fn min_prog(&self) -> usize {
+        self.prog
+            .iter()
+            .map(|p| p.load(Ordering::Acquire))
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+/// Sets the ring's dead flag if the holder unwinds, so the other stages'
+/// spin loops exit instead of waiting forever on a panicked peer.
+struct Bail<'a>(&'a AtomicBool);
+
+impl Drop for Bail<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Split `threads` execution contexts between the stages.
+fn stage_split(threads: usize, npanels: usize, n: usize) -> (usize, usize) {
+    let decoders = (threads / 2).clamp(1, npanels);
+    let consumers = threads.saturating_sub(decoders).clamp(1, n);
+    (decoders, consumers)
+}
+
+/// Decode worker `d` of `stride`: reconstructs panels `d, d+stride, …`
+/// into their ring slots, at most `depth` panels ahead of the slowest
+/// consumer.
+fn decode_role(
+    ring: &PanelRing,
+    w: &BitmapMatrix,
+    panel_k: usize,
+    npanels: usize,
+    d: usize,
+    stride: usize,
+) {
+    let _bail = Bail(&ring.dead);
+    let k = w.rows();
+    let mut pi = d;
+    while pi < npanels {
+        let mut waited = 0u32;
+        while pi >= ring.min_prog() + ring.depth {
+            if ring.dead.load(Ordering::Relaxed) {
+                return;
+            }
+            stage_wait(&mut waited);
+        }
+        if ring.dead.load(Ordering::Relaxed) {
+            return;
+        }
+        let slot = &ring.slots[pi % ring.depth];
+        let r0 = pi * panel_k;
+        let r1 = (r0 + panel_k).min(k);
+        // SAFETY: every consumer has passed the panel this slot previously
+        // held (min_prog handshake), and panel `pi` has exactly one owner,
+        // so we have exclusive access to the buffer.
+        let buf = unsafe { &mut *slot.buf.get() };
+        w.decode_rows_into(r0, r1, buf);
+        slot.ready.store(pi + 1, Ordering::Release);
+        pi += stride;
+    }
+}
+
+/// Consumer `ci`: applies every panel, in order, to output columns
+/// `[j0, j1)`.
+#[allow(clippy::too_many_arguments)]
+fn consume_role(
+    ring: &PanelRing,
+    x: &[f32],
+    c: SendPtr,
+    m: usize,
+    k: usize,
+    n: usize,
+    panel_k: usize,
+    npanels: usize,
+    ci: usize,
+    j0: usize,
+    j1: usize,
+) {
+    let _bail = Bail(&ring.dead);
+    for pi in 0..npanels {
+        let slot = &ring.slots[pi % ring.depth];
+        let mut waited = 0u32;
+        while slot.ready.load(Ordering::Acquire) != pi + 1 {
+            if ring.dead.load(Ordering::Relaxed) {
+                return;
+            }
+            stage_wait(&mut waited);
+        }
+        let r0 = pi * panel_k;
+        let kb = (r0 + panel_k).min(k) - r0;
+        // SAFETY: `ready == pi+1` orders this read after the decode write;
+        // consumers share the buffer read-only, and this consumer
+        // exclusively owns C columns [j0, j1).
+        let buf = unsafe { &*slot.buf.get() };
+        unsafe { panel_acc_stripe(x, &buf[..kb * n], c.0, m, k, n, r0, kb, j0, j1) };
+        ring.prog[ci].store(pi + 1, Ordering::Release);
+    }
+}
+
+/// Shared engine for both pipelined entry points: decode workers stream
+/// K-panels into the ring while consumers apply (adapter stripe +) panel
+/// stripes to their disjoint output columns. `u = X @ A_cat` is
+/// precomputed; pass `rank_total = 0` to skip the adapter update.
 ///
-/// The decoder thread walks K-panels of `W` writing into ring slots; the
-/// calling thread consumes panels in order and accumulates into `C`.
+/// Must be called from outside the pool (the roles coordinate, so they
+/// need `decoders + consumers <= pool.threads()` contexts to eventually
+/// run concurrently — guaranteed for top-level callers by the pool's FIFO
+/// queue, but not for a caller that is itself a pool task).
+#[allow(clippy::too_many_arguments)]
+fn run_pipelined(
+    x: &[f32],
+    w: &BitmapMatrix,
+    u: &[f32],
+    b_cat: &[f32],
+    rank_total: usize,
+    c: &mut [f32],
+    m: usize,
+    panel_k: usize,
+    npanels: usize,
+    ring_depth: usize,
+    pool: &WorkerPool,
+) {
+    let (k, n) = (w.rows(), w.cols());
+    let (decoders, consumers) = stage_split(pool.threads(), npanels, n);
+    let ring = PanelRing::new(ring_depth.max(2), panel_k * n, consumers);
+    let cptr = SendPtr(c.as_mut_ptr());
+    pool.run(decoders + consumers, &|role| {
+        if role < decoders {
+            decode_role(&ring, w, panel_k, npanels, role, decoders);
+        } else {
+            let ci = role - decoders;
+            let j0 = ci * n / consumers;
+            let j1 = (ci + 1) * n / consumers;
+            if rank_total > 0 {
+                // The adapter GEMM overlaps the first panels' decode — the
+                // paper's "the LoRA module participates in GEMM
+                // computation" during the decode stage.
+                // SAFETY: this consumer exclusively owns columns [j0, j1).
+                unsafe { addmul_stripe(u, b_cat, cptr.0, m, rank_total, n, j0, j1) };
+            }
+            consume_role(&ring, x, cptr, m, k, n, panel_k, npanels, ci, j0, j1);
+        }
+    });
+}
+
+/// `C[m,n] = X[m,k] @ W[k,n]` with bitmap `W`, decode and GEMM overlapped
+/// across `cfg.num_threads` workers (0 = all cores). Falls back to the
+/// panel-streamed sequential path when there is no parallel resource.
 pub fn bitmap_gemm_pipelined(
     x: &[f32],
     w: &BitmapMatrix,
@@ -101,63 +281,19 @@ pub fn bitmap_gemm_pipelined(
     }
     let panel_k = cfg.panel_k.max(1).min(k);
     let npanels = k.div_ceil(panel_k);
-    if npanels == 1 || cfg.ring_depth < 2 || !overlap_available() {
+    let pool = WorkerPool::with_threads(cfg.num_threads);
+    if npanels == 1 || cfg.ring_depth < 2 || pool.threads() < 2 {
         // Degenerate: no overlap possible; run sequentially.
         let mut scratch = Vec::new();
         crate::gemm::sparse::bitmap_gemm_panelled(x, w, c, m, panel_k, &mut scratch);
         return;
     }
-    let ring = PanelRing::new(cfg.ring_depth, panel_k * n);
-
-    crossbeam_utils::thread::scope(|scope| {
-        // ---- Stage 1: decode worker ----
-        let ring_ref = &ring;
-        scope.spawn(move |_| {
-            for pi in 0..npanels {
-                // Wait for a free slot: decoder may run at most `depth`
-                // panels ahead of the consumer.
-                let mut waited = 0u32;
-                while pi >= ring_ref.consumed.load(Ordering::Acquire) + ring_ref.depth {
-                    if ring_ref.dead.load(Ordering::Relaxed) {
-                        return;
-                    }
-                    stage_wait(&mut waited);
-                }
-                let slot = &ring_ref.slots[pi % ring_ref.depth];
-                {
-                    let mut buf = slot.lock().unwrap();
-                    let r0 = pi * panel_k;
-                    let r1 = (r0 + panel_k).min(k);
-                    w.decode_rows_into(r0, r1, &mut buf);
-                }
-                ring_ref.produced.store(pi + 1, Ordering::Release);
-            }
-        });
-
-        // ---- Stage 2: GEMM consumer (this thread) ----
-        for pi in 0..npanels {
-            let mut waited = 0u32;
-            while ring.produced.load(Ordering::Acquire) <= pi {
-                stage_wait(&mut waited);
-            }
-            let r0 = pi * panel_k;
-            let r1 = (r0 + panel_k).min(k);
-            let kb = r1 - r0;
-            {
-                let buf = ring.slots[pi % ring.depth].lock().unwrap();
-                panel_acc(x, &buf[..kb * n], c, m, k, n, r0, kb);
-            }
-            ring.consumed.store(pi + 1, Ordering::Release);
-        }
-    })
-    .unwrap();
+    run_pipelined(x, w, &[], &[], 0, c, m, panel_k, npanels, cfg.ring_depth, &pool);
 }
 
 /// Fold the low-rank adapter update into the same call:
-/// `C = X @ W_sparse + (X @ A_cat) @ B_cat` with the adapter GEMM executed
-/// on the consumer thread *while the first panel decodes* — mirroring the
-/// paper's note that "the LoRA module participates in GEMM computation"
-/// during the decode stage.
+/// `C = X @ W_sparse + (X @ A_cat) @ B_cat`, with each consumer applying
+/// its adapter stripe *while the first panels decode*.
 #[allow(clippy::too_many_arguments)]
 pub fn salr_gemm_pipelined(
     x: &[f32],
@@ -174,68 +310,38 @@ pub fn salr_gemm_pipelined(
     if m == 0 || n == 0 {
         return;
     }
-    let panel_k = cfg.panel_k.max(1).min(k.max(1));
-    let npanels = k.div_ceil(panel_k.max(1)).max(1);
-    if !overlap_available() {
-        // Single hardware thread: run the stages back to back (panel-
-        // streamed), adapters first.
+    let pool = WorkerPool::with_threads(cfg.num_threads);
+    // `u = X @ A_cat` is tiny (m × total_rank); computing it up front keeps
+    // the consumers' adapter stripes independent of each other.
+    let mut u = vec![0.0f32; m * rank_total];
+    if rank_total > 0 && k > 0 {
+        crate::gemm::dense::gemm_f32_pool(x, a_cat, &mut u, m, k, rank_total, &pool);
+    }
+    if k == 0 {
+        // X has no columns: every product term is zero.
+        return;
+    }
+    let panel_k = cfg.panel_k.max(1).min(k);
+    let npanels = k.div_ceil(panel_k);
+    if npanels == 1 || cfg.ring_depth < 2 || pool.threads() < 2 {
+        // Single context: adapters first, then stream panels straight into
+        // C — same per-element order as the pipelined path, no m*n temp.
         if rank_total > 0 {
-            let mut u = vec![0.0f32; m * rank_total];
-            crate::gemm::dense::gemm_f32(x, a_cat, &mut u, m, k, rank_total);
-            crate::gemm::dense::gemm_f32_acc(&u, b_cat, c, m, rank_total, n);
+            // SAFETY: we hold the only reference to `c`.
+            unsafe { addmul_stripe(&u, b_cat, c.as_mut_ptr(), m, rank_total, n, 0, n) };
         }
-        let mut scratch = Vec::new();
-        let mut base = vec![0.0f32; m * n];
-        crate::gemm::sparse::bitmap_gemm_panelled(x, w, &mut base, m, panel_k, &mut scratch);
-        for (ci, bi) in c.iter_mut().zip(&base) {
-            *ci += bi;
+        let mut scratch = vec![0.0f32; panel_k * n];
+        let mut r0 = 0;
+        while r0 < k {
+            let r1 = (r0 + panel_k).min(k);
+            let kb = r1 - r0;
+            w.decode_rows_into(r0, r1, &mut scratch);
+            panel_acc(x, &scratch[..kb * n], c, m, k, n, r0, kb);
+            r0 = r1;
         }
         return;
     }
-    let ring = PanelRing::new(cfg.ring_depth.max(2), panel_k * n);
-
-    crossbeam_utils::thread::scope(|scope| {
-        let ring_ref = &ring;
-        scope.spawn(move |_| {
-            for pi in 0..npanels {
-                let mut waited = 0u32;
-                while pi >= ring_ref.consumed.load(Ordering::Acquire) + ring_ref.depth {
-                    stage_wait(&mut waited);
-                }
-                let slot = &ring_ref.slots[pi % ring_ref.depth];
-                {
-                    let mut buf = slot.lock().unwrap();
-                    let r0 = pi * panel_k;
-                    let r1 = (r0 + panel_k).min(k);
-                    w.decode_rows_into(r0, r1, &mut buf);
-                }
-                ring_ref.produced.store(pi + 1, Ordering::Release);
-            }
-        });
-
-        // Adapter GEMM overlaps the first panel's decode.
-        if rank_total > 0 {
-            let mut u = vec![0.0f32; m * rank_total];
-            crate::gemm::dense::gemm_f32(x, a_cat, &mut u, m, k, rank_total);
-            crate::gemm::dense::gemm_f32_acc(&u, b_cat, c, m, rank_total, n);
-        }
-
-        for pi in 0..npanels {
-            let mut waited = 0u32;
-            while ring.produced.load(Ordering::Acquire) <= pi {
-                stage_wait(&mut waited);
-            }
-            let r0 = pi * panel_k;
-            let r1 = (r0 + panel_k).min(k);
-            let kb = r1 - r0;
-            {
-                let buf = ring.slots[pi % ring.depth].lock().unwrap();
-                panel_acc(x, &buf[..kb * n], c, m, k, n, r0, kb);
-            }
-            ring.consumed.store(pi + 1, Ordering::Release);
-        }
-    })
-    .unwrap();
+    run_pipelined(x, w, &u, b_cat, rank_total, c, m, panel_k, npanels, cfg.ring_depth, &pool);
 }
 
 #[cfg(test)]
@@ -268,6 +374,7 @@ mod tests {
                 PipelineConfig {
                     panel_k: pk,
                     ring_depth: depth,
+                    num_threads: 0,
                 },
             );
             let c = Tensor::from_vec(&[m, n], c);
@@ -321,6 +428,7 @@ mod tests {
             PipelineConfig {
                 panel_k: 8,
                 ring_depth: 1,
+                num_threads: 0,
             },
         );
         let c = Tensor::from_vec(&[3, 16], c);
@@ -340,6 +448,39 @@ mod tests {
             let mut c = vec![0.0f32; 4 * 32];
             bitmap_gemm_pipelined(x.data(), &bm, &mut c, 4, PipelineConfig::default());
             assert_eq!(c, first, "pipeline must be deterministic");
+        }
+    }
+
+    #[test]
+    fn thread_counts_are_bitwise_identical() {
+        let mut rng = Rng::new(124);
+        let (m, k, n, r) = (8usize, 256usize, 96usize, 12usize);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        prune_global(&mut [&mut w], 0.5);
+        let a = Tensor::randn(&[k, r], 0.1, &mut rng);
+        let b = Tensor::randn(&[r, n], 0.1, &mut rng);
+        let bm = BitmapMatrix::encode(&w);
+        let mut base: Option<Vec<f32>> = None;
+        let mut salr_base: Option<Vec<f32>> = None;
+        for &t in &[1usize, 2, 3, 4] {
+            let cfg = PipelineConfig {
+                panel_k: 32,
+                ring_depth: 3,
+                num_threads: t,
+            };
+            let mut c = vec![0.0f32; m * n];
+            bitmap_gemm_pipelined(x.data(), &bm, &mut c, m, cfg);
+            match &base {
+                None => base = Some(c),
+                Some(bref) => assert_eq!(&c, bref, "bitmap t={t} changed bits"),
+            }
+            let mut cs = vec![0.0f32; m * n];
+            salr_gemm_pipelined(x.data(), &bm, a.data(), b.data(), r, &mut cs, m, cfg);
+            match &salr_base {
+                None => salr_base = Some(cs),
+                Some(sref) => assert_eq!(&cs, sref, "salr t={t} changed bits"),
+            }
         }
     }
 }

@@ -4,9 +4,11 @@
 
 use crate::gemm::dense;
 use crate::sparse::BitmapMatrix;
+use crate::util::pool::WorkerPool;
 
 /// `C[m,n] = X[m,k] @ W[k,n]` where `W` is bitmap-encoded.
-/// Fully decodes `W` into a scratch buffer first (sequential baseline).
+/// Fully decodes `W` into a scratch buffer first (sequential baseline);
+/// the dense multiply runs on the process-global pool.
 pub fn bitmap_gemm_sequential(
     x: &[f32],
     w: &BitmapMatrix,
@@ -14,11 +16,24 @@ pub fn bitmap_gemm_sequential(
     m: usize,
     scratch: &mut Vec<f32>,
 ) {
+    bitmap_gemm_sequential_pool(x, w, c, m, scratch, &WorkerPool::global());
+}
+
+/// [`bitmap_gemm_sequential`] with an explicit pool for the dense multiply
+/// — pass a 1-thread pool for a genuinely sequential ablation baseline.
+pub fn bitmap_gemm_sequential_pool(
+    x: &[f32],
+    w: &BitmapMatrix,
+    c: &mut [f32],
+    m: usize,
+    scratch: &mut Vec<f32>,
+    pool: &WorkerPool,
+) {
     let (k, n) = (w.rows(), w.cols());
     scratch.clear();
     scratch.resize(k * n, 0.0);
     w.decode_rows_into(0, k, scratch);
-    dense::gemm_f32(x, scratch, c, m, k, n);
+    dense::gemm_f32_pool(x, scratch, c, m, k, n, pool);
 }
 
 /// Panel-streamed variant: decode a K-panel of `W`, multiply, move on —
@@ -105,6 +120,7 @@ pub fn bitmap_gemm_direct(
 }
 
 /// `C += X[:, p0..p0+kb] @ P[kb, n]` with X row-major `m × k`.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn panel_acc(
     x: &[f32],
     panel: &[f32],
@@ -115,17 +131,76 @@ pub(crate) fn panel_acc(
     p0: usize,
     kb: usize,
 ) {
+    assert!(c.len() >= m * n);
+    // SAFETY: `c` covers m*n elements and we hold the only reference.
+    unsafe { panel_acc_stripe(x, panel, c.as_mut_ptr(), m, k, n, p0, kb, 0, n) }
+}
+
+/// Column-stripe form of [`panel_acc`]: `C[:, j0..j1] += X[:, p0..p0+kb] @
+/// P[kb, n][:, j0..j1]`, writing through a raw base pointer. The pipeline's
+/// parallel consumers each own a disjoint stripe of C columns, so their
+/// writes never race; the per-element accumulation order is identical to
+/// the full-width version, which keeps results bitwise independent of the
+/// stripe count.
+///
+/// # Safety
+/// `c` must point to an `m*n` f32 buffer, and no other thread may access
+/// columns `[j0, j1)` of it concurrently.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn panel_acc_stripe(
+    x: &[f32],
+    panel: &[f32],
+    c: *mut f32,
+    m: usize,
+    k: usize,
+    n: usize,
+    p0: usize,
+    kb: usize,
+    j0: usize,
+    j1: usize,
+) {
     for i in 0..m {
         let xrow = &x[i * k + p0..i * k + p0 + kb];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for p in 0..kb {
-            let xv = xrow[p];
+        for (p, &xv) in xrow.iter().enumerate() {
             if xv == 0.0 {
                 continue;
             }
-            let prow = &panel[p * n..p * n + n];
-            for j in 0..n {
-                crow[j] += xv * prow[j];
+            let prow = &panel[p * n + j0..p * n + j1];
+            let crow = c.add(i * n + j0);
+            for (jj, &pv) in prow.iter().enumerate() {
+                *crow.add(jj) += xv * pv;
+            }
+        }
+    }
+}
+
+/// `C[:, j0..j1] += U[m, r] @ B[r, n][:, j0..j1]` through a raw base
+/// pointer — the adapter-update stripe applied by each pipeline consumer
+/// before it starts consuming panels.
+///
+/// # Safety
+/// Same contract as [`panel_acc_stripe`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn addmul_stripe(
+    u: &[f32],
+    bmat: &[f32],
+    c: *mut f32,
+    m: usize,
+    r: usize,
+    n: usize,
+    j0: usize,
+    j1: usize,
+) {
+    for i in 0..m {
+        let urow = &u[i * r..(i + 1) * r];
+        for (p, &uv) in urow.iter().enumerate() {
+            if uv == 0.0 {
+                continue;
+            }
+            let brow = &bmat[p * n + j0..p * n + j1];
+            let crow = c.add(i * n + j0);
+            for (jj, &bv) in brow.iter().enumerate() {
+                *crow.add(jj) += uv * bv;
             }
         }
     }

@@ -7,7 +7,7 @@
 //! + fused adapters through the two-stage pipeline (SALR deployment).
 
 use super::kv_cache::KvCache;
-use crate::gemm::dense::gemm_f32;
+use crate::gemm::dense::gemm_f32_pool;
 use crate::gemm::pipeline::PipelineConfig;
 use crate::model::ParamStore;
 use crate::prune::{prune_nm, NmPattern};
@@ -15,6 +15,8 @@ use crate::runtime::ModelCfg;
 use crate::salr::SalrLayer;
 use crate::sparse::BitmapMatrix;
 use crate::tensor::{argmax, gelu, Tensor};
+use crate::util::pool::WorkerPool;
+use std::sync::Arc;
 
 /// How the adapted linears execute.
 #[derive(Clone, Copy, Debug)]
@@ -190,32 +192,65 @@ fn merge_adapters_into(cfg: &ModelCfg, adapters: &ParamStore, name: &str, w: &mu
     }
 }
 
-/// The engine: weights + backend + reusable scratch.
+/// The engine: weights + backend + the worker pool its GEMMs run on.
 pub struct Engine {
     pub weights: EngineWeights,
     pub backend: Backend,
+    /// Pool for the dense linears and the logit GEMM; the pipelined
+    /// backend resolves its own pool from `PipelineConfig::num_threads`.
+    pool: Arc<WorkerPool>,
 }
 
 impl Engine {
     pub fn new(weights: EngineWeights, backend: Backend) -> Engine {
-        Engine { weights, backend }
+        Engine::with_threads(weights, backend, 0)
+    }
+
+    /// Engine pinned to `num_threads` GEMM workers (0 = the process-global
+    /// pool, i.e. every available core). Also aligns the pipelined
+    /// backend's thread knob so both execution paths agree.
+    pub fn with_threads(weights: EngineWeights, mut backend: Backend, num_threads: usize) -> Engine {
+        if num_threads > 0 {
+            if let Backend::BitmapPipelined(cfg) = &mut backend {
+                cfg.num_threads = num_threads;
+            }
+        }
+        Engine {
+            weights,
+            backend,
+            pool: WorkerPool::with_threads(num_threads),
+        }
+    }
+
+    /// Re-point the engine at an `num_threads`-wide pool (0 = global).
+    pub fn set_threads(&mut self, num_threads: usize) {
+        self.pool = WorkerPool::with_threads(num_threads);
+        if let Backend::BitmapPipelined(cfg) = &mut self.backend {
+            cfg.num_threads = num_threads;
+        }
+    }
+
+    /// Execution contexts the engine's GEMMs use.
+    pub fn num_threads(&self) -> usize {
+        self.pool.threads()
     }
 
     fn linear(&self, w: &LinearW, x: &[f32], m: usize, out: &mut [f32]) {
         match (w, self.backend) {
             (LinearW::Dense(t), _) => {
-                gemm_f32(x, t.data(), out, m, t.rows(), t.cols());
+                gemm_f32_pool(x, t.data(), out, m, t.rows(), t.cols(), &self.pool);
             }
             (LinearW::Salr(l), Backend::BitmapPipelined(cfg)) => {
                 l.forward(x, m, out, cfg);
             }
             (LinearW::Salr(l), _) => {
-                // Sequential: decode fully, then GEMM, then adapters.
+                // Sequential: decode fully, then GEMM, then adapters — all
+                // on the engine's pool so the thread knob is honored.
                 let mut scratch = Vec::new();
-                crate::gemm::sparse::bitmap_gemm_sequential(
-                    x, &l.w_hat, out, m, &mut scratch,
+                crate::gemm::sparse::bitmap_gemm_sequential_pool(
+                    x, &l.w_hat, out, m, &mut scratch, &self.pool,
                 );
-                l.adapters.apply_fused_acc(x, m, out);
+                l.adapters.apply_fused_acc_pool(x, m, out, &self.pool);
             }
         }
     }
@@ -361,13 +396,14 @@ impl Engine {
     fn logits(&self, hidden: &[f32], m: usize) -> Vec<f32> {
         let cfg = &self.weights.cfg;
         let mut out = vec![0.0f32; m * cfg.vocab_size];
-        gemm_f32(
+        gemm_f32_pool(
             hidden,
             self.weights.lm_head.data(),
             &mut out,
             m,
             cfg.d_model,
             cfg.vocab_size,
+            &self.pool,
         );
         out
     }
@@ -527,6 +563,28 @@ mod tests {
         let solo2 = engine.generate_batch(&[p2], 4);
         assert_eq!(joint[0], solo1[0]);
         assert_eq!(joint[1], solo2[0]);
+    }
+
+    #[test]
+    fn thread_knob_reaches_backend_and_pool() {
+        let cfg = test_cfg();
+        let mut rng = Rng::new(404);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let mut e = Engine::with_threads(
+            EngineWeights::dense_merged(&cfg, &base, None),
+            Backend::BitmapPipelined(PipelineConfig::default()),
+            3,
+        );
+        assert_eq!(e.num_threads(), 3);
+        match e.backend {
+            Backend::BitmapPipelined(c) => assert_eq!(c.num_threads, 3),
+            _ => unreachable!(),
+        }
+        e.set_threads(2);
+        assert_eq!(e.num_threads(), 2);
+        // Generation still works on the resized pool.
+        let gen = e.generate_batch(&[vec![1, 2, 3]], 2);
+        assert_eq!(gen[0].len(), 2);
     }
 
     #[test]

@@ -5,11 +5,13 @@
 use anyhow::{bail, Result};
 use salr::cli::{parse_baseline, Args, USAGE};
 use salr::eval::{deploy_engine, ExpContext, RunKey, Task};
+use salr::gemm::pipeline::PipelineConfig;
 use salr::infer::Backend;
 use salr::model::{save_model, Encoding};
 use salr::salr::BaselineSpec;
 use salr::server::{serve, BatchPolicy};
 use salr::train::TrainConfig;
+use salr::util::pool::WorkerPool;
 
 fn main() {
     salr::util::logger::init();
@@ -46,6 +48,12 @@ fn parse_task(s: &str) -> Result<Task> {
 }
 
 fn run(args: &Args) -> Result<()> {
+    // Size the process-global worker pool before any GEMM runs; every
+    // command (experiments, training, serving) inherits it.
+    let threads = args.usize_or("threads", 0)?;
+    if threads > 0 {
+        WorkerPool::set_global_threads(threads);
+    }
     match args.command.as_str() {
         "exp" => {
             let ctx = ctx_from(args)?;
@@ -97,7 +105,7 @@ fn run(args: &Args) -> Result<()> {
             engine.backend = match args.str_or("backend", "pipeline").as_str() {
                 "dense" => Backend::Dense,
                 "bitmap" => Backend::BitmapSequential,
-                "pipeline" => Backend::BitmapPipelined(Default::default()),
+                "pipeline" => Backend::BitmapPipelined(PipelineConfig::with_threads(threads)),
                 other => bail!("unknown backend {other}"),
             };
             let policy = BatchPolicy {
@@ -105,6 +113,7 @@ fn run(args: &Args) -> Result<()> {
                 max_wait: std::time::Duration::from_millis(
                     args.usize_or("max-wait-ms", 5)? as u64,
                 ),
+                num_threads: threads,
             };
             serve(engine, &args.str_or("addr", "127.0.0.1:7433"), policy, None)
         }

@@ -55,7 +55,8 @@ impl SalrLayer {
         if m <= DIRECT_M_MAX {
             let mut scratch = Vec::new();
             crate::gemm::sparse::bitmap_gemm_direct(x, &self.w_hat, out, m, &mut scratch);
-            self.adapters.apply_fused_acc(x, m, out);
+            let pool = crate::util::pool::WorkerPool::with_threads(cfg.num_threads);
+            self.adapters.apply_fused_acc_pool(x, m, out, &pool);
         } else {
             salr_gemm_pipelined(
                 x,

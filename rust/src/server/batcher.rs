@@ -33,6 +33,9 @@ pub struct Response {
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Worker threads for the engine's GEMM/pipeline stages
+    /// (0 = keep the engine's own setting / all cores).
+    pub num_threads: usize,
 }
 
 impl Default for BatchPolicy {
@@ -40,6 +43,7 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
+            num_threads: 0,
         }
     }
 }
@@ -243,6 +247,7 @@ mod tests {
         let batcher = Batcher::new(BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(3),
+            ..Default::default()
         });
         let b2 = batcher.clone();
         let worker = std::thread::spawn(move || b2.worker_loop(&eng));
@@ -277,6 +282,7 @@ mod tests {
         let batcher = Batcher::new(BatchPolicy {
             max_batch: 1,
             max_wait: Duration::from_millis(1),
+            ..Default::default()
         });
         let b2 = batcher.clone();
         let worker = std::thread::spawn(move || b2.worker_loop(&eng));

@@ -24,9 +24,13 @@ pub fn serve(
     policy: BatchPolicy,
     ready: Option<std::sync::mpsc::Sender<std::net::SocketAddr>>,
 ) -> Result<()> {
+    let mut engine = engine;
+    if policy.num_threads > 0 {
+        engine.set_threads(policy.num_threads);
+    }
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
-    log::info!("serving on {local}");
+    log::info!("serving on {local} ({} GEMM worker threads)", engine.num_threads());
     if let Some(tx) = ready {
         let _ = tx.send(local);
     }

@@ -5,6 +5,7 @@
 //! aligned comparison tables. Used by every `rust/benches/*.rs` target
 //! (`harness = false`) and by the table-reproduction drivers in `eval`.
 
+use crate::util::json::Json;
 use std::time::Instant;
 
 /// Result statistics of one benchmark case (all times in seconds/iteration).
@@ -29,6 +30,20 @@ impl Stats {
         } else {
             0.0
         }
+    }
+
+    /// Machine-readable form (times in seconds, rate in work units/s).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_s", self.mean)
+            .set("median_s", self.median)
+            .set("p10_s", self.p10)
+            .set("p90_s", self.p90)
+            .set("mad_s", self.mad)
+            .set("work_per_iter", self.work_per_iter)
+            .set("rate_per_s", self.rate())
     }
 }
 
@@ -126,6 +141,23 @@ impl Bench {
         &self.results
     }
 
+    /// All collected results as a JSON array.
+    pub fn results_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(Stats::to_json).collect())
+    }
+
+    /// Write results plus caller metadata to `path` as pretty JSON — the
+    /// machine-readable `BENCH_*.json` perf-trajectory files are built
+    /// from this (e.g. `SALR_BENCH_JSON=BENCH_gemm.json cargo bench
+    /// --bench bench_gemm`).
+    pub fn write_json(&self, path: &std::path::Path, meta: Json) -> std::io::Result<()> {
+        let doc = Json::obj()
+            .set("schema", "salr-bench-v1")
+            .set("meta", meta)
+            .set("results", self.results_json());
+        std::fs::write(path, doc.to_string_pretty())
+    }
+
     /// Render a comparison table with speedups relative to the first row.
     pub fn comparison_table(&self, title: &str) -> String {
         let mut out = String::new();
@@ -215,5 +247,23 @@ mod tests {
         assert!(s_slow.median > s_fast.median);
         assert_eq!(b.results().len(), 2);
         assert!(b.comparison_table("t").contains("fast"));
+    }
+
+    #[test]
+    fn json_emission_has_rates() {
+        let mut b = Bench {
+            measure_secs: 0.01,
+            warmup_secs: 0.002,
+            samples: 2,
+            results: Vec::new(),
+        };
+        b.run_with_work("case", 100.0, &mut || {
+            black_box(1 + 1);
+        });
+        let j = b.results_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").and_then(Json::as_str), Some("case"));
+        assert!(arr[0].get("rate_per_s").and_then(Json::as_f64).unwrap() > 0.0);
     }
 }

@@ -1,17 +1,19 @@
 //! Foundational utilities built from scratch (the offline vendor set has no
 //! `rand`, `serde`, `criterion` or `proptest`): a PCG64 PRNG, a JSON codec,
-//! a micro-benchmark harness, a property-test driver, a logger and process
-//! memory accounting.
+//! a micro-benchmark harness, a property-test driver, a logger, process
+//! memory accounting and a persistent worker pool.
 
 pub mod bench;
 pub mod json;
 pub mod logger;
 pub mod mem;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 
 pub use bench::Bench;
 pub use json::Json;
+pub use pool::WorkerPool;
 pub use rng::Rng;
 
 /// Format a byte count as a human-readable string (`12.3 MiB`).

@@ -1,0 +1,355 @@
+//! Persistent worker pool for the multi-core GEMM and pipeline stages.
+//!
+//! Threads are created **once** (per pool size) and reused for every
+//! parallel region; submitting work never spawns a thread. A parallel
+//! region is a *scoped parallel-for*: [`WorkerPool::run`] hands indices
+//! `0..n` to the pool workers **and the calling thread**, and does not
+//! return until every index has finished executing — which is what makes
+//! it sound to pass a closure borrowing stack data.
+//!
+//! Design notes:
+//!
+//! * Jobs go through a FIFO queue. Workers drain the front job
+//!   cooperatively (claiming indices from an atomic counter), pop it once
+//!   all indices are claimed, and move on. The caller always participates
+//!   in its own job, so a parallel-for completes even if every worker is
+//!   busy elsewhere — workers are an acceleration, never a requirement.
+//! * Jobs whose tasks *coordinate* with each other (the pipeline's decode
+//!   and consume roles) rely on the queue being FIFO plus the invariant
+//!   that a job's role count never exceeds `threads()`: the front job
+//!   eventually receives every worker, so all roles get running.
+//! * Task panics are caught at the task boundary, recorded, and re-raised
+//!   on the submitting thread after the region completes.
+
+use crossbeam_utils::CachePadded;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Raw `*mut f32` wrapper so pool tasks can write disjoint regions of a
+/// shared output buffer. The caller is responsible for disjointness.
+#[derive(Clone, Copy)]
+pub struct SendPtr(pub *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// One parallel-for region: workers claim indices `0..n` from `next`;
+/// `done` counts finished index executions.
+struct Job {
+    /// Type-erased borrowed closure. Only dereferenced for successfully
+    /// claimed indices, and the submitting thread blocks in `run` until
+    /// `done == n`, which keeps the referent alive for every dereference.
+    task: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    next: CachePadded<AtomicUsize>,
+    done: CachePadded<AtomicUsize>,
+    panicked: AtomicBool,
+}
+
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Inbox {
+    queue: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    inbox: Mutex<Inbox>,
+    cv: Condvar,
+}
+
+fn run_job(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            break;
+        }
+        // SAFETY: `i < n` means the submitting thread is still blocked in
+        // `run`, so the closure behind `task` is alive.
+        let task = unsafe { &*job.task };
+        if catch_unwind(AssertUnwindSafe(|| task(i))).is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        job.done.fetch_add(1, Ordering::Release);
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut inbox = shared.inbox.lock().unwrap();
+            loop {
+                if inbox.shutdown {
+                    return;
+                }
+                // Retire fully-claimed jobs from the front.
+                loop {
+                    let exhausted = match inbox.queue.front() {
+                        Some(front) => front.next.load(Ordering::Relaxed) >= front.n,
+                        None => break,
+                    };
+                    if exhausted {
+                        inbox.queue.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                if let Some(front) = inbox.queue.front() {
+                    break front.clone();
+                }
+                inbox = shared.cv.wait(inbox).unwrap();
+            }
+        };
+        run_job(&job);
+    }
+}
+
+/// A fixed-size pool of persistent worker threads (plus the caller).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` total execution contexts: `threads - 1` OS
+    /// threads are spawned; the submitting thread is always the last one.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            inbox: Mutex::new(Inbox {
+                queue: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("salr-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            threads,
+        }
+    }
+
+    /// Total execution contexts (spawned workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), …, f(n-1)` across the pool and the calling thread;
+    /// returns once all have finished. Panics (on the calling thread) if
+    /// any task panicked. Nested calls are allowed and cannot deadlock:
+    /// the nested caller drains its own job.
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if self.threads == 1 || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // Erase the borrow lifetime: sound because we do not return until
+        // `done == n` and no index is dereferenced after all are claimed.
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let job = Arc::new(Job {
+            task: task as *const (dyn Fn(usize) + Sync),
+            n,
+            next: CachePadded::new(AtomicUsize::new(0)),
+            done: CachePadded::new(AtomicUsize::new(0)),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            inbox.queue.push_back(job.clone());
+        }
+        self.shared.cv.notify_all();
+        run_job(&job);
+        let mut waited = 0u32;
+        while job.done.load(Ordering::Acquire) < n {
+            waited += 1;
+            if waited < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// The process-global pool, sized to `available_threads()` unless
+    /// [`WorkerPool::set_global_threads`] chose otherwise.
+    pub fn global() -> Arc<WorkerPool> {
+        let mut g = global_slot().lock().unwrap();
+        g.get_or_insert_with(|| Arc::new(WorkerPool::new(available_threads())))
+            .clone()
+    }
+
+    /// Resize the process-global pool (the CLI `--threads` knob).
+    /// `0` restores the hardware default.
+    pub fn set_global_threads(threads: usize) {
+        let threads = if threads == 0 {
+            available_threads()
+        } else {
+            threads
+        };
+        *global_slot().lock().unwrap() = Some(WorkerPool::sized(threads));
+    }
+
+    /// Resolve a thread-count knob to a persistent pool: `0` means the
+    /// process-global pool, anything else a cached pool of that exact size.
+    pub fn with_threads(threads: usize) -> Arc<WorkerPool> {
+        if threads == 0 {
+            WorkerPool::global()
+        } else {
+            WorkerPool::sized(threads)
+        }
+    }
+
+    fn sized(threads: usize) -> Arc<WorkerPool> {
+        static SIZED: OnceLock<Mutex<HashMap<usize, Arc<WorkerPool>>>> = OnceLock::new();
+        let map = SIZED.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut m = map.lock().unwrap();
+        m.entry(threads)
+            .or_insert_with(|| Arc::new(WorkerPool::new(threads)))
+            .clone()
+    }
+}
+
+fn global_slot() -> &'static Mutex<Option<Arc<WorkerPool>>> {
+    static GLOBAL: OnceLock<Mutex<Option<Arc<WorkerPool>>>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(None))
+}
+
+/// Hardware thread count (1 if it cannot be determined).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            inbox.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_on_caller() {
+        let pool = WorkerPool::new(1);
+        let sum = AtomicUsize::new(0);
+        pool.run(10, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn disjoint_writes_via_sendptr() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0.0f32; 64];
+        let ptr = SendPtr(out.as_mut_ptr());
+        pool.run(64, &|i| {
+            // SAFETY: each task writes only its own element.
+            unsafe { *ptr.0.add(i) = i as f32 };
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn panic_in_task_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate to the caller");
+        // The pool keeps working after a task panic.
+        let sum = AtomicUsize::new(0);
+        pool.run(4, &|i| {
+            sum.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn nested_runs_do_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            pool.run(4, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn concurrent_submissions_from_many_threads() {
+        let pool = WorkerPool::sized(3);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let p = pool.clone();
+                s.spawn(move || {
+                    let sum = AtomicUsize::new(0);
+                    p.run(32, &|i| {
+                        sum.fetch_add(i, Ordering::Relaxed);
+                    });
+                    assert_eq!(sum.load(Ordering::Relaxed), 31 * 32 / 2);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn with_threads_zero_is_global() {
+        let a = WorkerPool::with_threads(0);
+        let b = WorkerPool::global();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.threads() >= 1);
+    }
+}
