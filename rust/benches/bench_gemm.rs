@@ -111,11 +111,8 @@ fn main() {
         if let Json::Arr(v) = bs.results_json() {
             all.extend(v);
         }
-        let doc = Json::obj()
-            .set("schema", "salr-bench-v1")
-            .set("meta", meta)
-            .set("results", Json::Arr(all));
-        std::fs::write(&path, doc.to_string_pretty()).expect("write bench json");
+        salr::util::bench::write_bench_doc(&path, meta, Json::Arr(all))
+            .expect("write bench json");
         println!("wrote {path}");
     }
 }

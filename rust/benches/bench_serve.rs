@@ -1,0 +1,152 @@
+//! Serving-layer throughput: continuous batching at 1/2/4 engine
+//! workers, measured end to end through the admission queue (no TCP, so
+//! the numbers isolate the scheduler + engines, not socket overhead).
+//!
+//! Reports tokens/s, mean decode-batch occupancy, and p50/p99 request
+//! latency per worker count. Set `SALR_BENCH_JSON=path.json` to emit
+//! machine-readable results; env knobs `SALR_BENCH_CLIENTS` (default 16)
+//! and `SALR_BENCH_REQS` (default 4 per client) scale the load.
+//!
+//! Run: `cargo bench --bench bench_serve`
+
+use salr::infer::{Backend, Engine, EngineWeights};
+use salr::model::ParamStore;
+use salr::runtime::ModelCfg;
+use salr::server::{spawn_engine_workers, BatchPolicy, Batcher, Request};
+use salr::util::json::Json;
+use salr::util::rng::Rng;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn bench_engine() -> Engine {
+    let cfg = ModelCfg {
+        name: "bench-serve".into(),
+        vocab_size: 64,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 128,
+        max_seq_len: 64,
+        rank: 4,
+        lora_alpha: 8.0,
+        residual_rank: 4,
+        batch_size: 8,
+        ctx_keep: 0.5,
+    };
+    let mut rng = Rng::new(7001);
+    let base = ParamStore::init_base(&cfg, &mut rng);
+    Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense)
+}
+
+struct RunResult {
+    workers: usize,
+    wall_s: f64,
+    tokens: u64,
+    requests: u64,
+    occupancy: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn run_load(template: &Engine, workers: usize, clients: usize, reqs_per_client: usize) -> RunResult {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        engine_workers: workers,
+        ..Default::default()
+    };
+    let batcher = Batcher::new(policy);
+    let handles = spawn_engine_workers(&batcher, template.fork());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let b = batcher.clone();
+            s.spawn(move || {
+                for r in 0..reqs_per_client {
+                    let resp = b.submit(Request {
+                        id: (c * reqs_per_client + r) as u64,
+                        prompt: format!("Q: {}+{}=? A: ", 10 + c, 3 + r),
+                        max_tokens: 16,
+                    });
+                    assert_eq!(resp.tokens, 16);
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let (p50, _p90, p99) = batcher.metrics.latency_percentiles();
+    let res = RunResult {
+        workers,
+        wall_s,
+        tokens: batcher.metrics.tokens_out.load(Ordering::Relaxed),
+        requests: batcher.metrics.requests.load(Ordering::Relaxed),
+        occupancy: batcher.metrics.mean_batch_occupancy(),
+        p50_ms: p50,
+        p99_ms: p99,
+    };
+    batcher.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    res
+}
+
+fn main() {
+    let clients = env_usize("SALR_BENCH_CLIENTS", 16);
+    let reqs = env_usize("SALR_BENCH_REQS", 4);
+    let template = bench_engine();
+    println!("# continuous-batching serving throughput");
+    println!("# load: {clients} clients x {reqs} requests x 16 tokens\n");
+    // Warm the kernels/pools once so t=1 is not charged for cold start.
+    let _ = run_load(&template, 1, 2, 1);
+
+    let mut rows = Vec::new();
+    for &w in &WORKER_COUNTS {
+        let r = run_load(&template, w, clients, reqs);
+        println!(
+            "engine_workers={:<2} {:>8.1} tok/s  occupancy {:>5.2}  p50 {:>7.1} ms  p99 {:>7.1} ms  ({} reqs in {:.2}s)",
+            r.workers,
+            r.tokens as f64 / r.wall_s,
+            r.occupancy,
+            r.p50_ms,
+            r.p99_ms,
+            r.requests,
+            r.wall_s,
+        );
+        rows.push(r);
+    }
+
+    if let Ok(path) = std::env::var("SALR_BENCH_JSON") {
+        let results = Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    Json::obj()
+                        .set("engine_workers", r.workers)
+                        .set("tokens_per_sec", r.tokens as f64 / r.wall_s)
+                        .set("mean_batch_occupancy", r.occupancy)
+                        .set("latency_p50_ms", r.p50_ms)
+                        .set("latency_p99_ms", r.p99_ms)
+                        .set("requests", r.requests)
+                        .set("wall_s", r.wall_s)
+                })
+                .collect(),
+        );
+        let meta = Json::obj()
+            .set("bench", "serve")
+            .set("clients", clients)
+            .set("reqs_per_client", reqs)
+            .set("tokens_per_req", 16)
+            .set("host_threads", salr::util::pool::available_threads());
+        salr::util::bench::write_bench_doc(&path, meta, results)
+            .expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}

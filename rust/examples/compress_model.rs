@@ -3,7 +3,8 @@
 //! 20%-sparse + NF4 (QSALR) — with byte-exact file sizes and roundtrip
 //! error per encoding.
 //!
-//! Run: `cargo run --release --example compress_model` (after `make artifacts`)
+//! Run: `cargo run --release --example compress_model`
+//! (needs AOT artifacts: `cd python && python -m compile.aot --out ../artifacts`)
 
 use anyhow::Result;
 use salr::eval::ExpContext;

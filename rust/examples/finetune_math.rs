@@ -12,7 +12,8 @@
 //!     pipeline backend — L1's algorithm in deployment form);
 //!  6. serialize the compressed model and report sizes.
 //!
-//! Run: `cargo run --release --example finetune_math` (after `make artifacts`)
+//! Run: `cargo run --release --example finetune_math`
+//! (needs AOT artifacts: `cd python && python -m compile.aot --out ../artifacts`)
 //! Env: SALR_PRETRAIN_STEPS / SALR_STEPS / SALR_EVAL_N scale the run.
 
 use anyhow::Result;

@@ -1,8 +1,11 @@
-//! Serving example: start the batching TCP server over a SALR-deployed
-//! model (bitmap pipeline backend), fire concurrent client requests, and
-//! report latency/throughput — the paper's deployment story end to end.
+//! Serving example: start the continuous-batching TCP server over a
+//! SALR-deployed model (bitmap pipeline backend) with two engine
+//! workers, fire concurrent + pipelined client requests, and report
+//! latency/throughput/occupancy — the paper's deployment story end to
+//! end.
 //!
-//! Run: `cargo run --release --example serve_batch` (after `make artifacts`)
+//! Run: `cargo run --release --example serve_batch`
+//! (needs AOT artifacts: `cd python && python -m compile.aot --out ../artifacts`)
 
 use anyhow::Result;
 use salr::eval::{deploy_engine, ExpContext, RunKey, Task};
@@ -28,7 +31,8 @@ fn main() -> Result<()> {
     let (spec, adapters, _) = ctx.run(&key)?;
     let engine = deploy_engine(&ctx.cfg, &spec, &adapters, None)?;
 
-    // Start the server on an ephemeral port.
+    // Start the server on an ephemeral port: 2 continuous-batching engine
+    // workers, 8 KV slots each.
     let (tx, rx) = std::sync::mpsc::channel();
     let server = std::thread::spawn(move || {
         serve(
@@ -37,27 +41,37 @@ fn main() -> Result<()> {
             BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_millis(4),
+                engine_workers: 2,
                 ..Default::default()
             },
             Some(tx),
         )
     });
     let addr = rx.recv()?;
-    println!("server up on {addr}");
+    println!("server up on {addr} (2 engine workers)");
 
-    // Fire 24 concurrent requests from 8 client threads.
+    // Fire 24 requests from 8 client threads. Each client *pipelines* its
+    // 3 requests on one connection — replies come back in completion
+    // order and are matched by id.
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
-    for c in 0..8 {
+    for c in 0..8u64 {
         let addr = addr.to_string();
         handles.push(std::thread::spawn(move || -> Result<Vec<Json>> {
             let mut client = Client::connect(&addr)?;
-            let mut replies = Vec::new();
-            for i in 0..3 {
+            for i in 0..3u64 {
                 let a = 10 + c * 7 + i;
                 let b = 20 + i * 3;
-                let reply = client.generate(&format!("Q: {a}+{b}=? A: "), 5)?;
-                replies.push(reply);
+                client.send(
+                    &Json::obj()
+                        .set("id", c * 3 + i)
+                        .set("prompt", format!("Q: {a}+{b}=? A: "))
+                        .set("max_tokens", 5u64),
+                )?;
+            }
+            let mut replies = Vec::new();
+            for _ in 0..3 {
+                replies.push(client.recv()?);
             }
             Ok(replies)
         }));
@@ -70,7 +84,8 @@ fn main() -> Result<()> {
             total_tokens += reply.get("tokens").and_then(Json::as_usize).unwrap_or(0);
             if n <= 4 {
                 println!(
-                    "  sample reply: text={:?} queue={:.1}ms compute={:.1}ms",
+                    "  sample reply: id={} text={:?} queue={:.1}ms compute={:.1}ms",
+                    reply.get("id").and_then(Json::as_usize).unwrap_or(0),
                     reply.get("text").and_then(Json::as_str).unwrap_or(""),
                     reply.get("queue_ms").and_then(Json::as_f64).unwrap_or(0.0),
                     reply.get("compute_ms").and_then(Json::as_f64).unwrap_or(0.0),
@@ -85,12 +100,17 @@ fn main() -> Result<()> {
     let metrics = client.metrics()?;
     println!("\n== serving metrics ==");
     println!(
-        "  requests: {}  mean batch: {:.2}",
+        "  requests: {}  decode steps: {}  mean occupancy: {:.2}  midstream admissions: {}",
         metrics.get("requests").and_then(Json::as_usize).unwrap_or(0),
+        metrics.get("decode_steps").and_then(Json::as_usize).unwrap_or(0),
         metrics
-            .get("mean_batch_size")
+            .get("mean_batch_occupancy")
             .and_then(Json::as_f64)
             .unwrap_or(0.0),
+        metrics
+            .get("admitted_midstream")
+            .and_then(Json::as_usize)
+            .unwrap_or(0),
     );
     println!(
         "  latency p50/p90/p99: {:.1} / {:.1} / {:.1} ms",

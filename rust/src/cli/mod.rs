@@ -109,6 +109,12 @@ COMMON FLAGS:
   --addr HOST:PORT  serve address (default 127.0.0.1:7433)
   --backend NAME    dense|bitmap|pipeline (default pipeline)
   --threads N       GEMM + pipeline worker threads (default: all cores)
+
+SERVE FLAGS:
+  --engine-workers W  continuous-batching engine worker loops (default 1);
+                      each owns max-batch KV slots and threads/W GEMM threads
+  --max-batch N       decode-batch slots per engine worker (default 8)
+  --max-wait-ms T     idle-worker admission poll interval (default 5)
 ";
 
 /// Parse a baseline name.

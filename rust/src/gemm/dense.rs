@@ -14,9 +14,11 @@
 
 use crate::util::pool::{SendPtr, WorkerPool};
 
-/// Outer cache blocking (elements).
+/// Outer cache blocking: M rows per L2 block.
 pub const MC: usize = 64;
+/// Outer cache blocking: K depth per packed panel.
 pub const KC: usize = 256;
+/// Outer cache blocking: N columns per packed panel group.
 pub const NC: usize = 512;
 
 /// Register micro-tile.

@@ -58,14 +58,17 @@ impl AdapterStack {
         }
     }
 
+    /// Sum of the constituent adapter ranks (columns of `A_cat`).
     pub fn total_rank(&self) -> usize {
         self.ranks.iter().sum()
     }
 
+    /// Shared input width of every adapter.
     pub fn k(&self) -> usize {
         self.a_cat.rows()
     }
 
+    /// Shared output width of every adapter.
     pub fn n(&self) -> usize {
         self.b_cat.cols()
     }

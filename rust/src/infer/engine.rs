@@ -5,8 +5,26 @@
 //! integration tests assert that agreement. The adapted linears dispatch
 //! on [`Backend`]: dense merged weights (LoRA deployment) vs bitmap-sparse
 //! + fused adapters through the two-stage pipeline (SALR deployment).
+//!
+//! Generation is exposed at two granularities:
+//!
+//! * [`Engine::generate_batch`] — decode a static batch to completion
+//!   (experiments, eval, benches);
+//! * [`Engine::prefill`] + [`Engine::decode_step`] over a
+//!   [`KvSlotPool`] — one decode iteration at a time, with batch
+//!   membership free to change between steps. This is the primitive the
+//!   server's continuous-batching scheduler drives.
+//!
+//! Every per-sequence result is independent of which other sequences
+//! share the batch: the linears compute each output row from its input
+//! row alone (fixed k-accumulation order, row-band partitioning), RMSNorm
+//! and attention are per-row, and greedy sampling is per-row argmax — so
+//! a sequence's token stream is bitwise identical whether it decodes
+//! alone, in a static batch, or in a continuously mutating batch.
+//! `generate_batch` is itself implemented on the step API, and the server
+//! integration tests assert the equivalence end to end.
 
-use super::kv_cache::KvCache;
+use super::kv_cache::{KvCache, KvSlotPool};
 use crate::gemm::dense::gemm_f32_pool;
 use crate::gemm::pipeline::PipelineConfig;
 use crate::model::ParamStore;
@@ -58,6 +76,7 @@ struct LayerWeights {
 
 /// All deployed weights.
 pub struct EngineWeights {
+    /// Model geometry (shared with the training/eval side).
     pub cfg: ModelCfg,
     embed: Tensor,
     pos_embed: Tensor,
@@ -193,32 +212,71 @@ fn merge_adapters_into(cfg: &ModelCfg, adapters: &ParamStore, name: &str, w: &mu
 }
 
 /// The engine: weights + backend + the worker pool its GEMMs run on.
+///
+/// Weights are held behind an [`Arc`], so [`Engine::fork`] clones are
+/// cheap: the server's engine workers share one copy of the deployed
+/// model while each owning their own KV slots and (optionally) their own
+/// slice of the machine's worker threads.
 pub struct Engine {
-    pub weights: EngineWeights,
+    /// Deployed weights, shared by every fork of this engine.
+    pub weights: Arc<EngineWeights>,
+    /// How the adapted linears execute.
     pub backend: Backend,
-    /// Pool for the dense linears and the logit GEMM; the pipelined
-    /// backend resolves its own pool from `PipelineConfig::num_threads`.
+    /// Pool for the dense linears, the small-m sparse path and the logit
+    /// GEMM; the pipelined backend resolves its own pool from
+    /// `PipelineConfig::num_threads`.
     pool: Arc<WorkerPool>,
 }
 
 impl Engine {
+    /// Engine on the process-global worker pool (every available core).
     pub fn new(weights: EngineWeights, backend: Backend) -> Engine {
         Engine::with_threads(weights, backend, 0)
     }
 
     /// Engine pinned to `num_threads` GEMM workers (0 = the process-global
     /// pool, i.e. every available core). Also aligns the pipelined
-    /// backend's thread knob so both execution paths agree.
-    pub fn with_threads(weights: EngineWeights, mut backend: Backend, num_threads: usize) -> Engine {
+    /// backend's thread knob so both execution paths agree; `0` is kept
+    /// as-is so both resolve to the *same* global pool instance rather
+    /// than a duplicate full-width one.
+    pub fn with_threads(
+        weights: EngineWeights,
+        mut backend: Backend,
+        num_threads: usize,
+    ) -> Engine {
         if num_threads > 0 {
             if let Backend::BitmapPipelined(cfg) = &mut backend {
                 cfg.num_threads = num_threads;
             }
         }
         Engine {
-            weights,
+            weights: Arc::new(weights),
             backend,
             pool: WorkerPool::with_threads(num_threads),
+        }
+    }
+
+    /// Engine on an explicit (possibly private, un-registered) pool — the
+    /// server gives each engine worker a disjoint share of the machine
+    /// this way.
+    pub fn with_pool(weights: EngineWeights, backend: Backend, pool: Arc<WorkerPool>) -> Engine {
+        let mut e = Engine {
+            weights: Arc::new(weights),
+            backend,
+            pool,
+        };
+        e.align_backend_threads();
+        e
+    }
+
+    /// A second engine over the *same* weights (Arc-shared) with the same
+    /// backend and pool. Forks are independent for everything mutable —
+    /// KV slots, backend knobs, pool assignment.
+    pub fn fork(&self) -> Engine {
+        Engine {
+            weights: self.weights.clone(),
+            backend: self.backend,
+            pool: self.pool.clone(),
         }
     }
 
@@ -230,9 +288,30 @@ impl Engine {
         }
     }
 
+    /// Re-point the engine at an explicit pool (e.g. a private per-worker
+    /// pool that is not in the global size registry).
+    pub fn set_pool(&mut self, pool: Arc<WorkerPool>) {
+        self.pool = pool;
+        self.align_backend_threads();
+    }
+
+    /// Keep the pipelined backend's thread knob consistent with the
+    /// engine pool so both execution paths use the same parallel width.
+    fn align_backend_threads(&mut self) {
+        let t = self.pool.threads();
+        if let Backend::BitmapPipelined(cfg) = &mut self.backend {
+            cfg.num_threads = t;
+        }
+    }
+
     /// Execution contexts the engine's GEMMs use.
     pub fn num_threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// The worker pool the engine's linears run on.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     fn linear(&self, w: &LinearW, x: &[f32], m: usize, out: &mut [f32]) {
@@ -241,7 +320,7 @@ impl Engine {
                 gemm_f32_pool(x, t.data(), out, m, t.rows(), t.cols(), &self.pool);
             }
             (LinearW::Salr(l), Backend::BitmapPipelined(cfg)) => {
-                l.forward(x, m, out, cfg);
+                l.forward(x, m, out, cfg, &self.pool);
             }
             (LinearW::Salr(l), _) => {
                 // Sequential: decode fully, then GEMM, then adapters — all
@@ -416,46 +495,87 @@ impl Engine {
             .collect()
     }
 
-    /// Greedy generation for a batch of prompts. Prompts are prefilled
-    /// token-sequentially per sequence; decode steps run the whole batch
-    /// through the linears together (the m-row GEMMs the batcher feeds).
+    /// A KV slot pool sized for this engine (`slots` concurrent
+    /// sequences, each with full-context caches for every layer).
+    pub fn new_slot_pool(&self, slots: usize) -> KvSlotPool {
+        let cfg = &self.weights.cfg;
+        KvSlotPool::new(slots, cfg.n_layers, cfg.max_seq_len, cfg.d_model)
+    }
+
+    /// Prefill `prompt` into `slot` of `kv` (which must be freshly
+    /// allocated, i.e. empty) and greedily sample the sequence's first
+    /// token. Prefill runs the whole prompt as one multi-row forward, so
+    /// large prompts still use the prefill-shaped (pipelined) kernels.
+    pub fn prefill(&self, prompt: &[i32], slot: usize, kv: &mut KvSlotPool) -> i32 {
+        let cfg = &self.weights.cfg;
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(prompt.len() <= cfg.max_seq_len, "prompt exceeds max_seq_len");
+        assert_eq!(kv.seq_len(slot), 0, "prefill into a non-empty slot");
+        let pos: Vec<usize> = (0..prompt.len()).collect();
+        let rows = vec![slot; prompt.len()];
+        let hidden = self.forward_rows(prompt, &pos, kv.slots_mut(), &rows);
+        let d = cfg.d_model;
+        let last = &hidden[(prompt.len() - 1) * d..prompt.len() * d];
+        let lg = self.logits(last, 1);
+        argmax(&lg) as i32
+    }
+
+    /// One decode iteration for the sequences in `slots`: feed each
+    /// sequence's `current` token at its cache position, append K/V, and
+    /// return the next greedy token per sequence (same order as `slots`).
+    ///
+    /// The batch composition is free to change between calls — each
+    /// output row depends only on its own input row and its own slot's
+    /// cache, so admitting or retiring other sequences never changes a
+    /// sequence's tokens (the continuous-batching determinism argument;
+    /// see DESIGN.md "Serving layer").
+    pub fn decode_step(&self, current: &[i32], slots: &[usize], kv: &mut KvSlotPool) -> Vec<i32> {
+        let cfg = &self.weights.cfg;
+        let m = current.len();
+        assert_eq!(m, slots.len(), "one slot per sequence");
+        if m == 0 {
+            return Vec::new();
+        }
+        let pos: Vec<usize> = slots.iter().map(|&s| kv.seq_len(s)).collect();
+        let hidden = self.forward_rows(current, &pos, kv.slots_mut(), slots);
+        let lg = self.logits(&hidden, m);
+        (0..m)
+            .map(|i| argmax(&lg[i * cfg.vocab_size..(i + 1) * cfg.vocab_size]) as i32)
+            .collect()
+    }
+
+    /// Greedy generation for a static batch of prompts, decoded to
+    /// completion (every sequence gets exactly `max_new` tokens).
+    ///
+    /// Implemented on the step API: prompts are prefilled sequentially
+    /// per sequence, then every decode step runs the whole batch through
+    /// the linears together (the m-row GEMMs the batcher feeds).
     pub fn generate_batch(&self, prompts: &[Vec<i32>], max_new: usize) -> Vec<Vec<i32>> {
         let cfg = &self.weights.cfg;
         let nseq = prompts.len();
-        let mut caches: Vec<Vec<KvCache>> = (0..nseq).map(|_| self.new_caches()).collect();
-        // Prefill each prompt (rows = prompt tokens of one sequence).
-        let mut last_hidden: Vec<Vec<f32>> = Vec::with_capacity(nseq);
-        for (s, prompt) in prompts.iter().enumerate() {
-            assert!(!prompt.is_empty(), "empty prompt");
-            assert!(
-                prompt.len() + max_new <= cfg.max_seq_len,
-                "prompt + generation exceeds max_seq_len"
-            );
-            let pos: Vec<usize> = (0..prompt.len()).collect();
-            let rows = vec![s; prompt.len()];
-            let hidden = self.forward_rows(prompt, &pos, &mut caches, &rows);
-            let d = cfg.d_model;
-            last_hidden.push(hidden[(prompt.len() - 1) * d..prompt.len() * d].to_vec());
-        }
-        // First sampled token per sequence.
+        let mut kv = self.new_slot_pool(nseq);
         let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); nseq];
         let mut current: Vec<i32> = Vec::with_capacity(nseq);
-        for s in 0..nseq {
-            let lg = self.logits(&last_hidden[s], 1);
-            current.push(argmax(&lg) as i32);
-            outputs[s].push(current[s]);
+        let slots: Vec<usize> = prompts
+            .iter()
+            .map(|prompt| {
+                assert!(
+                    prompt.len() + max_new <= cfg.max_seq_len,
+                    "prompt + generation exceeds max_seq_len"
+                );
+                kv.alloc().expect("slot pool sized for the batch")
+            })
+            .collect();
+        for (s, prompt) in prompts.iter().enumerate() {
+            let first = self.prefill(prompt, slots[s], &mut kv);
+            current.push(first);
+            outputs[s].push(first);
         }
-        // Batched decode steps.
         for _step in 1..max_new {
-            let pos: Vec<usize> = (0..nseq).map(|s| caches[s][0].len).collect();
-            let rows: Vec<usize> = (0..nseq).collect();
-            let hidden = self.forward_rows(&current, &pos, &mut caches, &rows);
-            let lg = self.logits(&hidden, nseq);
+            let next = self.decode_step(&current, &slots, &mut kv);
             for s in 0..nseq {
-                let next =
-                    argmax(&lg[s * cfg.vocab_size..(s + 1) * cfg.vocab_size]) as i32;
-                current[s] = next;
-                outputs[s].push(next);
+                current[s] = next[s];
+                outputs[s].push(next[s]);
             }
         }
         outputs
@@ -585,6 +705,108 @@ mod tests {
         // Generation still works on the resized pool.
         let gen = e.generate_batch(&[vec![1, 2, 3]], 2);
         assert_eq!(gen[0].len(), 2);
+    }
+
+    #[test]
+    fn step_api_with_changing_membership_matches_static_batches() {
+        // Continuous-batching determinism: a sequence decoded while batch
+        // membership churns around it produces exactly the tokens it
+        // produces alone.
+        let cfg = test_cfg();
+        let mut rng = Rng::new(405);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let engine =
+            Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense);
+        let p1: Vec<i32> = vec![1, 2, 3];
+        let p2: Vec<i32> = vec![50, 51, 52, 53];
+        let p3: Vec<i32> = vec![9, 8];
+        let solo1 = engine.generate_batch(&[p1.clone()], 5)[0].clone();
+        let solo2 = engine.generate_batch(&[p2.clone()], 4)[0].clone();
+        let solo3 = engine.generate_batch(&[p3.clone()], 3)[0].clone();
+
+        // Drive the step API by hand: start seq1, admit seq2 after two
+        // steps, retire seq2 early, admit seq3 into seq2's freed slot.
+        let mut kv = engine.new_slot_pool(2);
+        let s1 = kv.alloc().unwrap();
+        let mut out1 = vec![engine.prefill(&p1, s1, &mut kv)];
+        for _ in 0..2 {
+            let next = engine.decode_step(&[*out1.last().unwrap()], &[s1], &mut kv);
+            out1.push(next[0]);
+        }
+        let s2 = kv.alloc().unwrap();
+        let mut out2 = vec![engine.prefill(&p2, s2, &mut kv)];
+        for _ in 0..3 {
+            let cur = [*out1.last().unwrap(), *out2.last().unwrap()];
+            let next = engine.decode_step(&cur, &[s1, s2], &mut kv);
+            // seq1 hits its 5-token budget after the second joint step.
+            if out1.len() < 5 {
+                out1.push(next[0]);
+            }
+            out2.push(next[1]);
+        }
+        kv.free(s1);
+        let s3 = kv.alloc().unwrap();
+        assert_eq!(s3, s1, "freed KV slot must be reused");
+        let mut out3 = vec![engine.prefill(&p3, s3, &mut kv)];
+        for _ in 0..2 {
+            let cur = [*out3.last().unwrap()];
+            let next = engine.decode_step(&cur, &[s3], &mut kv);
+            out3.push(next[0]);
+        }
+        assert_eq!(out1, solo1, "seq1 tokens changed under churn");
+        assert_eq!(out2, solo2, "seq2 tokens changed under churn");
+        assert_eq!(out3, solo3, "seq3 tokens changed in a reused slot");
+    }
+
+    #[test]
+    fn engine_uses_the_configured_pool() {
+        // `with_pool` must wire the exact pool instance through to the
+        // linears (SalrLayer::forward takes it by reference now — no
+        // global-registry lookup on the small-m decode path).
+        let cfg = test_cfg();
+        let mut rng = Rng::new(406);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let build = crate::salr::build_salr(&cfg, &base, 0.5, 3);
+        let adapters = ParamStore::init_adapters(&cfg, &mut rng, true);
+        let private = Arc::new(WorkerPool::new(3));
+        let engine = Engine::with_pool(
+            EngineWeights::salr(&cfg, &build.params, &adapters, None),
+            Backend::BitmapPipelined(PipelineConfig::default()),
+            private.clone(),
+        );
+        assert!(Arc::ptr_eq(engine.pool(), &private));
+        assert_eq!(engine.num_threads(), 3);
+        match engine.backend {
+            Backend::BitmapPipelined(c) => assert_eq!(c.num_threads, 3),
+            _ => unreachable!(),
+        }
+        // Decode (small-m SALR path) runs fine on the private pool and
+        // matches the same engine on the global pool.
+        let reference = Engine::new(
+            EngineWeights::salr(&cfg, &build.params, &adapters, None),
+            Backend::BitmapPipelined(PipelineConfig::default()),
+        );
+        let prompt: Vec<i32> = vec![4, 9, 14];
+        assert_eq!(
+            engine.generate_batch(&[prompt.clone()], 4),
+            reference.generate_batch(&[prompt], 4)
+        );
+    }
+
+    #[test]
+    fn fork_shares_weights() {
+        let cfg = test_cfg();
+        let mut rng = Rng::new(407);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let engine =
+            Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense);
+        let fork = engine.fork();
+        assert!(Arc::ptr_eq(&engine.weights, &fork.weights));
+        let p: Vec<i32> = vec![7, 7, 7];
+        assert_eq!(
+            engine.generate_batch(&[p.clone()], 3),
+            fork.generate_batch(&[p], 3)
+        );
     }
 
     #[test]

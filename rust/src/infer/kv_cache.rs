@@ -1,17 +1,23 @@
-//! Per-sequence key/value cache for autoregressive decode.
+//! Per-sequence key/value caches for autoregressive decode, plus the
+//! fixed-capacity slot pool the continuous-batching scheduler allocates
+//! sequences from.
 
 /// KV cache for one transformer layer and one sequence: rows are time
 /// steps, `d_model` columns split across heads by the engine.
 #[derive(Clone, Debug)]
 pub struct KvCache {
+    /// Cached keys, row-major `[len, d_model]` (rows beyond `len` are free).
     pub keys: Vec<f32>,
+    /// Cached values, same layout as `keys`.
     pub values: Vec<f32>,
+    /// Number of time steps currently cached.
     pub len: usize,
     d_model: usize,
     capacity: usize,
 }
 
 impl KvCache {
+    /// Cache with room for `capacity` time steps of width `d_model`.
     pub fn new(capacity: usize, d_model: usize) -> KvCache {
         KvCache {
             keys: vec![0.0; capacity * d_model],
@@ -39,17 +45,90 @@ impl KvCache {
         &self.keys[t * self.d_model..(t + 1) * self.d_model]
     }
 
+    /// Value row at time `t`.
     #[inline]
     pub fn value(&self, t: usize) -> &[f32] {
         &self.values[t * self.d_model..(t + 1) * self.d_model]
     }
 
+    /// Forget all cached steps (the backing storage is reused, not freed).
     pub fn reset(&mut self) {
         self.len = 0;
     }
 
+    /// Maximum number of time steps this cache can hold.
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+}
+
+/// A fixed pool of KV-cache *slots* for continuous batching.
+///
+/// Each slot holds one sequence's per-layer caches (`[n_layers]` of
+/// [`KvCache`]), all allocated up front. The scheduler admits a request by
+/// [`alloc`](KvSlotPool::alloc)-ing a slot, decodes it for as many steps
+/// as it needs, and [`free`](KvSlotPool::free)-s the slot when the
+/// sequence retires — the freed cache rows are reused by the next
+/// admission without touching the allocator, so batch membership can
+/// change between decode steps at zero allocation cost.
+#[derive(Debug)]
+pub struct KvSlotPool {
+    slots: Vec<Vec<KvCache>>,
+    free: Vec<usize>,
+}
+
+impl KvSlotPool {
+    /// Pool of `slots` sequences × `n_layers` caches, each with room for
+    /// `capacity` steps of width `d_model`.
+    pub fn new(slots: usize, n_layers: usize, capacity: usize, d_model: usize) -> KvSlotPool {
+        KvSlotPool {
+            slots: (0..slots)
+                .map(|_| (0..n_layers).map(|_| KvCache::new(capacity, d_model)).collect())
+                .collect(),
+            // Pop from the back; keep ascending order so slot 0 is handed
+            // out first (stable, deterministic slot assignment).
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    /// Claim a free slot (its caches reset to length 0), or `None` when
+    /// every slot is occupied.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        for c in &mut self.slots[slot] {
+            c.reset();
+        }
+        Some(slot)
+    }
+
+    /// Return `slot` to the free list. The cache rows are reused as-is by
+    /// the next [`alloc`](KvSlotPool::alloc) (which resets the lengths).
+    pub fn free(&mut self, slot: usize) {
+        debug_assert!(!self.free.contains(&slot), "double free of kv slot {slot}");
+        self.free.push(slot);
+        // Keep descending so pops hand out the lowest free slot first.
+        self.free.sort_unstable_by(|a, b| b.cmp(a));
+    }
+
+    /// Number of currently free slots.
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Total number of slots (free + occupied).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// All slots' per-layer caches, indexed `[slot][layer]` — the shape
+    /// [`Engine::decode_step`](crate::infer::Engine::decode_step) expects.
+    pub fn slots_mut(&mut self) -> &mut [Vec<KvCache>] {
+        &mut self.slots
+    }
+
+    /// Cached sequence length of `slot` (its next decode position).
+    pub fn seq_len(&self, slot: usize) -> usize {
+        self.slots[slot].first().map(|c| c.len).unwrap_or(0)
     }
 }
 
@@ -75,5 +154,28 @@ mod tests {
         let mut c = KvCache::new(1, 2);
         c.push(&[0.0, 0.0], &[0.0, 0.0]);
         c.push(&[0.0, 0.0], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn slot_pool_alloc_free_reuses_lowest_first() {
+        let mut pool = KvSlotPool::new(3, 2, 4, 2);
+        assert_eq!(pool.capacity(), 3);
+        assert_eq!(pool.available(), 3);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_eq!((a, b), (0, 1));
+        // Write into slot 0, free it, re-alloc: caches come back reset.
+        pool.slots_mut()[a][0].push(&[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(pool.seq_len(a), 1);
+        pool.free(a);
+        let c = pool.alloc().unwrap();
+        assert_eq!(c, 0, "lowest free slot is handed out first");
+        assert_eq!(pool.seq_len(c), 0, "realloc must reset lengths");
+        let d = pool.alloc().unwrap();
+        assert_eq!(d, 2);
+        assert_eq!(pool.alloc(), None, "pool exhausted");
+        pool.free(b);
+        assert_eq!(pool.available(), 1);
+        assert_eq!(pool.alloc(), Some(1));
     }
 }

@@ -3,9 +3,15 @@
 //! decode; adapted linears execute either densely (LoRA baseline) or via
 //! the bitmap two-stage pipeline (SALR), so Table 4's tokens/s compares
 //! the same engine with different weight formats.
+//!
+//! Besides run-to-completion [`Engine::generate_batch`], the engine
+//! exposes the iteration-level [`Engine::prefill`] /
+//! [`Engine::decode_step`] API over a [`KvSlotPool`], which is what the
+//! server's continuous-batching scheduler drives: sequences join and
+//! leave the decode batch between steps, reusing freed KV slots.
 
 mod engine;
 mod kv_cache;
 
 pub use engine::{Backend, Engine, EngineWeights};
-pub use kv_cache::KvCache;
+pub use kv_cache::{KvCache, KvSlotPool};

@@ -7,8 +7,8 @@
 //! * **Layer 3 (this crate)** — the coordinator: pruning, bitmap sparse
 //!   codec, truncated-SVD residual adapters, adapter concatenation, the
 //!   two-stage decode+GEMM pipeline, a fine-tuning driver, a native
-//!   inference engine, and a batching server. Python never runs on the
-//!   request path.
+//!   inference engine, and a continuous-batching server with multiple
+//!   engine workers. Python never runs on the request path.
 //! * **Layer 2** — a JAX transformer (`python/compile/model.py`) whose
 //!   train / eval / generate steps are AOT-lowered to HLO text and executed
 //!   through the PJRT CPU client (`runtime`).
@@ -22,7 +22,14 @@
 pub mod cli;
 pub mod data;
 pub mod eval;
+// The serving-path modules hold the crate's load-bearing public API, so
+// they carry a documentation guarantee: every public item is documented
+// (`missing_docs` is scoped here and `cargo doc` runs with
+// `RUSTDOCFLAGS="-D warnings"` in CI; `util::pool` opts in from
+// `util/mod.rs`).
+#[warn(missing_docs)]
 pub mod gemm;
+#[warn(missing_docs)]
 pub mod infer;
 pub mod linalg;
 pub mod model;
@@ -30,6 +37,7 @@ pub mod prune;
 pub mod quant;
 pub mod runtime;
 pub mod salr;
+#[warn(missing_docs)]
 pub mod server;
 pub mod sparse;
 pub mod tensor;

@@ -114,6 +114,7 @@ fn run(args: &Args) -> Result<()> {
                     args.usize_or("max-wait-ms", 5)? as u64,
                 ),
                 num_threads: threads,
+                engine_workers: args.usize_or("engine-workers", 1)?.max(1),
             };
             serve(engine, &args.str_or("addr", "127.0.0.1:7433"), policy, None)
         }

@@ -42,7 +42,7 @@ impl SalrLayer {
         }
     }
 
-    /// `y[m, d_out] = x @ Ŵ + (x A_cat) B_cat`.
+    /// `y[m, d_out] = x @ Ŵ + (x A_cat) B_cat`, on the caller's `pool`.
     ///
     /// Dispatches on batch height: decode-sized batches (small m) use the
     /// zero-skipping *direct* sparse kernel — at 50% sparsity it does half
@@ -50,13 +50,26 @@ impl SalrLayer {
     /// where the paper's inference speedup comes from on this CPU testbed.
     /// Large (prefill-sized) batches use the two-stage pipelined
     /// decode+GEMM, where amortizing the decode across many rows wins.
-    pub fn forward(&self, x: &[f32], m: usize, out: &mut [f32], cfg: PipelineConfig) {
+    ///
+    /// `pool` is the engine's own worker pool — threaded down explicitly
+    /// so a hot decode step never does a global pool-registry lookup, and
+    /// so private per-engine-worker pools (which are *not* in the
+    /// registry) are honored. The pipelined large-m path still sizes its
+    /// stage workers from `cfg.num_threads`; engines keep that knob
+    /// aligned with their pool.
+    pub fn forward(
+        &self,
+        x: &[f32],
+        m: usize,
+        out: &mut [f32],
+        cfg: PipelineConfig,
+        pool: &crate::util::pool::WorkerPool,
+    ) {
         const DIRECT_M_MAX: usize = 32;
         if m <= DIRECT_M_MAX {
             let mut scratch = Vec::new();
             crate::gemm::sparse::bitmap_gemm_direct(x, &self.w_hat, out, m, &mut scratch);
-            let pool = crate::util::pool::WorkerPool::with_threads(cfg.num_threads);
-            self.adapters.apply_fused_acc_pool(x, m, out, &pool);
+            self.adapters.apply_fused_acc_pool(x, m, out, pool);
         } else {
             salr_gemm_pipelined(
                 x,
@@ -127,9 +140,29 @@ mod tests {
         let x = Tensor::randn(&[5, 96], 1.0, &mut rng);
         let want = layer.forward_reference(&x);
         let mut got = vec![0.0f32; 5 * 64];
-        layer.forward(x.data(), 5, &mut got, PipelineConfig::default());
+        let pool = crate::util::pool::WorkerPool::global();
+        layer.forward(x.data(), 5, &mut got, PipelineConfig::default(), &pool);
         let got = Tensor::from_vec(&[5, 64], got);
         assert!(max_abs_diff(&got, &want) < 1e-2);
+    }
+
+    #[test]
+    fn forward_runs_on_the_caller_pool() {
+        // The small-m path must use exactly the pool it is handed (no
+        // global-registry lookup): a private 1-thread pool and a private
+        // 3-thread pool both work and agree bitwise.
+        let mut rng = Rng::new(304);
+        let layer = make_layer(&mut rng, 96, 64, 8, 16);
+        let x = Tensor::randn(&[4, 96], 1.0, &mut rng);
+        let p1 = crate::util::pool::WorkerPool::new(1);
+        let p3 = crate::util::pool::WorkerPool::new(3);
+        let mut y1 = vec![0.0f32; 4 * 64];
+        let mut y3 = vec![0.0f32; 4 * 64];
+        layer.forward(x.data(), 4, &mut y1, PipelineConfig::default(), &p1);
+        layer.forward(x.data(), 4, &mut y3, PipelineConfig::default(), &p3);
+        assert_eq!(y1, y3, "pool width must not change the bits");
+        let want = layer.forward_reference(&x);
+        assert!(max_abs_diff(&Tensor::from_vec(&[4, 64], y1), &want) < 1e-2);
     }
 
     #[test]

@@ -1,7 +1,25 @@
-//! Dynamic batcher: requests queue until either `max_batch` are waiting or
-//! the oldest has waited `max_wait`; the formed batch decodes together so
-//! every adapted linear sees an m-row GEMM (the utilization the paper's
-//! adapter concatenation is designed for).
+//! Continuous batching: a shared admission queue feeding `W` engine
+//! worker loops.
+//!
+//! Each worker owns an [`Engine`] fork (weights Arc-shared), a
+//! fixed-size [`KvSlotPool`](crate::infer::KvSlotPool) of `max_batch`
+//! sequence slots, and runs an
+//! **iteration-level scheduling loop**: after every decode step it
+//! retires finished sequences, admits waiting requests into the freed
+//! slots (prefilling them into reused KV rows), and keeps stepping — so
+//! batch occupancy stays near `max_batch` under load instead of draining
+//! to zero between static batches.
+//!
+//! Responses complete **out of order** (a short request admitted late can
+//! finish before a long request admitted early); each request carries its
+//! own reply callback, and the TCP front-end routes replies by request id.
+//!
+//! Determinism: greedy decode is order-independent per sequence — every
+//! engine computes a sequence's next token from that sequence's row and
+//! KV cache alone — so per-request output is byte-identical whether it is
+//! served alone, in a static batch, or continuously batched across any
+//! number of engine workers. `rust/tests/integration_serve.rs` asserts
+//! this end to end.
 
 use crate::data::{detokenize, tokenize};
 use crate::infer::Engine;
@@ -13,29 +31,46 @@ use std::time::{Duration, Instant};
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen id, echoed in the [`Response`] (the out-of-order
+    /// completion key).
     pub id: u64,
+    /// Prompt text (tokenized by the worker on admission).
     pub prompt: String,
+    /// Upper bound on generated tokens (clamped to the model context).
     pub max_tokens: usize,
 }
 
 /// The server's reply.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Echo of [`Request::id`].
     pub id: u64,
+    /// Generated text.
     pub text: String,
+    /// Time from enqueue to admission into a decode batch (milliseconds).
     pub queue_ms: f64,
+    /// Time from admission to completion (milliseconds).
     pub compute_ms: f64,
+    /// Generated token count.
     pub tokens: usize,
 }
 
-/// Batching policy.
+/// Scheduling policy for the serving layer.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// Decode-batch slots per engine worker (KV slots are preallocated
+    /// for exactly this many concurrent sequences per worker).
     pub max_batch: usize,
+    /// How long an idle worker sleeps between admission checks. With
+    /// continuous batching there is no batch-forming window — requests
+    /// are admitted the moment a slot is free — so this only bounds
+    /// shutdown latency; submissions wake idle workers immediately.
     pub max_wait: Duration,
-    /// Worker threads for the engine's GEMM/pipeline stages
-    /// (0 = keep the engine's own setting / all cores).
+    /// Worker threads for the engines' GEMM/pipeline stages, split evenly
+    /// across engine workers (0 = all cores).
     pub num_threads: usize,
+    /// Number of engine worker loops pulling from the shared queue.
+    pub engine_workers: usize,
 }
 
 impl Default for BatchPolicy {
@@ -44,36 +79,60 @@ impl Default for BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             num_threads: 0,
+            engine_workers: 1,
         }
     }
 }
 
-/// Aggregate serving metrics.
+/// Aggregate serving metrics (lock-free counters; latencies under a lock).
 #[derive(Default)]
 pub struct ServerMetrics {
+    /// Completed requests.
     pub requests: AtomicU64,
+    /// Generated tokens across all requests.
     pub tokens_out: AtomicU64,
-    pub batches: AtomicU64,
-    /// Sum of batch sizes (for mean batch occupancy).
-    pub batched_requests: AtomicU64,
+    /// Decode iterations executed across all engine workers.
+    pub decode_steps: AtomicU64,
+    /// Sum of batch occupancy over all decode steps (mean occupancy =
+    /// `step_slots / decode_steps`).
+    pub step_slots: AtomicU64,
+    /// Requests admitted into a worker's batch.
+    pub admitted: AtomicU64,
+    /// Requests admitted while their worker already had live sequences
+    /// decoding — i.e. they joined a running batch mid-stream instead of
+    /// waiting for it to drain. Static batching keeps this at 0.
+    pub admitted_midstream: AtomicU64,
+    /// Highest batch occupancy any worker reached.
+    pub max_occupancy: AtomicU64,
+    /// Per-request end-to-end latencies (µs), for percentile queries.
     pub latencies_us: Mutex<Vec<u64>>,
     started: Mutex<Option<Instant>>,
 }
 
 impl ServerMetrics {
-    pub fn record(&self, resp: &Response, batch_size: usize) {
+    /// Record a completed request.
+    pub fn record(&self, resp: &Response) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.tokens_out.fetch_add(resp.tokens as u64, Ordering::Relaxed);
-        self.batched_requests.fetch_add(1, Ordering::Relaxed);
-        let _ = batch_size;
         let total_us = ((resp.queue_ms + resp.compute_ms) * 1000.0) as u64;
         self.latencies_us.lock().unwrap().push(total_us);
+    }
+
+    /// Record one decode iteration over `occupancy` live sequences.
+    pub fn record_step(&self, occupancy: usize) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.step_slots.fetch_add(occupancy as u64, Ordering::Relaxed);
+        self.max_occupancy.fetch_max(occupancy as u64, Ordering::Relaxed);
+    }
+
+    fn mark_started(&self) {
         let mut st = self.started.lock().unwrap();
         if st.is_none() {
             *st = Some(Instant::now());
         }
     }
 
+    /// Generated tokens per second since the first admission.
     pub fn tokens_per_sec(&self) -> f64 {
         let st = self.started.lock().unwrap();
         match *st {
@@ -85,6 +144,7 @@ impl ServerMetrics {
         }
     }
 
+    /// End-to-end latency percentiles in milliseconds: (p50, p90, p99).
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
         let mut v = self.latencies_us.lock().unwrap().clone();
         if v.is_empty() {
@@ -95,122 +155,329 @@ impl ServerMetrics {
         (pick(0.5), pick(0.9), pick(0.99))
     }
 
-    pub fn mean_batch_size(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed).max(1);
-        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    /// Mean decode-batch occupancy: live sequences per decode step,
+    /// averaged over every step any worker ran.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let steps = self.decode_steps.load(Ordering::Relaxed).max(1);
+        self.step_slots.load(Ordering::Relaxed) as f64 / steps as f64
     }
 }
+
+/// Per-worker counters, exposed through [`Batcher::worker_metrics`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerMetrics {
+    /// Decode iterations this worker executed.
+    pub steps: u64,
+    /// Tokens this worker generated.
+    pub tokens: u64,
+    /// Requests this worker completed.
+    pub retired: u64,
+}
+
+/// Reply callback: invoked exactly once with the finished [`Response`].
+/// Boxed so the TCP front-end, blocking callers and benches can each
+/// route completions their own way.
+pub type ReplyFn = Box<dyn FnOnce(Response) + Send>;
 
 struct Pending {
     req: Request,
     enqueued: Instant,
-    reply: std::sync::mpsc::Sender<Response>,
+    reply: ReplyFn,
 }
 
-/// The dynamic batcher: owns the queue and the engine worker loop.
+/// A sequence occupying a KV slot in one worker's decode batch.
+struct LiveSeq {
+    slot: usize,
+    id: u64,
+    reply: ReplyFn,
+    enqueued: Instant,
+    admitted: Instant,
+    current: i32,
+    out: Vec<i32>,
+    budget: usize,
+}
+
+/// The admission queue plus the shared serving state; engine workers are
+/// spawned on top with [`spawn_engine_workers`] (or run inline via
+/// [`Batcher::worker_loop`]).
 pub struct Batcher {
     queue: Mutex<VecDeque<Pending>>,
     cv: Condvar,
     policy: BatchPolicy,
+    /// Aggregate metrics across all engine workers.
     pub metrics: ServerMetrics,
+    worker_metrics: Mutex<Vec<WorkerMetrics>>,
     shutdown: AtomicBool,
 }
 
 impl Batcher {
+    /// A batcher with no workers yet (see [`spawn_engine_workers`]).
     pub fn new(policy: BatchPolicy) -> Arc<Batcher> {
         Arc::new(Batcher {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             policy,
             metrics: ServerMetrics::default(),
+            worker_metrics: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
         })
     }
 
-    /// Submit a request; blocks until the response arrives.
+    /// The policy this batcher schedules under.
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Submit a request; blocks the calling thread until its response
+    /// arrives (other requests keep flowing meanwhile). Panics if the
+    /// batcher has already been shut down.
     pub fn submit(&self, req: Request) -> Response {
         let (tx, rx) = std::sync::mpsc::channel();
-        {
-            let mut q = self.queue.lock().unwrap();
-            q.push_back(Pending {
-                req,
-                enqueued: Instant::now(),
-                reply: tx,
-            });
-        }
-        self.cv.notify_one();
+        let accepted = self.submit_with(
+            req,
+            Box::new(move |resp| {
+                let _ = tx.send(resp);
+            }),
+        );
+        assert!(accepted, "submit after batcher shutdown");
         rx.recv().expect("batcher dropped reply channel")
     }
 
+    /// Submit a request with an explicit completion callback — the
+    /// non-blocking form the TCP front-end uses so one connection can
+    /// have many requests in flight (responses return out of order).
+    /// Returns `false` (dropping `reply` un-fired) if shutdown has
+    /// already been requested: no worker would ever serve the request.
+    pub fn submit_with(&self, req: Request, reply: ReplyFn) -> bool {
+        {
+            // The flag is checked under the queue lock — the same lock
+            // under which workers make their final empty-queue exit
+            // decision — so a request can never slip in between the
+            // workers' last drain and their exit.
+            let mut q = self.queue.lock().unwrap();
+            if self.shutdown.load(Ordering::SeqCst) {
+                return false;
+            }
+            q.push_back(Pending {
+                req,
+                enqueued: Instant::now(),
+                reply,
+            });
+        }
+        self.cv.notify_all();
+        true
+    }
+
+    /// Ask every worker loop to exit. Workers first drain what is already
+    /// queued (every accepted request's reply callback still fires) and
+    /// finish their live sequences; *new* submissions are rejected from
+    /// this point on (see [`Batcher::submit_with`]).
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
         self.cv.notify_all();
     }
 
-    /// The worker loop: form batches per policy, decode, reply. Run on a
-    /// dedicated thread with the engine.
-    pub fn worker_loop(&self, engine: &Engine) {
+    /// Drop any requests still queued — call only after the worker
+    /// threads have exited, to release the reply callbacks (and whatever
+    /// channels they hold) of requests that raced past
+    /// [`Batcher::shutdown`] into the queue. Returns how many were
+    /// dropped.
+    pub fn drain_abandoned(&self) -> usize {
+        let mut q = self.queue.lock().unwrap();
+        let n = q.len();
+        q.clear();
+        n
+    }
+
+    /// Snapshot of per-worker counters, indexed by worker id.
+    pub fn worker_metrics(&self) -> Vec<WorkerMetrics> {
+        self.worker_metrics.lock().unwrap().clone()
+    }
+
+    /// Pop up to `room` waiting requests. When the worker is fully idle
+    /// (`have_live == false`) this blocks until a request arrives or
+    /// shutdown; when sequences are mid-decode it never waits — the
+    /// decode loop must keep stepping.
+    fn admit_up_to(&self, room: usize, have_live: bool) -> Option<Vec<Pending>> {
+        let mut q = self.queue.lock().unwrap();
         loop {
-            let batch = {
-                let mut q = self.queue.lock().unwrap();
-                loop {
-                    if self.shutdown.load(Ordering::SeqCst) {
-                        return;
-                    }
-                    if q.is_empty() {
-                        q = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
-                        continue;
-                    }
-                    let oldest_wait = q.front().unwrap().enqueued.elapsed();
-                    if q.len() >= self.policy.max_batch || oldest_wait >= self.policy.max_wait {
-                        let n = q.len().min(self.policy.max_batch);
-                        break q.drain(..n).collect::<Vec<_>>();
-                    }
-                    // Wait out the remainder of the batching window.
-                    let remaining = self.policy.max_wait - oldest_wait;
-                    q = self.cv.wait_timeout(q, remaining).unwrap().0;
-                }
-            };
-            self.metrics.batches.fetch_add(1, Ordering::Relaxed);
-            self.run_batch(engine, batch);
+            if self.shutdown.load(Ordering::SeqCst) && q.is_empty() {
+                // Let the caller finish its live sequences, then exit.
+                return if have_live { Some(Vec::new()) } else { None };
+            }
+            if !q.is_empty() || have_live {
+                let n = q.len().min(room);
+                return Some(q.drain(..n).collect());
+            }
+            let wait = self.policy.max_wait.max(Duration::from_millis(1));
+            q = self.cv.wait_timeout(q, wait).unwrap().0;
         }
     }
 
-    fn run_batch(&self, engine: &Engine, batch: Vec<Pending>) {
-        let max_ctx = engine.weights.cfg.max_seq_len;
-        let t0 = Instant::now();
-        let mut prompts = Vec::with_capacity(batch.len());
-        let mut max_new = 0usize;
-        for p in &batch {
-            let mut toks = tokenize(&p.req.prompt);
-            let budget = p.req.max_tokens.min(max_ctx.saturating_sub(2));
-            if toks.len() + budget > max_ctx {
-                let cut = toks.len() + budget - max_ctx;
-                toks.drain(..cut.min(toks.len().saturating_sub(1)));
+    /// The continuous-batching engine worker loop. Runs until shutdown;
+    /// `worker` is this loop's id for per-worker metrics. Call on a
+    /// dedicated thread with this worker's engine fork (or use
+    /// [`spawn_engine_workers`]).
+    pub fn worker_loop(&self, engine: &Engine, worker: usize) {
+        {
+            let mut wm = self.worker_metrics.lock().unwrap();
+            if wm.len() <= worker {
+                wm.resize(worker + 1, WorkerMetrics::default());
             }
-            if toks.is_empty() {
-                toks.push(b' ' as i32);
-            }
-            max_new = max_new.max(budget.max(1));
-            prompts.push(toks);
         }
-        let outputs = engine.generate_batch(&prompts, max_new);
-        let compute_ms = t0.elapsed().as_secs_f64() * 1000.0;
-        let bsz = batch.len();
-        for (p, out) in batch.into_iter().zip(outputs) {
-            let n = p.req.max_tokens.min(out.len());
-            let text = detokenize(&out[..n]);
-            let resp = Response {
-                id: p.req.id,
-                text,
-                queue_ms: (t0 - p.enqueued).as_secs_f64() * 1000.0,
-                compute_ms,
-                tokens: n,
+        let max_ctx = engine.weights.cfg.max_seq_len;
+        let nslots = self.policy.max_batch.max(1);
+        let mut kv = engine.new_slot_pool(nslots);
+        let mut live: Vec<LiveSeq> = Vec::new();
+        let mut local = WorkerMetrics::default();
+
+        loop {
+            // --- admit into free slots ---
+            let room = nslots - live.len();
+            let admitted = match self.admit_up_to(room, !live.is_empty()) {
+                Some(batch) => batch,
+                None => break, // shutdown while idle
             };
-            self.metrics.record(&resp, bsz);
-            let _ = p.reply.send(resp);
+            // Mid-stream means joining a batch that was already decoding
+            // before this admission round — co-admissions into an idle
+            // worker's fresh batch don't count.
+            let was_live = !live.is_empty();
+            for p in admitted {
+                self.metrics.mark_started();
+                self.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+                if was_live {
+                    self.metrics.admitted_midstream.fetch_add(1, Ordering::Relaxed);
+                }
+                let admitted_at = Instant::now();
+                let (toks, budget) = prepare_prompt(&p.req, max_ctx);
+                let slot = kv.alloc().expect("admission respects free slots");
+                let first = engine.prefill(&toks, slot, &mut kv);
+                live.push(LiveSeq {
+                    slot,
+                    id: p.req.id,
+                    reply: p.reply,
+                    enqueued: p.enqueued,
+                    admitted: admitted_at,
+                    current: first,
+                    out: vec![first],
+                    budget,
+                });
+            }
+            // Retire admissions that are already at budget (single-token
+            // requests complete on their prefill alone).
+            self.retire_finished(&mut live, &mut kv, &mut local);
+            if live.is_empty() {
+                // Loop back to admission: on shutdown `admit_up_to` keeps
+                // draining queued requests (their reply callbacks must
+                // fire) and only returns `None` once the queue is empty.
+                continue;
+            }
+            // --- one decode iteration over the current batch ---
+            let current: Vec<i32> = live.iter().map(|s| s.current).collect();
+            let slots: Vec<usize> = live.iter().map(|s| s.slot).collect();
+            self.metrics.record_step(live.len());
+            local.steps += 1;
+            let next = engine.decode_step(&current, &slots, &mut kv);
+            for (seq, tok) in live.iter_mut().zip(next) {
+                seq.current = tok;
+                seq.out.push(tok);
+            }
+            // Retire immediately after the step, so a finished request's
+            // reply fires before (and its latency never absorbs) the next
+            // admission round's prefills — and so the freed slots count
+            // toward that round's room.
+            self.retire_finished(&mut live, &mut kv, &mut local);
+            // Publish per-worker counters (cheap: one short lock per
+            // decode iteration, far below the forward-pass cost).
+            self.worker_metrics.lock().unwrap()[worker] = local;
+        }
+        self.worker_metrics.lock().unwrap()[worker] = local;
+    }
+
+    /// Retire every live sequence that has reached its token budget:
+    /// free its KV slot, record metrics, detokenize and fire its reply.
+    fn retire_finished(
+        &self,
+        live: &mut Vec<LiveSeq>,
+        kv: &mut crate::infer::KvSlotPool,
+        local: &mut WorkerMetrics,
+    ) {
+        let mut i = 0;
+        while i < live.len() {
+            if live[i].out.len() >= live[i].budget {
+                let seq = live.swap_remove(i);
+                kv.free(seq.slot);
+                local.retired += 1;
+                local.tokens += seq.out.len() as u64;
+                let resp = Response {
+                    id: seq.id,
+                    text: detokenize(&seq.out),
+                    queue_ms: (seq.admitted - seq.enqueued).as_secs_f64() * 1000.0,
+                    compute_ms: seq.admitted.elapsed().as_secs_f64() * 1000.0,
+                    tokens: seq.out.len(),
+                };
+                self.metrics.record(&resp);
+                (seq.reply)(resp);
+            } else {
+                i += 1;
+            }
         }
     }
+}
+
+/// Tokenize a request's prompt, clamp its generation budget to the model
+/// context, and truncate the prompt head so `prompt + budget` fits.
+/// Returns `(tokens, budget)` with `tokens` non-empty and `budget >= 1`.
+fn prepare_prompt(req: &Request, max_ctx: usize) -> (Vec<i32>, usize) {
+    let mut toks = tokenize(&req.prompt);
+    let budget = req.max_tokens.clamp(1, max_ctx.saturating_sub(2).max(1));
+    if toks.len() + budget > max_ctx {
+        let cut = toks.len() + budget - max_ctx;
+        toks.drain(..cut.min(toks.len().saturating_sub(1)));
+    }
+    if toks.is_empty() {
+        toks.push(b' ' as i32);
+    }
+    (toks, budget)
+}
+
+/// Spawn `engine_workers` (per the batcher's policy) engine worker
+/// threads over forks of `engine`, giving each fork a **private** worker
+/// pool holding an even share of `num_threads` (0 = all cores) GEMM
+/// threads. Returns the join handles; call [`Batcher::shutdown`] then
+/// join to stop.
+pub fn spawn_engine_workers(
+    batcher: &Arc<Batcher>,
+    engine: Engine,
+) -> Vec<std::thread::JoinHandle<()>> {
+    use crate::util::pool::{available_threads, WorkerPool};
+    let policy = *batcher.policy();
+    let workers = policy.engine_workers.max(1);
+    let total = if policy.num_threads > 0 {
+        policy.num_threads
+    } else {
+        available_threads()
+    };
+    let per_worker = (total / workers).max(1);
+    let mut handles = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let mut eng = engine.fork();
+        // Private pools (not the global size registry) so each worker's
+        // dense linears and small-m decode GEMMs own disjoint threads.
+        // Caveat: the pipelined backend's large-m *prefill* path still
+        // resolves a per-size registry pool from PipelineConfig's thread
+        // knob, so concurrent prefills share that one (see
+        // SalrLayer::forward and the ROADMAP pool-threading item).
+        eng.set_pool(Arc::new(WorkerPool::new(per_worker)));
+        let b = batcher.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("salr-engine-{w}"))
+                .spawn(move || b.worker_loop(&eng, w))
+                .expect("spawn engine worker"),
+        );
+    }
+    handles
 }
 
 #[cfg(test)]
@@ -229,7 +496,7 @@ mod tests {
             n_layers: 1,
             n_heads: 2,
             d_ff: 64,
-            max_seq_len: 32,
+            max_seq_len: 96,
             rank: 4,
             lora_alpha: 8.0,
             residual_rank: 4,
@@ -246,11 +513,9 @@ mod tests {
         let eng = engine();
         let batcher = Batcher::new(BatchPolicy {
             max_batch: 4,
-            max_wait: Duration::from_millis(3),
             ..Default::default()
         });
-        let b2 = batcher.clone();
-        let worker = std::thread::spawn(move || b2.worker_loop(&eng));
+        let handles_srv = spawn_engine_workers(&batcher, eng);
         let mut handles = Vec::new();
         for i in 0..6 {
             let b = batcher.clone();
@@ -269,23 +534,23 @@ mod tests {
         for r in &responses {
             assert_eq!(r.tokens, 3);
         }
-        assert!(batcher.metrics.requests.load(Ordering::Relaxed) == 6);
-        assert!(batcher.metrics.mean_batch_size() > 1.0, "batching must kick in");
+        assert_eq!(batcher.metrics.requests.load(Ordering::Relaxed), 6);
+        assert!(batcher.metrics.mean_batch_occupancy() >= 1.0);
         batcher.shutdown();
-        worker.join().unwrap();
+        for h in handles_srv {
+            h.join().unwrap();
+        }
     }
 
     #[test]
-    fn deterministic_across_batch_compositions() {
+    fn deterministic_across_submissions() {
         let eng = engine();
-        // Same prompt must yield the same text whether batched or alone.
+        // Same prompt must yield the same text whenever it is submitted.
         let batcher = Batcher::new(BatchPolicy {
-            max_batch: 1,
-            max_wait: Duration::from_millis(1),
+            max_batch: 2,
             ..Default::default()
         });
-        let b2 = batcher.clone();
-        let worker = std::thread::spawn(move || b2.worker_loop(&eng));
+        let handles = spawn_engine_workers(&batcher, eng);
         let r1 = batcher.submit(Request {
             id: 1,
             prompt: "Q: 2+2=? A: ".into(),
@@ -298,6 +563,85 @@ mod tests {
         });
         assert_eq!(r1.text, r2.text);
         batcher.shutdown();
-        worker.join().unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn midstream_admission_joins_a_live_batch() {
+        let eng = engine();
+        let batcher = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            engine_workers: 1,
+            ..Default::default()
+        });
+        let handles = spawn_engine_workers(&batcher, eng);
+        // A long request keeps the single worker's batch live…
+        let b1 = batcher.clone();
+        let long = std::thread::spawn(move || {
+            b1.submit(Request {
+                id: 1,
+                prompt: "Q: 10+20=? A: ".into(),
+                max_tokens: 80,
+            })
+        });
+        // …wait until it is actually decoding, then admit a second one.
+        let t0 = Instant::now();
+        while batcher.metrics.decode_steps.load(Ordering::Relaxed) < 1 {
+            assert!(t0.elapsed() < Duration::from_secs(20), "worker never started");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let short = batcher.submit(Request {
+            id: 2,
+            prompt: "Q: 1+1=? A: ".into(),
+            max_tokens: 2,
+        });
+        assert_eq!(short.tokens, 2);
+        let long_resp = long.join().unwrap();
+        assert_eq!(long_resp.tokens, 80);
+        assert!(
+            batcher.metrics.admitted_midstream.load(Ordering::Relaxed) >= 1,
+            "second request must join the live batch, not wait for a drain"
+        );
+        assert!(
+            batcher.metrics.max_occupancy.load(Ordering::Relaxed) >= 2,
+            "occupancy must grow without the batch draining"
+        );
+        // Out-of-order completion: the short request finished first.
+        assert!(batcher.metrics.requests.load(Ordering::Relaxed) == 2);
+        batcher.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected() {
+        let batcher = Batcher::new(BatchPolicy::default());
+        batcher.shutdown();
+        let ok = batcher.submit_with(
+            Request {
+                id: 1,
+                prompt: "x".into(),
+                max_tokens: 1,
+            },
+            Box::new(|_| panic!("reply must not fire for a rejected request")),
+        );
+        assert!(!ok, "post-shutdown submissions must be rejected");
+        assert_eq!(batcher.drain_abandoned(), 0, "nothing may have been queued");
+    }
+
+    #[test]
+    fn prepare_prompt_clamps_to_context() {
+        let req = Request {
+            id: 0,
+            prompt: "x".repeat(500),
+            max_tokens: 1000,
+        };
+        let (toks, budget) = prepare_prompt(&req, 96);
+        assert!(budget >= 1 && budget <= 94);
+        assert!(!toks.is_empty());
+        assert!(toks.len() + budget <= 96);
     }
 }

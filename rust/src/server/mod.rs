@@ -1,9 +1,18 @@
-//! Serving: a TCP inference server with dynamic batching over the native
-//! engine. The request path is pure rust (no python, no HLO retracing):
-//! socket → batcher queue → engine decode → response.
+//! Serving: a TCP inference server with **continuous batching** over the
+//! native engine. The request path is pure rust (no python, no HLO
+//! retracing): socket → shared admission queue → one of `W` engine
+//! worker loops (iteration-level scheduling over a fixed KV-slot pool) →
+//! out-of-order response routed back by request id.
+//!
+//! See DESIGN.md "Serving layer" for the scheduler, the KV-slot
+//! lifecycle, and the determinism argument; `rust/benches/bench_serve.rs`
+//! measures tokens/s and batch occupancy at 1/2/4 engine workers.
 
 mod batcher;
 mod tcp;
 
-pub use batcher::{BatchPolicy, Batcher, Request, Response, ServerMetrics};
+pub use batcher::{
+    spawn_engine_workers, BatchPolicy, Batcher, ReplyFn, Request, Response, ServerMetrics,
+    WorkerMetrics,
+};
 pub use tcp::{serve, Client};

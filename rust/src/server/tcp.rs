@@ -1,42 +1,66 @@
 //! TCP front-end: newline-delimited JSON over a socket.
 //!
-//! Request:  `{"prompt": "...", "max_tokens": 8}\n`
-//! Response: `{"text": "...", "queue_ms": .., "compute_ms": .., "tokens": ..}\n`
-//! `{"cmd": "metrics"}` returns aggregate serving metrics;
-//! `{"cmd": "shutdown"}` stops the server.
+//! Request:  `{"prompt": "...", "max_tokens": 8, "id": 7}` + newline
+//! Response: `{"id": 7, "text": "...", "queue_ms": .., "compute_ms": ..,
+//! "tokens": ..}` + newline.
+//!
+//! A connection may pipeline many generation requests without reading
+//! replies in between; with continuous batching, responses come back **in
+//! completion order**, not submission order, so clients must match
+//! replies to requests by `id` (server-assigned when omitted; like any
+//! JSON number in this codec, ids round-trip through f64, so client ids
+//! must be non-negative integers ≤ 2^53 — anything else is replaced
+//! with a server-assigned id, echoed in the reply). A pipelining client
+//! should supply its own id on **every** in-flight request of a
+//! connection: server-assigned ids come from a small shared counter and
+//! are not guaranteed distinct from ids the client picks itself. All
+//! writes to a connection go through a single writer thread, so
+//! concurrent completions never interleave bytes on the wire.
+//!
+//! Control commands: `{"cmd": "metrics"}` returns aggregate serving
+//! metrics; `{"cmd": "shutdown"}` stops the server.
 
-use super::batcher::{BatchPolicy, Batcher, Request};
+use super::batcher::{spawn_engine_workers, BatchPolicy, Batcher, Request};
 use crate::infer::Engine;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
-/// Serve `engine` on `addr` until a shutdown command arrives. Connections
-/// are handled on their own threads; generation requests funnel through
-/// the shared dynamic batcher. If `ready` is provided, the bound address
-/// is sent once listening (use port 0 for tests/examples).
+/// Serve `engine` on `addr` until a shutdown command arrives.
+///
+/// `policy.engine_workers` continuous-batching worker loops are spawned
+/// over forks of `engine` (weights shared, each fork on a private pool
+/// holding an even share of `policy.num_threads` GEMM threads).
+/// Connections are handled on their own threads; generation requests
+/// funnel through the shared admission queue and complete out of order.
+/// If `ready` is provided, the bound address is sent once listening (use
+/// port 0 for tests/examples).
 pub fn serve(
     engine: Engine,
     addr: &str,
     policy: BatchPolicy,
-    ready: Option<std::sync::mpsc::Sender<std::net::SocketAddr>>,
+    ready: Option<Sender<std::net::SocketAddr>>,
 ) -> Result<()> {
-    let mut engine = engine;
-    if policy.num_threads > 0 {
-        engine.set_threads(policy.num_threads);
-    }
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
-    log::info!("serving on {local} ({} GEMM worker threads)", engine.num_threads());
+    log::info!(
+        "serving on {local} ({} engine workers, {} GEMM threads total)",
+        policy.engine_workers.max(1),
+        if policy.num_threads > 0 {
+            policy.num_threads
+        } else {
+            crate::util::pool::available_threads()
+        }
+    );
     if let Some(tx) = ready {
         let _ = tx.send(local);
     }
     let batcher = Batcher::new(policy);
-    let b_worker = batcher.clone();
-    let worker = std::thread::spawn(move || b_worker.worker_loop(&engine));
+    let workers = spawn_engine_workers(&batcher, engine);
     let next_id = Arc::new(AtomicU64::new(1));
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
 
@@ -62,44 +86,58 @@ pub fn serve(
         });
     }
     batcher.shutdown();
-    worker.join().unwrap();
+    for h in workers {
+        h.join().unwrap();
+    }
+    // Requests that raced past shutdown() into the queue after the
+    // workers' final drain would otherwise pin their reply channels (and
+    // with them, connection writer threads) forever.
+    let dropped = batcher.drain_abandoned();
+    if dropped > 0 {
+        log::warn!("dropped {dropped} request(s) queued after shutdown");
+    }
     Ok(())
 }
 
 /// Handle one connection; returns Ok(true) if a shutdown was requested.
+///
+/// The reader (this thread) parses requests and submits them without
+/// blocking; a dedicated writer thread owns the stream's write half and
+/// serializes every reply line, in completion order.
 fn handle_conn(stream: TcpStream, batcher: &Batcher, next_id: &AtomicU64) -> Result<bool> {
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
+    // All replies (generation completions + command responses + errors)
+    // go through one channel so concurrent writes never interleave.
+    let (reply_tx, reply_rx) = std::sync::mpsc::channel::<String>();
+    let mut writer = stream;
+    let writer_thread = std::thread::spawn(move || {
+        for line in reply_rx {
+            if writeln!(writer, "{line}").is_err() {
+                break; // client went away; drain + drop remaining replies
+            }
+        }
+    });
     let mut line = String::new();
-    loop {
+    let shutdown = loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
-            return Ok(false); // client closed
+            break false; // client closed
         }
         let msg = match Json::parse(line.trim()) {
             Ok(m) => m,
             Err(e) => {
                 let err = Json::obj().set("error", format!("bad json: {e}"));
-                writeln!(stream, "{}", err.to_string_compact())?;
+                let _ = reply_tx.send(err.to_string_compact());
                 continue;
             }
         };
         match msg.get("cmd").and_then(Json::as_str) {
             Some("shutdown") => {
-                writeln!(stream, "{}", Json::obj().set("ok", true).to_string_compact())?;
-                return Ok(true);
+                let _ = reply_tx.send(Json::obj().set("ok", true).to_string_compact());
+                break true;
             }
             Some("metrics") => {
-                let (p50, p90, p99) = batcher.metrics.latency_percentiles();
-                let reply = Json::obj()
-                    .set("requests", batcher.metrics.requests.load(Ordering::Relaxed))
-                    .set("tokens_out", batcher.metrics.tokens_out.load(Ordering::Relaxed))
-                    .set("tokens_per_sec", batcher.metrics.tokens_per_sec())
-                    .set("mean_batch_size", batcher.metrics.mean_batch_size())
-                    .set("latency_p50_ms", p50)
-                    .set("latency_p90_ms", p90)
-                    .set("latency_p99_ms", p99);
-                writeln!(stream, "{}", reply.to_string_compact())?;
+                let _ = reply_tx.send(render_metrics(batcher).to_string_compact());
             }
             _ => {
                 let prompt = msg
@@ -112,20 +150,81 @@ fn handle_conn(stream: TcpStream, batcher: &Batcher, next_id: &AtomicU64) -> Res
                     .and_then(Json::as_usize)
                     .unwrap_or(8)
                     .max(1);
-                let resp = batcher.submit(Request {
-                    id: next_id.fetch_add(1, Ordering::Relaxed),
-                    prompt,
-                    max_tokens,
-                });
-                let reply = Json::obj()
-                    .set("text", resp.text)
-                    .set("queue_ms", resp.queue_ms)
-                    .set("compute_ms", resp.compute_ms)
-                    .set("tokens", resp.tokens);
-                writeln!(stream, "{}", reply.to_string_compact())?;
+                // Ids must be non-negative integers ≤ 2^53 (JSON numbers
+                // are f64 here); anything else gets a server-assigned id,
+                // which the reply echoes.
+                let id = msg
+                    .get("id")
+                    .and_then(Json::as_f64)
+                    .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n <= 9_007_199_254_740_992.0)
+                    .map(|n| n as u64)
+                    .unwrap_or_else(|| next_id.fetch_add(1, Ordering::Relaxed));
+                let tx = reply_tx.clone();
+                let accepted = batcher.submit_with(
+                    Request {
+                        id,
+                        prompt,
+                        max_tokens,
+                    },
+                    Box::new(move |resp| {
+                        let reply = Json::obj()
+                            .set("id", resp.id)
+                            .set("text", resp.text)
+                            .set("queue_ms", resp.queue_ms)
+                            .set("compute_ms", resp.compute_ms)
+                            .set("tokens", resp.tokens);
+                        let _ = tx.send(reply.to_string_compact());
+                    }),
+                );
+                if !accepted {
+                    let err = Json::obj()
+                        .set("id", id)
+                        .set("error", "server shutting down");
+                    let _ = reply_tx.send(err.to_string_compact());
+                }
             }
         }
-    }
+    };
+    // Drop our sender; the writer exits once every in-flight completion
+    // has been delivered (their callbacks hold the remaining clones).
+    drop(reply_tx);
+    let _ = writer_thread.join();
+    Ok(shutdown)
+}
+
+/// Aggregate metrics as a JSON object (the `{"cmd":"metrics"}` reply).
+fn render_metrics(batcher: &Batcher) -> Json {
+    let (p50, p90, p99) = batcher.metrics.latency_percentiles();
+    let workers = Json::Arr(
+        batcher
+            .worker_metrics()
+            .iter()
+            .map(|w| {
+                Json::obj()
+                    .set("steps", w.steps)
+                    .set("tokens", w.tokens)
+                    .set("retired", w.retired)
+            })
+            .collect(),
+    );
+    Json::obj()
+        .set("requests", batcher.metrics.requests.load(Ordering::Relaxed))
+        .set("tokens_out", batcher.metrics.tokens_out.load(Ordering::Relaxed))
+        .set("tokens_per_sec", batcher.metrics.tokens_per_sec())
+        .set("decode_steps", batcher.metrics.decode_steps.load(Ordering::Relaxed))
+        .set("mean_batch_occupancy", batcher.metrics.mean_batch_occupancy())
+        .set(
+            "max_occupancy",
+            batcher.metrics.max_occupancy.load(Ordering::Relaxed),
+        )
+        .set(
+            "admitted_midstream",
+            batcher.metrics.admitted_midstream.load(Ordering::Relaxed),
+        )
+        .set("latency_p50_ms", p50)
+        .set("latency_p90_ms", p90)
+        .set("latency_p99_ms", p99)
+        .set("workers", workers)
 }
 
 /// A minimal blocking client for the wire protocol (examples + tests).
@@ -135,6 +234,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a serving address (`host:port`).
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         Ok(Client {
@@ -143,13 +243,29 @@ impl Client {
         })
     }
 
-    pub fn call(&mut self, msg: &Json) -> Result<Json> {
+    /// Write one request line without waiting for the reply — the
+    /// pipelining half; pair with [`Client::recv`] and match replies to
+    /// requests by `id`.
+    pub fn send(&mut self, msg: &Json) -> Result<()> {
         writeln!(self.stream, "{}", msg.to_string_compact())?;
+        Ok(())
+    }
+
+    /// Read the next reply line (completion order, not submission order).
+    pub fn recv(&mut self) -> Result<Json> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(Json::parse(line.trim())?)
     }
 
+    /// Send one message and wait for one reply (only safe when no other
+    /// request is in flight on this connection).
+    pub fn call(&mut self, msg: &Json) -> Result<Json> {
+        self.send(msg)?;
+        self.recv()
+    }
+
+    /// Generate `max_tokens` for `prompt`, blocking for the reply.
     pub fn generate(&mut self, prompt: &str, max_tokens: usize) -> Result<Json> {
         self.call(
             &Json::obj()
@@ -158,10 +274,12 @@ impl Client {
         )
     }
 
+    /// Fetch aggregate serving metrics.
     pub fn metrics(&mut self) -> Result<Json> {
         self.call(&Json::obj().set("cmd", "metrics"))
     }
 
+    /// Ask the server to stop (replies `{"ok": true}` first).
     pub fn shutdown(&mut self) -> Result<Json> {
         self.call(&Json::obj().set("cmd", "shutdown"))
     }

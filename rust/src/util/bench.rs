@@ -151,11 +151,7 @@ impl Bench {
     /// from this (e.g. `SALR_BENCH_JSON=BENCH_gemm.json cargo bench
     /// --bench bench_gemm`).
     pub fn write_json(&self, path: &std::path::Path, meta: Json) -> std::io::Result<()> {
-        let doc = Json::obj()
-            .set("schema", "salr-bench-v1")
-            .set("meta", meta)
-            .set("results", self.results_json());
-        std::fs::write(path, doc.to_string_pretty())
+        write_bench_doc(path, meta, self.results_json())
     }
 
     /// Render a comparison table with speedups relative to the first row.
@@ -179,6 +175,22 @@ impl Bench {
         }
         out
     }
+}
+
+/// Write a `salr-bench-v1` document (`schema` + `meta` + `results`) to
+/// `path` — the single place the perf-trajectory file format is
+/// assembled, shared by [`Bench::write_json`] and benches that collect
+/// results outside a [`Bench`] (e.g. `bench_serve`'s throughput rows).
+pub fn write_bench_doc(
+    path: impl AsRef<std::path::Path>,
+    meta: Json,
+    results: Json,
+) -> std::io::Result<()> {
+    let doc = Json::obj()
+        .set("schema", "salr-bench-v1")
+        .set("meta", meta)
+        .set("results", results);
+    std::fs::write(path, doc.to_string_pretty())
 }
 
 fn format_stat_line(s: &Stats) -> String {

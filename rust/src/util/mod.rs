@@ -7,6 +7,9 @@ pub mod bench;
 pub mod json;
 pub mod logger;
 pub mod mem;
+// Part of the documented-API guarantee (see lib.rs): every public item
+// in the pool carries rustdoc, enforced by CI's `cargo doc` step.
+#[warn(missing_docs)]
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -31,7 +31,10 @@ use std::thread::JoinHandle;
 /// Raw `*mut f32` wrapper so pool tasks can write disjoint regions of a
 /// shared output buffer. The caller is responsible for disjointness.
 #[derive(Clone, Copy)]
-pub struct SendPtr(pub *mut f32);
+pub struct SendPtr(
+    /// Base pointer of the shared output buffer.
+    pub *mut f32,
+);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
