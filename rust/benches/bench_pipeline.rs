@@ -36,6 +36,22 @@ fn main() {
         salr::gemm::sparse::bitmap_gemm_direct(x.data(), &bm, &mut c, m, &mut scratch);
         black_box(&c);
     });
+    // The decode-hot-path kernel striped across the pool (bitwise
+    // identical to the serial row above at every width).
+    for &t in &[2usize, 4] {
+        let pool = WorkerPool::with_threads(t);
+        b.run_with_work(&format!("direct striped t={t}"), flops, &mut || {
+            salr::gemm::sparse::bitmap_gemm_direct_pool(
+                x.data(),
+                &bm,
+                &mut c,
+                m,
+                &mut scratch,
+                &pool,
+            );
+            black_box(&c);
+        });
+    }
     b.run_with_work("panelled (streamed, no overlap)", flops, &mut || {
         bitmap_gemm_panelled(x.data(), &bm, &mut c, m, 64, &mut scratch);
         black_box(&c);

@@ -4,8 +4,9 @@
 //!
 //! Reports tokens/s, mean decode-batch occupancy, and p50/p99 request
 //! latency per worker count. Set `SALR_BENCH_JSON=path.json` to emit
-//! machine-readable results; env knobs `SALR_BENCH_CLIENTS` (default 16)
-//! and `SALR_BENCH_REQS` (default 4 per client) scale the load.
+//! machine-readable results; env knobs `SALR_BENCH_CLIENTS` (default 16),
+//! `SALR_BENCH_REQS` (default 4 per client) and `SALR_BENCH_CHUNK`
+//! (prefill chunk, default 64, 0 = whole-prompt) scale the load.
 //!
 //! Run: `cargo bench --bench bench_serve`
 
@@ -61,6 +62,7 @@ fn run_load(template: &Engine, workers: usize, clients: usize, reqs_per_client: 
     let policy = BatchPolicy {
         max_batch: 8,
         engine_workers: workers,
+        prefill_chunk: env_usize("SALR_BENCH_CHUNK", 64),
         ..Default::default()
     };
     let batcher = Batcher::new(policy);
@@ -144,6 +146,7 @@ fn main() {
             .set("clients", clients)
             .set("reqs_per_client", reqs)
             .set("tokens_per_req", 16)
+            .set("prefill_chunk", env_usize("SALR_BENCH_CHUNK", 64))
             .set("host_threads", salr::util::pool::available_threads());
         salr::util::bench::write_bench_doc(&path, meta, results)
             .expect("write bench json");

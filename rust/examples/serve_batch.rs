@@ -1,6 +1,7 @@
 //! Serving example: start the continuous-batching TCP server over a
 //! SALR-deployed model (bitmap pipeline backend) with two engine
-//! workers, fire concurrent + pipelined client requests, and report
+//! workers and chunked prefill, fire concurrent + pipelined client
+//! requests, stream one response token by token, and report
 //! latency/throughput/occupancy — the paper's deployment story end to
 //! end.
 //!
@@ -32,7 +33,8 @@ fn main() -> Result<()> {
     let engine = deploy_engine(&ctx.cfg, &spec, &adapters, None)?;
 
     // Start the server on an ephemeral port: 2 continuous-batching engine
-    // workers, 8 KV slots each.
+    // workers, 8 KV slots each, prefilling at most 16 prompt tokens per
+    // scheduler iteration so long prompts never stall a worker's batch.
     let (tx, rx) = std::sync::mpsc::channel();
     let server = std::thread::spawn(move || {
         serve(
@@ -42,13 +44,28 @@ fn main() -> Result<()> {
                 max_batch: 8,
                 max_wait: Duration::from_millis(4),
                 engine_workers: 2,
+                prefill_chunk: 16,
                 ..Default::default()
             },
             Some(tx),
         )
     });
     let addr = rx.recv()?;
-    println!("server up on {addr} (2 engine workers)");
+    println!("server up on {addr} (2 engine workers, prefill chunk 16)");
+
+    // Streaming: tokens arrive frame by frame before the final reply.
+    {
+        let mut streamer = Client::connect(&addr.to_string())?;
+        print!("  streaming \"Q: 6+7=? A: \" -> ");
+        let fin = streamer.generate_stream("Q: 6+7=? A: ", 6, |delta| {
+            print!("[{delta}]");
+        })?;
+        println!(
+            "  (done: {} tokens in {:.1}ms)",
+            fin.get("tokens").and_then(Json::as_usize).unwrap_or(0),
+            fin.get("compute_ms").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+    }
 
     // Fire 24 requests from 8 client threads. Each client *pipelines* its
     // 3 requests on one connection — replies come back in completion

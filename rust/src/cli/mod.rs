@@ -115,6 +115,12 @@ SERVE FLAGS:
                       each owns max-batch KV slots and threads/W GEMM threads
   --max-batch N       decode-batch slots per engine worker (default 8)
   --max-wait-ms T     idle-worker admission poll interval (default 5)
+  --prefill-chunk N   max prompt tokens prefilled per scheduler iteration,
+                      so running sequences keep decoding between the chunks
+                      of a long prompt (default 64; 0 = whole-prompt prefill)
+
+Clients add \"stream\": true to a request line to receive one
+{\"id\",\"delta\",\"seq\"} frame per generated token before the final reply.
 ";
 
 /// Parse a baseline name.

@@ -12,7 +12,7 @@ pub use batch::{Batch, BatchBuilder};
 pub use corpus::CorpusGen;
 pub use math_task::{grade, MathExample, MathTask};
 pub use mcq_task::{McqExample, McqTask, CHOICES};
-pub use tokenizer::{detokenize, tokenize, PAD, VOCAB_SIZE};
+pub use tokenizer::{detokenize, token_byte, tokenize, PAD, VOCAB_SIZE};
 
 /// The letter of the i-th multiple-choice option.
 pub fn mcq_letter(i: usize) -> char {

@@ -12,13 +12,17 @@ pub fn tokenize(s: &str) -> Vec<i32> {
     s.bytes().map(|b| b as i32).collect()
 }
 
+/// The text byte a token id contributes when decoding (`None` for PAD and
+/// out-of-range ids, which contribute nothing). Shared by [`detokenize`]
+/// and the server's incremental stream decoder so the two paths can never
+/// disagree about which tokens carry bytes.
+pub fn token_byte(t: i32) -> Option<u8> {
+    (t > 0 && t < 256).then_some(t as u8)
+}
+
 /// Decode token ids back to a string (PAD and invalid bytes dropped).
 pub fn detokenize(toks: &[i32]) -> String {
-    let bytes: Vec<u8> = toks
-        .iter()
-        .filter(|&&t| t > 0 && t < 256)
-        .map(|&t| t as u8)
-        .collect();
+    let bytes: Vec<u8> = toks.iter().filter_map(|&t| token_byte(t)).collect();
     String::from_utf8_lossy(&bytes).into_owned()
 }
 

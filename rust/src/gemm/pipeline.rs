@@ -266,12 +266,32 @@ fn run_pipelined(
 /// `C[m,n] = X[m,k] @ W[k,n]` with bitmap `W`, decode and GEMM overlapped
 /// across `cfg.num_threads` workers (0 = all cores). Falls back to the
 /// panel-streamed sequential path when there is no parallel resource.
+///
+/// Resolves a registry pool from the thread knob; callers that own a pool
+/// (the engine, per-worker private pools) should use
+/// [`bitmap_gemm_pipelined_pool`] so every execution path shares one
+/// thread budget.
 pub fn bitmap_gemm_pipelined(
     x: &[f32],
     w: &BitmapMatrix,
     c: &mut [f32],
     m: usize,
     cfg: PipelineConfig,
+) {
+    bitmap_gemm_pipelined_pool(x, w, c, m, cfg, &WorkerPool::with_threads(cfg.num_threads));
+}
+
+/// [`bitmap_gemm_pipelined`] on an explicit pool: the stage workers (and
+/// the degenerate fallback) run on `pool`, ignoring `cfg.num_threads` —
+/// this is what makes `--threads 1` ablations apples-to-apples when the
+/// engine owns a private (un-registered) pool.
+pub fn bitmap_gemm_pipelined_pool(
+    x: &[f32],
+    w: &BitmapMatrix,
+    c: &mut [f32],
+    m: usize,
+    cfg: PipelineConfig,
+    pool: &WorkerPool,
 ) {
     let (k, n) = (w.rows(), w.cols());
     assert!(x.len() >= m * k && c.len() >= m * n);
@@ -281,19 +301,20 @@ pub fn bitmap_gemm_pipelined(
     }
     let panel_k = cfg.panel_k.max(1).min(k);
     let npanels = k.div_ceil(panel_k);
-    let pool = WorkerPool::with_threads(cfg.num_threads);
     if npanels == 1 || cfg.ring_depth < 2 || pool.threads() < 2 {
         // Degenerate: no overlap possible; run sequentially.
         let mut scratch = Vec::new();
         crate::gemm::sparse::bitmap_gemm_panelled(x, w, c, m, panel_k, &mut scratch);
         return;
     }
-    run_pipelined(x, w, &[], &[], 0, c, m, panel_k, npanels, cfg.ring_depth, &pool);
+    run_pipelined(x, w, &[], &[], 0, c, m, panel_k, npanels, cfg.ring_depth, pool);
 }
 
 /// Fold the low-rank adapter update into the same call:
 /// `C = X @ W_sparse + (X @ A_cat) @ B_cat`, with each consumer applying
-/// its adapter stripe *while the first panels decode*.
+/// its adapter stripe *while the first panels decode*. Resolves a registry
+/// pool from `cfg.num_threads`; pool-owning callers use
+/// [`salr_gemm_pipelined_pool`].
 #[allow(clippy::too_many_arguments)]
 pub fn salr_gemm_pipelined(
     x: &[f32],
@@ -305,17 +326,46 @@ pub fn salr_gemm_pipelined(
     m: usize,
     cfg: PipelineConfig,
 ) {
+    salr_gemm_pipelined_pool(
+        x,
+        w,
+        a_cat,
+        b_cat,
+        rank_total,
+        c,
+        m,
+        cfg,
+        &WorkerPool::with_threads(cfg.num_threads),
+    );
+}
+
+/// [`salr_gemm_pipelined`] on an explicit pool (stage workers + the
+/// adapter pre-GEMM + the degenerate fallback all run on `pool`;
+/// `cfg.num_threads` is ignored). The engine's prefill path calls this
+/// with its own pool, so private per-engine-worker pools are honored end
+/// to end.
+#[allow(clippy::too_many_arguments)]
+pub fn salr_gemm_pipelined_pool(
+    x: &[f32],
+    w: &BitmapMatrix,
+    a_cat: &[f32],
+    b_cat: &[f32],
+    rank_total: usize,
+    c: &mut [f32],
+    m: usize,
+    cfg: PipelineConfig,
+    pool: &WorkerPool,
+) {
     let (k, n) = (w.rows(), w.cols());
     c[..m * n].fill(0.0);
     if m == 0 || n == 0 {
         return;
     }
-    let pool = WorkerPool::with_threads(cfg.num_threads);
     // `u = X @ A_cat` is tiny (m × total_rank); computing it up front keeps
     // the consumers' adapter stripes independent of each other.
     let mut u = vec![0.0f32; m * rank_total];
     if rank_total > 0 && k > 0 {
-        crate::gemm::dense::gemm_f32_pool(x, a_cat, &mut u, m, k, rank_total, &pool);
+        crate::gemm::dense::gemm_f32_pool(x, a_cat, &mut u, m, k, rank_total, pool);
     }
     if k == 0 {
         // X has no columns: every product term is zero.
@@ -341,7 +391,7 @@ pub fn salr_gemm_pipelined(
         }
         return;
     }
-    run_pipelined(x, w, &u, b_cat, rank_total, c, m, panel_k, npanels, cfg.ring_depth, &pool);
+    run_pipelined(x, w, &u, b_cat, rank_total, c, m, panel_k, npanels, cfg.ring_depth, pool);
 }
 
 #[cfg(test)]
@@ -448,6 +498,49 @@ mod tests {
             let mut c = vec![0.0f32; 4 * 32];
             bitmap_gemm_pipelined(x.data(), &bm, &mut c, 4, PipelineConfig::default());
             assert_eq!(c, first, "pipeline must be deterministic");
+        }
+    }
+
+    #[test]
+    fn explicit_pool_matches_registry_pool() {
+        // The `_pool` entry points must produce the same bits whether the
+        // pool is a private instance (any width, including 1 = sequential
+        // fallback) or the registry pool the knob-based API resolves.
+        let mut rng = Rng::new(125);
+        let (m, k, n, r) = (6usize, 160usize, 48usize, 8usize);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        prune_global(&mut [&mut w], 0.5);
+        let a = Tensor::randn(&[k, r], 0.1, &mut rng);
+        let b = Tensor::randn(&[r, n], 0.1, &mut rng);
+        let bm = BitmapMatrix::encode(&w);
+        let cfg = PipelineConfig {
+            panel_k: 32,
+            ring_depth: 3,
+            num_threads: 3,
+        };
+        let mut via_knob = vec![0.0f32; m * n];
+        salr_gemm_pipelined(x.data(), &bm, a.data(), b.data(), r, &mut via_knob, m, cfg);
+        for threads in [1usize, 2, 4] {
+            let private = WorkerPool::new(threads);
+            let mut c = vec![0.0f32; m * n];
+            salr_gemm_pipelined_pool(
+                x.data(),
+                &bm,
+                a.data(),
+                b.data(),
+                r,
+                &mut c,
+                m,
+                cfg,
+                &private,
+            );
+            assert_eq!(c, via_knob, "private pool width {threads} changed bits");
+            let mut cb = vec![0.0f32; m * n];
+            bitmap_gemm_pipelined_pool(x.data(), &bm, &mut cb, m, cfg, &private);
+            let mut want = vec![0.0f32; m * n];
+            bitmap_gemm_pipelined(x.data(), &bm, &mut want, m, cfg);
+            assert_eq!(cb, want, "bitmap private pool width {threads} changed bits");
         }
     }
 

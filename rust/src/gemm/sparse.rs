@@ -4,7 +4,7 @@
 
 use crate::gemm::dense;
 use crate::sparse::BitmapMatrix;
-use crate::util::pool::WorkerPool;
+use crate::util::pool::{SendPtr, WorkerPool};
 
 /// `C[m,n] = X[m,k] @ W[k,n]` where `W` is bitmap-encoded.
 /// Fully decodes `W` into a scratch buffer first (sequential baseline);
@@ -112,6 +112,90 @@ pub fn bitmap_gemm_direct(
             }
         }
     }
+    for i in 0..m {
+        for j in 0..n {
+            c[i * n + j] = ct[j * m + i];
+        }
+    }
+}
+
+/// [`bitmap_gemm_direct`] parallelized over **column stripes** on the
+/// caller's pool — the decode-batch hot path of the serving engine.
+///
+/// Each stripe task owns a disjoint byte-block range of W's columns (and
+/// therefore disjoint columns of the transposed C scratch): it walks every
+/// weight row, skips the value prefix belonging to earlier stripes via
+/// mask popcounts, and accumulates only its own columns. Because a given
+/// output column receives its terms in ascending weight-row order no
+/// matter how many stripes run, the result is **bitwise identical** to
+/// the single-threaded kernel at every pool width.
+pub fn bitmap_gemm_direct_pool(
+    x: &[f32],
+    w: &BitmapMatrix,
+    c: &mut [f32],
+    m: usize,
+    scratch: &mut Vec<f32>,
+    pool: &WorkerPool,
+) {
+    let (k, n) = (w.rows(), w.cols());
+    assert!(x.len() >= m * k && c.len() >= m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let bpr = w.bytes_per_row();
+    let stripes = pool.threads().min(bpr);
+    if stripes <= 1 || k == 0 {
+        return bitmap_gemm_direct(x, w, c, m, scratch);
+    }
+    // scratch = [ xT (k*m) | cT (n*m) ], transposed so the m-loop is
+    // contiguous — same layout as the serial kernel.
+    scratch.clear();
+    scratch.resize(k * m + n * m, 0.0);
+    {
+        let (xt, ct) = scratch.split_at_mut(k * m);
+        for i in 0..m {
+            for p in 0..k {
+                xt[p * m + i] = x[i * k + p];
+            }
+        }
+        let xt = &*xt;
+        let masks = w.masks();
+        let values = w.values();
+        let offs = w.row_offsets();
+        let cptr = SendPtr(ct.as_mut_ptr());
+        pool.run(stripes, &|s| {
+            // Stripe `s` owns byte blocks [b0, b1) → columns [b0*8, b1*8).
+            let b0 = s * bpr / stripes;
+            let b1 = (s + 1) * bpr / stripes;
+            for p in 0..k {
+                let xcol = &xt[p * m..(p + 1) * m];
+                let row_masks = &masks[p * bpr..(p + 1) * bpr];
+                // Skip this row's values that belong to earlier stripes.
+                let mut voff = offs[p] as usize;
+                for &mask in &row_masks[..b0] {
+                    voff += mask.count_ones() as usize;
+                }
+                for (b, &mask) in row_masks.iter().enumerate().take(b1).skip(b0) {
+                    let mut mbits = mask;
+                    while mbits != 0 {
+                        let t = mbits.trailing_zeros() as usize;
+                        let j = b * 8 + t;
+                        let v = values[voff];
+                        voff += 1;
+                        // SAFETY: stripe `s` exclusively owns cT columns
+                        // [b0*8, b1*8), and j lies in that range.
+                        let crow =
+                            unsafe { std::slice::from_raw_parts_mut(cptr.0.add(j * m), m) };
+                        for i in 0..m {
+                            crow[i] += xcol[i] * v;
+                        }
+                        mbits &= mbits - 1;
+                    }
+                }
+            }
+        });
+    }
+    let ct = &scratch[k * m..];
     for i in 0..m {
         for j in 0..n {
             c[i * n + j] = ct[j * m + i];
@@ -251,6 +335,39 @@ mod tests {
             let mut scratch = Vec::new();
             bitmap_gemm_direct(x.data(), &bm, &mut c, m, &mut scratch);
             let c = Tensor::from_vec(&[m, n], c);
+            assert!(max_abs_diff(&c, &want) < 1e-3, "({m},{k},{n},{p})");
+        }
+    }
+
+    #[test]
+    fn direct_pool_is_bitwise_identical_to_serial() {
+        // Column-striped parallel direct GEMM: same bits as the serial
+        // kernel at every pool width (each column accumulates in ascending
+        // weight-row order regardless of the stripe count), including
+        // ragged column counts that don't align to byte blocks.
+        let mut rng = Rng::new(113);
+        for &(m, k, n, p) in &[
+            (1usize, 64usize, 48usize, 0.5f64),
+            (4, 96, 33, 0.5),
+            (8, 50, 7, 0.9),
+            (2, 40, 100, 0.0),
+        ] {
+            let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+            crate::prune::prune_global(&mut [&mut w], p);
+            let bm = BitmapMatrix::encode(&w);
+            let mut serial = vec![0.0f32; m * n];
+            let mut scratch = Vec::new();
+            bitmap_gemm_direct(x.data(), &bm, &mut serial, m, &mut scratch);
+            for threads in [1usize, 2, 3, 8] {
+                let pool = WorkerPool::new(threads);
+                let mut c = vec![0.0f32; m * n];
+                let mut sc = Vec::new();
+                bitmap_gemm_direct_pool(x.data(), &bm, &mut c, m, &mut sc, &pool);
+                assert_eq!(c, serial, "({m},{k},{n},{p}) threads={threads}");
+            }
+            let want = matmul_naive(&x, &w);
+            let c = Tensor::from_vec(&[m, n], serial);
             assert!(max_abs_diff(&c, &want) < 1e-3, "({m},{k},{n},{p})");
         }
     }

@@ -222,9 +222,10 @@ pub struct Engine {
     pub weights: Arc<EngineWeights>,
     /// How the adapted linears execute.
     pub backend: Backend,
-    /// Pool for the dense linears, the small-m sparse path and the logit
-    /// GEMM; the pipelined backend resolves its own pool from
-    /// `PipelineConfig::num_threads`.
+    /// Pool every linear runs on: the dense GEMMs, the small-m sparse
+    /// decode path, the logit GEMM *and* the pipelined prefill stages —
+    /// `SalrLayer::forward` threads this pool through to the pipeline, so
+    /// `--threads 1` ablations are apples-to-apples on every path.
     pool: Arc<WorkerPool>,
 }
 
@@ -506,18 +507,65 @@ impl Engine {
     /// allocated, i.e. empty) and greedily sample the sequence's first
     /// token. Prefill runs the whole prompt as one multi-row forward, so
     /// large prompts still use the prefill-shaped (pipelined) kernels.
+    ///
+    /// Implemented as a single [`Engine::prefill_chunk`]; panics if the
+    /// prompt does not fit the slot — use `prefill_chunk` directly for the
+    /// error-returning form.
     pub fn prefill(&self, prompt: &[i32], slot: usize, kv: &mut KvSlotPool) -> i32 {
-        let cfg = &self.weights.cfg;
-        assert!(!prompt.is_empty(), "empty prompt");
-        assert!(prompt.len() <= cfg.max_seq_len, "prompt exceeds max_seq_len");
         assert_eq!(kv.seq_len(slot), 0, "prefill into a non-empty slot");
-        let pos: Vec<usize> = (0..prompt.len()).collect();
-        let rows = vec![slot; prompt.len()];
-        let hidden = self.forward_rows(prompt, &pos, kv.slots_mut(), &rows);
+        self.prefill_chunk(prompt, slot, kv, true)
+            .expect("prompt fits the KV slot")
+            .expect("final chunk yields a token")
+    }
+
+    /// Resumable prefill: append `chunk` prompt tokens to `slot`'s caches,
+    /// continuing from whatever the slot already holds. The scheduler
+    /// feeds a long prompt through repeated calls — bounded chunks — so
+    /// running sequences keep taking decode steps between chunks instead
+    /// of stalling behind one long prefill.
+    ///
+    /// Pass `last = true` on the final chunk to greedily sample the
+    /// sequence's first generated token (`Ok(Some(tok))`); intermediate
+    /// chunks skip the logit GEMM entirely and return `Ok(None)`.
+    ///
+    /// Determinism: every hidden row depends only on its own input row and
+    /// the slot's cache prefix (per-row linears with fixed k-accumulation
+    /// order, per-row norms/attention), so the token stream is identical
+    /// whichever way the prompt is split into chunks — `prefill` is
+    /// literally one maximal chunk. See DESIGN.md "Serving layer".
+    ///
+    /// Errors (instead of panicking) when the chunk is empty or would
+    /// overflow the slot, so a mis-sized request costs the server an error
+    /// reply, not an engine worker. On error the slot's caches are
+    /// untouched; the caller decides whether to free the slot.
+    pub fn prefill_chunk(
+        &self,
+        chunk: &[i32],
+        slot: usize,
+        kv: &mut KvSlotPool,
+        last: bool,
+    ) -> anyhow::Result<Option<i32>> {
+        use anyhow::ensure;
+        let cfg = &self.weights.cfg;
+        ensure!(!chunk.is_empty(), "empty prefill chunk");
+        let start = kv.seq_len(slot);
+        ensure!(
+            chunk.len() <= kv.remaining(slot) && start + chunk.len() <= cfg.max_seq_len,
+            "prompt overflows KV slot: {} cached + {} new tokens > {} capacity",
+            start,
+            chunk.len(),
+            cfg.max_seq_len.min(start + kv.remaining(slot)),
+        );
+        let pos: Vec<usize> = (start..start + chunk.len()).collect();
+        let rows = vec![slot; chunk.len()];
+        let hidden = self.forward_rows(chunk, &pos, kv.slots_mut(), &rows);
+        if !last {
+            return Ok(None);
+        }
         let d = cfg.d_model;
-        let last = &hidden[(prompt.len() - 1) * d..prompt.len() * d];
-        let lg = self.logits(last, 1);
-        argmax(&lg) as i32
+        let lastrow = &hidden[(chunk.len() - 1) * d..chunk.len() * d];
+        let lg = self.logits(lastrow, 1);
+        Ok(Some(argmax(&lg) as i32))
     }
 
     /// One decode iteration for the sequences in `slots`: feed each
@@ -667,6 +715,68 @@ mod tests {
         let ga = dense.generate_batch(&[tokens.clone()], 5);
         let gb = salr.generate_batch(&[tokens], 5);
         assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_one_shot() {
+        // Splitting the prompt into chunks of any size must not change a
+        // single bit of the sequence's token stream: per-row linears plus
+        // per-row attention over the cache prefix make `prefill` one
+        // maximal chunk.
+        let cfg = test_cfg();
+        let mut rng = Rng::new(410);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let engine = Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense);
+        let prompt: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5];
+        let reference = engine.generate_batch(&[prompt.clone()], 6)[0].clone();
+        for &chunk in &[1usize, 2, 3, 5, prompt.len()] {
+            let mut kv = engine.new_slot_pool(1);
+            let slot = kv.alloc().unwrap();
+            let mut fed = 0;
+            let mut first = None;
+            while fed < prompt.len() {
+                let take = chunk.min(prompt.len() - fed);
+                let last = fed + take == prompt.len();
+                first = engine
+                    .prefill_chunk(&prompt[fed..fed + take], slot, &mut kv, last)
+                    .unwrap();
+                fed += take;
+            }
+            let mut out = vec![first.expect("final chunk samples")];
+            for _ in 1..6 {
+                let next = engine.decode_step(&[*out.last().unwrap()], &[slot], &mut kv);
+                out.push(next[0]);
+            }
+            assert_eq!(out, reference, "chunk={chunk} changed the tokens");
+            kv.free(slot);
+        }
+    }
+
+    #[test]
+    fn overlong_prompt_is_rejected_not_panicking() {
+        let cfg = test_cfg(); // max_seq_len = 24
+        let mut rng = Rng::new(411);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let engine = Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense);
+        let mut kv = engine.new_slot_pool(1);
+        let slot = kv.alloc().unwrap();
+        // Whole prompt longer than the slot: error, caches untouched.
+        let long = vec![1i32; cfg.max_seq_len + 1];
+        assert!(engine.prefill_chunk(&long, slot, &mut kv, true).is_err());
+        assert_eq!(kv.seq_len(slot), 0, "failed prefill must not touch the cache");
+        // Mid-prefill overflow: first chunk fits, the next would not.
+        let head = vec![2i32; cfg.max_seq_len - 2];
+        assert!(engine.prefill_chunk(&head, slot, &mut kv, false).is_ok());
+        assert!(engine.prefill_chunk(&[1, 2, 3], slot, &mut kv, true).is_err());
+        assert!(engine.prefill_chunk(&[], slot, &mut kv, true).is_err());
+        // The slot is still usable after freeing: alloc resets lengths and
+        // a normal sequence decodes to the same tokens as a fresh engine.
+        kv.free(slot);
+        let again = kv.alloc().unwrap();
+        assert_eq!(again, slot);
+        let prompt: Vec<i32> = vec![7, 8, 9];
+        let first = engine.prefill(&prompt, again, &mut kv);
+        assert_eq!(first, engine.generate_batch(&[prompt], 1)[0][0]);
     }
 
     #[test]

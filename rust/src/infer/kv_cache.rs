@@ -130,6 +130,17 @@ impl KvSlotPool {
     pub fn seq_len(&self, slot: usize) -> usize {
         self.slots[slot].first().map(|c| c.len).unwrap_or(0)
     }
+
+    /// Remaining time-step capacity of `slot` — how many more tokens can
+    /// be appended before the slot overflows. The engine's chunked
+    /// prefill checks this before every chunk so an over-long prompt is
+    /// rejected with an error instead of panicking mid-forward.
+    pub fn remaining(&self, slot: usize) -> usize {
+        self.slots[slot]
+            .first()
+            .map(|c| c.capacity() - c.len)
+            .unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -177,5 +188,20 @@ mod tests {
         pool.free(b);
         assert_eq!(pool.available(), 1);
         assert_eq!(pool.alloc(), Some(1));
+    }
+
+    #[test]
+    fn remaining_tracks_pushes_and_realloc() {
+        let mut pool = KvSlotPool::new(2, 1, 4, 2);
+        let s = pool.alloc().unwrap();
+        assert_eq!(pool.remaining(s), 4);
+        pool.slots_mut()[s][0].push(&[1.0, 2.0], &[3.0, 4.0]);
+        pool.slots_mut()[s][0].push(&[5.0, 6.0], &[7.0, 8.0]);
+        assert_eq!(pool.remaining(s), 2);
+        // Freeing and re-allocating restores full capacity (lengths reset).
+        pool.free(s);
+        let s2 = pool.alloc().unwrap();
+        assert_eq!(s2, s);
+        assert_eq!(pool.remaining(s2), 4);
     }
 }

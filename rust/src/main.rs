@@ -115,6 +115,7 @@ fn run(args: &Args) -> Result<()> {
                 ),
                 num_threads: threads,
                 engine_workers: args.usize_or("engine-workers", 1)?.max(1),
+                prefill_chunk: args.usize_or("prefill-chunk", 64)?,
             };
             serve(engine, &args.str_or("addr", "127.0.0.1:7433"), policy, None)
         }

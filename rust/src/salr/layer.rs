@@ -2,7 +2,7 @@
 //! low-rank adapters, executed through the two-stage pipeline.
 
 use crate::gemm::fused::AdapterStack;
-use crate::gemm::pipeline::{salr_gemm_pipelined, PipelineConfig};
+use crate::gemm::pipeline::{salr_gemm_pipelined_pool, PipelineConfig};
 use crate::sparse::BitmapMatrix;
 use crate::tensor::Tensor;
 
@@ -54,9 +54,11 @@ impl SalrLayer {
     /// `pool` is the engine's own worker pool — threaded down explicitly
     /// so a hot decode step never does a global pool-registry lookup, and
     /// so private per-engine-worker pools (which are *not* in the
-    /// registry) are honored. The pipelined large-m path still sizes its
-    /// stage workers from `cfg.num_threads`; engines keep that knob
-    /// aligned with their pool.
+    /// registry) are honored on **every** path: the small-m direct kernel
+    /// stripes its columns across `pool`, and the pipelined large-m path
+    /// runs its stage workers on `pool` too (`cfg.num_threads` no longer
+    /// resolves a separate registry pool — the `--threads 1` ablation is
+    /// apples-to-apples everywhere).
     pub fn forward(
         &self,
         x: &[f32],
@@ -68,10 +70,12 @@ impl SalrLayer {
         const DIRECT_M_MAX: usize = 32;
         if m <= DIRECT_M_MAX {
             let mut scratch = Vec::new();
-            crate::gemm::sparse::bitmap_gemm_direct(x, &self.w_hat, out, m, &mut scratch);
+            crate::gemm::sparse::bitmap_gemm_direct_pool(
+                x, &self.w_hat, out, m, &mut scratch, pool,
+            );
             self.adapters.apply_fused_acc_pool(x, m, out, pool);
         } else {
-            salr_gemm_pipelined(
+            salr_gemm_pipelined_pool(
                 x,
                 &self.w_hat,
                 self.adapters.a_cat.data(),
@@ -80,6 +84,7 @@ impl SalrLayer {
                 out,
                 m,
                 cfg,
+                pool,
             );
         }
     }
@@ -163,6 +168,26 @@ mod tests {
         assert_eq!(y1, y3, "pool width must not change the bits");
         let want = layer.forward_reference(&x);
         assert!(max_abs_diff(&Tensor::from_vec(&[4, 64], y1), &want) < 1e-2);
+    }
+
+    #[test]
+    fn prefill_sized_forward_honors_private_pools() {
+        // The large-m (pipelined) path must also run on exactly the pool
+        // it is handed: private 1-thread and 3-thread pools agree bitwise
+        // with each other and stay close to the reference.
+        let mut rng = Rng::new(305);
+        let layer = make_layer(&mut rng, 96, 64, 8, 16);
+        let m = 40; // > DIRECT_M_MAX → pipelined path
+        let x = Tensor::randn(&[m, 96], 1.0, &mut rng);
+        let p1 = crate::util::pool::WorkerPool::new(1);
+        let p3 = crate::util::pool::WorkerPool::new(3);
+        let mut y1 = vec![0.0f32; m * 64];
+        let mut y3 = vec![0.0f32; m * 64];
+        layer.forward(x.data(), m, &mut y1, PipelineConfig::default(), &p1);
+        layer.forward(x.data(), m, &mut y3, PipelineConfig::default(), &p3);
+        assert_eq!(y1, y3, "pipelined pool width must not change the bits");
+        let want = layer.forward_reference(&x);
+        assert!(max_abs_diff(&Tensor::from_vec(&[m, 64], y1), &want) < 1e-2);
     }
 
     #[test]

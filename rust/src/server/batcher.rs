@@ -1,28 +1,42 @@
 //! Continuous batching: a shared admission queue feeding `W` engine
-//! worker loops.
+//! worker loops, with **chunked prefill**, **token streaming** and
+//! **cross-worker work stealing**.
 //!
 //! Each worker owns an [`Engine`] fork (weights Arc-shared), a
 //! fixed-size [`KvSlotPool`](crate::infer::KvSlotPool) of `max_batch`
-//! sequence slots, and runs an
-//! **iteration-level scheduling loop**: after every decode step it
-//! retires finished sequences, admits waiting requests into the freed
-//! slots (prefilling them into reused KV rows), and keeps stepping — so
-//! batch occupancy stays near `max_batch` under load instead of draining
-//! to zero between static batches.
+//! sequence slots, and runs an **iteration-level scheduling loop**. One
+//! scheduler iteration is:
+//!
+//! 1. *admit*: pop waiting requests from the shared queue into this
+//!    worker's claim board (bounded by free capacity); if the queue is
+//!    empty but another worker is hoarding unstarted claims, **steal**
+//!    from the back of the longest board instead;
+//! 2. *prefill one chunk*: feed at most [`BatchPolicy::prefill_chunk`]
+//!    prompt tokens of the oldest unfinished prefill through
+//!    [`Engine::prefill_chunk`] — a long prompt therefore spreads over
+//!    many iterations instead of freezing the batch;
+//! 3. *decode*: one [`Engine::decode_step`] over every fully-prefilled
+//!    sequence, so running requests keep producing tokens **between**
+//!    another request's prefill chunks;
+//! 4. *retire*: finished sequences free their KV slots, fire their reply
+//!    callbacks and (counted) make room for the next admissions.
 //!
 //! Responses complete **out of order** (a short request admitted late can
 //! finish before a long request admitted early); each request carries its
 //! own reply callback, and the TCP front-end routes replies by request id.
+//! A request submitted with a stream callback additionally gets every
+//! generated token's text delta as it is produced.
 //!
 //! Determinism: greedy decode is order-independent per sequence — every
 //! engine computes a sequence's next token from that sequence's row and
-//! KV cache alone — so per-request output is byte-identical whether it is
-//! served alone, in a static batch, or continuously batched across any
-//! number of engine workers. `rust/tests/integration_serve.rs` asserts
-//! this end to end.
+//! KV cache alone, and chunked prefill splits the same per-row math over
+//! several forwards — so per-request output is byte-identical whether it
+//! is served alone, in a static batch, continuously batched across any
+//! number of engine workers, or prefilled in chunks of any size.
+//! `rust/tests/integration_serve.rs` asserts this end to end.
 
-use crate::data::{detokenize, tokenize};
-use crate::infer::Engine;
+use crate::data::{detokenize, token_byte, tokenize};
+use crate::infer::{Engine, KvSlotPool};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -45,11 +59,14 @@ pub struct Request {
 pub struct Response {
     /// Echo of [`Request::id`].
     pub id: u64,
-    /// Generated text.
+    /// Generated text (empty when `error` is set).
     pub text: String,
-    /// Time from enqueue to admission into a decode batch (milliseconds).
+    /// Why the request failed, if it did (e.g. a prompt longer than the
+    /// KV slot capacity is rejected instead of served truncated).
+    pub error: Option<String>,
+    /// Time from enqueue to the start of prefill (milliseconds).
     pub queue_ms: f64,
-    /// Time from admission to completion (milliseconds).
+    /// Time from prefill start to completion (milliseconds).
     pub compute_ms: f64,
     /// Generated token count.
     pub tokens: usize,
@@ -64,13 +81,19 @@ pub struct BatchPolicy {
     /// How long an idle worker sleeps between admission checks. With
     /// continuous batching there is no batch-forming window — requests
     /// are admitted the moment a slot is free — so this only bounds
-    /// shutdown latency; submissions wake idle workers immediately.
+    /// shutdown latency and work-stealing latency; submissions wake idle
+    /// workers immediately.
     pub max_wait: Duration,
     /// Worker threads for the engines' GEMM/pipeline stages, split evenly
     /// across engine workers (0 = all cores).
     pub num_threads: usize,
     /// Number of engine worker loops pulling from the shared queue.
     pub engine_workers: usize,
+    /// Maximum prompt tokens prefilled per scheduler iteration (the chunk
+    /// size of [`Engine::prefill_chunk`]). `0` disables chunking: whole
+    /// prompts prefill in one forward, so one long prompt stalls that
+    /// worker's decode batch for the duration — the pre-chunking behavior.
+    pub prefill_chunk: usize,
 }
 
 impl Default for BatchPolicy {
@@ -80,6 +103,7 @@ impl Default for BatchPolicy {
             max_wait: Duration::from_millis(5),
             num_threads: 0,
             engine_workers: 1,
+            prefill_chunk: 64,
         }
     }
 }
@@ -96,12 +120,22 @@ pub struct ServerMetrics {
     /// Sum of batch occupancy over all decode steps (mean occupancy =
     /// `step_slots / decode_steps`).
     pub step_slots: AtomicU64,
-    /// Requests admitted into a worker's batch.
+    /// Requests admitted into a worker's batch (prefill started).
     pub admitted: AtomicU64,
-    /// Requests admitted while their worker already had live sequences
-    /// decoding — i.e. they joined a running batch mid-stream instead of
-    /// waiting for it to drain. Static batching keeps this at 0.
+    /// Requests whose prefill started while their worker already had
+    /// fully-prefilled sequences decoding — i.e. they joined a running
+    /// batch mid-stream instead of waiting for it to drain. Static
+    /// batching keeps this at 0.
     pub admitted_midstream: AtomicU64,
+    /// Prefill chunks executed (multiple per request once a prompt is
+    /// longer than [`BatchPolicy::prefill_chunk`]).
+    pub prefill_chunks: AtomicU64,
+    /// Waiting requests moved from one worker's claim board to another's
+    /// (the work-stealing counter).
+    pub stolen: AtomicU64,
+    /// Requests rejected with an error reply (over-long prompt, prefill
+    /// failure) — their KV slots are freed, never leaked.
+    pub rejected: AtomicU64,
     /// Highest batch occupancy any worker reached.
     pub max_occupancy: AtomicU64,
     /// Per-request end-to-end latencies (µs), for percentile queries.
@@ -179,10 +213,19 @@ pub struct WorkerMetrics {
 /// route completions their own way.
 pub type ReplyFn = Box<dyn FnOnce(Response) + Send>;
 
+/// Stream callback: invoked with each generated token's text delta, in
+/// order, as it is produced. Deltas concatenate **exactly** to the final
+/// [`Response::text`]: an incomplete multi-byte UTF-8 sequence is held
+/// back until its continuation bytes arrive (or the sequence retires),
+/// and invalid sequences are replaced with U+FFFD, mirroring the lossy
+/// decode the final text uses.
+pub type StreamFn = Box<dyn FnMut(&str) + Send>;
+
 struct Pending {
     req: Request,
     enqueued: Instant,
     reply: ReplyFn,
+    stream: Option<StreamFn>,
 }
 
 /// A sequence occupying a KV slot in one worker's decode batch.
@@ -190,11 +233,98 @@ struct LiveSeq {
     slot: usize,
     id: u64,
     reply: ReplyFn,
+    stream: Option<StreamFn>,
     enqueued: Instant,
     admitted: Instant,
+    /// Tokenized prompt; `prefilled` counts how many of these are already
+    /// in the KV cache. The sequence decodes once `prefilled == len`.
+    prompt: Vec<i32>,
+    prefilled: usize,
     current: i32,
     out: Vec<i32>,
+    /// Output bytes not yet emitted as stream deltas (at most one
+    /// incomplete UTF-8 sequence, ≤ 3 bytes, between emissions).
+    pending: Vec<u8>,
     budget: usize,
+}
+
+impl LiveSeq {
+    fn prefill_done(&self) -> bool {
+        self.prefilled >= self.prompt.len()
+    }
+
+    /// Record a newly generated token and stream its text delta, if this
+    /// sequence has a stream callback. O(1) amortized per token: only the
+    /// new token's byte joins `pending`, and `pending` drains as soon as
+    /// it is decodable.
+    fn stream_token(&mut self, tok: i32) {
+        if self.stream.is_none() {
+            return;
+        }
+        if let Some(b) = token_byte(tok) {
+            self.pending.push(b);
+        }
+        self.drain_pending(false);
+    }
+
+    /// Flush the held-back tail on retirement so the concatenated deltas
+    /// equal the final lossy-decoded text exactly (a truncated multi-byte
+    /// sequence becomes one U+FFFD, just as `detokenize` renders it).
+    fn finish_stream(&mut self) {
+        if self.stream.is_some() {
+            self.drain_pending(true);
+        }
+    }
+
+    /// Incremental `from_utf8_lossy`: emit every decodable prefix of
+    /// `pending`, replace invalid sequences with U+FFFD, and (unless
+    /// `flush`) hold back an incomplete trailing sequence until its
+    /// continuation bytes arrive.
+    fn drain_pending(&mut self, flush: bool) {
+        let Some(cb) = self.stream.as_mut() else {
+            return;
+        };
+        loop {
+            if self.pending.is_empty() {
+                return;
+            }
+            match std::str::from_utf8(&self.pending) {
+                Ok(s) => {
+                    cb(s);
+                    self.pending.clear();
+                    return;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    if valid > 0 {
+                        // SAFETY-free: the prefix is valid per valid_up_to.
+                        cb(std::str::from_utf8(&self.pending[..valid]).unwrap());
+                    }
+                    match e.error_len() {
+                        Some(bad) => {
+                            // A maximal invalid subpart: replace it, keep
+                            // decoding what follows (same substitution
+                            // from_utf8_lossy applies).
+                            cb("\u{FFFD}");
+                            self.pending.drain(..valid + bad);
+                        }
+                        None => {
+                            // Incomplete trailing sequence: wait for its
+                            // continuation — or, on the final flush,
+                            // render it as the one U+FFFD the lossy final
+                            // decode will show.
+                            self.pending.drain(..valid);
+                            if flush {
+                                cb("\u{FFFD}");
+                                self.pending.clear();
+                            }
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// The admission queue plus the shared serving state; engine workers are
@@ -204,6 +334,10 @@ pub struct Batcher {
     queue: Mutex<VecDeque<Pending>>,
     cv: Condvar,
     policy: BatchPolicy,
+    /// Per-worker claim boards: requests popped from the queue but whose
+    /// prefill has not started. No KV state yet, so an idle worker can
+    /// steal from the back of another worker's board at zero cost.
+    boards: Mutex<Vec<VecDeque<Pending>>>,
     /// Aggregate metrics across all engine workers.
     pub metrics: ServerMetrics,
     worker_metrics: Mutex<Vec<WorkerMetrics>>,
@@ -213,10 +347,12 @@ pub struct Batcher {
 impl Batcher {
     /// A batcher with no workers yet (see [`spawn_engine_workers`]).
     pub fn new(policy: BatchPolicy) -> Arc<Batcher> {
+        let workers = policy.engine_workers.max(1);
         Arc::new(Batcher {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             policy,
+            boards: Mutex::new((0..workers).map(|_| VecDeque::new()).collect()),
             metrics: ServerMetrics::default(),
             worker_metrics: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
@@ -249,6 +385,17 @@ impl Batcher {
     /// Returns `false` (dropping `reply` un-fired) if shutdown has
     /// already been requested: no worker would ever serve the request.
     pub fn submit_with(&self, req: Request, reply: ReplyFn) -> bool {
+        self.enqueue(req, reply, None)
+    }
+
+    /// [`Batcher::submit_with`] plus a per-token stream callback: `stream`
+    /// fires with each generated token's text delta as the engine produces
+    /// it, then `reply` fires once with the complete [`Response`].
+    pub fn submit_stream_with(&self, req: Request, stream: StreamFn, reply: ReplyFn) -> bool {
+        self.enqueue(req, reply, Some(stream))
+    }
+
+    fn enqueue(&self, req: Request, reply: ReplyFn, stream: Option<StreamFn>) -> bool {
         {
             // The flag is checked under the queue lock — the same lock
             // under which workers make their final empty-queue exit
@@ -262,6 +409,7 @@ impl Batcher {
                 req,
                 enqueued: Instant::now(),
                 reply,
+                stream,
             });
         }
         self.cv.notify_all();
@@ -269,23 +417,31 @@ impl Batcher {
     }
 
     /// Ask every worker loop to exit. Workers first drain what is already
-    /// queued (every accepted request's reply callback still fires) and
-    /// finish their live sequences; *new* submissions are rejected from
-    /// this point on (see [`Batcher::submit_with`]).
+    /// queued or claimed (every accepted request's reply callback still
+    /// fires) and finish their live sequences; *new* submissions are
+    /// rejected from this point on (see [`Batcher::submit_with`]).
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
         self.cv.notify_all();
     }
 
-    /// Drop any requests still queued — call only after the worker
-    /// threads have exited, to release the reply callbacks (and whatever
-    /// channels they hold) of requests that raced past
-    /// [`Batcher::shutdown`] into the queue. Returns how many were
+    /// Drop any requests still queued or still on a claim board — call
+    /// only after the worker threads have exited, to release the reply
+    /// callbacks (and whatever channels they hold) of requests that raced
+    /// past [`Batcher::shutdown`] into the queue. Returns how many were
     /// dropped.
     pub fn drain_abandoned(&self) -> usize {
-        let mut q = self.queue.lock().unwrap();
-        let n = q.len();
-        q.clear();
+        let mut n = {
+            let mut q = self.queue.lock().unwrap();
+            let n = q.len();
+            q.clear();
+            n
+        };
+        let mut boards = self.boards.lock().unwrap();
+        for b in boards.iter_mut() {
+            n += b.len();
+            b.clear();
+        }
         n
     }
 
@@ -294,30 +450,98 @@ impl Batcher {
         self.worker_metrics.lock().unwrap().clone()
     }
 
-    /// Pop up to `room` waiting requests. When the worker is fully idle
-    /// (`have_live == false`) this blocks until a request arrives or
-    /// shutdown; when sequences are mid-decode it never waits — the
-    /// decode loop must keep stepping.
-    fn admit_up_to(&self, room: usize, have_live: bool) -> Option<Vec<Pending>> {
+    /// Pop up to `room` waiting requests off the shared queue; if the
+    /// queue is empty and `may_steal` (the worker could start a prefill
+    /// right now), try to **steal** unstarted claims from another
+    /// worker's board. When the worker has nothing at all to do
+    /// (`have_work == false`) this blocks until a request arrives or
+    /// shutdown; when sequences are mid-decode or mid-prefill it never
+    /// waits — the iteration loop must keep stepping.
+    fn admit_up_to(
+        &self,
+        room: usize,
+        have_work: bool,
+        may_steal: bool,
+        me: usize,
+    ) -> Option<Vec<Pending>> {
         let mut q = self.queue.lock().unwrap();
         loop {
             if self.shutdown.load(Ordering::SeqCst) && q.is_empty() {
-                // Let the caller finish its live sequences, then exit.
-                return if have_live { Some(Vec::new()) } else { None };
+                // Let the caller finish its live sequences and drain its
+                // own board, then exit.
+                return if have_work { Some(Vec::new()) } else { None };
             }
-            if !q.is_empty() || have_live {
+            if !q.is_empty() {
                 let n = q.len().min(room);
                 return Some(q.drain(..n).collect());
+            }
+            if may_steal && room > 0 {
+                let stolen = self.steal(me, room);
+                if !stolen.is_empty() {
+                    self.metrics
+                        .stolen
+                        .fetch_add(stolen.len() as u64, Ordering::Relaxed);
+                    return Some(stolen);
+                }
+            }
+            if have_work {
+                return Some(Vec::new());
             }
             let wait = self.policy.max_wait.max(Duration::from_millis(1));
             q = self.cv.wait_timeout(q, wait).unwrap().0;
         }
     }
 
+    /// Steal up to `room` unstarted claims from the back of the longest
+    /// other board (lock order: queue → boards, matching `admit_up_to`).
+    fn steal(&self, me: usize, room: usize) -> Vec<Pending> {
+        let mut boards = self.boards.lock().unwrap();
+        let victim = boards
+            .iter()
+            .enumerate()
+            .filter(|(w, b)| *w != me && !b.is_empty())
+            .max_by_key(|(_, b)| b.len())
+            .map(|(w, _)| w);
+        let Some(v) = victim else {
+            return Vec::new();
+        };
+        let take = boards[v].len().min(room);
+        let at = boards[v].len() - take;
+        boards[v].split_off(at).into()
+    }
+
+    fn board_len(&self, worker: usize) -> usize {
+        self.boards
+            .lock()
+            .unwrap()
+            .get(worker)
+            .map(|b| b.len())
+            .unwrap_or(0)
+    }
+
+    fn push_board(&self, worker: usize, items: Vec<Pending>) {
+        if items.is_empty() {
+            return;
+        }
+        {
+            let mut boards = self.boards.lock().unwrap();
+            if boards.len() <= worker {
+                boards.resize_with(worker + 1, VecDeque::new);
+            }
+            boards[worker].extend(items);
+        }
+        // Idle peers wake to steal if we can't start these soon.
+        self.cv.notify_all();
+    }
+
+    fn pop_board(&self, worker: usize) -> Option<Pending> {
+        self.boards.lock().unwrap().get_mut(worker)?.pop_front()
+    }
+
     /// The continuous-batching engine worker loop. Runs until shutdown;
-    /// `worker` is this loop's id for per-worker metrics. Call on a
-    /// dedicated thread with this worker's engine fork (or use
-    /// [`spawn_engine_workers`]).
+    /// `worker` is this loop's id for per-worker metrics and its claim
+    /// board. Call on a dedicated thread with this worker's engine fork
+    /// (or use [`spawn_engine_workers`]).
     pub fn worker_loop(&self, engine: &Engine, worker: usize) {
         {
             let mut wm = self.worker_metrics.lock().unwrap();
@@ -325,73 +549,159 @@ impl Batcher {
                 wm.resize(worker + 1, WorkerMetrics::default());
             }
         }
+        {
+            let mut boards = self.boards.lock().unwrap();
+            if boards.len() <= worker {
+                boards.resize_with(worker + 1, VecDeque::new);
+            }
+        }
         let max_ctx = engine.weights.cfg.max_seq_len;
         let nslots = self.policy.max_batch.max(1);
+        let chunk = self.policy.prefill_chunk;
         let mut kv = engine.new_slot_pool(nslots);
         let mut live: Vec<LiveSeq> = Vec::new();
         let mut local = WorkerMetrics::default();
 
         loop {
-            // --- admit into free slots ---
-            let room = nslots - live.len();
-            let admitted = match self.admit_up_to(room, !live.is_empty()) {
+            // --- 1. admit: claim waiting requests (or steal) ---
+            let claimed = self.board_len(worker);
+            let room = nslots.saturating_sub(live.len() + claimed);
+            let have_work = !live.is_empty() || claimed > 0;
+            // Steal only when this worker could start the stolen claim on
+            // this very iteration (no local backlog, nothing mid-prefill)
+            // — otherwise claims would ping-pong between busy boards.
+            let may_steal = claimed == 0
+                && live.len() < nslots
+                && live.iter().all(LiveSeq::prefill_done);
+            let admitted = match self.admit_up_to(room, have_work, may_steal, worker) {
                 Some(batch) => batch,
                 None => break, // shutdown while idle
             };
-            // Mid-stream means joining a batch that was already decoding
-            // before this admission round — co-admissions into an idle
-            // worker's fresh batch don't count.
-            let was_live = !live.is_empty();
-            for p in admitted {
-                self.metrics.mark_started();
-                self.metrics.admitted.fetch_add(1, Ordering::Relaxed);
-                if was_live {
-                    self.metrics.admitted_midstream.fetch_add(1, Ordering::Relaxed);
+            self.push_board(worker, admitted);
+
+            // --- 2. prefill: at most one `chunk`-sized bite this round ---
+            self.prefill_one_chunk(engine, worker, &mut live, &mut kv, max_ctx, chunk);
+            // Retire sequences already at budget (single-token requests
+            // complete on their final prefill chunk alone).
+            self.retire_finished(&mut live, &mut kv, &mut local);
+
+            // --- 3. one decode iteration over the fully-prefilled batch ---
+            let ready: Vec<usize> = (0..live.len())
+                .filter(|&i| live[i].prefill_done())
+                .collect();
+            if !ready.is_empty() {
+                let current: Vec<i32> = ready.iter().map(|&i| live[i].current).collect();
+                let slots: Vec<usize> = ready.iter().map(|&i| live[i].slot).collect();
+                self.metrics.record_step(ready.len());
+                local.steps += 1;
+                let next = engine.decode_step(&current, &slots, &mut kv);
+                for (j, &i) in ready.iter().enumerate() {
+                    let seq = &mut live[i];
+                    seq.current = next[j];
+                    seq.out.push(next[j]);
+                    seq.stream_token(next[j]);
                 }
-                let admitted_at = Instant::now();
-                let (toks, budget) = prepare_prompt(&p.req, max_ctx);
-                let slot = kv.alloc().expect("admission respects free slots");
-                let first = engine.prefill(&toks, slot, &mut kv);
-                live.push(LiveSeq {
-                    slot,
-                    id: p.req.id,
-                    reply: p.reply,
-                    enqueued: p.enqueued,
-                    admitted: admitted_at,
-                    current: first,
-                    out: vec![first],
-                    budget,
-                });
+                // Retire immediately after the step, so a finished
+                // request's reply fires before (and its latency never
+                // absorbs) the next round's prefill chunk — and so the
+                // freed slots count toward the next round's room.
+                self.retire_finished(&mut live, &mut kv, &mut local);
             }
-            // Retire admissions that are already at budget (single-token
-            // requests complete on their prefill alone).
-            self.retire_finished(&mut live, &mut kv, &mut local);
-            if live.is_empty() {
-                // Loop back to admission: on shutdown `admit_up_to` keeps
-                // draining queued requests (their reply callbacks must
-                // fire) and only returns `None` once the queue is empty.
-                continue;
-            }
-            // --- one decode iteration over the current batch ---
-            let current: Vec<i32> = live.iter().map(|s| s.current).collect();
-            let slots: Vec<usize> = live.iter().map(|s| s.slot).collect();
-            self.metrics.record_step(live.len());
-            local.steps += 1;
-            let next = engine.decode_step(&current, &slots, &mut kv);
-            for (seq, tok) in live.iter_mut().zip(next) {
-                seq.current = tok;
-                seq.out.push(tok);
-            }
-            // Retire immediately after the step, so a finished request's
-            // reply fires before (and its latency never absorbs) the next
-            // admission round's prefills — and so the freed slots count
-            // toward that round's room.
-            self.retire_finished(&mut live, &mut kv, &mut local);
             // Publish per-worker counters (cheap: one short lock per
-            // decode iteration, far below the forward-pass cost).
+            // iteration, far below the forward-pass cost).
             self.worker_metrics.lock().unwrap()[worker] = local;
         }
         self.worker_metrics.lock().unwrap()[worker] = local;
+    }
+
+    /// Run one prefill chunk: continue the oldest mid-prefill sequence,
+    /// or start the next claim off this worker's board if nothing is
+    /// mid-prefill and a KV slot is free. Rejections (over-long prompt,
+    /// engine error) free the slot and fire an error reply.
+    fn prefill_one_chunk(
+        &self,
+        engine: &Engine,
+        worker: usize,
+        live: &mut Vec<LiveSeq>,
+        kv: &mut KvSlotPool,
+        max_ctx: usize,
+        chunk: usize,
+    ) {
+        let mut target = live.iter().position(|s| !s.prefill_done());
+        if target.is_none() && live.len() < kv.capacity() {
+            while let Some(p) = self.pop_board(worker) {
+                match prepare_prompt(&p.req, max_ctx) {
+                    Err(msg) => {
+                        // Rejected before any KV state exists: error reply,
+                        // no slot consumed, try the next claim.
+                        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        (p.reply)(error_response(p.req.id, p.enqueued, msg));
+                        continue;
+                    }
+                    Ok((toks, budget)) => {
+                        self.metrics.mark_started();
+                        self.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+                        // Mid-stream = joining a batch that already has
+                        // sequences decoding (not merely co-prefilling).
+                        if live.iter().any(|s| s.prefill_done()) {
+                            self.metrics
+                                .admitted_midstream
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                        let slot = kv.alloc().expect("admission respects free slots");
+                        live.push(LiveSeq {
+                            slot,
+                            id: p.req.id,
+                            reply: p.reply,
+                            stream: p.stream,
+                            enqueued: p.enqueued,
+                            admitted: Instant::now(),
+                            prompt: toks,
+                            prefilled: 0,
+                            current: 0,
+                            out: Vec::new(),
+                            pending: Vec::new(),
+                            budget,
+                        });
+                        target = Some(live.len() - 1);
+                        break;
+                    }
+                }
+            }
+        }
+        let Some(i) = target else {
+            return;
+        };
+        let seq = &mut live[i];
+        let remaining = seq.prompt.len() - seq.prefilled;
+        let take = if chunk == 0 { remaining } else { chunk.min(remaining) };
+        let last = seq.prefilled + take == seq.prompt.len();
+        let res = engine.prefill_chunk(
+            &seq.prompt[seq.prefilled..seq.prefilled + take],
+            seq.slot,
+            kv,
+            last,
+        );
+        self.metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+        match res {
+            Ok(first) => {
+                seq.prefilled += take;
+                if let Some(tok) = first {
+                    seq.current = tok;
+                    seq.out.push(tok);
+                    seq.stream_token(tok);
+                }
+            }
+            Err(e) => {
+                // Defensive: `prepare_prompt` sizes prompts to fit, so
+                // this only fires on internal inconsistencies — free the
+                // slot (never leak it) and reply with the error.
+                let seq = live.swap_remove(i);
+                kv.free(seq.slot);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                (seq.reply)(error_response(seq.id, seq.enqueued, format!("{e:#}")));
+            }
+        }
     }
 
     /// Retire every live sequence that has reached its token budget:
@@ -399,19 +709,21 @@ impl Batcher {
     fn retire_finished(
         &self,
         live: &mut Vec<LiveSeq>,
-        kv: &mut crate::infer::KvSlotPool,
+        kv: &mut KvSlotPool,
         local: &mut WorkerMetrics,
     ) {
         let mut i = 0;
         while i < live.len() {
-            if live[i].out.len() >= live[i].budget {
-                let seq = live.swap_remove(i);
+            if live[i].prefill_done() && live[i].out.len() >= live[i].budget {
+                let mut seq = live.swap_remove(i);
+                seq.finish_stream();
                 kv.free(seq.slot);
                 local.retired += 1;
                 local.tokens += seq.out.len() as u64;
                 let resp = Response {
                     id: seq.id,
                     text: detokenize(&seq.out),
+                    error: None,
                     queue_ms: (seq.admitted - seq.enqueued).as_secs_f64() * 1000.0,
                     compute_ms: seq.admitted.elapsed().as_secs_f64() * 1000.0,
                     tokens: seq.out.len(),
@@ -425,20 +737,35 @@ impl Batcher {
     }
 }
 
-/// Tokenize a request's prompt, clamp its generation budget to the model
-/// context, and truncate the prompt head so `prompt + budget` fits.
-/// Returns `(tokens, budget)` with `tokens` non-empty and `budget >= 1`.
-fn prepare_prompt(req: &Request, max_ctx: usize) -> (Vec<i32>, usize) {
-    let mut toks = tokenize(&req.prompt);
-    let budget = req.max_tokens.clamp(1, max_ctx.saturating_sub(2).max(1));
-    if toks.len() + budget > max_ctx {
-        let cut = toks.len() + budget - max_ctx;
-        toks.drain(..cut.min(toks.len().saturating_sub(1)));
+fn error_response(id: u64, enqueued: Instant, msg: String) -> Response {
+    Response {
+        id,
+        text: String::new(),
+        error: Some(msg),
+        queue_ms: enqueued.elapsed().as_secs_f64() * 1000.0,
+        compute_ms: 0.0,
+        tokens: 0,
     }
+}
+
+/// Tokenize a request's prompt and clamp its generation budget to the
+/// model context. A prompt that cannot fit a KV slot alongside its budget
+/// is **rejected** (`Err(reason)`) rather than silently truncated or
+/// panicking a worker. Returns `(tokens, budget)` with `tokens` non-empty
+/// and `budget >= 1`.
+fn prepare_prompt(req: &Request, max_ctx: usize) -> Result<(Vec<i32>, usize), String> {
+    let mut toks = tokenize(&req.prompt);
     if toks.is_empty() {
         toks.push(b' ' as i32);
     }
-    (toks, budget)
+    if toks.len() >= max_ctx {
+        return Err(format!(
+            "prompt too long: {} tokens leaves no room to generate in a {max_ctx}-token context",
+            toks.len()
+        ));
+    }
+    let budget = req.max_tokens.clamp(1, max_ctx - toks.len());
+    Ok((toks, budget))
 }
 
 /// Spawn `engine_workers` (per the batcher's policy) engine worker
@@ -463,11 +790,9 @@ pub fn spawn_engine_workers(
     for w in 0..workers {
         let mut eng = engine.fork();
         // Private pools (not the global size registry) so each worker's
-        // dense linears and small-m decode GEMMs own disjoint threads.
-        // Caveat: the pipelined backend's large-m *prefill* path still
-        // resolves a per-size registry pool from PipelineConfig's thread
-        // knob, so concurrent prefills share that one (see
-        // SalrLayer::forward and the ROADMAP pool-threading item).
+        // linears — dense, small-m direct sparse *and* the pipelined
+        // prefill stages — own disjoint threads end to end
+        // (`SalrLayer::forward` threads the pool through every path).
         eng.set_pool(Arc::new(WorkerPool::new(per_worker)));
         let b = batcher.clone();
         handles.push(
@@ -532,6 +857,7 @@ mod tests {
         responses.sort_by_key(|r| r.id);
         assert_eq!(responses.len(), 6);
         for r in &responses {
+            assert!(r.error.is_none());
             assert_eq!(r.tokens, 3);
         }
         assert_eq!(batcher.metrics.requests.load(Ordering::Relaxed), 6);
@@ -543,29 +869,39 @@ mod tests {
     }
 
     #[test]
-    fn deterministic_across_submissions() {
+    fn deterministic_across_submissions_and_chunk_sizes() {
+        // Same prompt must yield the same text whenever it is submitted —
+        // and whatever the prefill chunk size, including unchunked.
         let eng = engine();
-        // Same prompt must yield the same text whenever it is submitted.
-        let batcher = Batcher::new(BatchPolicy {
-            max_batch: 2,
-            ..Default::default()
-        });
-        let handles = spawn_engine_workers(&batcher, eng);
-        let r1 = batcher.submit(Request {
-            id: 1,
-            prompt: "Q: 2+2=? A: ".into(),
-            max_tokens: 4,
-        });
-        let r2 = batcher.submit(Request {
-            id: 2,
-            prompt: "Q: 2+2=? A: ".into(),
-            max_tokens: 4,
-        });
-        assert_eq!(r1.text, r2.text);
-        batcher.shutdown();
-        for h in handles {
-            h.join().unwrap();
+        let mut texts = Vec::new();
+        for chunk in [0usize, 1, 3, 64] {
+            let batcher = Batcher::new(BatchPolicy {
+                max_batch: 2,
+                prefill_chunk: chunk,
+                ..Default::default()
+            });
+            let handles = spawn_engine_workers(&batcher, eng.fork());
+            let r1 = batcher.submit(Request {
+                id: 1,
+                prompt: "Q: 2+2=? A: ".into(),
+                max_tokens: 4,
+            });
+            let r2 = batcher.submit(Request {
+                id: 2,
+                prompt: "Q: 2+2=? A: ".into(),
+                max_tokens: 4,
+            });
+            assert_eq!(r1.text, r2.text, "chunk={chunk}");
+            texts.push(r1.text);
+            batcher.shutdown();
+            for h in handles {
+                h.join().unwrap();
+            }
         }
+        assert!(
+            texts.windows(2).all(|w| w[0] == w[1]),
+            "prefill chunk size changed the output bytes: {texts:?}"
+        );
     }
 
     #[test]
@@ -574,6 +910,7 @@ mod tests {
         let batcher = Batcher::new(BatchPolicy {
             max_batch: 4,
             engine_workers: 1,
+            prefill_chunk: 4,
             ..Default::default()
         });
         let handles = spawn_engine_workers(&batcher, eng);
@@ -586,7 +923,8 @@ mod tests {
                 max_tokens: 80,
             })
         });
-        // …wait until it is actually decoding, then admit a second one.
+        // …wait until it is actually decoding, then admit a second one
+        // (which prefills in chunks while the first keeps decoding).
         let t0 = Instant::now();
         while batcher.metrics.decode_steps.load(Ordering::Relaxed) < 1 {
             assert!(t0.elapsed() < Duration::from_secs(20), "worker never started");
@@ -617,6 +955,140 @@ mod tests {
     }
 
     #[test]
+    fn stream_deltas_concatenate_to_the_response_text() {
+        let eng = engine();
+        let batcher = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            prefill_chunk: 3,
+            ..Default::default()
+        });
+        let handles = spawn_engine_workers(&batcher, eng);
+        let deltas = Arc::new(Mutex::new(String::new()));
+        let d = deltas.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let accepted = batcher.submit_stream_with(
+            Request {
+                id: 9,
+                prompt: "Q: 3+4=? A: ".into(),
+                max_tokens: 6,
+            },
+            Box::new(move |delta| d.lock().unwrap().push_str(delta)),
+            Box::new(move |resp| {
+                let _ = tx.send(resp);
+            }),
+        );
+        assert!(accepted);
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none());
+        assert_eq!(resp.tokens, 6);
+        assert_eq!(
+            *deltas.lock().unwrap(),
+            resp.text,
+            "streamed deltas must concatenate to the final text"
+        );
+        // And match a plain (un-streamed) submission byte for byte.
+        let plain = batcher.submit(Request {
+            id: 10,
+            prompt: "Q: 3+4=? A: ".into(),
+            max_tokens: 6,
+        });
+        assert_eq!(plain.text, resp.text);
+        batcher.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn overlong_prompt_gets_error_reply_and_slots_survive() {
+        let eng = engine(); // max_seq_len = 96
+        let batcher = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            ..Default::default()
+        });
+        let handles = spawn_engine_workers(&batcher, eng);
+        let bad = batcher.submit(Request {
+            id: 1,
+            prompt: "x".repeat(200),
+            max_tokens: 4,
+        });
+        assert!(bad.error.is_some(), "over-long prompt must be rejected");
+        assert_eq!(bad.tokens, 0);
+        assert_eq!(batcher.metrics.rejected.load(Ordering::Relaxed), 1);
+        // Every KV slot is still available: max_batch sequences can run
+        // concurrently right after the rejection.
+        let mut joins = Vec::new();
+        for i in 0..2 {
+            let b = batcher.clone();
+            joins.push(std::thread::spawn(move || {
+                b.submit(Request {
+                    id: 10 + i,
+                    prompt: format!("Q: {i}+2=? A: "),
+                    max_tokens: 3,
+                })
+            }));
+        }
+        for j in joins {
+            let r = j.join().unwrap();
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens, 3);
+        }
+        batcher.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn idle_worker_steals_from_a_hoarding_board() {
+        // Deterministic steal: stuff worker 0's claim board directly (no
+        // worker-0 thread exists), then run only worker 1 — it must pull
+        // the waiting requests across and serve them.
+        let eng = engine();
+        let batcher = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            engine_workers: 2,
+            prefill_chunk: 4,
+            ..Default::default()
+        });
+        let (tx, rx) = std::sync::mpsc::channel();
+        let items: Vec<Pending> = (0..3)
+            .map(|i| {
+                let tx = tx.clone();
+                Pending {
+                    req: Request {
+                        id: i,
+                        prompt: format!("Q: {i}+5=? A: "),
+                        max_tokens: 3,
+                    },
+                    enqueued: Instant::now(),
+                    reply: Box::new(move |resp| {
+                        let _ = tx.send(resp);
+                    }),
+                    stream: None,
+                }
+            })
+            .collect();
+        batcher.boards.lock().unwrap()[0].extend(items);
+        let b = batcher.clone();
+        let worker1 = std::thread::spawn(move || b.worker_loop(&eng, 1));
+        let mut got = 0;
+        while got < 3 {
+            let r = rx.recv_timeout(Duration::from_secs(30)).expect("stolen request served");
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens, 3);
+            got += 1;
+        }
+        assert_eq!(
+            batcher.metrics.stolen.load(Ordering::Relaxed),
+            3,
+            "all three waiting claims must have been stolen"
+        );
+        batcher.shutdown();
+        worker1.join().unwrap();
+    }
+
+    #[test]
     fn submit_after_shutdown_is_rejected() {
         let batcher = Batcher::new(BatchPolicy::default());
         batcher.shutdown();
@@ -633,15 +1105,28 @@ mod tests {
     }
 
     #[test]
-    fn prepare_prompt_clamps_to_context() {
-        let req = Request {
+    fn prepare_prompt_clamps_budget_and_rejects_overflow() {
+        let fits = Request {
             id: 0,
-            prompt: "x".repeat(500),
+            prompt: "x".repeat(20),
             max_tokens: 1000,
         };
-        let (toks, budget) = prepare_prompt(&req, 96);
-        assert!(budget >= 1 && budget <= 94);
-        assert!(!toks.is_empty());
-        assert!(toks.len() + budget <= 96);
+        let (toks, budget) = prepare_prompt(&fits, 96).expect("budget clamps into context");
+        assert_eq!(toks.len(), 20);
+        assert!(budget >= 1 && toks.len() + budget <= 96);
+        let too_long = Request {
+            id: 0,
+            prompt: "x".repeat(500),
+            max_tokens: 4,
+        };
+        assert!(prepare_prompt(&too_long, 96).is_err(), "over-long prompt rejected");
+        let empty = Request {
+            id: 0,
+            prompt: String::new(),
+            max_tokens: 4,
+        };
+        let (toks, budget) = prepare_prompt(&empty, 96).unwrap();
+        assert_eq!(toks.len(), 1);
+        assert!(budget >= 1);
     }
 }

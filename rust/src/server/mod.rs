@@ -1,18 +1,21 @@
 //! Serving: a TCP inference server with **continuous batching** over the
 //! native engine. The request path is pure rust (no python, no HLO
 //! retracing): socket → shared admission queue → one of `W` engine
-//! worker loops (iteration-level scheduling over a fixed KV-slot pool) →
-//! out-of-order response routed back by request id.
+//! worker loops (iteration-level scheduling over a fixed KV-slot pool,
+//! chunked prefill interleaved with decode steps, work stealing between
+//! workers) → out-of-order response routed back by request id, with
+//! optional per-token streaming frames along the way.
 //!
 //! See DESIGN.md "Serving layer" for the scheduler, the KV-slot
-//! lifecycle, and the determinism argument; `rust/benches/bench_serve.rs`
-//! measures tokens/s and batch occupancy at 1/2/4 engine workers.
+//! lifecycle, the chunked-prefill/streaming wire protocol, and the
+//! determinism argument; `rust/benches/bench_serve.rs` measures tokens/s
+//! and batch occupancy at 1/2/4 engine workers.
 
 mod batcher;
 mod tcp;
 
 pub use batcher::{
     spawn_engine_workers, BatchPolicy, Batcher, ReplyFn, Request, Response, ServerMetrics,
-    WorkerMetrics,
+    StreamFn, WorkerMetrics,
 };
 pub use tcp::{serve, Client};

@@ -2,7 +2,15 @@
 //!
 //! Request:  `{"prompt": "...", "max_tokens": 8, "id": 7}` + newline
 //! Response: `{"id": 7, "text": "...", "queue_ms": .., "compute_ms": ..,
-//! "tokens": ..}` + newline.
+//! "tokens": ..}` + newline. A rejected request (e.g. a prompt longer
+//! than the KV slot capacity) gets `{"id": 7, "error": "..."}` instead.
+//!
+//! **Streaming**: add `"stream": true` to a generation request and the
+//! server emits one frame per generated token as the engine produces it —
+//! `{"id": 7, "delta": "...", "seq": 0}` — followed by the usual final
+//! frame tagged `"done": true` (full text + stats, the authoritative
+//! result). Delta frames of concurrent streamed requests interleave on
+//! the wire but are routed by `id` like every other reply.
 //!
 //! A connection may pipeline many generation requests without reading
 //! replies in between; with continuous batching, responses come back **in
@@ -20,7 +28,7 @@
 //! Control commands: `{"cmd": "metrics"}` returns aggregate serving
 //! metrics; `{"cmd": "shutdown"}` stops the server.
 
-use super::batcher::{spawn_engine_workers, BatchPolicy, Batcher, Request};
+use super::batcher::{spawn_engine_workers, BatchPolicy, Batcher, Request, Response};
 use crate::infer::Engine;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -34,11 +42,13 @@ use std::sync::Arc;
 ///
 /// `policy.engine_workers` continuous-batching worker loops are spawned
 /// over forks of `engine` (weights shared, each fork on a private pool
-/// holding an even share of `policy.num_threads` GEMM threads).
-/// Connections are handled on their own threads; generation requests
-/// funnel through the shared admission queue and complete out of order.
-/// If `ready` is provided, the bound address is sent once listening (use
-/// port 0 for tests/examples).
+/// holding an even share of `policy.num_threads` GEMM threads), each
+/// interleaving `policy.prefill_chunk`-token prefill bites with its decode
+/// steps. Connections are handled on their own threads; generation
+/// requests funnel through the shared admission queue (idle workers steal
+/// waiting requests when their KV slots free up first) and complete out
+/// of order. If `ready` is provided, the bound address is sent once
+/// listening (use port 0 for tests/examples).
 pub fn serve(
     engine: Engine,
     addr: &str,
@@ -48,13 +58,14 @@ pub fn serve(
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
     log::info!(
-        "serving on {local} ({} engine workers, {} GEMM threads total)",
+        "serving on {local} ({} engine workers, {} GEMM threads total, prefill chunk {})",
         policy.engine_workers.max(1),
         if policy.num_threads > 0 {
             policy.num_threads
         } else {
             crate::util::pool::available_threads()
-        }
+        },
+        policy.prefill_chunk,
     );
     if let Some(tx) = ready {
         let _ = tx.send(local);
@@ -99,15 +110,38 @@ pub fn serve(
     Ok(())
 }
 
+/// The final reply frame for a completed (or rejected) request.
+/// `done_marker` (streamed requests) tags the frame `"done": true` —
+/// error frames included, so a streaming client waiting on the
+/// documented terminator never hangs on a rejected request.
+fn final_frame(resp: Response, done_marker: bool) -> Json {
+    let mut j = Json::obj().set("id", resp.id);
+    j = match resp.error {
+        Some(err) => j.set("error", err),
+        None => j
+            .set("text", resp.text)
+            .set("queue_ms", resp.queue_ms)
+            .set("compute_ms", resp.compute_ms)
+            .set("tokens", resp.tokens),
+    };
+    if done_marker {
+        j.set("done", true)
+    } else {
+        j
+    }
+}
+
 /// Handle one connection; returns Ok(true) if a shutdown was requested.
 ///
 /// The reader (this thread) parses requests and submits them without
 /// blocking; a dedicated writer thread owns the stream's write half and
-/// serializes every reply line, in completion order.
+/// serializes every reply line — delta frames included — in completion
+/// order.
 fn handle_conn(stream: TcpStream, batcher: &Batcher, next_id: &AtomicU64) -> Result<bool> {
     let mut reader = BufReader::new(stream.try_clone()?);
-    // All replies (generation completions + command responses + errors)
-    // go through one channel so concurrent writes never interleave.
+    // All replies (generation completions + stream deltas + command
+    // responses + errors) go through one channel so concurrent writes
+    // never interleave.
     let (reply_tx, reply_rx) = std::sync::mpsc::channel::<String>();
     let mut writer = stream;
     let writer_thread = std::thread::spawn(move || {
@@ -150,6 +184,10 @@ fn handle_conn(stream: TcpStream, batcher: &Batcher, next_id: &AtomicU64) -> Res
                     .and_then(Json::as_usize)
                     .unwrap_or(8)
                     .max(1);
+                let streaming = msg
+                    .get("stream")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false);
                 // Ids must be non-negative integers ≤ 2^53 (JSON numbers
                 // are f64 here); anything else gets a server-assigned id,
                 // which the reply echoes.
@@ -159,27 +197,42 @@ fn handle_conn(stream: TcpStream, batcher: &Batcher, next_id: &AtomicU64) -> Res
                     .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n <= 9_007_199_254_740_992.0)
                     .map(|n| n as u64)
                     .unwrap_or_else(|| next_id.fetch_add(1, Ordering::Relaxed));
+                let req = Request {
+                    id,
+                    prompt,
+                    max_tokens,
+                };
                 let tx = reply_tx.clone();
-                let accepted = batcher.submit_with(
-                    Request {
-                        id,
-                        prompt,
-                        max_tokens,
-                    },
-                    Box::new(move |resp| {
-                        let reply = Json::obj()
-                            .set("id", resp.id)
-                            .set("text", resp.text)
-                            .set("queue_ms", resp.queue_ms)
-                            .set("compute_ms", resp.compute_ms)
-                            .set("tokens", resp.tokens);
-                        let _ = tx.send(reply.to_string_compact());
-                    }),
-                );
+                let reply = Box::new(move |resp: Response| {
+                    let _ = tx.send(final_frame(resp, streaming).to_string_compact());
+                });
+                let accepted = if streaming {
+                    let tx = reply_tx.clone();
+                    let mut seq = 0u64;
+                    batcher.submit_stream_with(
+                        req,
+                        Box::new(move |delta: &str| {
+                            let frame = Json::obj()
+                                .set("id", id)
+                                .set("delta", delta)
+                                .set("seq", seq);
+                            seq += 1;
+                            let _ = tx.send(frame.to_string_compact());
+                        }),
+                        reply,
+                    )
+                } else {
+                    batcher.submit_with(req, reply)
+                };
                 if !accepted {
-                    let err = Json::obj()
+                    let mut err = Json::obj()
                         .set("id", id)
                         .set("error", "server shutting down");
+                    if streaming {
+                        // Streamed requests always terminate with a
+                        // done-tagged frame, error or not.
+                        err = err.set("done", true);
+                    }
                     let _ = reply_tx.send(err.to_string_compact());
                 }
             }
@@ -221,6 +274,12 @@ fn render_metrics(batcher: &Batcher) -> Json {
             "admitted_midstream",
             batcher.metrics.admitted_midstream.load(Ordering::Relaxed),
         )
+        .set(
+            "prefill_chunks",
+            batcher.metrics.prefill_chunks.load(Ordering::Relaxed),
+        )
+        .set("stolen", batcher.metrics.stolen.load(Ordering::Relaxed))
+        .set("rejected", batcher.metrics.rejected.load(Ordering::Relaxed))
         .set("latency_p50_ms", p50)
         .set("latency_p90_ms", p90)
         .set("latency_p99_ms", p99)
@@ -272,6 +331,32 @@ impl Client {
                 .set("prompt", prompt)
                 .set("max_tokens", max_tokens),
         )
+    }
+
+    /// Generate with **token streaming**: `on_delta` fires with each text
+    /// delta frame as the server emits it; returns the final frame (full
+    /// text + stats, or `error`). Only safe when no other request is in
+    /// flight on this connection — a pipelining client should use
+    /// [`Client::send`]/[`Client::recv`] and route frames by `id` itself.
+    pub fn generate_stream(
+        &mut self,
+        prompt: &str,
+        max_tokens: usize,
+        mut on_delta: impl FnMut(&str),
+    ) -> Result<Json> {
+        self.send(
+            &Json::obj()
+                .set("prompt", prompt)
+                .set("max_tokens", max_tokens)
+                .set("stream", true),
+        )?;
+        loop {
+            let frame = self.recv()?;
+            match frame.get("delta").and_then(Json::as_str) {
+                Some(d) => on_delta(d),
+                None => return Ok(frame),
+            }
+        }
     }
 
     /// Fetch aggregate serving metrics.

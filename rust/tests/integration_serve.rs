@@ -1,15 +1,20 @@
 //! Serving-layer integration: continuous batching with multiple engine
-//! workers over TCP must return byte-identical text to sequential
-//! single-worker serving, admit requests into live batches mid-stream,
-//! and complete pipelined requests out of order (routed by id).
+//! workers, chunked prefill and token streaming over TCP must return
+//! byte-identical text to sequential single-worker whole-prompt serving,
+//! keep running sequences decoding between a long prompt's prefill
+//! chunks, admit requests into live batches mid-stream, complete
+//! pipelined requests out of order (routed by id), and reject over-long
+//! prompts with an error reply instead of panicking a worker.
 
 use salr::infer::{Backend, Engine, EngineWeights};
 use salr::model::ParamStore;
 use salr::runtime::ModelCfg;
-use salr::server::{serve, BatchPolicy, Client};
+use salr::server::{serve, BatchPolicy, Batcher, Client, Request};
 use salr::util::json::Json;
 use salr::util::rng::Rng;
 use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 fn test_engine() -> Engine {
@@ -46,22 +51,26 @@ fn stop_server(addr: SocketAddr, handle: std::thread::JoinHandle<()>) {
     handle.join().unwrap();
 }
 
-/// N concurrent clients against 2 continuous-batching engine workers:
-/// every response byte-identical to the same prompts served sequentially
-/// through a single worker.
+/// N concurrent **streaming** clients against 2 continuous-batching
+/// engine workers with a small prefill chunk: every response — and the
+/// concatenation of its delta frames — byte-identical to the same prompts
+/// served sequentially through a single worker with whole-prompt
+/// (unchunked) prefill.
 #[test]
-fn multi_worker_continuous_matches_sequential_single_worker() {
+fn chunked_streaming_multi_worker_matches_sequential_single_worker() {
     let engine = test_engine();
     let prompts: Vec<(String, usize)> = (0..9)
         .map(|i| (format!("Q: {}+{}=? A: ", 2 + i, 30 - i), 3 + (i % 4)))
         .collect();
 
-    // Reference: one worker, requests submitted strictly one at a time.
+    // Reference: one worker, whole-prompt prefill, requests submitted
+    // strictly one at a time, no streaming.
     let (addr, handle) = start_server(
         engine.fork(),
         BatchPolicy {
             max_batch: 4,
             engine_workers: 1,
+            prefill_chunk: 0,
             ..Default::default()
         },
     );
@@ -75,12 +84,14 @@ fn multi_worker_continuous_matches_sequential_single_worker() {
     }
     stop_server(addr, handle);
 
-    // Under test: 2 engine workers, 3 concurrent clients, 3 requests each.
+    // Under test: 2 engine workers, 3-token prefill chunks, 3 concurrent
+    // streaming clients with 3 requests each.
     let (addr, handle) = start_server(
         engine.fork(),
         BatchPolicy {
             max_batch: 4,
             engine_workers: 2,
+            prefill_chunk: 3,
             ..Default::default()
         },
     );
@@ -93,8 +104,17 @@ fn multi_worker_continuous_matches_sequential_single_worker() {
             chunk
                 .iter()
                 .map(|(p, n)| {
-                    let r = client.generate(p, *n).unwrap();
-                    r.get("text").and_then(Json::as_str).unwrap().to_string()
+                    let mut streamed = String::new();
+                    let r = client
+                        .generate_stream(p, *n, |delta| streamed.push_str(delta))
+                        .unwrap();
+                    assert_eq!(r.get("done").and_then(Json::as_bool), Some(true));
+                    let text = r.get("text").and_then(Json::as_str).unwrap().to_string();
+                    assert_eq!(
+                        streamed, text,
+                        "delta frames must concatenate to the final text"
+                    );
+                    text
                 })
                 .collect::<Vec<String>>()
         }));
@@ -106,15 +126,91 @@ fn multi_worker_continuous_matches_sequential_single_worker() {
     stop_server(addr, handle);
     assert_eq!(
         got, reference,
-        "continuous multi-worker serving changed some response bytes"
+        "chunked+streamed multi-worker serving changed some response bytes"
     );
+}
+
+/// Long-prompt admission must not stall the running batch: while a long
+/// prompt prefills in small chunks, the already-running sequence keeps
+/// taking decode steps **between** the chunks. Asserted by sampling the
+/// global prefill-chunk counter from the running sequence's stream
+/// callback: its tokens arrive at many distinct chunk counts.
+#[test]
+fn running_sequences_keep_decoding_between_prefill_chunks() {
+    let engine = test_engine();
+    let batcher = Batcher::new(BatchPolicy {
+        max_batch: 4,
+        engine_workers: 1,
+        prefill_chunk: 4,
+        ..Default::default()
+    });
+    let workers = salr::server::spawn_engine_workers(&batcher, engine.fork());
+
+    // Sequence X: short prompt, long generation, streamed; each delta
+    // records how many prefill chunks (any sequence's) had run by then.
+    let observations: Arc<Mutex<Vec<(String, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+    let obs = observations.clone();
+    let bref = batcher.clone();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let accepted = batcher.submit_stream_with(
+        Request {
+            id: 1,
+            prompt: "Q: 2+2=? A: ".into(),
+            max_tokens: 80,
+        },
+        Box::new(move |delta| {
+            let chunks = bref.metrics.prefill_chunks.load(Ordering::Relaxed);
+            obs.lock().unwrap().push((delta.to_string(), chunks));
+        }),
+        Box::new(move |resp| {
+            let _ = tx.send(resp);
+        }),
+    );
+    assert!(accepted);
+    let t0 = Instant::now();
+    while batcher.metrics.decode_steps.load(Ordering::Relaxed) < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(30), "worker never started");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Sequence Y: long prompt (48 tokens → 12 chunks of 4), one token.
+    let y = batcher.submit(Request {
+        id: 2,
+        prompt: "y".repeat(48),
+        max_tokens: 1,
+    });
+    assert!(y.error.is_none(), "long-but-fitting prompt must be served");
+    assert_eq!(y.tokens, 1);
+
+    let x = rx.recv().unwrap();
+    assert!(x.error.is_none());
+    assert_eq!(x.tokens, 80);
+    let obs = observations.lock().unwrap();
+    let streamed: String = obs.iter().map(|(d, _)| d.as_str()).collect();
+    assert_eq!(streamed, x.text);
+    let mut distinct: Vec<u64> = obs.iter().map(|(_, c)| *c).collect();
+    distinct.dedup();
+    assert!(
+        distinct.len() >= 3,
+        "X must produce tokens at several distinct prefill-chunk counts \
+         (saw {distinct:?}) — decode stalled behind Y's prefill"
+    );
+    // X's output is still byte-identical to serving it alone.
+    let solo = engine.generate_batch(&[salr::data::tokenize("Q: 2+2=? A: ")], 80);
+    assert_eq!(x.text, salr::data::detokenize(&solo[0]));
+
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
 }
 
 /// A request arriving while a batch is mid-decode joins it (occupancy
 /// grows, the metric records a mid-stream admission) instead of waiting
 /// for the batch to drain — and the short request completes first even
 /// though it was submitted second (out-of-order completion over one
-/// pipelined connection).
+/// pipelined connection). Runs with chunked prefill enabled, so the short
+/// request's admission itself interleaves with the long one's decode.
 #[test]
 fn midstream_admission_and_out_of_order_completion_over_tcp() {
     let engine = test_engine();
@@ -123,6 +219,7 @@ fn midstream_admission_and_out_of_order_completion_over_tcp() {
         BatchPolicy {
             max_batch: 4,
             engine_workers: 1,
+            prefill_chunk: 4,
             ..Default::default()
         },
     );
@@ -177,6 +274,61 @@ fn midstream_admission_and_out_of_order_completion_over_tcp() {
         m.get("max_occupancy").and_then(Json::as_usize).unwrap_or(0) >= 2,
         "occupancy must have grown without the batch draining"
     );
+    drop(client);
+    stop_server(addr, handle);
+}
+
+/// KV-slot edge cases over the wire: a prompt longer than the slot
+/// capacity gets an `error` reply (no worker panic, no leaked slot), and
+/// the same connection immediately serves normal requests afterwards —
+/// including a full `max_batch` of concurrent sequences, proving no slot
+/// was lost to the failed admission.
+#[test]
+fn overlong_prompt_rejected_over_tcp_without_leaking_slots() {
+    let engine = test_engine(); // max_seq_len = 96
+    let (addr, handle) = start_server(
+        engine,
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 1,
+            prefill_chunk: 4,
+            ..Default::default()
+        },
+    );
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    let bad = client.generate(&"x".repeat(200), 4).unwrap();
+    assert!(
+        bad.get("error").and_then(Json::as_str).is_some(),
+        "over-long prompt must produce an error reply, got {bad:?}"
+    );
+    // Both KV slots still work: two concurrent requests complete.
+    client
+        .send(
+            &Json::obj()
+                .set("id", 1u64)
+                .set("prompt", "Q: 5+6=? A: ")
+                .set("max_tokens", 3u64),
+        )
+        .unwrap();
+    client
+        .send(
+            &Json::obj()
+                .set("id", 2u64)
+                .set("prompt", "Q: 7+8=? A: ")
+                .set("max_tokens", 3u64),
+        )
+        .unwrap();
+    let mut seen = Vec::new();
+    for _ in 0..2 {
+        let r = client.recv().unwrap();
+        assert!(r.get("error").is_none(), "normal request failed: {r:?}");
+        assert_eq!(r.get("tokens").and_then(Json::as_usize), Some(3));
+        seen.push(r.get("id").and_then(Json::as_usize).unwrap());
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, vec![1, 2]);
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("rejected").and_then(Json::as_usize), Some(1));
     drop(client);
     stop_server(addr, handle);
 }
