@@ -1,12 +1,17 @@
-//! Dense GEMM throughput across shapes **and thread counts** (the compute
-//! stage's roofline on this machine — the denominator of every speedup
-//! claim), plus the pipelined SALR GEMM vs the sequential bitmap baseline
-//! at the same thread counts.
+//! Dense GEMM throughput across shapes, thread counts **and micro-kernel
+//! dispatch** (the compute stage's roofline on this machine — the
+//! denominator of every speedup claim), plus the pipelined SALR GEMM vs
+//! the sequential bitmap baseline at the same thread counts.
+//!
+//! The scalar-vs-SIMD rows pin the micro-kernel explicitly
+//! (`gemm_f32_pool_with_kernel`), so a single run on one host measures
+//! both code paths; the dispatched rows show what production gets.
 //!
 //! Set `SALR_BENCH_JSON=path.json` to emit machine-readable results (the
 //! `BENCH_gemm.json` perf-trajectory file is regenerated this way).
 
-use salr::gemm::dense::{gemm_f32_acc_pool, gemm_f32_pool, gemm_flops};
+use salr::gemm::dense::{gemm_f32_acc_pool, gemm_f32_pool, gemm_f32_pool_with_kernel, gemm_flops};
+use salr::gemm::kernel::Kernel;
 use salr::gemm::pipeline::{salr_gemm_pipelined, PipelineConfig};
 use salr::gemm::sparse::bitmap_gemm_sequential_pool;
 use salr::prune::prune_global;
@@ -19,19 +24,23 @@ use salr::util::rng::Rng;
 
 const THREADS: [usize; 3] = [1, 2, 4];
 
+const SHAPES: [(usize, usize, usize); 6] = [
+    (8, 512, 512), // decode-batch shape
+    (64, 512, 512),
+    (256, 256, 256),
+    (512, 512, 512),
+    (128, 1024, 1024),
+    (1024, 128, 1024), // adapter-concat-ish tall/skinny
+];
+
 fn main() {
     let mut rng = Rng::new(2);
     let mut b = Bench::new();
+    let dispatched = Kernel::active();
+    println!("micro-kernel dispatch: {}\n", dispatched.name());
 
-    println!("# dense GEMM roofline — thread scaling\n");
-    for &(m, k, n) in &[
-        (8usize, 512usize, 512usize), // decode-batch shape
-        (64, 512, 512),
-        (256, 256, 256),
-        (512, 512, 512),
-        (128, 1024, 1024),
-        (1024, 128, 1024), // adapter-concat-ish tall/skinny
-    ] {
+    println!("# dense GEMM roofline — thread scaling (dispatched kernel)\n");
+    for &(m, k, n) in &SHAPES {
         let a = Tensor::randn(&[m, k], 1.0, &mut rng);
         let w = Tensor::randn(&[k, n], 1.0, &mut rng);
         let mut c = vec![0.0f32; m * n];
@@ -47,6 +56,43 @@ fn main() {
     }
     println!("{}", b.comparison_table("dense GEMM (thread scaling)"));
 
+    // Scalar vs SIMD on the same shape set at a fixed thread count: the
+    // micro-kernel speedup in isolation (identical bits, different speed).
+    println!(
+        "# dense GEMM — scalar vs dispatched ({}) micro-kernel, t=4\n",
+        dispatched.name()
+    );
+    let mut bk = Bench::new();
+    let kpool = WorkerPool::with_threads(4);
+    // One scalar row per shape, plus the dispatched row when dispatch
+    // actually selected a SIMD kernel — on scalar-only hosts (or under
+    // SALR_FORCE_SCALAR=1) the second row would duplicate the first under
+    // the same name, polluting the JSON with a meaningless self-speedup.
+    let mut kernels = vec![(Kernel::scalar(), "scalar")];
+    if dispatched.name() != "scalar" {
+        kernels.push((dispatched, dispatched.name()));
+    } else {
+        println!("    (dispatch is scalar on this host — skipping SIMD rows)");
+    }
+    for &(m, k, n) in &SHAPES {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut c = vec![0.0f32; m * n];
+        let flops = gemm_flops(m, k, n);
+        for &(kern, tag) in &kernels {
+            let stats = bk.run_with_work(
+                &format!("dense {m}x{k}x{n} t=4 kern={tag}"),
+                flops,
+                &mut || {
+                    gemm_f32_pool_with_kernel(a.data(), w.data(), &mut c, m, k, n, &kpool, kern);
+                    black_box(&c);
+                },
+            );
+            println!("    → {:.2} GFLOP/s", stats.rate() / 1e9);
+        }
+    }
+    println!("{}", bk.comparison_table("scalar vs SIMD micro-kernel"));
+
     // Pipelined SALR GEMM at 50% sparsity vs the sequential bitmap
     // baseline, per thread count.
     let (m, k, n, r) = (64usize, 1024usize, 1024usize, 32usize);
@@ -59,7 +105,6 @@ fn main() {
     let mut c = vec![0.0f32; m * n];
     let mut u = vec![0.0f32; m * r];
     let flops = gemm_flops(m, k, n);
-    let mut scratch = Vec::new();
     println!("# pipelined SALR GEMM ({m}x{k}x{n} @50%) vs sequential\n");
     // Separate harness so the comparison table's speedup column is
     // relative to the sequential baseline, not the dense rows above.
@@ -70,7 +115,7 @@ fn main() {
     for &t in &THREADS {
         let pool = WorkerPool::with_threads(t);
         bs.run_with_work(&format!("salr sequential {m}x{k}x{n}@50% t={t}"), flops, &mut || {
-            bitmap_gemm_sequential_pool(x.data(), &bm, &mut c, m, &mut scratch, &pool);
+            bitmap_gemm_sequential_pool(x.data(), &bm, &mut c, m, &pool);
             gemm_f32_pool(x.data(), a_cat.data(), &mut u, m, k, r, &pool);
             gemm_f32_acc_pool(&u, b_cat.data(), &mut c, m, r, n, &pool);
             black_box(&c);
@@ -103,11 +148,15 @@ fn main() {
                 "threads_swept",
                 Json::Arr(THREADS.iter().map(|&t| Json::from(t)).collect()),
             )
+            .set("kernel_dispatch", dispatched.name())
             .set("provenance", "measured by benches/bench_gemm.rs");
         let mut all = match b.results_json() {
             Json::Arr(v) => v,
             _ => Vec::new(),
         };
+        if let Json::Arr(v) = bk.results_json() {
+            all.extend(v);
+        }
         if let Json::Arr(v) = bs.results_json() {
             all.extend(v);
         }

@@ -14,6 +14,10 @@ use salr::util::rng::Rng;
 
 fn main() {
     let mut rng = Rng::new(4);
+    println!(
+        "micro-kernel dispatch: {}\n",
+        salr::gemm::kernel::Kernel::active().name()
+    );
     let (m, k, n) = (8usize, 1024usize, 1024usize);
     let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
     prune_global(&mut [&mut w], 0.5);
@@ -24,16 +28,17 @@ fn main() {
 
     println!("# decode+GEMM strategies ({m}x{k}x{n} @50%)\n");
     let mut b = Bench::new();
-    let mut scratch = Vec::new();
     // Pinned to one thread: this row is the genuinely-sequential naive
-    // deployment every other strategy is compared against.
+    // deployment every other strategy is compared against. (Scratch is
+    // arena-internal everywhere now — steady-state iterations allocate
+    // nothing, so the harness measures kernels, not malloc.)
     let serial = WorkerPool::with_threads(1);
     b.run_with_work("sequential (full decode, then GEMM)", flops, &mut || {
-        bitmap_gemm_sequential_pool(x.data(), &bm, &mut c, m, &mut scratch, &serial);
+        bitmap_gemm_sequential_pool(x.data(), &bm, &mut c, m, &serial);
         black_box(&c);
     });
     b.run_with_work("direct (zero-skipping, no decode)", flops, &mut || {
-        salr::gemm::sparse::bitmap_gemm_direct(x.data(), &bm, &mut c, m, &mut scratch);
+        salr::gemm::sparse::bitmap_gemm_direct(x.data(), &bm, &mut c, m);
         black_box(&c);
     });
     // The decode-hot-path kernel striped across the pool (bitwise
@@ -41,19 +46,12 @@ fn main() {
     for &t in &[2usize, 4] {
         let pool = WorkerPool::with_threads(t);
         b.run_with_work(&format!("direct striped t={t}"), flops, &mut || {
-            salr::gemm::sparse::bitmap_gemm_direct_pool(
-                x.data(),
-                &bm,
-                &mut c,
-                m,
-                &mut scratch,
-                &pool,
-            );
+            salr::gemm::sparse::bitmap_gemm_direct_pool(x.data(), &bm, &mut c, m, &pool);
             black_box(&c);
         });
     }
     b.run_with_work("panelled (streamed, no overlap)", flops, &mut || {
-        bitmap_gemm_panelled(x.data(), &bm, &mut c, m, 64, &mut scratch);
+        bitmap_gemm_panelled(x.data(), &bm, &mut c, m, 64);
         black_box(&c);
     });
     for &(panel, depth) in &[(32usize, 2usize), (64, 3), (128, 3), (256, 4)] {

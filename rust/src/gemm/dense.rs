@@ -2,16 +2,25 @@
 //!
 //! Row-major `C[m,n] = A[m,k] @ B[k,n]`. The serial kernel tiles M×N into
 //! 4×16 register blocks accumulated over a K panel, with an L2-friendly
-//! outer blocking and a packed-B layout so the micro-kernel streams
-//! contiguous memory. The parallel entry points partition M into fixed
-//! `BAND`-row bands executed on the persistent worker pool: bands own
-//! disjoint C row blocks, so there is no locking and — because band
-//! boundaries are independent of the thread count — the output is
-//! **bitwise identical** at every pool size. This is the compute stage of
-//! the two-stage sparse pipeline and the dense baseline for every speedup
-//! table, so it needs to be fast enough that the *pipeline*, not the MACs,
-//! is what the benchmarks compare.
+//! outer blocking and **both operands packed**: B into NR-wide column
+//! panels, A into MR-row panels, so the micro-kernel streams two
+//! contiguous buffers. The micro-kernel itself is runtime-dispatched
+//! ([`crate::gemm::kernel`]): AVX2 on capable x86_64, NEON on aarch64,
+//! scalar otherwise — all bitwise interchangeable. Pack buffers come from
+//! the per-worker scratch arena ([`crate::util::arena`]), so steady-state
+//! calls allocate nothing.
+//!
+//! The parallel entry points partition M into fixed `BAND`-row bands
+//! executed on the persistent worker pool: bands own disjoint C row
+//! blocks, so there is no locking and — because band boundaries are
+//! independent of the thread count — the output is **bitwise identical**
+//! at every pool size. This is the compute stage of the two-stage sparse
+//! pipeline and the dense baseline for every speedup table, so it needs
+//! to be fast enough that the *pipeline*, not the MACs, is what the
+//! benchmarks compare.
 
+use crate::gemm::kernel::{Kernel, MR, NR};
+use crate::util::arena::scratch_raw;
 use crate::util::pool::{SendPtr, WorkerPool};
 
 /// Outer cache blocking: M rows per L2 block.
@@ -20,10 +29,6 @@ pub const MC: usize = 64;
 pub const KC: usize = 256;
 /// Outer cache blocking: N columns per packed panel group.
 pub const NC: usize = 512;
-
-/// Register micro-tile.
-const MR: usize = 4;
-const NR: usize = 16;
 
 /// Rows per parallel band. A fixed multiple of `MR` (so tile boundaries
 /// match the serial kernel's) and small enough that a 64-row GEMM still
@@ -52,8 +57,7 @@ pub fn gemm_f32_pool(
     n: usize,
     pool: &WorkerPool,
 ) {
-    c[..m * n].fill(0.0);
-    gemm_f32_acc_pool(a, b, c, m, k, n, pool);
+    gemm_f32_pool_with_kernel(a, b, c, m, k, n, pool, Kernel::active());
 }
 
 /// `C += A @ B` on an explicit pool.
@@ -66,20 +70,54 @@ pub fn gemm_f32_acc_pool(
     n: usize,
     pool: &WorkerPool,
 ) {
+    gemm_f32_acc_pool_with_kernel(a, b, c, m, k, n, pool, Kernel::active());
+}
+
+/// [`gemm_f32_pool`] with an explicit micro-kernel — the benches and the
+/// bitwise scalar-vs-SIMD parity tests pin the kernel this way; normal
+/// callers use the runtime-dispatched entry points.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_pool_with_kernel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &WorkerPool,
+    kern: Kernel,
+) {
+    c[..m * n].fill(0.0);
+    gemm_f32_acc_pool_with_kernel(a, b, c, m, k, n, pool, kern);
+}
+
+/// [`gemm_f32_acc_pool`] with an explicit micro-kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_acc_pool_with_kernel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &WorkerPool,
+    kern: Kernel,
+) {
     assert!(a.len() >= m * k, "A too small");
     assert!(b.len() >= k * n, "B too small");
     assert!(c.len() >= m * n, "C too small");
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    // Small problems: skip blocking and packing overhead.
+    // Small problems: skip blocking and packing overhead. Kernel-agnostic
+    // by construction (one shared code path), so forcing the scalar
+    // kernel never changes small-GEMM bits either.
     if m * n * k <= 32 * 32 * 32 {
         return gemm_small_acc(a, b, c, m, k, n);
     }
     let bands = m.div_ceil(BAND);
     if bands == 1 || pool.threads() == 1 {
-        let mut packed = Vec::new();
-        return gemm_band_acc(a, b, c, m, k, n, &mut packed);
+        return gemm_band_acc(a, b, c, m, k, n, kern);
     }
     let cptr = SendPtr(c.as_mut_ptr());
     pool.run(bands, &|bi| {
@@ -89,31 +127,29 @@ pub fn gemm_f32_acc_pool(
         // SAFETY: band `bi` exclusively owns C rows [r0, r1) (and only
         // reads the matching A rows), so bands race on nothing.
         let band_c = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), rows * n) };
-        let mut packed = Vec::new();
-        gemm_band_acc(&a[r0 * k..], b, band_c, rows, k, n, &mut packed);
+        gemm_band_acc(&a[r0 * k..], b, band_c, rows, k, n, kern);
     });
 }
 
 /// Serial blocked GEMM over one row band (`C[m,n] += A[m,k] @ B[k,n]`),
-/// packing each B panel once per (jc, pc) block.
-#[allow(clippy::too_many_arguments)]
-fn gemm_band_acc(
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    packed: &mut Vec<f32>,
-) {
+/// packing each B panel once per (jc, pc) block and each A block once per
+/// (pc, ic). Pack buffers are borrowed from the executing thread's scratch
+/// arena — pool workers are persistent, so after warmup this function
+/// performs zero heap allocations.
+fn gemm_band_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, kern: Kernel) {
+    // Hints sized to the first (jc, pc, ic) block — the largest the packs
+    // will need for this problem, so best-fit pairs slabs stably.
+    let mut packed_b = scratch_raw(NC.min(n).div_ceil(NR) * NR * KC.min(k));
+    let mut packed_a = scratch_raw(MC.min(m).div_ceil(MR) * MR * KC.min(k));
     for jc in (0..n).step_by(NC) {
         let nb = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
             let kb = KC.min(k - pc);
-            pack_b_panels(b, packed, n, pc, jc, kb, nb);
+            pack_b_panels(b, &mut packed_b, n, pc, jc, kb, nb);
             for ic in (0..m).step_by(MC) {
                 let mb = MC.min(m - ic);
-                block_kernel(a, packed, c, k, n, ic, pc, jc, mb, kb, nb);
+                pack_a_panels(a, &mut packed_a, k, ic, pc, mb, kb);
+                block_kernel(&packed_a, &packed_b, c, n, ic, jc, mb, kb, nb, kern);
             }
         }
     }
@@ -153,113 +189,78 @@ fn pack_b_panels(
     }
 }
 
-/// One (mb × nb) block over a kb panel, micro-tiled MR×NR against packed B.
-#[allow(clippy::too_many_arguments)]
-fn block_kernel(
+/// Pack `A[ic..ic+mb, pc..pc+kb]` into MR-row panels, panel-major
+/// (`packed[tile][p][row]`), so the micro-kernel reads MR contiguous A
+/// values per k step instead of striding by `k`. Ragged row tiles are
+/// explicitly zero-padded (the padded rows' accumulators are computed and
+/// discarded — cheaper than a dedicated edge kernel, and it keeps one
+/// SIMD path for every tile).
+fn pack_a_panels(
     a: &[f32],
-    packed: &[f32],
-    c: &mut [f32],
+    packed: &mut Vec<f32>,
     k: usize,
-    n: usize,
     ic: usize,
     pc: usize,
+    mb: usize,
+    kb: usize,
+) {
+    let ntiles = mb.div_ceil(MR);
+    let len = ntiles * kb * MR;
+    if packed.len() != len {
+        packed.clear();
+        packed.resize(len, 0.0);
+    }
+    for ti in 0..ntiles {
+        let i0 = ic + ti * MR;
+        let rows = MR.min(ic + mb - i0);
+        let dst_base = ti * kb * MR;
+        for p in 0..kb {
+            let dst = dst_base + p * MR;
+            for ii in 0..rows {
+                packed[dst + ii] = a[(i0 + ii) * k + pc + p];
+            }
+            // Re-zero the padding every call: the buffer is reused with
+            // arbitrary prior contents and these lanes feed the kernel.
+            packed[dst + rows..dst + MR].fill(0.0);
+        }
+    }
+}
+
+/// One (mb × nb) block over a kb panel, micro-tiled MR×NR against the
+/// packed operands. Every tile — interior or ragged — runs the same
+/// dispatched micro-kernel on a full (zero-padded) MR×NR accumulator;
+/// the write-back masks to the `mr × nr` real elements.
+#[allow(clippy::too_many_arguments)]
+fn block_kernel(
+    packed_a: &[f32],
+    packed_b: &[f32],
+    c: &mut [f32],
+    n: usize,
+    ic: usize,
     jc: usize,
     mb: usize,
     kb: usize,
     nb: usize,
+    kern: Kernel,
 ) {
-    let mut i = 0;
-    while i < mb {
-        let mr = MR.min(mb - i);
-        let mut pj = 0;
-        while pj * NR < nb {
-            let j = pj * NR;
-            let nr = NR.min(nb - j);
-            let panel = &packed[pj * kb * NR..(pj + 1) * kb * NR];
-            if mr == MR {
-                micro_4x16(a, panel, c, k, n, ic + i, pc, jc + j, kb, nr);
-            } else {
-                micro_edge(a, panel, c, k, n, ic + i, pc, jc + j, mr, kb, nr);
+    let ntiles = mb.div_ceil(MR);
+    let npanels = nb.div_ceil(NR);
+    for ti in 0..ntiles {
+        let i0 = ic + ti * MR;
+        let mr = MR.min(ic + mb - i0);
+        let pa = &packed_a[ti * kb * MR..(ti + 1) * kb * MR];
+        for pj in 0..npanels {
+            let j0 = jc + pj * NR;
+            let nr = NR.min(jc + nb - j0);
+            let pb = &packed_b[pj * kb * NR..(pj + 1) * kb * NR];
+            let mut acc = [[0.0f32; NR]; MR];
+            kern.run(pa, pb, &mut acc, kb);
+            for (ii, accrow) in acc.iter().take(mr).enumerate() {
+                let crow = &mut c[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nr];
+                for jj in 0..nr {
+                    crow[jj] += accrow[jj];
+                }
             }
-            pj += 1;
-        }
-        i += MR;
-    }
-}
-
-/// 4×16 register-tiled micro-kernel over a packed B panel:
-/// `C[i0..i0+4, j0..j0+nr] += A-panel @ B-panel`.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn micro_4x16(
-    a: &[f32],
-    panel: &[f32],
-    c: &mut [f32],
-    k: usize,
-    n: usize,
-    i0: usize,
-    p0: usize,
-    j0: usize,
-    kb: usize,
-    nr: usize,
-) {
-    let mut acc = [[0.0f32; NR]; MR];
-    for p in 0..kb {
-        let brow = &panel[p * NR..p * NR + NR];
-        // Unrolled over the 4 A rows; the NR-wide inner loop vectorizes.
-        let a0 = a[i0 * k + p0 + p];
-        let a1 = a[(i0 + 1) * k + p0 + p];
-        let a2 = a[(i0 + 2) * k + p0 + p];
-        let a3 = a[(i0 + 3) * k + p0 + p];
-        for jj in 0..NR {
-            let bv = brow[jj];
-            acc[0][jj] += a0 * bv;
-            acc[1][jj] += a1 * bv;
-            acc[2][jj] += a2 * bv;
-            acc[3][jj] += a3 * bv;
-        }
-    }
-    for (ii, accrow) in acc.iter().enumerate() {
-        let crow = &mut c[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nr];
-        for jj in 0..nr {
-            crow[jj] += accrow[jj];
-        }
-    }
-}
-
-/// Edge micro-kernel for ragged row tiles (mr < 4), same packed panel.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn micro_edge(
-    a: &[f32],
-    panel: &[f32],
-    c: &mut [f32],
-    k: usize,
-    n: usize,
-    i0: usize,
-    p0: usize,
-    j0: usize,
-    mr: usize,
-    kb: usize,
-    nr: usize,
-) {
-    let mut acc = [[0.0f32; NR]; MR];
-    for p in 0..kb {
-        let brow = &panel[p * NR..p * NR + NR];
-        for (ii, accrow) in acc.iter_mut().take(mr).enumerate() {
-            let av = a[(i0 + ii) * k + p0 + p];
-            if av == 0.0 {
-                continue;
-            }
-            for jj in 0..NR {
-                accrow[jj] += av * brow[jj];
-            }
-        }
-    }
-    for (ii, accrow) in acc.iter().take(mr).enumerate() {
-        let crow = &mut c[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nr];
-        for jj in 0..nr {
-            crow[jj] += accrow[jj];
         }
     }
 }
@@ -423,6 +424,81 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn scalar_and_dispatched_kernels_bitwise_identical() {
+        // The tentpole guarantee: whatever SIMD kernel dispatch selects,
+        // its output matches the scalar kernel bit-for-bit — over ragged
+        // tiles (m % 4 ≠ 0, n % 16 ≠ 0), k = 1, multi-KC depths, and at
+        // every pool width. (On hosts without SIMD, or under
+        // SALR_FORCE_SCALAR=1, both sides are the scalar kernel and the
+        // test degenerates to a determinism check.)
+        let mut rng = Rng::new(15);
+        for &(m, k, n) in &[
+            (5usize, 257usize, 33usize), // ragged m and n, k > KC boundary off by one
+            (7, 300, 47),                // ragged everything
+            (13, 128, 31),               // n % 16 = 15
+            (200, 1, 200),               // k = 1
+            (64, 256, 64),               // fully aligned
+            (8, 600, 32),                // k spans multiple KC panels
+            (70, 64, 130),               // m spans bands, ragged n
+        ] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let mut want_scalar = vec![0.0f32; m * n];
+            let serial = WorkerPool::with_threads(1);
+            gemm_f32_pool_with_kernel(
+                a.data(),
+                b.data(),
+                &mut want_scalar,
+                m,
+                k,
+                n,
+                &serial,
+                Kernel::scalar(),
+            );
+            // Approximate correctness of the scalar reference itself.
+            let naive = matmul_naive(&a, &b);
+            let ws = Tensor::from_vec(&[m, n], want_scalar.clone());
+            assert!(max_abs_diff(&ws, &naive) < 1e-2 * (k as f32).sqrt().max(1.0));
+            for &t in &[1usize, 2, 4] {
+                let pool = WorkerPool::with_threads(t);
+                for kern in [Kernel::scalar(), Kernel::active()] {
+                    let mut c = vec![0.0f32; m * n];
+                    gemm_f32_pool_with_kernel(a.data(), b.data(), &mut c, m, k, n, &pool, kern);
+                    assert_eq!(
+                        c,
+                        want_scalar,
+                        "({m},{k},{n}) t={t} kern={} diverged from scalar",
+                        kern.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_calls_do_not_grow_the_arena() {
+        // Steady-state GEMM must not allocate: one warmup call sizes the
+        // thread-local pack slabs, then the counter stays put. Run on a
+        // 1-thread pool so every checkout happens on this test's thread.
+        let mut rng = Rng::new(16);
+        let (m, k, n) = (48usize, 300usize, 64usize);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let pool = WorkerPool::with_threads(1);
+        let mut c = vec![0.0f32; m * n];
+        gemm_f32_pool(a.data(), b.data(), &mut c, m, k, n, &pool);
+        let before = crate::util::arena::thread_allocated_bytes();
+        for _ in 0..10 {
+            gemm_f32_pool(a.data(), b.data(), &mut c, m, k, n, &pool);
+        }
+        assert_eq!(
+            crate::util::arena::thread_allocated_bytes(),
+            before,
+            "steady-state GEMM allocated"
+        );
     }
 
     #[test]

@@ -76,7 +76,7 @@ impl AdapterStack {
     /// Fused update: `Δy[m,n] = (X A_cat) B_cat` — two GEMMs total.
     pub fn apply_fused(&self, x: &[f32], m: usize, out: &mut [f32]) {
         let (k, n, tr) = (self.k(), self.n(), self.total_rank());
-        let mut u = vec![0.0f32; m * tr];
+        let mut u = crate::util::arena::scratch_undef(m * tr);
         dense::gemm_f32(x, self.a_cat.data(), &mut u, m, k, tr);
         dense::gemm_f32(&u, self.b_cat.data(), out, m, tr, n);
     }
@@ -98,7 +98,9 @@ impl AdapterStack {
         if tr == 0 {
             return;
         }
-        let mut u = vec![0.0f32; m * tr];
+        // `u` is GEMM output (zero-filled internally) — arena scratch, so
+        // every decode step's adapter update allocates nothing.
+        let mut u = crate::util::arena::scratch_undef(m * tr);
         dense::gemm_f32_pool(x, self.a_cat.data(), &mut u, m, k, tr, pool);
         dense::gemm_f32_acc_pool(&u, self.b_cat.data(), out, m, tr, n, pool);
     }

@@ -4,9 +4,13 @@
 //! can be *decoded and multiplied* at dense-GEMM throughput by overlapping
 //! the two stages. This module provides:
 //!
-//! * [`dense`] — a blocked, register-tiled, packed-B f32 GEMM,
-//!   parallelized over M row bands on the persistent worker pool (the
-//!   baseline and the compute stage of the pipeline);
+//! * [`kernel`] — the runtime-dispatched 4×16 micro-kernel (AVX2 / NEON /
+//!   scalar, all bitwise interchangeable; `SALR_FORCE_SCALAR=1` pins the
+//!   fallback);
+//! * [`dense`] — a blocked, register-tiled f32 GEMM with both operands
+//!   packed into contiguous panels, parallelized over M row bands on the
+//!   persistent worker pool (the baseline and the compute stage of the
+//!   pipeline);
 //! * [`sparse`] — bitmap-decode-then-GEMM, sequential (the naive
 //!   deployment), plus the column-stripe kernels the parallel consumers
 //!   share with the fallback paths;
@@ -16,11 +20,16 @@
 //! * [`fused`] — the concatenated multi-adapter GEMM (`A_cat`/`B_cat`)
 //!   versus n sequential small GEMMs.
 //!
-//! All parallel paths are bitwise deterministic across thread counts: work
-//! partitions are fixed (MC row bands, column stripes) and per-element
-//! accumulation order never depends on the worker count.
+//! All parallel paths are bitwise deterministic across thread counts *and*
+//! across kernel dispatch: work partitions are fixed (MC row bands, column
+//! stripes), per-element accumulation order never depends on the worker
+//! count, and the SIMD micro-kernels vectorize across output lanes without
+//! reordering or contracting any element's k-accumulation. Scratch comes
+//! from the per-worker arena ([`crate::util::arena`]) — steady-state calls
+//! perform no heap allocation.
 
 pub mod dense;
 pub mod fused;
+pub mod kernel;
 pub mod pipeline;
 pub mod sparse;

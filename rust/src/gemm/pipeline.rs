@@ -23,6 +23,7 @@
 
 use crate::gemm::sparse::{addmul_stripe, panel_acc, panel_acc_stripe};
 use crate::sparse::BitmapMatrix;
+use crate::util::arena;
 use crate::util::pool::{SendPtr, WorkerPool};
 use crossbeam_utils::CachePadded;
 use std::cell::UnsafeCell;
@@ -97,11 +98,16 @@ struct PanelRing {
 }
 
 impl PanelRing {
-    fn new(depth: usize, panel_elems: usize, consumers: usize) -> PanelRing {
+    /// Build the ring over caller-supplied slot buffers (checked out of
+    /// the calling thread's scratch arena and returned after the run, so
+    /// repeated pipelined GEMMs reuse the same slabs).
+    fn new(bufs: Vec<Vec<f32>>, consumers: usize) -> PanelRing {
+        let depth = bufs.len();
         PanelRing {
-            slots: (0..depth)
-                .map(|_| RingSlot {
-                    buf: UnsafeCell::new(vec![0.0f32; panel_elems]),
+            slots: bufs
+                .into_iter()
+                .map(|buf| RingSlot {
+                    buf: UnsafeCell::new(buf),
                     ready: CachePadded::new(AtomicUsize::new(0)),
                 })
                 .collect(),
@@ -242,7 +248,13 @@ fn run_pipelined(
 ) {
     let (k, n) = (w.rows(), w.cols());
     let (decoders, consumers) = stage_split(pool.threads(), npanels, n);
-    let ring = PanelRing::new(ring_depth.max(2), panel_k * n, consumers);
+    // Slot buffers come from the calling thread's arena and go back to it
+    // once every stage has finished — steady-state prefill GEMMs reuse
+    // the same slabs instead of reallocating `depth × panel` floats.
+    let bufs: Vec<Vec<f32>> = (0..ring_depth.max(2))
+        .map(|_| arena::take_vec(panel_k * n))
+        .collect();
+    let ring = PanelRing::new(bufs, consumers);
     let cptr = SendPtr(c.as_mut_ptr());
     pool.run(decoders + consumers, &|role| {
         if role < decoders {
@@ -261,6 +273,9 @@ fn run_pipelined(
             consume_role(&ring, x, cptr, m, k, n, panel_k, npanels, ci, j0, j1);
         }
     });
+    for slot in ring.slots {
+        arena::give_vec(slot.buf.into_inner());
+    }
 }
 
 /// `C[m,n] = X[m,k] @ W[k,n]` with bitmap `W`, decode and GEMM overlapped
@@ -303,8 +318,7 @@ pub fn bitmap_gemm_pipelined_pool(
     let npanels = k.div_ceil(panel_k);
     if npanels == 1 || cfg.ring_depth < 2 || pool.threads() < 2 {
         // Degenerate: no overlap possible; run sequentially.
-        let mut scratch = Vec::new();
-        crate::gemm::sparse::bitmap_gemm_panelled(x, w, c, m, panel_k, &mut scratch);
+        crate::gemm::sparse::bitmap_gemm_panelled(x, w, c, m, panel_k);
         return;
     }
     run_pipelined(x, w, &[], &[], 0, c, m, panel_k, npanels, cfg.ring_depth, pool);
@@ -362,8 +376,9 @@ pub fn salr_gemm_pipelined_pool(
         return;
     }
     // `u = X @ A_cat` is tiny (m × total_rank); computing it up front keeps
-    // the consumers' adapter stripes independent of each other.
-    let mut u = vec![0.0f32; m * rank_total];
+    // the consumers' adapter stripes independent of each other. Arena
+    // scratch: the GEMM zero-fills it before accumulating.
+    let mut u = arena::scratch_undef(m * rank_total);
     if rank_total > 0 && k > 0 {
         crate::gemm::dense::gemm_f32_pool(x, a_cat, &mut u, m, k, rank_total, pool);
     }
@@ -380,7 +395,7 @@ pub fn salr_gemm_pipelined_pool(
             // SAFETY: we hold the only reference to `c`.
             unsafe { addmul_stripe(&u, b_cat, c.as_mut_ptr(), m, rank_total, n, 0, n) };
         }
-        let mut scratch = vec![0.0f32; panel_k * n];
+        let mut scratch = arena::scratch_undef(panel_k * n);
         let mut r0 = 0;
         while r0 < k {
             let r1 = (r0 + panel_k).min(k);

@@ -1,22 +1,21 @@
 //! Sequential bitmap-decode-then-GEMM: the naive deployment of bitmap
 //! weights (decode everything, then multiply). The two-stage pipeline in
 //! [`super::pipeline`] overlaps the same two phases.
+//!
+//! All scratch (decode targets, transposed X/C working sets) is borrowed
+//! from the executing thread's arena ([`crate::util::arena`]) — callers
+//! pass no buffers, and steady-state calls perform no heap allocation.
 
 use crate::gemm::dense;
 use crate::sparse::BitmapMatrix;
+use crate::util::arena::{scratch_f32, scratch_undef};
 use crate::util::pool::{SendPtr, WorkerPool};
 
 /// `C[m,n] = X[m,k] @ W[k,n]` where `W` is bitmap-encoded.
-/// Fully decodes `W` into a scratch buffer first (sequential baseline);
+/// Fully decodes `W` into arena scratch first (sequential baseline);
 /// the dense multiply runs on the process-global pool.
-pub fn bitmap_gemm_sequential(
-    x: &[f32],
-    w: &BitmapMatrix,
-    c: &mut [f32],
-    m: usize,
-    scratch: &mut Vec<f32>,
-) {
-    bitmap_gemm_sequential_pool(x, w, c, m, scratch, &WorkerPool::global());
+pub fn bitmap_gemm_sequential(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize) {
+    bitmap_gemm_sequential_pool(x, w, c, m, &WorkerPool::global());
 }
 
 /// [`bitmap_gemm_sequential`] with an explicit pool for the dense multiply
@@ -26,35 +25,27 @@ pub fn bitmap_gemm_sequential_pool(
     w: &BitmapMatrix,
     c: &mut [f32],
     m: usize,
-    scratch: &mut Vec<f32>,
     pool: &WorkerPool,
 ) {
     let (k, n) = (w.rows(), w.cols());
-    scratch.clear();
-    scratch.resize(k * n, 0.0);
-    w.decode_rows_into(0, k, scratch);
-    dense::gemm_f32_pool(x, scratch, c, m, k, n, pool);
+    // Decode overwrites every element (zeros included), so the scratch
+    // needs no pre-clearing.
+    let mut scratch = scratch_undef(k * n);
+    w.decode_rows_into(0, k, &mut scratch);
+    dense::gemm_f32_pool(x, &scratch, c, m, k, n, pool);
 }
 
 /// Panel-streamed variant: decode a K-panel of `W`, multiply, move on —
 /// same total work but bounded scratch (`panel_k × n`), no overlap.
-pub fn bitmap_gemm_panelled(
-    x: &[f32],
-    w: &BitmapMatrix,
-    c: &mut [f32],
-    m: usize,
-    panel_k: usize,
-    scratch: &mut Vec<f32>,
-) {
+pub fn bitmap_gemm_panelled(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize, panel_k: usize) {
     let (k, n) = (w.rows(), w.cols());
     c[..m * n].fill(0.0);
-    scratch.clear();
-    scratch.resize(panel_k * n, 0.0);
+    let mut scratch = scratch_undef(panel_k * n);
     let mut p0 = 0;
     while p0 < k {
         let p1 = (p0 + panel_k).min(k);
         let kb = p1 - p0;
-        w.decode_rows_into(p0, p1, scratch);
+        w.decode_rows_into(p0, p1, &mut scratch);
         // C += X[:, p0..p1] @ panel — strided A access via a gathered copy.
         panel_acc(x, &scratch[..kb * n], c, m, k, n, p0, kb);
         p0 = p1;
@@ -67,24 +58,18 @@ pub fn bitmap_gemm_panelled(
 /// small m of autoregressive decode it beats the dense GEMM because it
 /// does `(1−p)` of the multiply-adds *and* `(1−p)` of the weight traffic.
 ///
-/// Internally works on transposed X/C scratch so the m-loop is contiguous
-/// and vectorizes.
-pub fn bitmap_gemm_direct(
-    x: &[f32],
-    w: &BitmapMatrix,
-    c: &mut [f32],
-    m: usize,
-    scratch: &mut Vec<f32>,
-) {
+/// Internally works on transposed X/C arena scratch so the m-loop is
+/// contiguous and vectorizes.
+pub fn bitmap_gemm_direct(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize) {
     let (k, n) = (w.rows(), w.cols());
     assert!(x.len() >= m * k && c.len() >= m * n);
     if m == 0 {
         return;
     }
-    // scratch = [ xT (k*m) | cT (n*m) ]
-    scratch.clear();
-    scratch.resize(k * m + n * m, 0.0);
-    let (xt, ct) = scratch.split_at_mut(k * m);
+    // xT is fully overwritten by the transpose; cT accumulates, so it
+    // must start zeroed.
+    let mut xt = scratch_undef(k * m);
+    let mut ct = scratch_f32(n * m);
     for i in 0..m {
         for p in 0..k {
             xt[p * m + i] = x[i * k + p];
@@ -128,13 +113,14 @@ pub fn bitmap_gemm_direct(
 /// mask popcounts, and accumulates only its own columns. Because a given
 /// output column receives its terms in ascending weight-row order no
 /// matter how many stripes run, the result is **bitwise identical** to
-/// the single-threaded kernel at every pool width.
+/// the single-threaded kernel at every pool width. The transposed
+/// working set lives in the calling thread's arena; stripe tasks borrow
+/// it and allocate nothing.
 pub fn bitmap_gemm_direct_pool(
     x: &[f32],
     w: &BitmapMatrix,
     c: &mut [f32],
     m: usize,
-    scratch: &mut Vec<f32>,
     pool: &WorkerPool,
 ) {
     let (k, n) = (w.rows(), w.cols());
@@ -145,19 +131,18 @@ pub fn bitmap_gemm_direct_pool(
     let bpr = w.bytes_per_row();
     let stripes = pool.threads().min(bpr);
     if stripes <= 1 || k == 0 {
-        return bitmap_gemm_direct(x, w, c, m, scratch);
+        return bitmap_gemm_direct(x, w, c, m);
     }
-    // scratch = [ xT (k*m) | cT (n*m) ], transposed so the m-loop is
-    // contiguous — same layout as the serial kernel.
-    scratch.clear();
-    scratch.resize(k * m + n * m, 0.0);
-    {
-        let (xt, ct) = scratch.split_at_mut(k * m);
-        for i in 0..m {
-            for p in 0..k {
-                xt[p * m + i] = x[i * k + p];
-            }
+    // Transposed so the m-loop is contiguous — same layout as the serial
+    // kernel. xT fully overwritten; cT accumulates from zero.
+    let mut xt = scratch_undef(k * m);
+    let mut ct = scratch_f32(n * m);
+    for i in 0..m {
+        for p in 0..k {
+            xt[p * m + i] = x[i * k + p];
         }
+    }
+    {
         let xt = &*xt;
         let masks = w.masks();
         let values = w.values();
@@ -195,7 +180,6 @@ pub fn bitmap_gemm_direct_pool(
             }
         });
     }
-    let ct = &scratch[k * m..];
     for i in 0..m {
         for j in 0..n {
             c[i * n + j] = ct[j * m + i];
@@ -311,8 +295,7 @@ mod tests {
         let (x, w, bm) = setup(&mut rng, 9, 64, 33);
         let want = matmul_naive(&x, &w);
         let mut c = vec![0.0f32; 9 * 33];
-        let mut scratch = Vec::new();
-        bitmap_gemm_sequential(x.data(), &bm, &mut c, 9, &mut scratch);
+        bitmap_gemm_sequential(x.data(), &bm, &mut c, 9);
         let c = Tensor::from_vec(&[9, 33], c);
         assert!(max_abs_diff(&c, &want) < 1e-3);
     }
@@ -332,8 +315,7 @@ mod tests {
             let bm = BitmapMatrix::encode(&w);
             let want = matmul_naive(&x, &w);
             let mut c = vec![0.0f32; m * n];
-            let mut scratch = Vec::new();
-            bitmap_gemm_direct(x.data(), &bm, &mut c, m, &mut scratch);
+            bitmap_gemm_direct(x.data(), &bm, &mut c, m);
             let c = Tensor::from_vec(&[m, n], c);
             assert!(max_abs_diff(&c, &want) < 1e-3, "({m},{k},{n},{p})");
         }
@@ -357,13 +339,11 @@ mod tests {
             crate::prune::prune_global(&mut [&mut w], p);
             let bm = BitmapMatrix::encode(&w);
             let mut serial = vec![0.0f32; m * n];
-            let mut scratch = Vec::new();
-            bitmap_gemm_direct(x.data(), &bm, &mut serial, m, &mut scratch);
+            bitmap_gemm_direct(x.data(), &bm, &mut serial, m);
             for threads in [1usize, 2, 3, 8] {
                 let pool = WorkerPool::new(threads);
                 let mut c = vec![0.0f32; m * n];
-                let mut sc = Vec::new();
-                bitmap_gemm_direct_pool(x.data(), &bm, &mut c, m, &mut sc, &pool);
+                bitmap_gemm_direct_pool(x.data(), &bm, &mut c, m, &pool);
                 assert_eq!(c, serial, "({m},{k},{n},{p}) threads={threads}");
             }
             let want = matmul_naive(&x, &w);
@@ -373,14 +353,33 @@ mod tests {
     }
 
     #[test]
+    fn direct_steady_state_does_not_allocate() {
+        // The decode hot path's acceptance bar: after one warmup call the
+        // transposed working set is arena-resident and repeated calls do
+        // not move the thread's allocation counter.
+        let mut rng = Rng::new(114);
+        let (x, _w, bm) = setup(&mut rng, 4, 96, 64);
+        let mut c = vec![0.0f32; 4 * 64];
+        bitmap_gemm_direct(x.data(), &bm, &mut c, 4);
+        let before = crate::util::arena::thread_allocated_bytes();
+        for _ in 0..10 {
+            bitmap_gemm_direct(x.data(), &bm, &mut c, 4);
+        }
+        assert_eq!(
+            crate::util::arena::thread_allocated_bytes(),
+            before,
+            "bitmap_gemm_direct allocated in steady state"
+        );
+    }
+
+    #[test]
     fn panelled_matches_dense_various_panels() {
         let mut rng = Rng::new(111);
         let (x, w, bm) = setup(&mut rng, 7, 100, 25);
         let want = matmul_naive(&x, &w);
         for &panel in &[1usize, 8, 33, 100, 200] {
             let mut c = vec![0.0f32; 7 * 25];
-            let mut scratch = Vec::new();
-            bitmap_gemm_panelled(x.data(), &bm, &mut c, 7, panel, &mut scratch);
+            bitmap_gemm_panelled(x.data(), &bm, &mut c, 7, panel);
             let c = Tensor::from_vec(&[7, 25], c);
             assert!(max_abs_diff(&c, &want) < 1e-3, "panel={panel}");
         }

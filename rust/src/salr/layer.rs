@@ -58,7 +58,10 @@ impl SalrLayer {
     /// stripes its columns across `pool`, and the pipelined large-m path
     /// runs its stage workers on `pool` too (`cfg.num_threads` no longer
     /// resolves a separate registry pool — the `--threads 1` ablation is
-    /// apples-to-apples everywhere).
+    /// apples-to-apples everywhere). All scratch (the direct kernel's
+    /// transposed working set, the fused-adapter intermediate, pipeline
+    /// ring slots) comes from the per-worker arena, so a steady-state
+    /// forward allocates nothing.
     pub fn forward(
         &self,
         x: &[f32],
@@ -69,10 +72,7 @@ impl SalrLayer {
     ) {
         const DIRECT_M_MAX: usize = 32;
         if m <= DIRECT_M_MAX {
-            let mut scratch = Vec::new();
-            crate::gemm::sparse::bitmap_gemm_direct_pool(
-                x, &self.w_hat, out, m, &mut scratch, pool,
-            );
+            crate::gemm::sparse::bitmap_gemm_direct_pool(x, &self.w_hat, out, m, pool);
             self.adapters.apply_fused_acc_pool(x, m, out, pool);
         } else {
             salr_gemm_pipelined_pool(

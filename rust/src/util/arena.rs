@@ -1,0 +1,313 @@
+//! Per-worker scratch arena: thread-local, grow-only, zero steady-state
+//! allocation on the GEMM/decode hot path.
+//!
+//! Every slab lives in a **thread-local free list**. Pool worker threads
+//! (`util/pool.rs`) are persistent — created once per pool size and reused
+//! for every parallel region — so a slab checked out by a worker for one
+//! GEMM band comes back to the *same* worker's arena and is reused by the
+//! next band it executes. After a warmup pass through a given call path,
+//! every checkout is a free-list pop and every release a push: no heap
+//! traffic at all.
+//!
+//! Ownership protocol:
+//!
+//! ```text
+//!   caller thread            worker thread W            worker thread W'
+//!   ─────────────            ───────────────            ────────────────
+//!   [free list]              [free list]                [free list]
+//!        │ scratch_*()            │ scratch_*()              │
+//!        ▼                        ▼                          ▼
+//!     Scratch guard  ──borrow──▶ kernel / decode / pack  (no sharing:
+//!        │                        │                       each thread
+//!        ▼ Drop                   ▼ Drop                  owns its slabs)
+//!   [free list]              [free list]                [free list]
+//! ```
+//!
+//! A [`Scratch`] guard owns its slab exclusively for its lifetime and
+//! returns it on `Drop` (best-fit, capacity-sorted; a checkout nothing
+//! fits starts a new slab rather than growing an undersized one, so one
+//! warmup pass leaves a slab per live size class). Total arena capacity
+//! is monotone and observable through [`allocated_bytes`] /
+//! [`thread_allocated_bytes`], which is what the zero-allocation
+//! regression tests assert on: after one warmup decode step, repeated
+//! `decode_step` calls must not move the counter.
+//!
+//! Checkout flavors differ only in what they promise about contents:
+//!
+//! * [`scratch_f32`] — length set, **fully zeroed** (for accumulators);
+//! * [`scratch_undef`] — length set, contents unspecified (for buffers
+//!   the callee fully overwrites before reading — decode targets,
+//!   transposes, GEMM outputs that are `fill(0.0)`-ed internally);
+//! * [`scratch_raw`] — length and contents untouched (for pack buffers
+//!   that manage their own `len`-keyed geometry check);
+//! * [`take_vec`]/[`give_vec`] — guard-free checkout for buffers whose
+//!   ownership must move into another structure (the pipeline's ring
+//!   slots), returned manually after the parallel region.
+
+use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Total bytes of slab capacity ever allocated (or grown) across every
+/// thread's arena, monotone. Stable counter ⇒ zero heap allocation.
+static ALLOCATED: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// This thread's free slabs, sorted ascending by capacity.
+    static FREE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    /// This thread's share of [`ALLOCATED`] (tests snapshot this one:
+    /// unlike the global counter it cannot be moved by unrelated tests
+    /// allocating on other threads).
+    static THREAD_ALLOCATED: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Bytes of f32 slab capacity the arenas have allocated process-wide
+/// (monotone; growth only).
+pub fn allocated_bytes() -> usize {
+    ALLOCATED.load(Ordering::Relaxed)
+}
+
+/// Bytes of slab capacity allocated (or grown) **by the calling thread's
+/// arena** — the deterministic counter the zero-allocation regression
+/// tests snapshot around steady-state decode loops.
+pub fn thread_allocated_bytes() -> usize {
+    THREAD_ALLOCATED.with(|c| c.get())
+}
+
+fn count_growth(bytes: usize) {
+    if bytes > 0 {
+        ALLOCATED.fetch_add(bytes, Ordering::Relaxed);
+        let _ = THREAD_ALLOCATED.try_with(|c| c.set(c.get() + bytes));
+    }
+}
+
+/// Best-fit checkout: the smallest free slab with `capacity >= hint`,
+/// else a brand-new empty one. Deliberately **never grows an undersized
+/// slab**: growing would remove a small slab from the pool and let the
+/// same call sequence re-trigger growth on the next iteration — with
+/// create-on-miss, one warmup pass leaves a slab per live size class and
+/// the steady state is allocation-free.
+fn checkout(hint: usize) -> (Vec<f32>, usize) {
+    let buf = FREE
+        .try_with(|f| {
+            let mut free = f.borrow_mut();
+            free.iter()
+                .position(|b| b.capacity() >= hint)
+                .map(|i| free.remove(i))
+        })
+        .ok()
+        .flatten()
+        .unwrap_or_default();
+    let cap = buf.capacity();
+    (buf, cap)
+}
+
+/// Return a slab, keeping the free list capacity-sorted and accounting
+/// any growth that happened while it was checked out.
+fn give_back(buf: Vec<f32>, cap_at_checkout: usize) {
+    let grown = buf.capacity().saturating_sub(cap_at_checkout);
+    count_growth(grown * std::mem::size_of::<f32>());
+    // Ignore TLS teardown: losing a slab at thread exit is fine.
+    let _ = FREE.try_with(|f| {
+        let mut free = f.borrow_mut();
+        let pos = free
+            .iter()
+            .position(|b| b.capacity() >= buf.capacity())
+            .unwrap_or(free.len());
+        free.insert(pos, buf);
+    });
+}
+
+/// An exclusively-owned scratch slab; returns to this thread's arena on
+/// drop. Derefs to `Vec<f32>` so existing `&mut Vec<f32>` plumbing (the
+/// pack-buffer geometry checks) works unchanged.
+pub struct Scratch {
+    buf: Vec<f32>,
+    cap_at_checkout: usize,
+}
+
+impl Deref for Scratch {
+    type Target = Vec<f32>;
+    fn deref(&self) -> &Vec<f32> {
+        &self.buf
+    }
+}
+
+impl DerefMut for Scratch {
+    fn deref_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.buf
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        give_back(std::mem::take(&mut self.buf), self.cap_at_checkout);
+    }
+}
+
+/// Checkout `len` f32s, **zero-filled** — drop-in for `vec![0.0; len]`.
+pub fn scratch_f32(len: usize) -> Scratch {
+    let (mut buf, cap) = checkout(len);
+    buf.clear();
+    buf.resize(len, 0.0);
+    Scratch {
+        buf,
+        cap_at_checkout: cap,
+    }
+}
+
+/// Checkout `len` f32s with **unspecified contents** (stale data from the
+/// slab's previous user). Only for buffers the caller fully overwrites
+/// before reading — skips the O(len) zeroing of [`scratch_f32`].
+pub fn scratch_undef(len: usize) -> Scratch {
+    let (mut buf, cap) = checkout(len);
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    } else {
+        buf.truncate(len);
+    }
+    Scratch {
+        buf,
+        cap_at_checkout: cap,
+    }
+}
+
+/// Checkout a slab sized *near* `hint` with length and contents exactly as
+/// its previous user left them — for pack buffers whose
+/// `if buf.len() != needed` geometry check decides what to reinitialize.
+pub fn scratch_raw(hint: usize) -> Scratch {
+    let (buf, cap) = checkout(hint);
+    Scratch {
+        buf,
+        cap_at_checkout: cap,
+    }
+}
+
+/// Guard-free checkout of a `len`-long slab (contents unspecified): for
+/// buffers whose ownership moves into another structure (pipeline ring
+/// slots). Pair with [`give_vec`] after the region completes; on panic the
+/// slab is simply freed (safe, just not reused).
+pub fn take_vec(len: usize) -> Vec<f32> {
+    let (mut buf, cap) = checkout(len);
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    } else {
+        buf.truncate(len);
+    }
+    let grown = buf.capacity().saturating_sub(cap);
+    count_growth(grown * std::mem::size_of::<f32>());
+    buf
+}
+
+/// Return a slab obtained from [`take_vec`] to this thread's arena. Any
+/// thread may return it (slabs are not pinned); it joins the returning
+/// thread's free list.
+pub fn give_vec(buf: Vec<f32>) {
+    let cap = buf.capacity();
+    give_back(buf, cap);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Arena tests share per-thread state with the rest of the suite, so
+    // each runs on a dedicated thread for a deterministic free list.
+    fn on_fresh_thread(f: impl FnOnce() + Send + 'static) {
+        std::thread::spawn(f).join().unwrap();
+    }
+
+    #[test]
+    fn checkout_is_zeroed_after_dirty_use() {
+        on_fresh_thread(|| {
+            {
+                let mut s = scratch_f32(64);
+                for v in s.iter_mut() {
+                    *v = 7.0;
+                }
+            }
+            let s = scratch_f32(64);
+            assert!(s.iter().all(|&v| v == 0.0), "scratch_f32 must re-zero");
+        });
+    }
+
+    #[test]
+    fn reuse_does_not_grow() {
+        on_fresh_thread(|| {
+            {
+                let _a = scratch_f32(1000);
+                let _b = scratch_f32(10);
+            }
+            let before = thread_allocated_bytes();
+            for _ in 0..50 {
+                let _b = scratch_undef(10); // best-fit: the small slab
+                let _a = scratch_f32(1000);
+                let _r = scratch_raw(0);
+            }
+            assert_eq!(
+                thread_allocated_bytes(),
+                before,
+                "steady-state checkouts must not allocate"
+            );
+        });
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate_slab() {
+        on_fresh_thread(|| {
+            {
+                let _small = scratch_f32(16);
+                let _big = scratch_f32(4096);
+            }
+            let before = thread_allocated_bytes();
+            // Taking small then big in either order must reuse both slabs.
+            {
+                let _big = scratch_f32(4096);
+                let _small = scratch_f32(16);
+            }
+            {
+                let _small = scratch_f32(16);
+                let _big = scratch_f32(4096);
+            }
+            assert_eq!(thread_allocated_bytes(), before);
+        });
+    }
+
+    #[test]
+    fn growth_is_counted_once() {
+        on_fresh_thread(|| {
+            let before = thread_allocated_bytes();
+            drop(scratch_f32(100));
+            let after_first = thread_allocated_bytes();
+            assert!(after_first >= before + 400, "new slab must be counted");
+            drop(scratch_f32(100));
+            assert_eq!(thread_allocated_bytes(), after_first, "reuse must not count");
+        });
+    }
+
+    #[test]
+    fn take_give_roundtrip() {
+        on_fresh_thread(|| {
+            let v = take_vec(256);
+            assert_eq!(v.len(), 256);
+            give_vec(v);
+            let before = thread_allocated_bytes();
+            let v2 = take_vec(256);
+            assert_eq!(thread_allocated_bytes(), before, "take_vec must reuse");
+            give_vec(v2);
+        });
+    }
+
+    #[test]
+    fn undef_preserves_capacity_not_contents_contract() {
+        on_fresh_thread(|| {
+            {
+                let mut s = scratch_undef(32);
+                s.iter_mut().for_each(|v| *v = 3.0);
+            }
+            // Contents are unspecified — only the length is guaranteed.
+            let s = scratch_undef(8);
+            assert_eq!(s.len(), 8);
+        });
+    }
+}
