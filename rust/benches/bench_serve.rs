@@ -3,7 +3,11 @@
 //! the numbers isolate the scheduler + engines, not socket overhead).
 //!
 //! Reports tokens/s, mean decode-batch occupancy, and p50/p99 request
-//! latency per worker count. Set `SALR_BENCH_JSON=path.json` to emit
+//! latency per worker count — then a **shared-prefix workload** (every
+//! client's prompt starts with the same 40-token head, the system-prompt
+//! pattern) with the radix-tree prefix cache off and on, reporting
+//! tokens/s plus `prefix_hit_tokens` / `prefill_tokens` so the skipped
+//! prefill work is visible. Set `SALR_BENCH_JSON=path.json` to emit
 //! machine-readable results; env knobs `SALR_BENCH_CLIENTS` (default 16),
 //! `SALR_BENCH_REQS` (default 4 per client) and `SALR_BENCH_CHUNK`
 //! (prefill chunk, default 64, 0 = whole-prompt) scale the load.
@@ -58,11 +62,78 @@ struct RunResult {
     p99_ms: f64,
 }
 
+struct SharedPrefixResult {
+    prefix_cache: bool,
+    wall_s: f64,
+    tokens: u64,
+    prefix_hit_tokens: u64,
+    prefill_tokens: u64,
+}
+
+/// The shared-prefix workload: `clients` concurrent clients, each
+/// submitting `reqs_per_client` prompts that all start with the same
+/// 40-token head (distinct tails), against 2 engine workers.
+fn run_shared_prefix_load(
+    template: &Engine,
+    clients: usize,
+    reqs_per_client: usize,
+    prefix_cache: bool,
+) -> SharedPrefixResult {
+    // 40-byte head + short distinct tail; prompt + 16 generated tokens
+    // stays inside the bench engine's 64-token context.
+    let head = "SYSTEM: you are a terse math assistant.\n";
+    assert_eq!(head.len(), 40);
+    let policy = BatchPolicy {
+        max_batch: 8,
+        engine_workers: 2,
+        prefill_chunk: env_usize("SALR_BENCH_CHUNK", 64),
+        kv_block_size: 8,
+        prefix_cache,
+        ..Default::default()
+    };
+    let batcher = Batcher::new(policy);
+    let handles = spawn_engine_workers(&batcher, template.fork());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let b = batcher.clone();
+            s.spawn(move || {
+                for r in 0..reqs_per_client {
+                    let resp = b.submit(Request {
+                        id: (c * reqs_per_client + r) as u64,
+                        prompt: format!("{head}{}+{}=", 10 + c % 10, r % 10),
+                        max_tokens: 16,
+                    });
+                    assert_eq!(resp.tokens, 16);
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let res = SharedPrefixResult {
+        prefix_cache,
+        wall_s,
+        tokens: batcher.metrics.tokens_out.load(Ordering::Relaxed),
+        prefix_hit_tokens: batcher.metrics.prefix_hit_tokens.load(Ordering::Relaxed),
+        prefill_tokens: batcher.metrics.prefill_tokens.load(Ordering::Relaxed),
+    };
+    batcher.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    res
+}
+
 fn run_load(template: &Engine, workers: usize, clients: usize, reqs_per_client: usize) -> RunResult {
     let policy = BatchPolicy {
         max_batch: 8,
         engine_workers: workers,
         prefill_chunk: env_usize("SALR_BENCH_CHUNK", 64),
+        // Pinned, not env-inherited: uniform-mode rows must measure the
+        // same configuration on every host (the CI/verify docs set
+        // SALR_PREFIX_CACHE, which would otherwise leak in here).
+        kv_block_size: 16,
+        prefix_cache: false,
         ..Default::default()
     };
     let batcher = Batcher::new(policy);
@@ -126,21 +197,46 @@ fn main() {
         rows.push(r);
     }
 
-    if let Ok(path) = std::env::var("SALR_BENCH_JSON") {
-        let results = Json::Arr(
-            rows.iter()
-                .map(|r| {
-                    Json::obj()
-                        .set("engine_workers", r.workers)
-                        .set("tokens_per_sec", r.tokens as f64 / r.wall_s)
-                        .set("mean_batch_occupancy", r.occupancy)
-                        .set("latency_p50_ms", r.p50_ms)
-                        .set("latency_p99_ms", r.p99_ms)
-                        .set("requests", r.requests)
-                        .set("wall_s", r.wall_s)
-                })
-                .collect(),
+    println!("\n# shared-prefix workload: {clients} clients x {reqs} reqs, common 40-token head, 2 workers");
+    let mut shared_rows = Vec::new();
+    for prefix_cache in [false, true] {
+        let r = run_shared_prefix_load(&template, clients, reqs, prefix_cache);
+        println!(
+            "prefix_cache={:<5} {:>8.1} tok/s  prefix_hit_tokens {:>6}  prefill_tokens {:>6}",
+            r.prefix_cache,
+            r.tokens as f64 / r.wall_s,
+            r.prefix_hit_tokens,
+            r.prefill_tokens,
         );
+        shared_rows.push(r);
+    }
+
+    if let Ok(path) = std::env::var("SALR_BENCH_JSON") {
+        let mut result_rows: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("mode", "uniform")
+                    .set("engine_workers", r.workers)
+                    .set("tokens_per_sec", r.tokens as f64 / r.wall_s)
+                    .set("mean_batch_occupancy", r.occupancy)
+                    .set("latency_p50_ms", r.p50_ms)
+                    .set("latency_p99_ms", r.p99_ms)
+                    .set("requests", r.requests)
+                    .set("wall_s", r.wall_s)
+            })
+            .collect();
+        result_rows.extend(shared_rows.iter().map(|r| {
+            Json::obj()
+                .set("mode", "shared_prefix")
+                .set("engine_workers", 2usize)
+                .set("prefix_cache", r.prefix_cache)
+                .set("tokens_per_sec", r.tokens as f64 / r.wall_s)
+                .set("prefix_hit_tokens", r.prefix_hit_tokens)
+                .set("prefill_tokens", r.prefill_tokens)
+                .set("wall_s", r.wall_s)
+        }));
+        let results = Json::Arr(result_rows);
         let meta = Json::obj()
             .set("bench", "serve")
             .set("clients", clients)

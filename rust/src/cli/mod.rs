@@ -73,7 +73,9 @@ impl Args {
     }
 
     pub fn bool(&self, name: &str) -> bool {
-        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+        // Shares the env-var truthy set, so `--prefix-cache on` and
+        // `SALR_PREFIX_CACHE=on` can never disagree.
+        self.flag(name).is_some_and(crate::util::truthy)
     }
 
     pub fn require(&self, name: &str) -> Result<&str> {
@@ -118,6 +120,14 @@ SERVE FLAGS:
   --prefill-chunk N   max prompt tokens prefilled per scheduler iteration,
                       so running sequences keep decoding between the chunks
                       of a long prompt (default 64; 0 = whole-prompt prefill)
+  --kv-block-size N   token positions per paged KV block (default 16, or
+                      SALR_KV_BLOCK); also the prefix-sharing granularity
+  --prefix-cache B    radix-tree prefix cache: requests sharing a prompt
+                      head reuse its KV blocks instead of re-running
+                      prefill (default off, or SALR_PREFIX_CACHE=1);
+                      output bytes are identical either way
+  --stream-frame-cap N  per-connection reply-queue bound; a reader that
+                      falls N frames behind is disconnected (default 1024)
 
 Clients add \"stream\": true to a request line to receive one
 {\"id\",\"delta\",\"seq\"} frame per generated token before the final reply.

@@ -1,0 +1,238 @@
+//! Fixed-size, refcounted KV blocks — the storage layer of the paged KV
+//! cache.
+//!
+//! A *block* holds `block_size` consecutive token positions of key/value
+//! state for **every** layer of one sequence (layout
+//! `[layer][token][d_model]`, keys and values in separate slabs). All
+//! blocks live in two flat preallocated slabs, so block allocation is a
+//! free-list pop and never touches the heap allocator on the decode hot
+//! path.
+//!
+//! Blocks are **refcounted**: a block is referenced by the sequence
+//! slot(s) whose block tables contain it and, once a prompt prefix is
+//! registered, by the radix tree ([`super::RadixTree`]). Storage
+//! is recycled (pushed back on the free list) only when the count reaches
+//! zero, so eviction can never pull data out from under a live sequence.
+//! Shared blocks are immutable by construction — writes only ever append
+//! at a sequence's current length, which lies strictly past every shared
+//! (full) block of its chain.
+//!
+//! The free list is kept sorted descending so pops hand out the lowest
+//! free block id first — the same stable, deterministic reuse order the
+//! KV *slot* pool uses.
+
+/// Refcounted pool of fixed-size KV blocks backed by two flat slabs.
+#[derive(Debug)]
+pub struct BlockPool {
+    block_size: usize,
+    d_model: usize,
+    n_layers: usize,
+    /// Floats per (block, layer): `block_size * d_model`.
+    layer_stride: usize,
+    /// Floats per block: `n_layers * layer_stride`.
+    block_stride: usize,
+    keys: Vec<f32>,
+    values: Vec<f32>,
+    refcount: Vec<u32>,
+    /// Free block ids, sorted descending (pop returns the lowest id).
+    free: Vec<usize>,
+}
+
+impl BlockPool {
+    /// Pool of `num_blocks` blocks, each spanning `n_layers` layers ×
+    /// `block_size` token positions × `d_model` columns.
+    pub fn new(num_blocks: usize, n_layers: usize, block_size: usize, d_model: usize) -> BlockPool {
+        assert!(block_size > 0, "block size must be positive");
+        let layer_stride = block_size * d_model;
+        let block_stride = n_layers * layer_stride;
+        BlockPool {
+            block_size,
+            d_model,
+            n_layers,
+            layer_stride,
+            block_stride,
+            keys: vec![0.0; num_blocks * block_stride],
+            values: vec![0.0; num_blocks * block_stride],
+            refcount: vec![0; num_blocks],
+            free: (0..num_blocks).rev().collect(),
+        }
+    }
+
+    /// Tokens per block.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Total blocks (free + in use).
+    pub fn num_blocks(&self) -> usize {
+        self.refcount.len()
+    }
+
+    /// Blocks currently referenced by at least one owner.
+    pub fn blocks_in_use(&self) -> usize {
+        self.num_blocks() - self.free.len()
+    }
+
+    /// Current reference count of `block` (0 = on the free list).
+    pub fn refcount(&self, block: usize) -> u32 {
+        self.refcount[block]
+    }
+
+    /// Claim a free block (refcount 1, contents unspecified — callers
+    /// overwrite rows before reading them). `None` when the pool is
+    /// exhausted; the slot pool then asks the radix tree to evict.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.refcount[b], 0);
+        self.refcount[b] = 1;
+        Some(b)
+    }
+
+    /// Add one reference to `block` (a second sequence or the radix tree
+    /// now shares it).
+    pub fn retain(&mut self, block: usize) {
+        debug_assert!(self.refcount[block] > 0, "retain of a free block");
+        self.refcount[block] += 1;
+    }
+
+    /// Drop one reference; when the count hits zero the block returns to
+    /// the free list (sorted, lowest-first reuse). Returns `true` exactly
+    /// when the block was freed.
+    pub fn release(&mut self, block: usize) -> bool {
+        debug_assert!(self.refcount[block] > 0, "release of a free block");
+        self.refcount[block] -= 1;
+        if self.refcount[block] == 0 {
+            // Insert keeping descending order; the free list was allocated
+            // at full capacity, so this never reallocates.
+            let at = self.free.partition_point(|&f| f > block);
+            self.free.insert(at, block);
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    fn offset(&self, block: usize, layer: usize, t: usize) -> usize {
+        debug_assert!(t < self.block_size && layer < self.n_layers);
+        block * self.block_stride + layer * self.layer_stride + t * self.d_model
+    }
+
+    /// Key row at in-block position `t` of `layer`.
+    #[inline]
+    pub fn key_row(&self, block: usize, layer: usize, t: usize) -> &[f32] {
+        let o = self.offset(block, layer, t);
+        &self.keys[o..o + self.d_model]
+    }
+
+    /// Value row at in-block position `t` of `layer`.
+    #[inline]
+    pub fn value_row(&self, block: usize, layer: usize, t: usize) -> &[f32] {
+        let o = self.offset(block, layer, t);
+        &self.values[o..o + self.d_model]
+    }
+
+    /// The first `rows` contiguous key rows of `layer` in `block` — the
+    /// attention kernel walks chains block-by-block through this.
+    #[inline]
+    pub fn key_rows(&self, block: usize, layer: usize, rows: usize) -> &[f32] {
+        debug_assert!(rows <= self.block_size);
+        let o = self.offset(block, layer, 0);
+        &self.keys[o..o + rows * self.d_model]
+    }
+
+    /// The first `rows` contiguous value rows of `layer` in `block`.
+    #[inline]
+    pub fn value_rows(&self, block: usize, layer: usize, rows: usize) -> &[f32] {
+        debug_assert!(rows <= self.block_size);
+        let o = self.offset(block, layer, 0);
+        &self.values[o..o + rows * self.d_model]
+    }
+
+    /// Write one K/V row at in-block position `t` of `layer`.
+    pub fn write_row(&mut self, block: usize, layer: usize, t: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.d_model);
+        debug_assert_eq!(v.len(), self.d_model);
+        let o = self.offset(block, layer, t);
+        self.keys[o..o + self.d_model].copy_from_slice(k);
+        self.values[o..o + self.d_model].copy_from_slice(v);
+    }
+
+    /// Copy the first `rows` token rows of **every** layer from `src`
+    /// into `dst` — the copy-on-write step when a prompt diverges from a
+    /// cached chain mid-block: the matching head of the shared block is
+    /// duplicated into a private block the new sequence then appends to.
+    pub fn copy_rows(&mut self, src: usize, dst: usize, rows: usize) {
+        debug_assert!(rows <= self.block_size);
+        debug_assert_ne!(src, dst, "COW copy onto itself");
+        for layer in 0..self.n_layers {
+            let s = self.offset(src, layer, 0);
+            let d = self.offset(dst, layer, 0);
+            let n = rows * self.d_model;
+            // Disjoint blocks, same slab: copy_within on both slabs.
+            self.keys.copy_within(s..s + n, d);
+            self.values.copy_within(s..s + n, d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_lowest_first_and_exhaustion() {
+        let mut p = BlockPool::new(3, 1, 4, 2);
+        assert_eq!(p.num_blocks(), 3);
+        assert_eq!((p.alloc(), p.alloc(), p.alloc()), (Some(0), Some(1), Some(2)));
+        assert_eq!(p.alloc(), None, "pool exhausted");
+        assert_eq!(p.blocks_in_use(), 3);
+        // Free 1 then 0; reuse hands back 0 first.
+        assert!(p.release(1));
+        assert!(p.release(0));
+        assert_eq!(p.alloc(), Some(0));
+        assert_eq!(p.alloc(), Some(1));
+    }
+
+    #[test]
+    fn refcounts_gate_the_free_list() {
+        let mut p = BlockPool::new(2, 1, 2, 2);
+        let b = p.alloc().unwrap();
+        p.retain(b);
+        p.retain(b);
+        assert_eq!(p.refcount(b), 3);
+        assert!(!p.release(b));
+        assert!(!p.release(b));
+        assert_eq!(p.blocks_in_use(), 1, "still referenced");
+        assert!(p.release(b), "last release frees");
+        assert_eq!(p.refcount(b), 0);
+        assert_eq!(p.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn rows_roundtrip_and_cow_copy() {
+        let mut p = BlockPool::new(2, 2, 4, 3);
+        let a = p.alloc().unwrap();
+        for t in 0..4 {
+            for l in 0..2 {
+                let base = (t * 10 + l * 100) as f32;
+                p.write_row(a, l, t, &[base, base + 1.0, base + 2.0], &[-base, -base - 1.0, -base - 2.0]);
+            }
+        }
+        assert_eq!(p.key_row(a, 1, 2), &[120.0, 121.0, 122.0]);
+        assert_eq!(p.value_row(a, 0, 3), &[-30.0, -31.0, -32.0]);
+        assert_eq!(&p.key_rows(a, 0, 2)[3..6], p.key_row(a, 0, 1));
+        // COW: copy the first 2 rows of every layer into a fresh block.
+        let b = p.alloc().unwrap();
+        p.copy_rows(a, b, 2);
+        for l in 0..2 {
+            for t in 0..2 {
+                assert_eq!(p.key_row(b, l, t), p.key_row(a, l, t));
+                assert_eq!(p.value_row(b, l, t), p.value_row(a, l, t));
+            }
+        }
+        // Writing past the copied head of `b` leaves `a` untouched.
+        p.write_row(b, 0, 2, &[9.0; 3], &[9.0; 3]);
+        assert_eq!(p.key_row(a, 0, 2), &[20.0, 21.0, 22.0]);
+    }
+}

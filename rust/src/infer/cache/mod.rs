@@ -1,0 +1,16 @@
+//! Paged KV-cache storage: a refcounted [`BlockPool`] of fixed-size
+//! token blocks plus a [`RadixTree`] prefix index that maps prompt heads
+//! to shared, immutable block chains (copy-on-write at the first
+//! divergent block, LRU eviction of unreferenced chains under pool
+//! pressure).
+//!
+//! [`KvSlotPool`](crate::infer::KvSlotPool) composes the two into the
+//! sequence-slot API the engine and the continuous-batching scheduler
+//! drive; see DESIGN.md "KV cache subsystem" for the block/tree diagram,
+//! the sharing rules, and the determinism argument.
+
+mod block;
+mod radix;
+
+pub use block::BlockPool;
+pub use radix::{FullMatch, PartialMatch, RadixTree};

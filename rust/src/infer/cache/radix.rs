@@ -1,0 +1,354 @@
+//! Radix tree over token-id prefixes at **block granularity** — the
+//! index that lets requests sharing a prompt head reuse each other's KV
+//! blocks instead of re-running prefill GEMMs over identical tokens.
+//!
+//! Every node covers exactly one *full* block: `block_size` token ids
+//! (the edge label) plus the block holding those positions' K/V state
+//! for every layer. A path from the root therefore spells out a prompt
+//! prefix in `block_size`-token steps, and the chain of blocks along the
+//! path is immutable, shared state (the tree holds one refcount on each
+//! node's block).
+//!
+//! * [`RadixTree::lookup`] walks a prompt down the tree, returning the
+//!   chain of fully matching blocks plus — when the prompt diverges
+//!   *mid-block* — the deepest partially matching node and how many of
+//!   its tokens match, so the caller can copy-on-write the matching head
+//!   of that block into a private one.
+//! * [`RadixTree::insert`] registers a prefilled prompt's full blocks,
+//!   adding refcounts only for nodes that do not already exist (an
+//!   identical prefix registered twice keeps the first chain).
+//! * [`RadixTree::evict_one`] reclaims the least-recently-used **leaf**
+//!   whose block no live sequence references (pool refcount 1 — the
+//!   tree's own), so eviction frees real memory, never truncates a chain
+//!   a descendant still needs, and never touches data a slot still reads.
+//!
+//! Recency is a monotonic operation counter, not wall-clock time, so
+//! eviction order is a deterministic function of the operation sequence.
+
+use super::block::BlockPool;
+
+const NO_NODE: usize = usize::MAX;
+
+#[derive(Debug)]
+struct Node {
+    /// Edge label: exactly `block_size` token ids.
+    tokens: Vec<i32>,
+    /// The shared KV block holding those positions (tree owns one ref).
+    block: usize,
+    children: Vec<usize>,
+    parent: usize, // NO_NODE for root-level nodes
+    last_use: u64,
+    live: bool,
+}
+
+/// Block-granularity prefix tree with LRU leaf eviction. See the module
+/// docs for the sharing and eviction rules.
+#[derive(Debug)]
+pub struct RadixTree {
+    block_size: usize,
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    /// Children of the (implicit) root.
+    roots: Vec<usize>,
+    tick: u64,
+    /// Total blocks evicted over the tree's lifetime.
+    evicted: u64,
+}
+
+/// One fully matched step of a [`RadixTree::lookup`]: the node's block id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FullMatch {
+    /// Block holding the matched `block_size` tokens.
+    pub block: usize,
+}
+
+/// A mid-block divergence found by [`RadixTree::lookup`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartialMatch {
+    /// Block whose first `matched` token rows agree with the prompt.
+    pub block: usize,
+    /// How many leading tokens of that block match (`1..block_size`).
+    pub matched: usize,
+}
+
+impl RadixTree {
+    /// Empty tree for `block_size`-token blocks.
+    pub fn new(block_size: usize) -> RadixTree {
+        assert!(block_size > 0);
+        RadixTree {
+            block_size,
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            roots: Vec::new(),
+            tick: 0,
+            evicted: 0,
+        }
+    }
+
+    /// Nodes currently in the tree.
+    pub fn len(&self) -> usize {
+        self.nodes.len() - self.free_nodes.len()
+    }
+
+    /// Whether the tree holds no chains.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocks evicted over the tree's lifetime.
+    pub fn evicted_blocks(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Child list of `parent` (`NO_NODE` = the implicit root).
+    fn children_of(&self, parent: usize) -> &[usize] {
+        if parent == NO_NODE {
+            &self.roots
+        } else {
+            &self.nodes[parent].children
+        }
+    }
+
+    /// Among `parent`'s children, the node whose `tokens` equal `want`.
+    fn find_full(&self, parent: usize, want: &[i32]) -> Option<usize> {
+        self.children_of(parent)
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].tokens == want)
+    }
+
+    /// Among `parent`'s children, the node sharing the longest non-empty
+    /// token prefix with `want` (ties keep the earliest-inserted sibling
+    /// — deterministic in the insertion order).
+    fn find_partial(&self, parent: usize, want: &[i32]) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize)> = None;
+        for &c in self.children_of(parent) {
+            let j = self.nodes[c]
+                .tokens
+                .iter()
+                .zip(want)
+                .take_while(|(a, b)| a == b)
+                .count();
+            let better = match best {
+                None => true,
+                Some((_, bj)) => j > bj,
+            };
+            if j > 0 && better {
+                best = Some((c, j));
+            }
+        }
+        best
+    }
+
+    /// Walk `tokens` down the tree. Returns the chain of fully matched
+    /// blocks (in prefix order) and, if the walk ended on a mid-block
+    /// divergence, the partially matching block. Bumps recency along the
+    /// whole matched path.
+    pub fn lookup(&mut self, tokens: &[i32]) -> (Vec<FullMatch>, Option<PartialMatch>) {
+        self.tick += 1;
+        let tick = self.tick;
+        let bs = self.block_size;
+        let mut full = Vec::new();
+        let mut off = 0;
+        let mut parent = NO_NODE;
+        while tokens.len() - off >= bs {
+            match self.find_full(parent, &tokens[off..off + bs]) {
+                Some(c) => {
+                    self.nodes[c].last_use = tick;
+                    full.push(FullMatch {
+                        block: self.nodes[c].block,
+                    });
+                    off += bs;
+                    parent = c;
+                }
+                None => break,
+            }
+        }
+        let partial = self.find_partial(parent, &tokens[off..]).map(|(c, j)| {
+            self.nodes[c].last_use = tick;
+            PartialMatch {
+                block: self.nodes[c].block,
+                matched: j,
+            }
+        });
+        (full, partial)
+    }
+
+    /// Register a prefilled prompt: `tokens` must cover exactly
+    /// `blocks.len() * block_size` positions and `blocks[i]` must hold
+    /// positions `[i*bs, (i+1)*bs)`. Existing nodes along the path are
+    /// kept (their blocks stay authoritative); each newly created node
+    /// retains its sequence block in `pool`.
+    pub fn insert(&mut self, tokens: &[i32], blocks: &[usize], pool: &mut BlockPool) {
+        let bs = self.block_size;
+        assert_eq!(tokens.len(), blocks.len() * bs, "insert covers full blocks only");
+        self.tick += 1;
+        let tick = self.tick;
+        let mut parent = NO_NODE;
+        for (i, &block) in blocks.iter().enumerate() {
+            let want = &tokens[i * bs..(i + 1) * bs];
+            let next = match self.find_full(parent, want) {
+                Some(c) => c,
+                None => {
+                    pool.retain(block);
+                    let id = self.new_node(Node {
+                        tokens: want.to_vec(),
+                        block,
+                        children: Vec::new(),
+                        parent,
+                        last_use: tick,
+                        live: true,
+                    });
+                    if parent == NO_NODE {
+                        self.roots.push(id);
+                    } else {
+                        self.nodes[parent].children.push(id);
+                    }
+                    id
+                }
+            };
+            self.nodes[next].last_use = tick;
+            parent = next;
+        }
+    }
+
+    fn new_node(&mut self, node: Node) -> usize {
+        match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Evict the least-recently-used leaf whose block only the tree
+    /// references (pool refcount 1), releasing the block back to `pool`.
+    /// Returns `false` when no such leaf exists — every remaining chain
+    /// is still pinned by a live sequence. Ties break toward the lowest
+    /// node id, so eviction order is deterministic.
+    pub fn evict_one(&mut self, pool: &mut BlockPool) -> bool {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.live && n.children.is_empty() && pool.refcount(n.block) == 1)
+            .min_by_key(|(id, n)| (n.last_use, *id))
+            .map(|(id, _)| id);
+        let Some(id) = victim else {
+            return false;
+        };
+        let parent = self.nodes[id].parent;
+        if parent == NO_NODE {
+            self.roots.retain(|&c| c != id);
+        } else {
+            self.nodes[parent].children.retain(|&c| c != id);
+        }
+        let freed = pool.release(self.nodes[id].block);
+        debug_assert!(freed, "evicted leaf held the only reference");
+        self.nodes[id].live = false;
+        self.nodes[id].children = Vec::new();
+        self.nodes[id].tokens = Vec::new();
+        self.free_nodes.push(id);
+        self.evicted += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> BlockPool {
+        BlockPool::new(8, 1, 2, 1)
+    }
+
+    /// Alloc a block and stamp its first key element for identification.
+    fn stamped(p: &mut BlockPool, v: f32) -> usize {
+        let b = p.alloc().unwrap();
+        p.write_row(b, 0, 0, &[v], &[v]);
+        b
+    }
+
+    #[test]
+    fn lookup_matches_full_and_partial_blocks() {
+        let mut p = pool();
+        let mut t = RadixTree::new(2);
+        let (b0, b1) = (stamped(&mut p, 0.0), stamped(&mut p, 1.0));
+        t.insert(&[10, 11, 12, 13], &[b0, b1], &mut p);
+        assert_eq!(p.refcount(b0), 2, "tree retains registered blocks");
+        // Full hit on both blocks.
+        let (full, partial) = t.lookup(&[10, 11, 12, 13, 99]);
+        assert_eq!(full, vec![FullMatch { block: b0 }, FullMatch { block: b1 }]);
+        assert_eq!(partial, None);
+        // Mid-block divergence in the second block: one token matches.
+        let (full, partial) = t.lookup(&[10, 11, 12, 99]);
+        assert_eq!(full, vec![FullMatch { block: b0 }]);
+        assert_eq!(partial, Some(PartialMatch { block: b1, matched: 1 }));
+        // Prompt shorter than one block: partial on the first block.
+        let (full, partial) = t.lookup(&[10]);
+        assert!(full.is_empty());
+        assert_eq!(partial, Some(PartialMatch { block: b0, matched: 1 }));
+        // Divergence at the very first token: no match at all.
+        let (full, partial) = t.lookup(&[99, 11]);
+        assert!(full.is_empty());
+        assert_eq!(partial, None);
+    }
+
+    #[test]
+    fn insert_existing_path_adds_no_refs_or_nodes() {
+        let mut p = pool();
+        let mut t = RadixTree::new(2);
+        let (b0, b1) = (stamped(&mut p, 0.0), stamped(&mut p, 1.0));
+        t.insert(&[1, 2, 3, 4], &[b0, b1], &mut p);
+        assert_eq!(t.len(), 2);
+        // Same prefix, different physical blocks (a cold duplicate that
+        // was prefilled privately): the existing chain stays canonical.
+        let (c0, c1) = (stamped(&mut p, 2.0), stamped(&mut p, 3.0));
+        t.insert(&[1, 2, 3, 4], &[c0, c1], &mut p);
+        assert_eq!(t.len(), 2, "no duplicate nodes");
+        assert_eq!(p.refcount(c0), 1, "duplicate blocks not retained");
+        assert_eq!(p.refcount(b0), 2);
+        // Diverging second block forks the tree under the shared head.
+        let d1 = stamped(&mut p, 4.0);
+        t.insert(&[1, 2, 7, 8], &[c0, d1], &mut p);
+        assert_eq!(t.len(), 3, "one new node for the fork");
+        assert_eq!(p.refcount(d1), 2);
+        assert_eq!(p.refcount(c0), 1, "existing head node kept its own block");
+    }
+
+    #[test]
+    fn eviction_is_lru_leaf_only_and_skips_live_blocks() {
+        let mut p = pool();
+        let mut t = RadixTree::new(2);
+        let (b0, b1) = (stamped(&mut p, 0.0), stamped(&mut p, 1.0));
+        let b2 = stamped(&mut p, 2.0);
+        t.insert(&[1, 2, 3, 4], &[b0, b1], &mut p);
+        t.insert(&[1, 2, 5, 6], &[b0, b2], &mut p);
+        // Drop the sequences' own refs: blocks now tree-only.
+        for b in [b0, b1, b2] {
+            p.release(b);
+        }
+        assert_eq!(p.blocks_in_use(), 3);
+        // Touch the [1,2,5,6] chain so [1,2,3,4]'s leaf is the LRU.
+        let _ = t.lookup(&[1, 2, 5, 6]);
+        assert!(t.evict_one(&mut p));
+        assert_eq!(p.refcount(b1), 0, "LRU leaf b1 evicted first");
+        assert_eq!(p.refcount(b0), 1, "interior node survives (has a child)");
+        // Pin b2 as a live sequence would; eviction must skip it and,
+        // with b0 interior, report nothing evictable.
+        p.retain(b2);
+        assert!(!t.evict_one(&mut p), "only leaf is live-referenced");
+        assert_eq!(p.refcount(b2), 2, "live chain untouched");
+        // Unpin: leaf b2 goes, then b0 becomes an evictable leaf.
+        p.release(b2);
+        assert!(t.evict_one(&mut p));
+        assert!(t.evict_one(&mut p));
+        assert!(t.is_empty());
+        assert_eq!(p.blocks_in_use(), 0);
+        assert_eq!(t.evicted_blocks(), 3);
+    }
+}

@@ -23,8 +23,16 @@
 //! alone, in a static batch, or in a continuously mutating batch.
 //! `generate_batch` is itself implemented on the step API, and the server
 //! integration tests assert the equivalence end to end.
+//!
+//! KV state is **paged**: attention walks each sequence's block chain
+//! ([`KvView`](crate::infer::KvView)) instead of one flat buffer, and
+//! with the prefix cache enabled [`Engine::prefill`] skips straight past
+//! the cached head of a prompt — the skipped tokens' prefill GEMMs never
+//! run, only the forward of the remaining tail (and the logit GEMM on the
+//! final chunk). Cache hits replay bitwise-identical K/V rows, so the
+//! token stream never depends on whether a prefix was cached.
 
-use super::kv_cache::{KvCache, KvSlotPool};
+use super::kv_cache::{KvCacheConfig, KvSlotPool};
 use crate::gemm::dense::gemm_f32_pool;
 use crate::gemm::pipeline::PipelineConfig;
 use crate::util::arena::{scratch_undef, Scratch};
@@ -366,8 +374,14 @@ impl Engine {
     }
 
     /// Process `m` token rows at absolute positions `pos[i]`, appending
-    /// K/V to each sequence's caches and returning the hidden states.
-    /// `caches[seq][layer]`.
+    /// K/V to each sequence's block chain (`seq_of_row[i]` is row `i`'s
+    /// KV slot) and returning the hidden states.
+    ///
+    /// Attention walks each sequence's **block table**: scores and the
+    /// weighted value sum iterate the chain block by block, reading each
+    /// block's populated rows as one contiguous slice — cached (shared)
+    /// blocks and privately written ones are indistinguishable here, which
+    /// is the core of the prefix-cache determinism argument.
     ///
     /// Every working buffer — hidden states, per-layer activations, the
     /// attention score row — is borrowed from the calling thread's scratch
@@ -378,7 +392,7 @@ impl Engine {
         &self,
         tokens: &[i32],
         pos: &[usize],
-        caches: &mut [Vec<KvCache>],
+        kv: &mut KvSlotPool,
         seq_of_row: &[usize],
     ) -> Scratch {
         let cfg = &self.weights.cfg;
@@ -421,33 +435,48 @@ impl Engine {
             // per-head slicing used below).
             Self::apply_rope(&mut q, pos, m, heads, hd);
             Self::apply_rope(&mut k, pos, m, heads, hd);
-            // Append K/V to caches, then attend over each row's history.
+            // Append K/V to each row's block chain, then attend over each
+            // row's history.
             for i in 0..m {
-                let c = &mut caches[seq_of_row[i]][li];
-                debug_assert_eq!(c.len, pos[i], "cache length must equal position");
-                c.push(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+                let slot = seq_of_row[i];
+                debug_assert_eq!(
+                    kv.layer_len(slot, li),
+                    pos[i],
+                    "cache length must equal position"
+                );
+                kv.push(slot, li, &k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
             }
             let scale = (hd as f32).powf(-0.5);
             for i in 0..m {
-                let c = &caches[seq_of_row[i]][li];
                 // Causal: row i sees history up to and including its own
                 // position (during prefill the cache already holds the
                 // whole prompt, so clamp — no future leakage).
-                let t_len = (pos[i] + 1).min(c.len);
+                let chain = kv.view(seq_of_row[i], li);
+                let t_len = (pos[i] + 1).min(chain.len());
+                let bs = chain.block_size();
                 let qrow = &q[i * d..(i + 1) * d];
                 let orow = &mut att_out[i * d..(i + 1) * d];
                 orow.fill(0.0);
                 for hix in 0..heads {
                     let qh = &qrow[hix * hd..(hix + 1) * hd];
-                    // Scores over history, in the hoisted arena row.
+                    // Scores over history, in the hoisted arena row —
+                    // walking the chain one block of contiguous rows at a
+                    // time (the final block may be partially filled).
                     let sc = &mut scores[..t_len];
                     let mut maxs = f32::NEG_INFINITY;
-                    for (t, slot) in sc.iter_mut().enumerate() {
-                        let kh = &c.key(t)[hix * hd..(hix + 1) * hd];
-                        let s: f32 =
-                            qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
-                        maxs = maxs.max(s);
-                        *slot = s;
+                    let (mut t, mut blk) = (0, 0);
+                    while t < t_len {
+                        let rows = bs.min(t_len - t);
+                        let kb = chain.key_rows(blk, rows);
+                        for r in 0..rows {
+                            let kh = &kb[r * d + hix * hd..r * d + (hix + 1) * hd];
+                            let s: f32 =
+                                qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+                            maxs = maxs.max(s);
+                            sc[t] = s;
+                            t += 1;
+                        }
+                        blk += 1;
                     }
                     let mut sum = 0.0f32;
                     for s in sc.iter_mut() {
@@ -456,12 +485,19 @@ impl Engine {
                     }
                     let inv = 1.0 / sum;
                     let oh = &mut orow[hix * hd..(hix + 1) * hd];
-                    for (t, &w0) in sc.iter().enumerate() {
-                        let w = w0 * inv;
-                        let vh = &c.value(t)[hix * hd..(hix + 1) * hd];
-                        for j in 0..hd {
-                            oh[j] += w * vh[j];
+                    let (mut t, mut blk) = (0, 0);
+                    while t < t_len {
+                        let rows = bs.min(t_len - t);
+                        let vb = chain.value_rows(blk, rows);
+                        for r in 0..rows {
+                            let w = sc[t] * inv;
+                            let vh = &vb[r * d + hix * hd..r * d + (hix + 1) * hd];
+                            for j in 0..hd {
+                                oh[j] += w * vh[j];
+                            }
+                            t += 1;
                         }
+                        blk += 1;
                     }
                 }
             }
@@ -509,34 +545,41 @@ impl Engine {
         out
     }
 
-    /// Fresh per-layer caches for one sequence.
-    pub fn new_caches(&self) -> Vec<KvCache> {
-        let cfg = &self.weights.cfg;
-        (0..cfg.n_layers)
-            .map(|_| KvCache::new(cfg.max_seq_len, cfg.d_model))
-            .collect()
+    /// A KV slot pool sized for this engine (`slots` concurrent
+    /// sequences, each with full-context block chains for every layer),
+    /// configured by [`KvCacheConfig::env_default`].
+    pub fn new_slot_pool(&self, slots: usize) -> KvSlotPool {
+        self.new_slot_pool_with(slots, KvCacheConfig::env_default())
     }
 
-    /// A KV slot pool sized for this engine (`slots` concurrent
-    /// sequences, each with full-context caches for every layer).
-    pub fn new_slot_pool(&self, slots: usize) -> KvSlotPool {
+    /// A KV slot pool with an explicit cache configuration — the serving
+    /// layer routes its `--kv-block-size` / `--prefix-cache` knobs here.
+    pub fn new_slot_pool_with(&self, slots: usize, cache: KvCacheConfig) -> KvSlotPool {
         let cfg = &self.weights.cfg;
-        KvSlotPool::new(slots, cfg.n_layers, cfg.max_seq_len, cfg.d_model)
+        KvSlotPool::with_config(slots, cfg.n_layers, cfg.max_seq_len, cfg.d_model, cache)
     }
 
     /// Prefill `prompt` into `slot` of `kv` (which must be freshly
     /// allocated, i.e. empty) and greedily sample the sequence's first
-    /// token. Prefill runs the whole prompt as one multi-row forward, so
-    /// large prompts still use the prefill-shaped (pipelined) kernels.
+    /// token. With the prefix cache enabled, the cached head of the
+    /// prompt is attached instead of recomputed (its prefill GEMMs are
+    /// skipped entirely) and the prompt's full blocks are registered for
+    /// later requests; the forward then covers only the uncached tail.
     ///
     /// Implemented as a single [`Engine::prefill_chunk`]; panics if the
     /// prompt does not fit the slot — use `prefill_chunk` directly for the
-    /// error-returning form.
+    /// error-returning form (and [`KvSlotPool::attach_prefix`] /
+    /// [`KvSlotPool::register_prefix`] for the cache hooks the batcher
+    /// calls around its chunk loop).
     pub fn prefill(&self, prompt: &[i32], slot: usize, kv: &mut KvSlotPool) -> i32 {
         assert_eq!(kv.seq_len(slot), 0, "prefill into a non-empty slot");
-        self.prefill_chunk(prompt, slot, kv, true)
+        let hit = kv.attach_prefix(slot, prompt);
+        let tok = self
+            .prefill_chunk(&prompt[hit..], slot, kv, true)
             .expect("prompt fits the KV slot")
-            .expect("final chunk yields a token")
+            .expect("final chunk yields a token");
+        kv.register_prefix(slot, prompt);
+        tok
     }
 
     /// Resumable prefill: append `chunk` prompt tokens to `slot`'s caches,
@@ -579,7 +622,7 @@ impl Engine {
         );
         let pos: Vec<usize> = (start..start + chunk.len()).collect();
         let rows = vec![slot; chunk.len()];
-        let hidden = self.forward_rows(chunk, &pos, kv.slots_mut(), &rows);
+        let hidden = self.forward_rows(chunk, &pos, kv, &rows);
         if !last {
             return Ok(None);
         }
@@ -612,7 +655,7 @@ impl Engine {
             return Vec::new();
         }
         let pos: Vec<usize> = slots.iter().map(|&s| kv.seq_len(s)).collect();
-        let hidden = self.forward_rows(current, &pos, kv.slots_mut(), slots);
+        let hidden = self.forward_rows(current, &pos, kv, slots);
         let mut lg = scratch_undef(m * cfg.vocab_size);
         self.logits_into(&hidden, m, &mut lg);
         (0..m)
@@ -658,12 +701,26 @@ impl Engine {
     }
 
     /// Full-sequence logits (no cache reuse) — the reference used by tests
-    /// to compare against the HLO eval artifacts.
+    /// to compare against the HLO eval artifacts. Runs over a throwaway
+    /// single-slot, single-block, prefix-cache-off pool, so its numbers
+    /// are independent of any serving-cache configuration.
     pub fn full_logits(&self, tokens: &[i32]) -> Tensor {
-        let mut caches = vec![self.new_caches()];
+        let cfg = &self.weights.cfg;
+        let mut kv = KvSlotPool::with_config(
+            1,
+            cfg.n_layers,
+            tokens.len().max(1),
+            cfg.d_model,
+            KvCacheConfig {
+                block_size: tokens.len().max(1),
+                prefix_cache: false,
+                extra_blocks: 0,
+            },
+        );
+        let slot = kv.alloc().expect("fresh pool has a slot");
         let pos: Vec<usize> = (0..tokens.len()).collect();
-        let rows = vec![0usize; tokens.len()];
-        let hidden = self.forward_rows(tokens, &pos, &mut caches, &rows);
+        let rows = vec![slot; tokens.len()];
+        let hidden = self.forward_rows(tokens, &pos, &mut kv, &rows);
         let lg = self.logits(&hidden, tokens.len());
         Tensor::from_vec(&[tokens.len(), self.weights.cfg.vocab_size], lg)
     }
@@ -993,6 +1050,83 @@ mod tests {
             before,
             "wide-pool decode allocated caller-side arena slabs"
         );
+    }
+
+    #[test]
+    fn prefix_cache_skips_prefill_without_changing_tokens() {
+        // Requests sharing a prompt head must produce byte-identical
+        // token streams with the prefix cache on and off — at several
+        // block sizes, sequentially (retire-then-reuse) and with both
+        // sequences live at once (shared immutable blocks + private
+        // tails) — while the hit counter proves prefill work was skipped.
+        let cfg = test_cfg();
+        let mut rng = Rng::new(412);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let engine = Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense);
+        // 16-token shared head (≥ one block at every size below) + 2-token
+        // tails; 18 prompt + 4 generated tokens fit max_seq_len = 24.
+        let head: Vec<i32> = vec![7, 3, 9, 1, 4, 4, 2, 8, 6, 1, 9, 2, 5, 5, 3, 7];
+        let mut p1 = head.clone();
+        p1.extend([5, 6]);
+        let mut p2 = head.clone();
+        p2.extend([11, 12]);
+        let prompts = [p1.clone(), p2.clone(), p1.clone()];
+
+        let run = |block_size: usize, prefix_cache: bool| {
+            let cache = KvCacheConfig {
+                block_size,
+                prefix_cache,
+                extra_blocks: 0,
+            };
+            let mut kv = engine.new_slot_pool_with(prompts.len(), cache);
+            let mut outs = Vec::new();
+            for p in &prompts {
+                let slot = kv.alloc().unwrap();
+                let mut toks = vec![engine.prefill(p, slot, &mut kv)];
+                for _ in 1..4 {
+                    let next = engine.decode_step(&[*toks.last().unwrap()], &[slot], &mut kv);
+                    toks.push(next[0]);
+                }
+                outs.push(toks);
+                kv.free(slot);
+            }
+            (outs, kv.prefix_hit_tokens())
+        };
+
+        let (reference, cold_hits) = run(4, false);
+        assert_eq!(cold_hits, 0, "cache off must never hit");
+        for &bs in &[3usize, 4, 16] {
+            let (outs, hits) = run(bs, true);
+            assert_eq!(outs, reference, "block_size={bs} changed the tokens");
+            assert!(
+                hits > 0,
+                "block_size={bs}: shared heads must be served from cache"
+            );
+        }
+        // Both sequences live at once: the second attaches the first's
+        // registered head while the first keeps decoding into its private
+        // tail. Joint decode must match the sequential reference.
+        let cache = KvCacheConfig {
+            block_size: 4,
+            prefix_cache: true,
+            extra_blocks: 0,
+        };
+        let mut kv = engine.new_slot_pool_with(2, cache);
+        let s1 = kv.alloc().unwrap();
+        let s2 = kv.alloc().unwrap();
+        let mut o1 = vec![engine.prefill(&p1, s1, &mut kv)];
+        let mut o2 = vec![engine.prefill(&p2, s2, &mut kv)];
+        assert!(kv.prefix_hit_tokens() >= 8, "p2 must attach p1's head");
+        for _ in 1..4 {
+            let next = engine.decode_step(
+                &[*o1.last().unwrap(), *o2.last().unwrap()],
+                &[s1, s2],
+                &mut kv,
+            );
+            o1.push(next[0]);
+            o2.push(next[1]);
+        }
+        assert_eq!(vec![o1, o2], reference[..2].to_vec());
     }
 
     #[test]

@@ -1,110 +1,195 @@
-//! Per-sequence key/value caches for autoregressive decode, plus the
-//! fixed-capacity slot pool the continuous-batching scheduler allocates
-//! sequences from.
+//! Sequence-slot KV caches as **views over paged block chains**, plus
+//! the radix-tree prefix cache that shares prompt-head blocks across
+//! requests.
+//!
+//! Storage lives in a refcounted [`BlockPool`](crate::infer::cache::BlockPool)
+//! of fixed-size token blocks; each slot holds a *block table* (the chain
+//! of block ids covering its cached positions) and per-layer lengths.
+//! With the prefix cache enabled, a freshly allocated slot can
+//! [`attach`](KvSlotPool::attach_prefix) the longest cached prefix of its
+//! prompt — full blocks are shared by reference (refcount bump, zero
+//! copy), a mid-block divergence is copy-on-write — and a finished
+//! prefill [`registers`](KvSlotPool::register_prefix) its full prompt
+//! blocks so later requests hit them. Chains no live slot references are
+//! reclaimed lazily, LRU-first, when the pool runs out of free blocks.
+//!
+//! Determinism: a cache hit replays K/V rows that a cold prefill of the
+//! same prefix would have produced **bitwise** (same kernels, same
+//! k-accumulation order, positions identical), and shared blocks are
+//! immutable, so attaching a prefix changes which GEMMs run but never a
+//! single output byte. The off path (`prefix_cache: false`) differs from
+//! the pre-paging flat layout only in where rows live, not in any value
+//! read or written.
 
-/// KV cache for one transformer layer and one sequence: rows are time
-/// steps, `d_model` columns split across heads by the engine.
-#[derive(Clone, Debug)]
-pub struct KvCache {
-    /// Cached keys, row-major `[len, d_model]` (rows beyond `len` are free).
-    pub keys: Vec<f32>,
-    /// Cached values, same layout as `keys`.
-    pub values: Vec<f32>,
-    /// Number of time steps currently cached.
-    pub len: usize,
-    d_model: usize,
-    capacity: usize,
+use super::cache::{BlockPool, RadixTree};
+
+/// Construction knobs for [`KvSlotPool`] (the `--kv-block-size` /
+/// `--prefix-cache` serve flags land here).
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Token positions per KV block (the paging granularity; also the
+    /// prefix-sharing granularity — only whole blocks are shared without
+    /// copying).
+    pub block_size: usize,
+    /// Enable the radix-tree prefix cache. Off keeps allocation paged but
+    /// never shares or retains blocks across sequences — bitwise
+    /// identical serving behavior to the pre-cache engine.
+    pub prefix_cache: bool,
+    /// Extra blocks beyond the `slots × blocks-per-sequence` floor, as
+    /// headroom for retaining cached chains while every slot is busy
+    /// (env `SALR_KV_EXTRA`; default 0). The floor alone already
+    /// guarantees live sequences can always allocate (cached chains are
+    /// evicted on demand).
+    pub extra_blocks: usize,
 }
 
-impl KvCache {
-    /// Cache with room for `capacity` time steps of width `d_model`.
-    pub fn new(capacity: usize, d_model: usize) -> KvCache {
-        KvCache {
-            keys: vec![0.0; capacity * d_model],
-            values: vec![0.0; capacity * d_model],
-            len: 0,
-            d_model,
-            capacity,
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig {
+            block_size: 16,
+            prefix_cache: false,
+            extra_blocks: 0,
         }
     }
+}
 
-    /// Append one time step.
-    pub fn push(&mut self, k: &[f32], v: &[f32]) {
-        assert!(self.len < self.capacity, "kv cache overflow");
-        assert_eq!(k.len(), self.d_model);
-        assert_eq!(v.len(), self.d_model);
-        let off = self.len * self.d_model;
-        self.keys[off..off + self.d_model].copy_from_slice(k);
-        self.values[off..off + self.d_model].copy_from_slice(v);
-        self.len += 1;
-    }
-
-    /// Key row at time `t`.
-    #[inline]
-    pub fn key(&self, t: usize) -> &[f32] {
-        &self.keys[t * self.d_model..(t + 1) * self.d_model]
-    }
-
-    /// Value row at time `t`.
-    #[inline]
-    pub fn value(&self, t: usize) -> &[f32] {
-        &self.values[t * self.d_model..(t + 1) * self.d_model]
-    }
-
-    /// Forget all cached steps (the backing storage is reused, not freed).
-    pub fn reset(&mut self) {
-        self.len = 0;
-    }
-
-    /// Maximum number of time steps this cache can hold.
-    pub fn capacity(&self) -> usize {
-        self.capacity
+impl KvCacheConfig {
+    /// The default configuration with environment overrides applied:
+    /// `SALR_PREFIX_CACHE=1|0` forces the prefix cache on/off (the CI
+    /// matrix legs), `SALR_KV_BLOCK=N` overrides the block size and
+    /// `SALR_KV_EXTRA=N` adds cache-retention headroom blocks. Callers
+    /// that pin an explicit config are unaffected.
+    pub fn env_default() -> KvCacheConfig {
+        let base = KvCacheConfig::default();
+        let prefix_cache = match std::env::var("SALR_PREFIX_CACHE") {
+            Ok(v) => crate::util::truthy(&v),
+            Err(_) => base.prefix_cache,
+        };
+        let block_size = std::env::var("SALR_KV_BLOCK")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(base.block_size);
+        let extra_blocks = std::env::var("SALR_KV_EXTRA")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(base.extra_blocks);
+        KvCacheConfig {
+            block_size,
+            prefix_cache,
+            extra_blocks,
+        }
     }
 }
 
-/// A fixed pool of KV-cache *slots* for continuous batching.
+/// One sequence slot: a chain of block ids plus per-layer lengths.
+#[derive(Debug)]
+struct SeqKv {
+    /// Block ids covering positions `[0, max(len))`, in order. Allocated
+    /// with full capacity up front so pushes never reallocate mid-decode.
+    table: Vec<usize>,
+    /// Cached positions per layer (layers fill in order within one
+    /// forward, so `len[0] >= len[l]` for all `l` mid-forward and all
+    /// entries agree between forwards).
+    len: Vec<usize>,
+    /// Leading blocks that are shared with the radix tree or another
+    /// sequence — immutable; writes may only land at indices `>= shared`
+    /// (a mid-block COW tail is private and sits exactly at `shared`).
+    shared: usize,
+}
+
+/// A fixed pool of KV-cache *slots* for continuous batching, backed by a
+/// paged [`BlockPool`] and (optionally) a [`RadixTree`] prefix cache.
 ///
-/// Each slot holds one sequence's per-layer caches (`[n_layers]` of
-/// [`KvCache`]), all allocated up front. The scheduler admits a request by
-/// [`alloc`](KvSlotPool::alloc)-ing a slot, decodes it for as many steps
-/// as it needs, and [`free`](KvSlotPool::free)-s the slot when the
-/// sequence retires — the freed cache rows are reused by the next
-/// admission without touching the allocator, so batch membership can
-/// change between decode steps at zero allocation cost.
+/// The scheduler admits a request by [`alloc`](KvSlotPool::alloc)-ing a
+/// slot, optionally [`attach_prefix`](KvSlotPool::attach_prefix)-ing the
+/// cached head of its prompt, decodes it for as many steps as it needs,
+/// [`register_prefix`](KvSlotPool::register_prefix)-es the prompt once
+/// prefilled, and [`free`](KvSlotPool::free)-s the slot when the sequence
+/// retires. The pool is sized so a live sequence can always get a block:
+/// `slots × ⌈capacity/block_size⌉` plus configured headroom, with cached
+/// chains evicted LRU-first under pressure.
 #[derive(Debug)]
 pub struct KvSlotPool {
-    slots: Vec<Vec<KvCache>>,
+    pool: BlockPool,
+    tree: Option<RadixTree>,
+    slots: Vec<SeqKv>,
     free: Vec<usize>,
+    /// Max token positions per sequence.
+    seq_capacity: usize,
+    /// Prompt tokens served from the prefix cache instead of prefill
+    /// forwards, over the pool's lifetime.
+    prefix_hit_tokens: u64,
+    /// Prefix lookups that matched at least one token.
+    prefix_hits: u64,
+    /// Prefix lookups attempted.
+    prefix_lookups: u64,
 }
 
 impl KvSlotPool {
     /// Pool of `slots` sequences × `n_layers` caches, each with room for
-    /// `capacity` steps of width `d_model`.
+    /// `capacity` steps of width `d_model`, using
+    /// [`KvCacheConfig::env_default`].
     pub fn new(slots: usize, n_layers: usize, capacity: usize, d_model: usize) -> KvSlotPool {
+        Self::with_config(slots, n_layers, capacity, d_model, KvCacheConfig::env_default())
+    }
+
+    /// Pool with an explicit [`KvCacheConfig`].
+    pub fn with_config(
+        slots: usize,
+        n_layers: usize,
+        capacity: usize,
+        d_model: usize,
+        cfg: KvCacheConfig,
+    ) -> KvSlotPool {
+        let bs = cfg.block_size.max(1).min(capacity.max(1));
+        let blocks_per_seq = capacity.div_ceil(bs).max(1);
+        let num_blocks = slots * blocks_per_seq + cfg.extra_blocks;
         KvSlotPool {
+            pool: BlockPool::new(num_blocks, n_layers, bs, d_model),
+            tree: cfg.prefix_cache.then(|| RadixTree::new(bs)),
             slots: (0..slots)
-                .map(|_| (0..n_layers).map(|_| KvCache::new(capacity, d_model)).collect())
+                .map(|_| SeqKv {
+                    table: Vec::with_capacity(blocks_per_seq),
+                    len: vec![0; n_layers],
+                    shared: 0,
+                })
                 .collect(),
             // Pop from the back; keep ascending order so slot 0 is handed
             // out first (stable, deterministic slot assignment).
             free: (0..slots).rev().collect(),
+            seq_capacity: capacity,
+            prefix_hit_tokens: 0,
+            prefix_hits: 0,
+            prefix_lookups: 0,
         }
     }
 
-    /// Claim a free slot (its caches reset to length 0), or `None` when
+    /// Claim a free slot (empty block table, lengths 0), or `None` when
     /// every slot is occupied.
     pub fn alloc(&mut self) -> Option<usize> {
         let slot = self.free.pop()?;
-        for c in &mut self.slots[slot] {
-            c.reset();
+        debug_assert!(self.slots[slot].table.is_empty(), "freed slot kept blocks");
+        for l in self.slots[slot].len.iter_mut() {
+            *l = 0;
         }
+        self.slots[slot].shared = 0;
         Some(slot)
     }
 
-    /// Return `slot` to the free list. The cache rows are reused as-is by
-    /// the next [`alloc`](KvSlotPool::alloc) (which resets the lengths).
+    /// Return `slot` to the free list, releasing every block in its
+    /// chain. Blocks the radix tree (or another sequence) still
+    /// references survive with their refcounts decremented; the rest go
+    /// back on the block free list.
     pub fn free(&mut self, slot: usize) {
         debug_assert!(!self.free.contains(&slot), "double free of kv slot {slot}");
+        while let Some(b) = self.slots[slot].table.pop() {
+            self.pool.release(b);
+        }
+        for l in self.slots[slot].len.iter_mut() {
+            *l = 0;
+        }
+        self.slots[slot].shared = 0;
         self.free.push(slot);
         // Keep descending so pops hand out the lowest free slot first.
         self.free.sort_unstable_by(|a, b| b.cmp(a));
@@ -120,15 +205,31 @@ impl KvSlotPool {
         self.slots.len()
     }
 
-    /// All slots' per-layer caches, indexed `[slot][layer]` — the shape
-    /// [`Engine::decode_step`](crate::infer::Engine::decode_step) expects.
-    pub fn slots_mut(&mut self) -> &mut [Vec<KvCache>] {
-        &mut self.slots
+    /// Maximum token positions one sequence can cache.
+    pub fn seq_capacity(&self) -> usize {
+        self.seq_capacity
+    }
+
+    /// Tokens per KV block.
+    pub fn block_size(&self) -> usize {
+        self.pool.block_size()
+    }
+
+    /// Whether the radix-tree prefix cache is enabled.
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.tree.is_some()
     }
 
     /// Cached sequence length of `slot` (its next decode position).
     pub fn seq_len(&self, slot: usize) -> usize {
-        self.slots[slot].first().map(|c| c.len).unwrap_or(0)
+        self.slots[slot].len.first().copied().unwrap_or(0)
+    }
+
+    /// Cached length of one `(slot, layer)` — equals
+    /// [`seq_len`](KvSlotPool::seq_len) between forwards, lags behind it
+    /// for deeper layers mid-forward.
+    pub fn layer_len(&self, slot: usize, layer: usize) -> usize {
+        self.slots[slot].len[layer]
     }
 
     /// Remaining time-step capacity of `slot` — how many more tokens can
@@ -136,10 +237,206 @@ impl KvSlotPool {
     /// prefill checks this before every chunk so an over-long prompt is
     /// rejected with an error instead of panicking mid-forward.
     pub fn remaining(&self, slot: usize) -> usize {
-        self.slots[slot]
-            .first()
-            .map(|c| c.capacity() - c.len)
-            .unwrap_or(0)
+        self.seq_capacity - self.seq_len(slot)
+    }
+
+    /// Blocks currently referenced by live chains or the prefix cache.
+    pub fn blocks_in_use(&self) -> usize {
+        self.pool.blocks_in_use()
+    }
+
+    /// Blocks the prefix cache has evicted under pool pressure.
+    pub fn evicted_blocks(&self) -> u64 {
+        self.tree.as_ref().map_or(0, RadixTree::evicted_blocks)
+    }
+
+    /// Prompt tokens served straight from the prefix cache (their prefill
+    /// GEMMs were skipped) over the pool's lifetime.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix_hit_tokens
+    }
+
+    /// `(lookups, hits)`: prefix-cache probes attempted and probes that
+    /// matched at least one token.
+    pub fn prefix_stats(&self) -> (u64, u64) {
+        (self.prefix_lookups, self.prefix_hits)
+    }
+
+    /// A free block, evicting LRU cached chains if the free list is dry.
+    /// Panics only if every block is pinned by a live chain — impossible
+    /// for in-capacity sequences given the pool's sizing floor.
+    fn grab_block(&mut self) -> usize {
+        loop {
+            if let Some(b) = self.pool.alloc() {
+                return b;
+            }
+            let evicted = match self.tree.as_mut() {
+                Some(t) => t.evict_one(&mut self.pool),
+                None => false,
+            };
+            assert!(evicted, "kv block pool exhausted by live sequences");
+        }
+    }
+
+    /// Append one K/V row for `(slot, layer)` at its current length,
+    /// allocating the next block of the chain on a block boundary.
+    pub fn push(&mut self, slot: usize, layer: usize, k: &[f32], v: &[f32]) {
+        let t = self.slots[slot].len[layer];
+        assert!(t < self.seq_capacity, "kv cache overflow");
+        let bs = self.pool.block_size();
+        let bi = t / bs;
+        if bi == self.slots[slot].table.len() {
+            let b = self.grab_block();
+            self.slots[slot].table.push(b);
+        }
+        let s = &self.slots[slot];
+        debug_assert!(bi >= s.shared, "write into a shared (immutable) block");
+        self.pool.write_row(s.table[bi], layer, t % bs, k, v);
+        self.slots[slot].len[layer] = t + 1;
+    }
+
+    /// Read-only view of one `(slot, layer)` chain — what the attention
+    /// kernel walks block by block.
+    pub fn view(&self, slot: usize, layer: usize) -> KvView<'_> {
+        let s = &self.slots[slot];
+        KvView {
+            pool: &self.pool,
+            table: &s.table,
+            layer,
+            len: s.len[layer],
+        }
+    }
+
+    /// Attach the longest cached prefix of `tokens` to freshly allocated
+    /// `slot`: full blocks are shared by reference, a mid-block
+    /// divergence copies the matching head of the shared block into a
+    /// private block (COW). Returns the number of prompt positions now
+    /// cached — the caller prefills only `tokens[hit..]`. Always leaves
+    /// at least one token to forward (the final hidden state is what
+    /// produces the first sampled token), and returns 0 when the prefix
+    /// cache is disabled.
+    pub fn attach_prefix(&mut self, slot: usize, tokens: &[i32]) -> usize {
+        if self.tree.is_none() {
+            return 0;
+        }
+        assert_eq!(self.seq_len(slot), 0, "attach_prefix into a non-empty slot");
+        if tokens.len() <= 1 {
+            return 0;
+        }
+        self.prefix_lookups += 1;
+        let want = &tokens[..tokens.len() - 1];
+        let (full, partial) = self.tree.as_mut().expect("checked above").lookup(want);
+        let bs = self.pool.block_size();
+        let mut hit = 0;
+        for m in &full {
+            self.pool.retain(m.block);
+            self.slots[slot].table.push(m.block);
+            hit += bs;
+        }
+        self.slots[slot].shared = full.len();
+        if let Some(p) = partial {
+            // Grabbing a block may evict LRU leaves. The lookup above
+            // bumped the source's recency, so the eviction loop reclaims
+            // every *other* unreferenced chain first; under total pool
+            // pressure the source itself goes last, and its freed storage
+            // is handed straight back as the destination — where the rows
+            // already sit, so the copy is skipped. (Pinning the source
+            // instead would deadlock eviction when it is the only
+            // reclaimable block.) Nothing can write between the eviction
+            // and the copy: this is one `&mut self` call.
+            let dst = self.grab_block();
+            if dst != p.block {
+                self.pool.copy_rows(p.block, dst, p.matched);
+            }
+            self.slots[slot].table.push(dst);
+            hit += p.matched;
+        }
+        for l in self.slots[slot].len.iter_mut() {
+            *l = hit;
+        }
+        self.prefix_hit_tokens += hit as u64;
+        if hit > 0 {
+            self.prefix_hits += 1;
+        }
+        hit
+    }
+
+    /// Register the full blocks covering `tokens` (a completely prefilled
+    /// prompt) in the radix tree, so later requests sharing this head
+    /// attach them instead of re-running prefill. Blocks already in the
+    /// tree are kept; newly registered ones gain a tree reference and
+    /// become immutable-shared. No-op with the prefix cache disabled.
+    pub fn register_prefix(&mut self, slot: usize, tokens: &[i32]) {
+        let bs = self.pool.block_size();
+        let n = tokens.len().min(self.seq_len(slot));
+        let nb = n / bs;
+        if nb == 0 {
+            return;
+        }
+        let KvSlotPool {
+            tree, pool, slots, ..
+        } = self;
+        let Some(tree) = tree.as_mut() else {
+            return;
+        };
+        tree.insert(&tokens[..nb * bs], &slots[slot].table[..nb], pool);
+        slots[slot].shared = slots[slot].shared.max(nb);
+    }
+}
+
+/// Read-only view over one `(slot, layer)` block chain. The attention
+/// kernel iterates chains block by block:
+/// [`key_rows`](KvView::key_rows)/[`value_rows`](KvView::value_rows)
+/// return each block's populated rows as one contiguous slice.
+#[derive(Clone, Copy)]
+pub struct KvView<'a> {
+    pool: &'a BlockPool,
+    table: &'a [usize],
+    layer: usize,
+    len: usize,
+}
+
+impl KvView<'_> {
+    /// Cached positions in this chain.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether nothing is cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Tokens per block.
+    pub fn block_size(&self) -> usize {
+        self.pool.block_size()
+    }
+
+    /// The first `rows` contiguous key rows of chain block `blk`.
+    #[inline]
+    pub fn key_rows(&self, blk: usize, rows: usize) -> &[f32] {
+        self.pool.key_rows(self.table[blk], self.layer, rows)
+    }
+
+    /// The first `rows` contiguous value rows of chain block `blk`.
+    #[inline]
+    pub fn value_rows(&self, blk: usize, rows: usize) -> &[f32] {
+        self.pool.value_rows(self.table[blk], self.layer, rows)
+    }
+
+    /// Key row at absolute position `t` (convenience; the hot path walks
+    /// whole blocks instead).
+    #[inline]
+    pub fn key(&self, t: usize) -> &[f32] {
+        let bs = self.pool.block_size();
+        self.pool.key_row(self.table[t / bs], self.layer, t % bs)
+    }
+
+    /// Value row at absolute position `t`.
+    #[inline]
+    pub fn value(&self, t: usize) -> &[f32] {
+        let bs = self.pool.block_size();
+        self.pool.value_row(self.table[t / bs], self.layer, t % bs)
     }
 }
 
@@ -147,38 +444,69 @@ impl KvSlotPool {
 mod tests {
     use super::*;
 
+    fn cfg(block_size: usize, prefix: bool) -> KvCacheConfig {
+        KvCacheConfig {
+            block_size,
+            prefix_cache: prefix,
+            extra_blocks: 0,
+        }
+    }
+
+    /// Distinct, position-tagged rows so sharing bugs show up as wrong
+    /// values, not just wrong lengths.
+    fn row(slot: usize, t: usize) -> (Vec<f32>, Vec<f32>) {
+        let base = (slot * 1000 + t) as f32;
+        (vec![base, base + 0.5], vec![-base, -base - 0.5])
+    }
+
     #[test]
-    fn push_and_read() {
-        let mut c = KvCache::new(4, 3);
-        c.push(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
-        c.push(&[7.0, 8.0, 9.0], &[1.5, 2.5, 3.5]);
-        assert_eq!(c.len, 2);
-        assert_eq!(c.key(0), &[1.0, 2.0, 3.0]);
-        assert_eq!(c.value(1), &[1.5, 2.5, 3.5]);
-        c.reset();
-        assert_eq!(c.len, 0);
+    fn push_and_read_across_block_boundaries() {
+        let mut pool = KvSlotPool::with_config(1, 2, 7, 2, cfg(3, false));
+        let s = pool.alloc().unwrap();
+        for t in 0..7 {
+            for layer in 0..2 {
+                let (k, v) = row(layer, t);
+                pool.push(s, layer, &k, &v);
+            }
+        }
+        assert_eq!(pool.seq_len(s), 7);
+        assert_eq!(pool.remaining(s), 0);
+        for layer in 0..2 {
+            let view = pool.view(s, layer);
+            assert_eq!(view.len(), 7);
+            for t in 0..7 {
+                let (k, v) = row(layer, t);
+                assert_eq!(view.key(t), &k[..], "layer {layer} t {t}");
+                assert_eq!(view.value(t), &v[..]);
+            }
+            // Block-walk form agrees with per-row reads (last block ragged).
+            assert_eq!(&view.key_rows(2, 1)[..2], view.key(6));
+        }
     }
 
     #[test]
     #[should_panic(expected = "overflow")]
     fn overflow_panics() {
-        let mut c = KvCache::new(1, 2);
-        c.push(&[0.0, 0.0], &[0.0, 0.0]);
-        c.push(&[0.0, 0.0], &[0.0, 0.0]);
+        let mut pool = KvSlotPool::with_config(1, 1, 2, 2, cfg(2, false));
+        let s = pool.alloc().unwrap();
+        for _ in 0..3 {
+            pool.push(s, 0, &[0.0, 0.0], &[0.0, 0.0]);
+        }
     }
 
     #[test]
     fn slot_pool_alloc_free_reuses_lowest_first() {
-        let mut pool = KvSlotPool::new(3, 2, 4, 2);
+        let mut pool = KvSlotPool::with_config(3, 2, 4, 2, cfg(2, false));
         assert_eq!(pool.capacity(), 3);
         assert_eq!(pool.available(), 3);
         let a = pool.alloc().unwrap();
         let b = pool.alloc().unwrap();
         assert_eq!((a, b), (0, 1));
-        // Write into slot 0, free it, re-alloc: caches come back reset.
-        pool.slots_mut()[a][0].push(&[1.0, 2.0], &[3.0, 4.0]);
+        pool.push(a, 0, &[1.0, 2.0], &[3.0, 4.0]);
         assert_eq!(pool.seq_len(a), 1);
+        assert_eq!(pool.blocks_in_use(), 1);
         pool.free(a);
+        assert_eq!(pool.blocks_in_use(), 0, "freed slot returns its blocks");
         let c = pool.alloc().unwrap();
         assert_eq!(c, 0, "lowest free slot is handed out first");
         assert_eq!(pool.seq_len(c), 0, "realloc must reset lengths");
@@ -192,16 +520,204 @@ mod tests {
 
     #[test]
     fn remaining_tracks_pushes_and_realloc() {
-        let mut pool = KvSlotPool::new(2, 1, 4, 2);
+        let mut pool = KvSlotPool::with_config(2, 1, 4, 2, cfg(4, false));
         let s = pool.alloc().unwrap();
         assert_eq!(pool.remaining(s), 4);
-        pool.slots_mut()[s][0].push(&[1.0, 2.0], &[3.0, 4.0]);
-        pool.slots_mut()[s][0].push(&[5.0, 6.0], &[7.0, 8.0]);
+        pool.push(s, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        pool.push(s, 0, &[5.0, 6.0], &[7.0, 8.0]);
         assert_eq!(pool.remaining(s), 2);
-        // Freeing and re-allocating restores full capacity (lengths reset).
         pool.free(s);
         let s2 = pool.alloc().unwrap();
         assert_eq!(s2, s);
         assert_eq!(pool.remaining(s2), 4);
+    }
+
+    /// Fill `slot` with `n` prompt positions of slot-tagged rows across
+    /// every layer (stand-in for a prefill forward).
+    fn fill(pool: &mut KvSlotPool, slot: usize, tag: usize, n: usize, layers: usize) {
+        for t in pool.seq_len(slot)..n {
+            for layer in 0..layers {
+                let (k, v) = row(tag, t);
+                pool.push(slot, layer, &k, &v);
+            }
+        }
+    }
+
+    #[test]
+    fn attach_shares_full_blocks_and_cow_splits_mid_block() {
+        let mut pool = KvSlotPool::with_config(3, 2, 16, 2, cfg(4, true));
+        let prompt: Vec<i32> = (100..110).collect(); // 10 tokens
+        let a = pool.alloc().unwrap();
+        fill(&mut pool, a, 7, 10, 2);
+        pool.register_prefix(a, &prompt);
+        assert_eq!(pool.blocks_in_use(), 3, "a's chain: 2 full + 1 partial block");
+
+        // Identical prompt: both full blocks shared by reference (the
+        // partial third block is not in the tree — only full blocks are).
+        let b = pool.alloc().unwrap();
+        let hit = pool.attach_prefix(b, &prompt);
+        assert_eq!(hit, 8, "two full blocks hit");
+        assert_eq!(pool.seq_len(b), 8);
+        assert_eq!(pool.blocks_in_use(), 3, "full hit adds no blocks");
+        for layer in 0..2 {
+            let (va, vb) = (pool.view(a, layer), pool.view(b, layer));
+            for t in 0..8 {
+                assert_eq!(va.key(t), vb.key(t), "shared rows must alias");
+            }
+        }
+
+        // Prompt diverging at token 6 (mid second block): first block
+        // shared, second copy-on-written up to the divergence.
+        let mut fork = prompt.clone();
+        fork[6] = 999;
+        let c = pool.alloc().unwrap();
+        let hit = pool.attach_prefix(c, &fork);
+        assert_eq!(hit, 6, "4 shared + 2 copied rows");
+        assert_eq!(pool.blocks_in_use(), 4, "COW allocated one private block");
+        // Appending c's divergent rows must not corrupt a's chain.
+        fill(&mut pool, c, 9, 10, 2);
+        for layer in 0..2 {
+            let (va, vc) = (pool.view(a, layer), pool.view(c, layer));
+            for t in 0..6 {
+                assert_eq!(va.key(t), vc.key(t), "copied head must match");
+            }
+            let (k7, _) = row(7, 6);
+            assert_eq!(va.key(6), &k7[..], "a's block untouched by c's writes");
+            let (k9, _) = row(9, 6);
+            assert_eq!(vc.key(6), &k9[..], "c wrote its own divergent row");
+        }
+        let (lookups, hits) = pool.prefix_stats();
+        assert_eq!((lookups, hits), (2, 2));
+        assert_eq!(pool.prefix_hit_tokens(), 14);
+    }
+
+    #[test]
+    fn free_then_reuse_keeps_refcounts_exact() {
+        let mut pool = KvSlotPool::with_config(2, 1, 8, 2, cfg(4, true));
+        let prompt: Vec<i32> = (0..8).collect();
+        let a = pool.alloc().unwrap();
+        fill(&mut pool, a, 1, 8, 1);
+        pool.register_prefix(a, &prompt);
+        let b = pool.alloc().unwrap();
+        assert_eq!(pool.attach_prefix(b, &prompt), 7, "full block + 3-row COW");
+        assert_eq!(pool.blocks_in_use(), 3, "2 of a's + b's COW tail");
+        // Free b: its COW block frees, the shared block survives (a +
+        // tree still hold it).
+        pool.free(b);
+        assert_eq!(pool.blocks_in_use(), 2);
+        // Free a: blocks stay pinned by the tree alone.
+        pool.free(a);
+        assert_eq!(pool.blocks_in_use(), 2, "tree retains the registered chain");
+        // Re-admit the same prompt: full reuse, no new blocks, and the
+        // reused slot is the lowest-numbered free one.
+        let c = pool.alloc().unwrap();
+        assert_eq!(c, 0);
+        assert_eq!(pool.attach_prefix(c, &prompt), 7);
+        assert_eq!(pool.blocks_in_use(), 3, "one fresh COW block only");
+    }
+
+    #[test]
+    fn eviction_reclaims_retired_chains_under_pressure() {
+        // 2 slots × 8/4 = 4 blocks, no headroom. A registered 2-block
+        // chain must be evicted once two fresh sequences need all blocks.
+        let mut pool = KvSlotPool::with_config(2, 1, 8, 2, cfg(4, true));
+        let a = pool.alloc().unwrap();
+        fill(&mut pool, a, 1, 8, 1);
+        pool.register_prefix(a, &(0..8).collect::<Vec<i32>>());
+        pool.free(a);
+        assert_eq!(pool.blocks_in_use(), 2, "retired chain retained by the tree");
+        // Two sequences with unrelated prompts: 4 blocks needed, only 2
+        // free — the cached chain is evicted LRU-first, pushes never fail.
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert_eq!(pool.attach_prefix(b, &(100..108).collect::<Vec<i32>>()), 0);
+        fill(&mut pool, b, 2, 8, 1);
+        fill(&mut pool, c, 3, 8, 1);
+        assert_eq!(pool.blocks_in_use(), 4);
+        assert_eq!(pool.evicted_blocks(), 2, "both cached blocks reclaimed");
+        // The data of the live sequences is intact.
+        let (k, _) = row(3, 5);
+        assert_eq!(pool.view(c, 0).key(5), &k[..]);
+    }
+
+    #[test]
+    fn eviction_never_drops_a_chain_a_live_slot_references() {
+        // 2 slots × 8/4 = 4 blocks. a registers+retires a 2-block chain;
+        // b attaches it (1 shared + 1 COW); c then needs 2 fresh blocks
+        // with only 1 free — eviction may take the *unreferenced* tail of
+        // the cached chain but must leave the block b shares alone.
+        let mut pool = KvSlotPool::with_config(2, 1, 8, 2, cfg(4, true));
+        let prompt: Vec<i32> = (50..58).collect();
+        let a = pool.alloc().unwrap();
+        fill(&mut pool, a, 1, 8, 1);
+        pool.register_prefix(a, &prompt);
+        pool.free(a);
+        let b = pool.alloc().unwrap();
+        assert_eq!(pool.attach_prefix(b, &prompt), 7);
+        fill(&mut pool, b, 1, 8, 1); // finish the last position privately
+        assert_eq!(pool.blocks_in_use(), 3, "shared + tree tail + COW");
+        // c's unrelated 8-token sequence forces one eviction (the tree's
+        // unreferenced second block) — and only one.
+        let c = pool.alloc().unwrap();
+        fill(&mut pool, c, 4, 8, 1);
+        assert_eq!(pool.evicted_blocks(), 1, "only the unreferenced tail evicted");
+        // b's shared head still reads a's original rows, bit for bit.
+        for t in 0..7 {
+            let (k, v) = row(1, t);
+            assert_eq!(pool.view(b, 0).key(t), &k[..], "live shared chain corrupted");
+            assert_eq!(pool.view(b, 0).value(t), &v[..]);
+        }
+    }
+
+    #[test]
+    fn attach_cow_survives_total_pool_pressure() {
+        // Regression: under total pool pressure the COW source may be the
+        // only evictable block. The eviction loop must be able to take it
+        // (it must NOT be pinned — that deadlocks into the exhaustion
+        // panic) and hand its storage back as the COW destination, where
+        // the rows already sit. 2 slots × 8/2 = 8 blocks, no headroom.
+        let mut pool = KvSlotPool::with_config(2, 1, 8, 2, cfg(2, true));
+        let a_prompt: Vec<i32> = (10..18).collect();
+        let a = pool.alloc().unwrap();
+        fill(&mut pool, a, 1, 8, 1);
+        pool.register_prefix(a, &a_prompt); // all 4 blocks enter the tree
+        pool.free(a);
+        // An unrelated full-capacity sequence takes the other 4 blocks.
+        let g = pool.alloc().unwrap();
+        fill(&mut pool, g, 2, 8, 1);
+        assert_eq!(pool.blocks_in_use(), 8, "pool fully committed");
+        // Attach a prompt sharing 7 of a's 8 tokens: 3 full matches plus
+        // a mid-block COW whose only allocatable block is the (evicted)
+        // source itself. Must not panic, must keep the rows bit-exact.
+        pool.free(g); // g retires; its blocks free up for the tail pushes
+        let mut f_prompt = a_prompt.clone();
+        f_prompt[7] = 99;
+        let f = pool.alloc().unwrap();
+        // Re-create total pressure for the COW allocation itself: g's
+        // freed blocks get soaked up by a fresh full-capacity sequence.
+        let g2 = pool.alloc().unwrap();
+        fill(&mut pool, g2, 3, 8, 1);
+        let hit = pool.attach_prefix(f, &f_prompt);
+        assert_eq!(hit, 7, "3 shared blocks + a 1-row COW");
+        assert_eq!(pool.evicted_blocks(), 1, "the source leaf was reclaimed");
+        fill(&mut pool, f, 1, 8, 1); // finish the final position
+        for t in 0..7 {
+            let (k, v) = row(1, t);
+            assert_eq!(pool.view(f, 0).key(t), &k[..], "COW rows corrupted");
+            assert_eq!(pool.view(f, 0).value(t), &v[..]);
+        }
+    }
+
+    #[test]
+    fn attach_disabled_or_trivial_is_a_no_op() {
+        let mut off = KvSlotPool::with_config(1, 1, 8, 2, cfg(4, false));
+        let s = off.alloc().unwrap();
+        assert_eq!(off.attach_prefix(s, &[1, 2, 3, 4]), 0);
+        assert!(!off.prefix_cache_enabled());
+        off.register_prefix(s, &[1, 2, 3, 4]); // must not panic
+        let mut on = KvSlotPool::with_config(1, 1, 8, 2, cfg(4, true));
+        let s = on.alloc().unwrap();
+        assert_eq!(on.attach_prefix(s, &[9]), 0, "single-token prompt never hits");
+        assert_eq!(on.prefix_stats(), (0, 0), "trivial prompts skip the probe");
     }
 }

@@ -9,9 +9,16 @@
 //! [`Engine::decode_step`] API over a [`KvSlotPool`], which is what the
 //! server's continuous-batching scheduler drives: sequences join and
 //! leave the decode batch between steps, reusing freed KV slots.
+//!
+//! KV state is **paged**: slots are views over chains of fixed-size
+//! blocks from the [`cache`] subsystem, and with the prefix cache enabled
+//! ([`KvCacheConfig::prefix_cache`], the `--prefix-cache` flag) requests
+//! sharing a prompt head attach the cached head's blocks instead of
+//! re-running prefill over identical tokens.
 
+pub mod cache;
 mod engine;
 mod kv_cache;
 
 pub use engine::{Backend, Engine, EngineWeights};
-pub use kv_cache::{KvCache, KvSlotPool};
+pub use kv_cache::{KvCacheConfig, KvSlotPool, KvView};

@@ -108,6 +108,10 @@ fn run(args: &Args) -> Result<()> {
                 "pipeline" => Backend::BitmapPipelined(PipelineConfig::with_threads(threads)),
                 other => bail!("unknown backend {other}"),
             };
+            // Cache knobs default from the environment (SALR_PREFIX_CACHE
+            // / SALR_KV_BLOCK); explicit flags override. `--prefix-cache
+            // false` turns the cache off even when the env forces it on.
+            let defaults = BatchPolicy::default();
             let policy = BatchPolicy {
                 max_batch: args.usize_or("max-batch", 8)?,
                 max_wait: std::time::Duration::from_millis(
@@ -116,6 +120,15 @@ fn run(args: &Args) -> Result<()> {
                 num_threads: threads,
                 engine_workers: args.usize_or("engine-workers", 1)?.max(1),
                 prefill_chunk: args.usize_or("prefill-chunk", 64)?,
+                kv_block_size: args.usize_or("kv-block-size", defaults.kv_block_size)?.max(1),
+                prefix_cache: if args.flag("prefix-cache").is_some() {
+                    args.bool("prefix-cache")
+                } else {
+                    defaults.prefix_cache
+                },
+                stream_frame_cap: args
+                    .usize_or("stream-frame-cap", defaults.stream_frame_cap)?
+                    .max(1),
             };
             serve(engine, &args.str_or("addr", "127.0.0.1:7433"), policy, None)
         }

@@ -10,11 +10,15 @@
 //! 1. *admit*: pop waiting requests from the shared queue into this
 //!    worker's claim board (bounded by free capacity); if the queue is
 //!    empty but another worker is hoarding unstarted claims, **steal**
-//!    from the back of the longest board instead;
+//!    from the back of the longest board instead. Admission probes the
+//!    worker's **radix-tree prefix cache** (when enabled): the cached
+//!    head of the prompt is attached as shared KV blocks and its prefill
+//!    forwards are skipped entirely (`prefix_hit_tokens` counts them);
 //! 2. *prefill one chunk*: feed at most [`BatchPolicy::prefill_chunk`]
 //!    prompt tokens of the oldest unfinished prefill through
 //!    [`Engine::prefill_chunk`] — a long prompt therefore spreads over
-//!    many iterations instead of freezing the batch;
+//!    many iterations instead of freezing the batch. A finished prompt
+//!    registers its full blocks in the prefix cache for later requests;
 //! 3. *decode*: one [`Engine::decode_step`] over every fully-prefilled
 //!    sequence, so running requests keep producing tokens **between**
 //!    another request's prefill chunks;
@@ -32,11 +36,15 @@
 //! KV cache alone, and chunked prefill splits the same per-row math over
 //! several forwards — so per-request output is byte-identical whether it
 //! is served alone, in a static batch, continuously batched across any
-//! number of engine workers, or prefilled in chunks of any size.
-//! `rust/tests/integration_serve.rs` asserts this end to end.
+//! number of engine workers, or prefilled in chunks of any size. The
+//! prefix cache preserves this bit for bit: a hit replays K/V rows a
+//! cold prefill of the same head would have produced (same kernels,
+//! same positions, immutable shared blocks), changing which GEMMs run
+//! but never an output byte. `rust/tests/integration_serve.rs` asserts
+//! both end to end.
 
 use crate::data::{detokenize, token_byte, tokenize};
-use crate::infer::{Engine, KvSlotPool};
+use crate::infer::{Engine, KvCacheConfig, KvSlotPool};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -94,16 +102,36 @@ pub struct BatchPolicy {
     /// prompts prefill in one forward, so one long prompt stalls that
     /// worker's decode batch for the duration — the pre-chunking behavior.
     pub prefill_chunk: usize,
+    /// Token positions per KV block in each worker's paged slot pool
+    /// (the `--kv-block-size` flag; also the prefix-sharing granularity).
+    pub kv_block_size: usize,
+    /// Enable the per-worker radix-tree prefix cache: requests sharing a
+    /// prompt head attach the cached head's blocks on admission instead
+    /// of re-running prefill over identical tokens (`--prefix-cache`).
+    /// Off is bitwise identical to the pre-cache serving behavior.
+    pub prefix_cache: bool,
+    /// Bound on each TCP connection's queued reply/stream frames. A
+    /// reader too slow to keep up has its connection closed once the
+    /// queue fills, instead of ballooning server memory or blocking an
+    /// engine worker (see `server::tcp`).
+    pub stream_frame_cap: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
+        // Cache knobs inherit the SALR_PREFIX_CACHE / SALR_KV_BLOCK env
+        // overrides, so the CI matrix can force the prefix cache on or
+        // off across the whole suite without touching call sites.
+        let cache = KvCacheConfig::env_default();
         BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             num_threads: 0,
             engine_workers: 1,
             prefill_chunk: 64,
+            kv_block_size: cache.block_size,
+            prefix_cache: cache.prefix_cache,
+            stream_frame_cap: 1024,
         }
     }
 }
@@ -130,6 +158,16 @@ pub struct ServerMetrics {
     /// Prefill chunks executed (multiple per request once a prompt is
     /// longer than [`BatchPolicy::prefill_chunk`]).
     pub prefill_chunks: AtomicU64,
+    /// Prompt tokens actually run through prefill forwards. With the
+    /// prefix cache on, `prefill_tokens + prefix_hit_tokens` equals the
+    /// total admitted prompt tokens — the gap is GEMM work skipped.
+    pub prefill_tokens: AtomicU64,
+    /// Prompt tokens served straight from the radix-tree prefix cache on
+    /// admission (their prefill forwards never ran). This admission-time
+    /// atomic is the **authoritative aggregate**; the per-worker
+    /// [`WorkerMetrics::prefix_hit_tokens`] gauges are advisory snapshots
+    /// published once per scheduler iteration and may transiently lag it.
+    pub prefix_hit_tokens: AtomicU64,
     /// Waiting requests moved from one worker's claim board to another's
     /// (the work-stealing counter).
     pub stolen: AtomicU64,
@@ -206,6 +244,11 @@ pub struct WorkerMetrics {
     pub tokens: u64,
     /// Requests this worker completed.
     pub retired: u64,
+    /// Prompt tokens this worker served from its prefix cache.
+    pub prefix_hit_tokens: u64,
+    /// KV blocks currently referenced in this worker's pool (live chains
+    /// plus retained cache chains) — a gauge, sampled every iteration.
+    pub cache_blocks_in_use: u64,
 }
 
 /// Reply callback: invoked exactly once with the finished [`Response`].
@@ -558,7 +601,19 @@ impl Batcher {
         let max_ctx = engine.weights.cfg.max_seq_len;
         let nslots = self.policy.max_batch.max(1);
         let chunk = self.policy.prefill_chunk;
-        let mut kv = engine.new_slot_pool(nslots);
+        // Each worker owns a private paged pool (and prefix cache): KV
+        // rows are written per token per layer, far too hot to share
+        // across workers under a lock. Requests sharing a head therefore
+        // reuse blocks when they land on the same worker.
+        let mut kv = engine.new_slot_pool_with(
+            nslots,
+            KvCacheConfig {
+                block_size: self.policy.kv_block_size.max(1),
+                prefix_cache: self.policy.prefix_cache,
+                // Retention headroom stays an env knob (SALR_KV_EXTRA).
+                ..KvCacheConfig::env_default()
+            },
+        );
         let mut live: Vec<LiveSeq> = Vec::new();
         let mut local = WorkerMetrics::default();
 
@@ -609,8 +664,12 @@ impl Batcher {
             }
             // Publish per-worker counters (cheap: one short lock per
             // iteration, far below the forward-pass cost).
+            local.prefix_hit_tokens = kv.prefix_hit_tokens();
+            local.cache_blocks_in_use = kv.blocks_in_use() as u64;
             self.worker_metrics.lock().unwrap()[worker] = local;
         }
+        local.prefix_hit_tokens = kv.prefix_hit_tokens();
+        local.cache_blocks_in_use = kv.blocks_in_use() as u64;
         self.worker_metrics.lock().unwrap()[worker] = local;
     }
 
@@ -649,6 +708,17 @@ impl Batcher {
                                 .fetch_add(1, Ordering::Relaxed);
                         }
                         let slot = kv.alloc().expect("admission respects free slots");
+                        // Prefix-cache admission: attach the cached head
+                        // of the prompt (shared blocks, COW at a mid-block
+                        // divergence). The attached tokens' prefill
+                        // forwards are skipped outright — `prefilled`
+                        // starts past them.
+                        let hit = kv.attach_prefix(slot, &toks);
+                        if hit > 0 {
+                            self.metrics
+                                .prefix_hit_tokens
+                                .fetch_add(hit as u64, Ordering::Relaxed);
+                        }
                         live.push(LiveSeq {
                             slot,
                             id: p.req.id,
@@ -657,7 +727,7 @@ impl Batcher {
                             enqueued: p.enqueued,
                             admitted: Instant::now(),
                             prompt: toks,
-                            prefilled: 0,
+                            prefilled: hit,
                             current: 0,
                             out: Vec::new(),
                             pending: Vec::new(),
@@ -685,11 +755,23 @@ impl Batcher {
         self.metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
         match res {
             Ok(first) => {
+                // Counted only on success, so `prefill_tokens +
+                // prefix_hit_tokens == admitted prompt tokens` holds even
+                // if a chunk is ever rejected mid-prefill.
+                self.metrics
+                    .prefill_tokens
+                    .fetch_add(take as u64, Ordering::Relaxed);
                 seq.prefilled += take;
                 if let Some(tok) = first {
                     seq.current = tok;
                     seq.out.push(tok);
                     seq.stream_token(tok);
+                }
+                // The whole prompt is cached now: publish its full blocks
+                // to this worker's prefix cache so later requests sharing
+                // the head skip these forwards.
+                if seq.prefill_done() {
+                    kv.register_prefix(seq.slot, &seq.prompt);
                 }
             }
             Err(e) => {
@@ -1086,6 +1168,75 @@ mod tests {
         );
         batcher.shutdown();
         worker1.join().unwrap();
+    }
+
+    #[test]
+    fn prefix_cache_hits_shared_heads_without_changing_text() {
+        // Requests sharing a prompt head, submitted sequentially to one
+        // worker: with the prefix cache on, later admissions must hit the
+        // registered head (prefill forwards skipped — the counters prove
+        // it) and every response must be byte-identical to cache-off.
+        let eng = engine();
+        let shared = "Q: what is 12+34? A: ";
+        let prompts: Vec<String> = (0..4).map(|i| format!("{shared}guess {i}")).collect();
+        let mut texts_by_mode = Vec::new();
+        let mut prefill_by_mode = Vec::new();
+        for prefix_cache in [false, true] {
+            let batcher = Batcher::new(BatchPolicy {
+                max_batch: 2,
+                engine_workers: 1,
+                prefill_chunk: 4,
+                kv_block_size: 4,
+                prefix_cache,
+                ..Default::default()
+            });
+            let handles = spawn_engine_workers(&batcher, eng.fork());
+            let texts: Vec<String> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let r = batcher.submit(Request {
+                        id: i as u64,
+                        prompt: p.clone(),
+                        max_tokens: 3,
+                    });
+                    assert!(r.error.is_none());
+                    r.text
+                })
+                .collect();
+            let hits = batcher.metrics.prefix_hit_tokens.load(Ordering::Relaxed);
+            let prefilled = batcher.metrics.prefill_tokens.load(Ordering::Relaxed);
+            let admitted_tokens: u64 =
+                prompts.iter().map(|p| p.len() as u64).sum();
+            if prefix_cache {
+                assert!(hits > 0, "shared heads must be served from the cache");
+                assert_eq!(
+                    prefilled + hits,
+                    admitted_tokens,
+                    "every admitted prompt token is either prefilled or a cache hit"
+                );
+                let wm = batcher.worker_metrics();
+                assert_eq!(wm[0].prefix_hit_tokens, hits);
+                assert!(wm[0].cache_blocks_in_use > 0, "retired chains retained");
+            } else {
+                assert_eq!(hits, 0);
+                assert_eq!(prefilled, admitted_tokens);
+            }
+            texts_by_mode.push(texts);
+            prefill_by_mode.push(prefilled);
+            batcher.shutdown();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        assert_eq!(
+            texts_by_mode[0], texts_by_mode[1],
+            "prefix cache changed response bytes"
+        );
+        assert!(
+            prefill_by_mode[1] < prefill_by_mode[0],
+            "cache-on must run strictly fewer prefill tokens"
+        );
     }
 
     #[test]

@@ -1,15 +1,19 @@
 //! Serving: a TCP inference server with **continuous batching** over the
 //! native engine. The request path is pure rust (no python, no HLO
 //! retracing): socket → shared admission queue → one of `W` engine
-//! worker loops (iteration-level scheduling over a fixed KV-slot pool,
-//! chunked prefill interleaved with decode steps, work stealing between
-//! workers) → out-of-order response routed back by request id, with
-//! optional per-token streaming frames along the way.
+//! worker loops (iteration-level scheduling over a **paged** KV-slot
+//! pool with an optional radix-tree **prefix cache**, chunked prefill
+//! interleaved with decode steps, work stealing between workers) →
+//! out-of-order response routed back by request id, with optional
+//! per-token streaming frames along the way. Per-connection reply
+//! queues are bounded — a slow reader is disconnected, never an
+//! unbounded buffer or a blocked engine worker.
 //!
-//! See DESIGN.md "Serving layer" for the scheduler, the KV-slot
-//! lifecycle, the chunked-prefill/streaming wire protocol, and the
-//! determinism argument; `rust/benches/bench_serve.rs` measures tokens/s
-//! and batch occupancy at 1/2/4 engine workers.
+//! See DESIGN.md "Serving layer" and "KV cache subsystem" for the
+//! scheduler, the block/prefix-cache lifecycle, the
+//! chunked-prefill/streaming wire protocol, and the determinism
+//! argument; `rust/benches/bench_serve.rs` measures tokens/s, batch
+//! occupancy and prefix-hit rates at 1/2/4 engine workers.
 
 mod batcher;
 mod tcp;

@@ -25,6 +25,18 @@
 //! writes to a connection go through a single writer thread, so
 //! concurrent completions never interleave bytes on the wire.
 //!
+//! **Backpressure**: each connection's reply queue is *bounded*
+//! ([`BatchPolicy::stream_frame_cap`] frames). Replies and stream deltas
+//! are enqueued with a non-blocking send — an engine worker is never
+//! stalled by a slow client — and a reader that falls a full queue
+//! behind has its connection closed (the remaining frames are dropped),
+//! instead of ballooning server memory with an unbounded backlog. This
+//! bound is part of the pipelining contract: final replies share the
+//! queue, so a client must read concurrently or keep its unread
+//! completions (plus in-flight stream frames) under the cap — the
+//! alternative, blocking the sender, would let one dead client stall
+//! every sequence on an engine worker.
+//!
 //! Control commands: `{"cmd": "metrics"}` returns aggregate serving
 //! metrics; `{"cmd": "shutdown"}` stops the server.
 
@@ -34,9 +46,52 @@ use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Sender, SyncSender, TrySendError};
 use std::sync::Arc;
+
+/// Bounded, non-blocking sender for one connection's reply/stream
+/// frames. The first overflow *poisons* the connection: the socket is
+/// shut down (the client sees EOF), the frame is dropped, and every
+/// later frame is dropped too — the queue can never hold more than its
+/// bound, and the sending engine worker never blocks.
+#[derive(Clone)]
+struct FrameTx {
+    tx: SyncSender<String>,
+    poisoned: Arc<AtomicBool>,
+    /// The connection to sever on overflow (`None` only in unit tests).
+    conn: Option<Arc<TcpStream>>,
+}
+
+impl FrameTx {
+    fn new(tx: SyncSender<String>, conn: Option<Arc<TcpStream>>) -> FrameTx {
+        FrameTx {
+            tx,
+            poisoned: Arc::new(AtomicBool::new(false)),
+            conn,
+        }
+    }
+
+    /// Enqueue one reply line; `false` means the frame was dropped
+    /// (overflow, already-poisoned connection, or writer gone).
+    fn send(&self, line: String) -> bool {
+        if self.poisoned.load(Ordering::Relaxed) {
+            return false;
+        }
+        match self.tx.try_send(line) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) => {
+                self.poisoned.store(true, Ordering::Relaxed);
+                log::warn!("closing connection: reply queue overflow (slow reader)");
+                if let Some(c) = &self.conn {
+                    let _ = c.shutdown(std::net::Shutdown::Both);
+                }
+                false
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+}
 
 /// Serve `engine` on `addr` until a shutdown command arrives.
 ///
@@ -83,8 +138,9 @@ pub fn serve(
         let batcher = batcher.clone();
         let next_id = next_id.clone();
         let stop = stop.clone();
+        let frame_cap = policy.stream_frame_cap.max(1);
         std::thread::spawn(move || {
-            match handle_conn(stream, &batcher, &next_id) {
+            match handle_conn(stream, &batcher, &next_id, frame_cap) {
                 Ok(true) => {
                     // Shutdown requested: set the flag and poke the
                     // listener so accept() returns.
@@ -137,12 +193,19 @@ fn final_frame(resp: Response, done_marker: bool) -> Json {
 /// blocking; a dedicated writer thread owns the stream's write half and
 /// serializes every reply line — delta frames included — in completion
 /// order.
-fn handle_conn(stream: TcpStream, batcher: &Batcher, next_id: &AtomicU64) -> Result<bool> {
+fn handle_conn(
+    stream: TcpStream,
+    batcher: &Batcher,
+    next_id: &AtomicU64,
+    frame_cap: usize,
+) -> Result<bool> {
     let mut reader = BufReader::new(stream.try_clone()?);
     // All replies (generation completions + stream deltas + command
-    // responses + errors) go through one channel so concurrent writes
-    // never interleave.
-    let (reply_tx, reply_rx) = std::sync::mpsc::channel::<String>();
+    // responses + errors) go through one **bounded** channel so
+    // concurrent writes never interleave and a slow reader cannot pile
+    // up an unbounded backlog (overflow severs the connection instead).
+    let (tx, reply_rx) = std::sync::mpsc::sync_channel::<String>(frame_cap);
+    let reply_tx = FrameTx::new(tx, Some(Arc::new(stream.try_clone()?)));
     let mut writer = stream;
     let writer_thread = std::thread::spawn(move || {
         for line in reply_rx {
@@ -248,15 +311,18 @@ fn handle_conn(stream: TcpStream, batcher: &Batcher, next_id: &AtomicU64) -> Res
 /// Aggregate metrics as a JSON object (the `{"cmd":"metrics"}` reply).
 fn render_metrics(batcher: &Batcher) -> Json {
     let (p50, p90, p99) = batcher.metrics.latency_percentiles();
+    let worker_metrics = batcher.worker_metrics();
+    let cache_blocks_total: u64 = worker_metrics.iter().map(|w| w.cache_blocks_in_use).sum();
     let workers = Json::Arr(
-        batcher
-            .worker_metrics()
+        worker_metrics
             .iter()
             .map(|w| {
                 Json::obj()
                     .set("steps", w.steps)
                     .set("tokens", w.tokens)
                     .set("retired", w.retired)
+                    .set("prefix_hit_tokens", w.prefix_hit_tokens)
+                    .set("cache_blocks_in_use", w.cache_blocks_in_use)
             })
             .collect(),
     );
@@ -278,6 +344,15 @@ fn render_metrics(batcher: &Batcher) -> Json {
             "prefill_chunks",
             batcher.metrics.prefill_chunks.load(Ordering::Relaxed),
         )
+        .set(
+            "prefill_tokens",
+            batcher.metrics.prefill_tokens.load(Ordering::Relaxed),
+        )
+        .set(
+            "prefix_hit_tokens",
+            batcher.metrics.prefix_hit_tokens.load(Ordering::Relaxed),
+        )
+        .set("cache_blocks_in_use", cache_blocks_total)
         .set("stolen", batcher.metrics.stolen.load(Ordering::Relaxed))
         .set("rejected", batcher.metrics.rejected.load(Ordering::Relaxed))
         .set("latency_p50_ms", p50)
@@ -367,5 +442,46 @@ impl Client {
     /// Ask the server to stop (replies `{"ok": true}` first).
     pub fn shutdown(&mut self) -> Result<Json> {
         self.call(&Json::obj().set("cmd", "shutdown"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_frame_channel_poisons_and_closes_on_overflow() {
+        // A reader that never drains: with no writer thread attached, the
+        // queue fills at exactly its bound, the overflowing send returns
+        // immediately (no engine-side blocking), the connection is shut
+        // down, and every later frame is dropped.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let (tx, rx) = std::sync::mpsc::sync_channel::<String>(2);
+        let ftx = FrameTx::new(tx, Some(Arc::new(server)));
+        assert!(ftx.send("frame 1".into()));
+        assert!(ftx.send("frame 2".into()));
+        assert!(!ftx.send("frame 3".into()), "overflow must drop, not block");
+        assert!(!ftx.send("frame 4".into()), "poisoned connection drops frames");
+        assert_eq!(
+            rx.try_iter().count(),
+            2,
+            "queue never holds more than its bound"
+        );
+        // The peer observes the severed connection as EOF.
+        let mut line = String::new();
+        let n = BufReader::new(client).read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "slow-reader connection must be closed");
+    }
+
+    #[test]
+    fn frame_tx_without_connection_still_bounds_and_poisons() {
+        let (tx, _rx) = std::sync::mpsc::sync_channel::<String>(1);
+        let ftx = FrameTx::new(tx, None);
+        assert!(ftx.send("a".into()));
+        assert!(!ftx.send("b".into()));
+        assert!(!ftx.send("c".into()), "stays poisoned");
     }
 }

@@ -22,6 +22,12 @@ pub use json::Json;
 pub use pool::WorkerPool;
 pub use rng::Rng;
 
+/// One truthy-token set for every boolean env var and CLI flag
+/// (`--prefix-cache on` and `SALR_PREFIX_CACHE=on` must agree).
+pub fn truthy(s: &str) -> bool {
+    matches!(s, "1" | "true" | "yes" | "on")
+}
+
 /// Format a byte count as a human-readable string (`12.3 MiB`).
 pub fn human_bytes(bytes: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];

@@ -5,6 +5,14 @@
 //! chunks, admit requests into live batches mid-stream, complete
 //! pipelined requests out of order (routed by id), and reject over-long
 //! prompts with an error reply instead of panicking a worker.
+//!
+//! Prefix-cache acceptance: serving shared-prefix prompts with the
+//! radix-tree cache enabled must be byte-identical to cache-off and to
+//! the 1-worker sequential whole-prefill oracle at multiple thread
+//! counts and block sizes, while the `prefix_hit_tokens` /
+//! `prefill_tokens` counters prove prefill GEMM work was actually
+//! skipped on the hit path. A reader that stops draining its stream must
+//! never stall the engines (bounded per-connection reply queues).
 
 use salr::infer::{Backend, Engine, EngineWeights};
 use salr::model::ParamStore;
@@ -275,6 +283,171 @@ fn midstream_admission_and_out_of_order_completion_over_tcp() {
         "occupancy must have grown without the batch draining"
     );
     drop(client);
+    stop_server(addr, handle);
+}
+
+/// Serve `prompts` one at a time over one connection and return the
+/// response texts plus the server's final metrics snapshot.
+fn serve_sequentially(
+    engine: Engine,
+    policy: BatchPolicy,
+    prompts: &[(String, usize)],
+) -> (Vec<String>, Json) {
+    let (addr, handle) = start_server(engine, policy);
+    let mut texts = Vec::new();
+    {
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        for (p, n) in prompts {
+            let r = c.generate(p, *n).unwrap();
+            assert!(r.get("error").is_none(), "request failed: {r:?}");
+            texts.push(r.get("text").and_then(Json::as_str).unwrap().to_string());
+        }
+    }
+    let mut probe = Client::connect(&addr.to_string()).unwrap();
+    let metrics = probe.metrics().unwrap();
+    drop(probe);
+    stop_server(addr, handle);
+    (texts, metrics)
+}
+
+/// The PR's acceptance bar: a batch of shared-prefix prompts served with
+/// the prefix cache enabled is byte-identical to cache-off and to the
+/// 1-worker sequential whole-prefill oracle — across 2 block sizes and 2
+/// GEMM thread counts (and 1 vs 2 engine workers) — and the counters
+/// prove the hit path actually skipped prefill forwards.
+#[test]
+fn shared_prefix_cache_byte_identity_and_gemm_skip() {
+    let engine = test_engine(); // max_seq_len = 96
+    let head = "SYSTEM: terse math assistant.\n"; // 30-token shared head
+    assert_eq!(head.len(), 30);
+    let prompts: Vec<(String, usize)> = (0..6)
+        .map(|i| {
+            (
+                format!("{head}Q: {}+{}=? A: ", 2 + i % 3, 5 + i % 2),
+                3 + (i % 3),
+            )
+        })
+        .collect();
+    let total_prompt_tokens: u64 = prompts.iter().map(|(p, _)| p.len() as u64).sum();
+
+    // Oracle: 1 worker, 1 GEMM thread, whole-prompt prefill, cache off.
+    let oracle_policy = BatchPolicy {
+        max_batch: 4,
+        engine_workers: 1,
+        num_threads: 1,
+        prefill_chunk: 0,
+        kv_block_size: 16,
+        prefix_cache: false,
+        ..Default::default()
+    };
+    let (reference, cold_metrics) = serve_sequentially(engine.fork(), oracle_policy, &prompts);
+    let cold_prefill = cold_metrics
+        .get("prefill_tokens")
+        .and_then(Json::as_usize)
+        .unwrap() as u64;
+    assert_eq!(cold_prefill, total_prompt_tokens, "cache-off prefills everything");
+    assert_eq!(
+        cold_metrics.get("prefix_hit_tokens").and_then(Json::as_usize),
+        Some(0)
+    );
+
+    // Cache on, across (engine workers, GEMM threads, block size): every
+    // configuration must reproduce the oracle bytes exactly.
+    for &(workers, threads, block) in &[(1usize, 1usize, 4usize), (1, 2, 16), (2, 2, 4), (2, 1, 16)]
+    {
+        let policy = BatchPolicy {
+            max_batch: 4,
+            engine_workers: workers,
+            num_threads: threads,
+            prefill_chunk: 3,
+            kv_block_size: block,
+            prefix_cache: true,
+            ..Default::default()
+        };
+        let (texts, metrics) = serve_sequentially(engine.fork(), policy, &prompts);
+        assert_eq!(
+            texts, reference,
+            "workers={workers} threads={threads} block={block} changed response bytes"
+        );
+        let hits = metrics
+            .get("prefix_hit_tokens")
+            .and_then(Json::as_usize)
+            .unwrap() as u64;
+        let prefilled = metrics
+            .get("prefill_tokens")
+            .and_then(Json::as_usize)
+            .unwrap() as u64;
+        assert!(
+            hits > 0,
+            "workers={workers} block={block}: shared heads must hit the cache"
+        );
+        assert_eq!(
+            prefilled + hits,
+            total_prompt_tokens,
+            "every admitted prompt token is either prefilled or a cache hit"
+        );
+        assert!(
+            prefilled < cold_prefill,
+            "the hit path must run strictly fewer prefill tokens than cold"
+        );
+        assert!(
+            metrics
+                .get("cache_blocks_in_use")
+                .and_then(Json::as_usize)
+                .unwrap()
+                > 0,
+            "retired chains must be retained for reuse"
+        );
+    }
+}
+
+/// Bounded per-connection reply queues: a client that submits a
+/// streaming request and then never reads must not stall the engine
+/// workers — the request runs to completion server-side and other
+/// clients keep being served normally. (The overflow→disconnect policy
+/// itself is unit-tested in `server::tcp`.)
+#[test]
+fn slow_stream_reader_does_not_stall_the_server() {
+    let engine = test_engine();
+    let (addr, handle) = start_server(
+        engine,
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 1,
+            stream_frame_cap: 4,
+            ..Default::default()
+        },
+    );
+    // The slow reader: submit a 30-token streamed generation, read nothing.
+    let mut slow = Client::connect(&addr.to_string()).unwrap();
+    slow.send(
+        &Json::obj()
+            .set("id", 7u64)
+            .set("prompt", "Q: 9+9=? A: ")
+            .set("max_tokens", 30u64)
+            .set("stream", true),
+    )
+    .unwrap();
+    // The engine must finish the request without anyone draining frames.
+    let mut probe = Client::connect(&addr.to_string()).unwrap();
+    let t0 = Instant::now();
+    loop {
+        let m = probe.metrics().unwrap();
+        if m.get("requests").and_then(Json::as_usize).unwrap_or(0) >= 1 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "engine stalled behind an unread stream"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // And a healthy client is served as usual.
+    let mut healthy = Client::connect(&addr.to_string()).unwrap();
+    let r = healthy.generate("Q: 1+2=? A: ", 3).unwrap();
+    assert_eq!(r.get("tokens").and_then(Json::as_usize), Some(3));
+    drop(slow);
+    drop(healthy);
     stop_server(addr, handle);
 }
 
