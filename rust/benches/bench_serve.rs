@@ -60,6 +60,37 @@ struct RunResult {
     occupancy: f64,
     p50_ms: f64,
     p99_ms: f64,
+    faults: FailureCounters,
+}
+
+/// The serving tier's failure-plane counters, snapshotted per run and
+/// surfaced in the bench JSON: a healthy bench reports all zeros, and a
+/// bench run under `SALR_FAULT` (or one that trips shedding under load)
+/// shows exactly what failed instead of silently skewing tokens/s.
+#[derive(Clone, Copy, Default)]
+struct FailureCounters {
+    shed: u64,
+    cancelled: u64,
+    timed_out: u64,
+    worker_restarts: u64,
+}
+
+impl FailureCounters {
+    fn snapshot(batcher: &Batcher) -> FailureCounters {
+        FailureCounters {
+            shed: batcher.metrics.shed.load(Ordering::Relaxed),
+            cancelled: batcher.metrics.cancelled.load(Ordering::Relaxed),
+            timed_out: batcher.metrics.timed_out.load(Ordering::Relaxed),
+            worker_restarts: batcher.metrics.worker_restarts.load(Ordering::Relaxed),
+        }
+    }
+
+    fn accumulate(&mut self, other: FailureCounters) {
+        self.shed += other.shed;
+        self.cancelled += other.cancelled;
+        self.timed_out += other.timed_out;
+        self.worker_restarts += other.worker_restarts;
+    }
 }
 
 struct SharedPrefixResult {
@@ -68,6 +99,7 @@ struct SharedPrefixResult {
     tokens: u64,
     prefix_hit_tokens: u64,
     prefill_tokens: u64,
+    faults: FailureCounters,
 }
 
 /// The shared-prefix workload: `clients` concurrent clients, each
@@ -103,6 +135,7 @@ fn run_shared_prefix_load(
                         id: (c * reqs_per_client + r) as u64,
                         prompt: format!("{head}{}+{}=", 10 + c % 10, r % 10),
                         max_tokens: 16,
+                        ..Default::default()
                     });
                     assert_eq!(resp.tokens, 16);
                 }
@@ -116,6 +149,7 @@ fn run_shared_prefix_load(
         tokens: batcher.metrics.tokens_out.load(Ordering::Relaxed),
         prefix_hit_tokens: batcher.metrics.prefix_hit_tokens.load(Ordering::Relaxed),
         prefill_tokens: batcher.metrics.prefill_tokens.load(Ordering::Relaxed),
+        faults: FailureCounters::snapshot(&batcher),
     };
     batcher.shutdown();
     for h in handles {
@@ -148,6 +182,7 @@ fn run_load(template: &Engine, workers: usize, clients: usize, reqs_per_client: 
                         id: (c * reqs_per_client + r) as u64,
                         prompt: format!("Q: {}+{}=? A: ", 10 + c, 3 + r),
                         max_tokens: 16,
+                        ..Default::default()
                     });
                     assert_eq!(resp.tokens, 16);
                 }
@@ -164,6 +199,7 @@ fn run_load(template: &Engine, workers: usize, clients: usize, reqs_per_client: 
         occupancy: batcher.metrics.mean_batch_occupancy(),
         p50_ms: p50,
         p99_ms: p99,
+        faults: FailureCounters::snapshot(&batcher),
     };
     batcher.shutdown();
     for h in handles {
@@ -197,6 +233,11 @@ fn main() {
         rows.push(r);
     }
 
+    let mut faults = FailureCounters::default();
+    for r in &rows {
+        faults.accumulate(r.faults);
+    }
+
     println!("\n# shared-prefix workload: {clients} clients x {reqs} reqs, common 40-token head, 2 workers");
     let mut shared_rows = Vec::new();
     for prefix_cache in [false, true] {
@@ -208,8 +249,13 @@ fn main() {
             r.prefix_hit_tokens,
             r.prefill_tokens,
         );
+        faults.accumulate(r.faults);
         shared_rows.push(r);
     }
+    println!(
+        "\n# failure counters (all runs): shed {}  cancelled {}  timeout {}  worker_restarts {}",
+        faults.shed, faults.cancelled, faults.timed_out, faults.worker_restarts
+    );
 
     if let Ok(path) = std::env::var("SALR_BENCH_JSON") {
         let mut result_rows: Vec<Json> = rows
@@ -243,7 +289,13 @@ fn main() {
             .set("reqs_per_client", reqs)
             .set("tokens_per_req", 16)
             .set("prefill_chunk", env_usize("SALR_BENCH_CHUNK", 64))
-            .set("host_threads", salr::util::pool::available_threads());
+            .set("host_threads", salr::util::pool::available_threads())
+            // Failure-plane counters across every run: all zeros on a
+            // healthy bench, nonzero under SALR_FAULT or overload.
+            .set("shed", faults.shed)
+            .set("cancelled", faults.cancelled)
+            .set("timeout", faults.timed_out)
+            .set("worker_restarts", faults.worker_restarts);
         salr::util::bench::write_bench_doc(&path, meta, results)
             .expect("write bench json");
         println!("\nwrote {path}");

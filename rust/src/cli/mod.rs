@@ -128,9 +128,23 @@ SERVE FLAGS:
                       output bytes are identical either way
   --stream-frame-cap N  per-connection reply-queue bound; a reader that
                       falls N frames behind is disconnected (default 1024)
+  --default-deadline-ms T  deadline applied to every request that sets no
+                      \"timeout_ms\" of its own; an unfinished request is
+                      retired with error \"timeout\" at its next scheduler
+                      boundary (default 0 = no deadline)
+  --max-queue-depth N bound on the admission queue: submissions past it
+                      are shed immediately with error \"overloaded\"
+                      (default 0 = unbounded)
+  --idle-timeout-ms T close a connection with nothing in flight after T ms
+                      of silence, freeing its reader/writer threads
+                      (default 0 = never)
 
 Clients add \"stream\": true to a request line to receive one
-{\"id\",\"delta\",\"seq\"} frame per generated token before the final reply.
+{\"id\",\"delta\",\"seq\"} frame per generated token before the final reply;
+\"timeout_ms\": T puts a deadline on one request, and
+{\"cmd\":\"cancel\",\"id\":N} cancels in-flight request N of the same
+connection (a dropped connection cancels all of its requests). SALR_FAULT
+arms the deterministic fault-injection harness (see util::fault).
 ";
 
 /// Parse a baseline name.

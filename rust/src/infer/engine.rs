@@ -602,6 +602,13 @@ impl Engine {
     /// overflow the slot, so a mis-sized request costs the server an error
     /// reply, not an engine worker. On error the slot's caches are
     /// untouched; the caller decides whether to free the slot.
+    ///
+    /// Panic safety (the contract `Batcher::supervised_worker_loop`
+    /// leans on): an unwind out of this call — an engine bug or an
+    /// injected `SALR_FAULT` — may leave the slot's per-layer cache
+    /// lengths inconsistent, but never corrupts the *pool*: block
+    /// refcounts only move inside `KvSlotPool`'s own methods, so
+    /// `KvSlotPool::free` afterwards releases the slot's chain exactly.
     pub fn prefill_chunk(
         &self,
         chunk: &[i32],
@@ -647,6 +654,12 @@ impl Engine {
     /// sparse kernels' working sets) lives in the scratch arena: after a
     /// warmup step, the steady-state loop performs no heap allocation
     /// beyond the few-words-long position/token vectors.
+    ///
+    /// Panic safety: same contract as [`Engine::prefill_chunk`] — an
+    /// unwind mid-step can leave the stepped slots' per-layer lengths
+    /// inconsistent (some layers appended, some not) but block
+    /// accounting intact, so the supervisor's `KvSlotPool::free` per
+    /// in-flight slot restores the pool exactly.
     pub fn decode_step(&self, current: &[i32], slots: &[usize], kv: &mut KvSlotPool) -> Vec<i32> {
         let cfg = &self.weights.cfg;
         let m = current.len();

@@ -709,6 +709,63 @@ mod tests {
     }
 
     #[test]
+    fn free_after_abnormal_exit_returns_accounting_to_baseline() {
+        // The serving tier's failure paths (cancellation, deadline
+        // expiry, a worker panic caught mid-forward) free a slot in
+        // whatever state the interruption left it: per-layer lengths
+        // disagreeing, a prompt half-prefilled, a shared prefix attached
+        // with a COW split. `free` must return block accounting exactly
+        // to baseline in every such state, and the slot must be reusable.
+        let mut pool = KvSlotPool::with_config(2, 2, 8, 2, cfg(2, true));
+
+        // (1) Mid-forward inconsistency: layer 0 has 3 rows, layer 1 has
+        // none — the state a panic between layer forwards leaves behind.
+        let s = pool.alloc().unwrap();
+        for t in 0..3 {
+            let (k, v) = row(7, t);
+            pool.push(s, 0, &k, &v);
+        }
+        assert!(pool.blocks_in_use() > 0);
+        assert_ne!(pool.layer_len(s, 0), pool.layer_len(s, 1));
+        pool.free(s);
+        assert_eq!(pool.blocks_in_use(), 0, "partial chain leaked");
+
+        // (2) Shared-prefix baseline: register a retained chain, then
+        // kill an attached request mid-flight. The retained blocks are
+        // the baseline; the failed request's private tail and COW block
+        // must come back exactly.
+        let prompt: Vec<i32> = (30..38).collect();
+        let a = pool.alloc().unwrap();
+        fill(&mut pool, a, 1, 8, 2);
+        pool.register_prefix(a, &prompt);
+        pool.free(a);
+        let baseline = pool.blocks_in_use();
+        assert!(baseline > 0, "retained cache chain is the baseline");
+        let mut diverged = prompt.clone();
+        diverged[7] = 99;
+        let b = pool.alloc().unwrap();
+        assert!(pool.attach_prefix(b, &diverged) > 0);
+        fill(&mut pool, b, 1, 8, 2); // private tail past the shared head
+        assert!(pool.blocks_in_use() > baseline);
+        pool.free(b); // the abnormal exit
+        assert_eq!(
+            pool.blocks_in_use(),
+            baseline,
+            "refcounts must return exactly to the retained baseline"
+        );
+
+        // (3) Freed capacity is genuinely reusable: both slots fill to
+        // sequence capacity afterwards (evicting the retained chain if
+        // the allocator needs it — that is its job, not a leak).
+        let x = pool.alloc().unwrap();
+        let y = pool.alloc().unwrap();
+        fill(&mut pool, x, 2, 8, 2);
+        fill(&mut pool, y, 3, 8, 2);
+        assert_eq!(pool.seq_len(x), 8);
+        assert_eq!(pool.seq_len(y), 8);
+    }
+
+    #[test]
     fn attach_disabled_or_trivial_is_a_no_op() {
         let mut off = KvSlotPool::with_config(1, 1, 8, 2, cfg(4, false));
         let s = off.alloc().unwrap();

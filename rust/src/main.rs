@@ -129,6 +129,9 @@ fn run(args: &Args) -> Result<()> {
                 stream_frame_cap: args
                     .usize_or("stream-frame-cap", defaults.stream_frame_cap)?
                     .max(1),
+                default_deadline_ms: args.usize_or("default-deadline-ms", 0)? as u64,
+                max_queue_depth: args.usize_or("max-queue-depth", 0)?,
+                idle_timeout_ms: args.usize_or("idle-timeout-ms", 0)? as u64,
             };
             serve(engine, &args.str_or("addr", "127.0.0.1:7433"), policy, None)
         }

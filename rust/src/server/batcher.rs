@@ -42,16 +42,63 @@
 //! same positions, immutable shared blocks), changing which GEMMs run
 //! but never an output byte. `rust/tests/integration_serve.rs` asserts
 //! both end to end.
+//!
+//! **Failure model** (see DESIGN.md "Failure model"): every request can
+//! carry a [`CancelToken`] and a deadline ([`Request::timeout_ms`], or
+//! [`BatchPolicy::default_deadline_ms`] for all requests); both are
+//! checked at admission and at every scheduler-iteration boundary, and a
+//! tripped request retires with `error: "cancelled"` / `"timeout"`, its
+//! KV chain freed exactly like a normal retirement. A bounded admission
+//! queue ([`BatchPolicy::max_queue_depth`]) sheds overflow with an
+//! immediate `error: "overloaded"` reply instead of growing without
+//! bound. Workers spawned by [`spawn_engine_workers`] run under a panic
+//! **supervisor** ([`Batcher::supervised_worker_loop`]): a panicking
+//! worker fails its in-flight sequences with error replies (their KV
+//! blocks freed, never leaked), is replaced by a fresh [`Engine::fork`]
+//! on the same queue and KV pool, and bumps
+//! [`ServerMetrics::worker_restarts`] — siblings and the listener never
+//! notice. Failure paths are exercised deterministically by the
+//! op-counter-keyed [`FaultPlan`](crate::util::fault::FaultPlan)
+//! injection harness (`SALR_FAULT`), in `rust/tests/integration_fault.rs`.
 
 use crate::data::{detokenize, token_byte, tokenize};
 use crate::infer::{Engine, KvCacheConfig, KvSlotPool};
+use crate::util::fault::{FaultAction, FaultOp, FaultPlan};
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+/// A shared cancellation latch for one request. Keep a clone, pass the
+/// other via [`Request::cancel`]; [`CancelToken::cancel`] is a one-way
+/// trip observed by the serving worker at its next scheduler-iteration
+/// boundary (admission time if the request has not started), which
+/// retires the request with `error: "cancelled"` and frees its KV chain
+/// exactly. The TCP front-end wires the `{"cmd":"cancel","id":…}` frame
+/// and client disconnects to these tokens.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Latch the token. Idempotent; never blocks.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Has [`CancelToken::cancel`] been called (by anyone)?
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
 /// One generation request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Request {
     /// Caller-chosen id, echoed in the [`Response`] (the out-of-order
     /// completion key).
@@ -60,6 +107,17 @@ pub struct Request {
     pub prompt: String,
     /// Upper bound on generated tokens (clamped to the model context).
     pub max_tokens: usize,
+    /// Deadline in milliseconds, measured from submission: a request
+    /// still unfinished when it expires retires at the next scheduler
+    /// boundary with `error: "timeout"` (partial output discarded, KV
+    /// chain freed). `None` inherits
+    /// [`BatchPolicy::default_deadline_ms`]; `Some(0)` expires
+    /// immediately (useful to test the admission-time check).
+    pub timeout_ms: Option<u64>,
+    /// Cooperative cancellation: keep a [`CancelToken`] clone and
+    /// `cancel()` it to retire the request at its next scheduler
+    /// boundary with `error: "cancelled"`.
+    pub cancel: Option<CancelToken>,
 }
 
 /// The server's reply.
@@ -115,6 +173,21 @@ pub struct BatchPolicy {
     /// queue fills, instead of ballooning server memory or blocking an
     /// engine worker (see `server::tcp`).
     pub stream_frame_cap: usize,
+    /// Deadline applied to every request that does not set its own
+    /// [`Request::timeout_ms`] (the `--default-deadline-ms` flag).
+    /// `0` disables the default: such requests may run indefinitely.
+    pub default_deadline_ms: u64,
+    /// Bound on the shared admission queue (the `--max-queue-depth`
+    /// flag). A submission arriving at a full queue is **shed**: its
+    /// reply fires immediately with `error: "overloaded"` (counted by
+    /// [`ServerMetrics::shed`]) instead of the queue growing without
+    /// bound. `0` leaves the queue unbounded.
+    pub max_queue_depth: usize,
+    /// Per-connection idle read timeout for the TCP front-end (the
+    /// `--idle-timeout-ms` flag): a connection with no in-flight
+    /// requests that stays silent this long is closed, so half-open
+    /// sockets stop pinning reader/writer threads. `0` disables it.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for BatchPolicy {
@@ -132,6 +205,9 @@ impl Default for BatchPolicy {
             kv_block_size: cache.block_size,
             prefix_cache: cache.prefix_cache,
             stream_frame_cap: 1024,
+            default_deadline_ms: 0,
+            max_queue_depth: 0,
+            idle_timeout_ms: 0,
         }
     }
 }
@@ -172,8 +248,19 @@ pub struct ServerMetrics {
     /// (the work-stealing counter).
     pub stolen: AtomicU64,
     /// Requests rejected with an error reply (over-long prompt, prefill
-    /// failure) — their KV slots are freed, never leaked.
+    /// failure, worker panic) — their KV slots are freed, never leaked.
     pub rejected: AtomicU64,
+    /// Requests shed at admission because the queue was at
+    /// [`BatchPolicy::max_queue_depth`] (`error: "overloaded"`).
+    pub shed: AtomicU64,
+    /// Requests retired by a latched [`CancelToken`]
+    /// (`error: "cancelled"`).
+    pub cancelled: AtomicU64,
+    /// Requests retired by an expired deadline (`error: "timeout"`).
+    pub timed_out: AtomicU64,
+    /// Panicked engine workers replaced by the supervisor (see
+    /// [`Batcher::supervised_worker_loop`]).
+    pub worker_restarts: AtomicU64,
     /// Highest batch occupancy any worker reached.
     pub max_occupancy: AtomicU64,
     /// Per-request end-to-end latencies (µs), for percentile queries.
@@ -249,6 +336,10 @@ pub struct WorkerMetrics {
     /// KV blocks currently referenced in this worker's pool (live chains
     /// plus retained cache chains) — a gauge, sampled every iteration.
     pub cache_blocks_in_use: u64,
+    /// KV slots currently occupied by live sequences — a gauge, sampled
+    /// every iteration; returns to 0 whenever the worker drains, however
+    /// its sequences exited (retired, cancelled, timed out, panic-failed).
+    pub slots_in_use: u64,
 }
 
 /// Reply callback: invoked exactly once with the finished [`Response`].
@@ -267,8 +358,62 @@ pub type StreamFn = Box<dyn FnMut(&str) + Send>;
 struct Pending {
     req: Request,
     enqueued: Instant,
+    /// Absolute deadline resolved at submission (request override or
+    /// policy default); `None` = no deadline.
+    deadline: Option<Instant>,
+    cancel: Option<CancelToken>,
     reply: ReplyFn,
     stream: Option<StreamFn>,
+}
+
+impl Pending {
+    fn new(
+        req: Request,
+        reply: ReplyFn,
+        stream: Option<StreamFn>,
+        policy: &BatchPolicy,
+    ) -> Pending {
+        let enqueued = Instant::now();
+        let timeout_ms = req.timeout_ms.or(if policy.default_deadline_ms > 0 {
+            Some(policy.default_deadline_ms)
+        } else {
+            None
+        });
+        // checked_add: an absurdly large timeout saturates to "no
+        // deadline" instead of panicking on Instant overflow.
+        let deadline = timeout_ms.and_then(|ms| enqueued.checked_add(Duration::from_millis(ms)));
+        let cancel = req.cancel.clone();
+        Pending {
+            req,
+            enqueued,
+            deadline,
+            cancel,
+            reply,
+            stream,
+        }
+    }
+
+    /// `Some("cancelled" | "timeout")` if this waiting request must not
+    /// start (checked when a worker pops it off a claim board).
+    fn failed(&self, now: Instant) -> Option<&'static str> {
+        failure_kind(&self.cancel, self.deadline, now)
+    }
+}
+
+/// The shared cancel-before-deadline precedence used at both check
+/// points (admission and live-sequence reaping).
+fn failure_kind(
+    cancel: &Option<CancelToken>,
+    deadline: Option<Instant>,
+    now: Instant,
+) -> Option<&'static str> {
+    if cancel.as_ref().is_some_and(CancelToken::is_cancelled) {
+        Some("cancelled")
+    } else if deadline.is_some_and(|d| now >= d) {
+        Some("timeout")
+    } else {
+        None
+    }
 }
 
 /// A sequence occupying a KV slot in one worker's decode batch.
@@ -279,6 +424,8 @@ struct LiveSeq {
     stream: Option<StreamFn>,
     enqueued: Instant,
     admitted: Instant,
+    deadline: Option<Instant>,
+    cancel: Option<CancelToken>,
     /// Tokenized prompt; `prefilled` counts how many of these are already
     /// in the KV cache. The sequence decodes once `prefilled == len`.
     prompt: Vec<i32>,
@@ -370,6 +517,29 @@ impl LiveSeq {
     }
 }
 
+/// One engine worker's owned serving state: its private KV pool, its
+/// live decode batch and its local counters. Owned by the supervisor
+/// frame, **outside** the `catch_unwind` boundary, so a panicking worker
+/// loop leaves it reachable for cleanup and the pool (with its retained
+/// prefix-cache chains) survives the respawn.
+struct WorkerState {
+    kv: KvSlotPool,
+    live: Vec<LiveSeq>,
+    local: WorkerMetrics,
+}
+
+/// Best-effort text of a caught panic payload (panics raised by `panic!`
+/// carry `&str` or `String`; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// The admission queue plus the shared serving state; engine workers are
 /// spawned on top with [`spawn_engine_workers`] (or run inline via
 /// [`Batcher::worker_loop`]).
@@ -385,11 +555,24 @@ pub struct Batcher {
     pub metrics: ServerMetrics,
     worker_metrics: Mutex<Vec<WorkerMetrics>>,
     shutdown: AtomicBool,
+    /// Armed fault-injection plan (`SALR_FAULT`, or explicit in tests);
+    /// `None` in production — the checks cost one branch per op.
+    fault: Option<FaultPlan>,
 }
 
 impl Batcher {
     /// A batcher with no workers yet (see [`spawn_engine_workers`]).
+    /// Arms the fault-injection plan from `SALR_FAULT` when that env var
+    /// is set (CI's fault leg); see [`Batcher::with_fault`].
     pub fn new(policy: BatchPolicy) -> Arc<Batcher> {
+        Batcher::with_fault(policy, FaultPlan::from_env())
+    }
+
+    /// [`Batcher::new`] with an explicit fault-injection plan — the
+    /// deterministic-test entry point (env vars race across parallel
+    /// tests; an explicit plan cannot). Pass `None` to disable injection
+    /// regardless of `SALR_FAULT`.
+    pub fn with_fault(policy: BatchPolicy, fault: Option<FaultPlan>) -> Arc<Batcher> {
         let workers = policy.engine_workers.max(1);
         Arc::new(Batcher {
             queue: Mutex::new(VecDeque::new()),
@@ -399,7 +582,23 @@ impl Batcher {
             metrics: ServerMetrics::default(),
             worker_metrics: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
+            fault,
         })
+    }
+
+    /// Execute the armed fault plan's action if `op` on `worker` is its
+    /// trigger point: `panic` faults unwind this worker thread (the
+    /// supervisor catches it), `delay` faults stall it in place.
+    fn fault_point(&self, op: FaultOp, worker: usize) {
+        let Some(plan) = &self.fault else { return };
+        match plan.check(op, worker) {
+            Some(FaultAction::Panic(msg)) => panic!("{msg}"),
+            Some(FaultAction::Delay(d)) => {
+                log::warn!("injected fault: stalling worker {worker} for {d:?}");
+                std::thread::sleep(d);
+            }
+            None => {}
+        }
     }
 
     /// The policy this batcher schedules under.
@@ -408,25 +607,36 @@ impl Batcher {
     }
 
     /// Submit a request; blocks the calling thread until its response
-    /// arrives (other requests keep flowing meanwhile). Panics if the
-    /// batcher has already been shut down.
+    /// arrives (other requests keep flowing meanwhile). Every failure —
+    /// shutdown, shedding, deadline expiry, cancellation, a worker panic
+    /// — comes back as [`Response::error`], never as a panic in the
+    /// caller.
     pub fn submit(&self, req: Request) -> Response {
+        let id = req.id;
+        let enqueued = Instant::now();
         let (tx, rx) = std::sync::mpsc::channel();
-        let accepted = self.submit_with(
+        self.submit_with(
             req,
             Box::new(move |resp| {
                 let _ = tx.send(resp);
             }),
         );
-        assert!(accepted, "submit after batcher shutdown");
-        rx.recv().expect("batcher dropped reply channel")
+        // Every path fires the reply exactly once (accepted, shed, shut
+        // down, failed). The recv-error arm is pure defense: it can only
+        // trigger if a queued reply callback is dropped un-fired, e.g.
+        // by `drain_abandoned` racing a shutdown.
+        rx.recv().unwrap_or_else(|_| {
+            error_response(id, enqueued, "request dropped without a reply".into())
+        })
     }
 
     /// Submit a request with an explicit completion callback — the
     /// non-blocking form the TCP front-end uses so one connection can
     /// have many requests in flight (responses return out of order).
-    /// Returns `false` (dropping `reply` un-fired) if shutdown has
-    /// already been requested: no worker would ever serve the request.
+    /// `reply` fires **exactly once** on every path; if the request is
+    /// not accepted (shutdown already requested, or the bounded queue
+    /// shed it) the reply fires immediately with the error and this
+    /// returns `false`.
     pub fn submit_with(&self, req: Request, reply: ReplyFn) -> bool {
         self.enqueue(req, reply, None)
     }
@@ -439,24 +649,45 @@ impl Batcher {
     }
 
     fn enqueue(&self, req: Request, reply: ReplyFn, stream: Option<StreamFn>) -> bool {
+        let pend = Pending::new(req, reply, stream, &self.policy);
         {
             // The flag is checked under the queue lock — the same lock
             // under which workers make their final empty-queue exit
             // decision — so a request can never slip in between the
-            // workers' last drain and their exit.
+            // workers' last drain and their exit. Rejection replies fire
+            // outside the lock: a reply callback may itself re-enter the
+            // batcher.
             let mut q = self.queue.lock().unwrap();
             if self.shutdown.load(Ordering::SeqCst) {
+                drop(q);
+                (pend.reply)(error_response(
+                    pend.req.id,
+                    pend.enqueued,
+                    "server shutting down".into(),
+                ));
                 return false;
             }
-            q.push_back(Pending {
-                req,
-                enqueued: Instant::now(),
-                reply,
-                stream,
-            });
+            let depth = self.policy.max_queue_depth;
+            if depth > 0 && q.len() >= depth {
+                drop(q);
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                (pend.reply)(error_response(pend.req.id, pend.enqueued, "overloaded".into()));
+                return false;
+            }
+            q.push_back(pend);
         }
         self.cv.notify_all();
         true
+    }
+
+    /// Bump the counter matching a `"cancelled"` / `"timeout"` failure.
+    fn count_failure(&self, kind: &str) {
+        let counter = if kind == "cancelled" {
+            &self.metrics.cancelled
+        } else {
+            &self.metrics.timed_out
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Ask every worker loop to exit. Workers first drain what is already
@@ -581,11 +812,8 @@ impl Batcher {
         self.boards.lock().unwrap().get_mut(worker)?.pop_front()
     }
 
-    /// The continuous-batching engine worker loop. Runs until shutdown;
-    /// `worker` is this loop's id for per-worker metrics and its claim
-    /// board. Call on a dedicated thread with this worker's engine fork
-    /// (or use [`spawn_engine_workers`]).
-    pub fn worker_loop(&self, engine: &Engine, worker: usize) {
+    /// Make `worker`'s metrics and claim-board slots exist.
+    fn register_worker(&self, worker: usize) {
         {
             let mut wm = self.worker_metrics.lock().unwrap();
             if wm.len() <= worker {
@@ -598,14 +826,19 @@ impl Batcher {
                 boards.resize_with(worker + 1, VecDeque::new);
             }
         }
-        let max_ctx = engine.weights.cfg.max_seq_len;
+    }
+
+    /// One worker's owned serving state. Held **outside**
+    /// [`Batcher::worker_loop_inner`] so the supervisor can clean up
+    /// in-flight sequences (and keep the KV pool, with its retained
+    /// prefix-cache chains, alive) across a panic and respawn.
+    fn new_worker_state(&self, engine: &Engine) -> WorkerState {
         let nslots = self.policy.max_batch.max(1);
-        let chunk = self.policy.prefill_chunk;
         // Each worker owns a private paged pool (and prefix cache): KV
         // rows are written per token per layer, far too hot to share
         // across workers under a lock. Requests sharing a head therefore
         // reuse blocks when they land on the same worker.
-        let mut kv = engine.new_slot_pool_with(
+        let kv = engine.new_slot_pool_with(
             nslots,
             KvCacheConfig {
                 block_size: self.policy.kv_block_size.max(1),
@@ -614,8 +847,85 @@ impl Batcher {
                 ..KvCacheConfig::env_default()
             },
         );
-        let mut live: Vec<LiveSeq> = Vec::new();
-        let mut local = WorkerMetrics::default();
+        WorkerState {
+            kv,
+            live: Vec::new(),
+            local: WorkerMetrics::default(),
+        }
+    }
+
+    /// Publish a worker's per-iteration gauges and counters.
+    fn publish_worker_metrics(&self, worker: usize, state: &WorkerState) {
+        let mut local = state.local;
+        local.prefix_hit_tokens = state.kv.prefix_hit_tokens();
+        local.cache_blocks_in_use = state.kv.blocks_in_use() as u64;
+        local.slots_in_use = state.live.len() as u64;
+        self.worker_metrics.lock().unwrap()[worker] = local;
+    }
+
+    /// The continuous-batching engine worker loop, **unsupervised**: a
+    /// panic unwinds the calling thread. Runs until shutdown; `worker` is
+    /// this loop's id for per-worker metrics and its claim board. Call on
+    /// a dedicated thread with this worker's engine fork — or use
+    /// [`spawn_engine_workers`], which runs the supervised form.
+    pub fn worker_loop(&self, engine: &Engine, worker: usize) {
+        self.register_worker(worker);
+        let mut state = self.new_worker_state(engine);
+        self.worker_loop_inner(engine, worker, &mut state);
+        self.publish_worker_metrics(worker, &state);
+    }
+
+    /// [`Batcher::worker_loop`] under a panic supervisor: the loop runs
+    /// in `catch_unwind`, and on a panic (an engine bug, or an injected
+    /// `SALR_FAULT`) the supervisor (1) fails every in-flight sequence
+    /// with an error reply — nothing retires silently — freeing each KV
+    /// chain exactly, (2) bumps [`ServerMetrics::worker_restarts`], and
+    /// (3) re-enters the loop on a fresh [`Engine::fork`] of `engine`,
+    /// same queue, same claim board, same KV pool (retained prefix-cache
+    /// chains survive the respawn). One worker's crash never poisons its
+    /// siblings or the listener. Returns when shutdown drains normally.
+    pub fn supervised_worker_loop(&self, engine: &Engine, worker: usize) {
+        self.register_worker(worker);
+        let mut state = self.new_worker_state(engine);
+        loop {
+            let eng = engine.fork();
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                self.worker_loop_inner(&eng, worker, &mut state)
+            }));
+            match run {
+                Ok(()) => break, // clean shutdown drain
+                Err(payload) => {
+                    let msg = panic_message(payload.as_ref());
+                    self.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                    log::error!(
+                        "engine worker {worker} panicked ({msg}); failing {} in-flight \
+                         request(s) and respawning",
+                        state.live.len()
+                    );
+                    for seq in std::mem::take(&mut state.live) {
+                        // A panic can land mid-forward, leaving the slot's
+                        // per-layer lengths inconsistent; free() releases
+                        // whatever the chain holds, exactly.
+                        state.kv.free(seq.slot);
+                        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        (seq.reply)(error_response(
+                            seq.id,
+                            seq.enqueued,
+                            format!("worker panicked mid-request: {msg}"),
+                        ));
+                    }
+                    self.publish_worker_metrics(worker, &state);
+                }
+            }
+        }
+        self.publish_worker_metrics(worker, &state);
+    }
+
+    fn worker_loop_inner(&self, engine: &Engine, worker: usize, state: &mut WorkerState) {
+        let max_ctx = engine.weights.cfg.max_seq_len;
+        let nslots = self.policy.max_batch.max(1);
+        let chunk = self.policy.prefill_chunk;
+        let WorkerState { kv, live, local } = state;
 
         loop {
             // --- 1. admit: claim waiting requests (or steal) ---
@@ -634,22 +944,27 @@ impl Batcher {
             };
             self.push_board(worker, admitted);
 
+            // --- 1b. reap: the step boundary where cancellation and
+            // deadline expiry take effect for live sequences ---
+            self.reap_expired(live, kv);
+
             // --- 2. prefill: at most one `chunk`-sized bite this round ---
-            self.prefill_one_chunk(engine, worker, &mut live, &mut kv, max_ctx, chunk);
+            self.prefill_one_chunk(engine, worker, live, kv, max_ctx, chunk);
             // Retire sequences already at budget (single-token requests
             // complete on their final prefill chunk alone).
-            self.retire_finished(&mut live, &mut kv, &mut local);
+            self.retire_finished(live, kv, local);
 
             // --- 3. one decode iteration over the fully-prefilled batch ---
             let ready: Vec<usize> = (0..live.len())
                 .filter(|&i| live[i].prefill_done())
                 .collect();
             if !ready.is_empty() {
+                self.fault_point(FaultOp::DecodeStep, worker);
                 let current: Vec<i32> = ready.iter().map(|&i| live[i].current).collect();
                 let slots: Vec<usize> = ready.iter().map(|&i| live[i].slot).collect();
                 self.metrics.record_step(ready.len());
                 local.steps += 1;
-                let next = engine.decode_step(&current, &slots, &mut kv);
+                let next = engine.decode_step(&current, &slots, kv);
                 for (j, &i) in ready.iter().enumerate() {
                     let seq = &mut live[i];
                     seq.current = next[j];
@@ -660,17 +975,37 @@ impl Batcher {
                 // request's reply fires before (and its latency never
                 // absorbs) the next round's prefill chunk — and so the
                 // freed slots count toward the next round's room.
-                self.retire_finished(&mut live, &mut kv, &mut local);
+                self.retire_finished(live, kv, local);
             }
             // Publish per-worker counters (cheap: one short lock per
             // iteration, far below the forward-pass cost).
             local.prefix_hit_tokens = kv.prefix_hit_tokens();
             local.cache_blocks_in_use = kv.blocks_in_use() as u64;
-            self.worker_metrics.lock().unwrap()[worker] = local;
+            local.slots_in_use = live.len() as u64;
+            self.worker_metrics.lock().unwrap()[worker] = *local;
         }
-        local.prefix_hit_tokens = kv.prefix_hit_tokens();
-        local.cache_blocks_in_use = kv.blocks_in_use() as u64;
-        self.worker_metrics.lock().unwrap()[worker] = local;
+    }
+
+    /// Retire every live sequence whose [`CancelToken`] has latched or
+    /// whose deadline has passed: free its KV chain (exactly — shared
+    /// prefix blocks refcount back to baseline), fire its reply with
+    /// `error: "cancelled"` / `"timeout"`, and discard partial output.
+    /// Called once per scheduler iteration — the "next step boundary"
+    /// the [`Request`] docs promise.
+    fn reap_expired(&self, live: &mut Vec<LiveSeq>, kv: &mut KvSlotPool) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < live.len() {
+            match failure_kind(&live[i].cancel, live[i].deadline, now) {
+                Some(kind) => {
+                    let seq = live.swap_remove(i);
+                    kv.free(seq.slot);
+                    self.count_failure(kind);
+                    (seq.reply)(error_response(seq.id, seq.enqueued, kind.into()));
+                }
+                None => i += 1,
+            }
+        }
     }
 
     /// Run one prefill chunk: continue the oldest mid-prefill sequence,
@@ -689,6 +1024,13 @@ impl Batcher {
         let mut target = live.iter().position(|s| !s.prefill_done());
         if target.is_none() && live.len() < kv.capacity() {
             while let Some(p) = self.pop_board(worker) {
+                // Admission-time failure check: a request cancelled or
+                // expired while it waited never allocates a slot.
+                if let Some(kind) = p.failed(Instant::now()) {
+                    self.count_failure(kind);
+                    (p.reply)(error_response(p.req.id, p.enqueued, kind.into()));
+                    continue;
+                }
                 match prepare_prompt(&p.req, max_ctx) {
                     Err(msg) => {
                         // Rejected before any KV state exists: error reply,
@@ -726,6 +1068,8 @@ impl Batcher {
                             stream: p.stream,
                             enqueued: p.enqueued,
                             admitted: Instant::now(),
+                            deadline: p.deadline,
+                            cancel: p.cancel,
                             prompt: toks,
                             prefilled: hit,
                             current: 0,
@@ -742,6 +1086,7 @@ impl Batcher {
         let Some(i) = target else {
             return;
         };
+        self.fault_point(FaultOp::PrefillChunk, worker);
         let seq = &mut live[i];
         let remaining = seq.prompt.len() - seq.prefilled;
         let take = if chunk == 0 { remaining } else { chunk.min(remaining) };
@@ -853,8 +1198,11 @@ fn prepare_prompt(req: &Request, max_ctx: usize) -> Result<(Vec<i32>, usize), St
 /// Spawn `engine_workers` (per the batcher's policy) engine worker
 /// threads over forks of `engine`, giving each fork a **private** worker
 /// pool holding an even share of `num_threads` (0 = all cores) GEMM
-/// threads. Returns the join handles; call [`Batcher::shutdown`] then
-/// join to stop.
+/// threads. Each thread runs [`Batcher::supervised_worker_loop`], so a
+/// panicking worker fails its in-flight requests with error replies and
+/// is respawned in place — the returned join handles complete normally
+/// even across worker panics. Call [`Batcher::shutdown`] then join to
+/// stop.
 pub fn spawn_engine_workers(
     batcher: &Arc<Batcher>,
     engine: Engine,
@@ -880,7 +1228,7 @@ pub fn spawn_engine_workers(
         handles.push(
             std::thread::Builder::new()
                 .name(format!("salr-engine-{w}"))
-                .spawn(move || b.worker_loop(&eng, w))
+                .spawn(move || b.supervised_worker_loop(&eng, w))
                 .expect("spawn engine worker"),
         );
     }
@@ -931,6 +1279,7 @@ mod tests {
                     id: i,
                     prompt: format!("Q: {i}+1=? A: "),
                     max_tokens: 3,
+                    ..Default::default()
                 })
             }));
         }
@@ -967,11 +1316,13 @@ mod tests {
                 id: 1,
                 prompt: "Q: 2+2=? A: ".into(),
                 max_tokens: 4,
+                ..Default::default()
             });
             let r2 = batcher.submit(Request {
                 id: 2,
                 prompt: "Q: 2+2=? A: ".into(),
                 max_tokens: 4,
+                ..Default::default()
             });
             assert_eq!(r1.text, r2.text, "chunk={chunk}");
             texts.push(r1.text);
@@ -1003,6 +1354,7 @@ mod tests {
                 id: 1,
                 prompt: "Q: 10+20=? A: ".into(),
                 max_tokens: 80,
+                ..Default::default()
             })
         });
         // …wait until it is actually decoding, then admit a second one
@@ -1016,6 +1368,7 @@ mod tests {
             id: 2,
             prompt: "Q: 1+1=? A: ".into(),
             max_tokens: 2,
+            ..Default::default()
         });
         assert_eq!(short.tokens, 2);
         let long_resp = long.join().unwrap();
@@ -1053,6 +1406,7 @@ mod tests {
                 id: 9,
                 prompt: "Q: 3+4=? A: ".into(),
                 max_tokens: 6,
+                ..Default::default()
             },
             Box::new(move |delta| d.lock().unwrap().push_str(delta)),
             Box::new(move |resp| {
@@ -1073,6 +1427,7 @@ mod tests {
             id: 10,
             prompt: "Q: 3+4=? A: ".into(),
             max_tokens: 6,
+            ..Default::default()
         });
         assert_eq!(plain.text, resp.text);
         batcher.shutdown();
@@ -1093,6 +1448,7 @@ mod tests {
             id: 1,
             prompt: "x".repeat(200),
             max_tokens: 4,
+            ..Default::default()
         });
         assert!(bad.error.is_some(), "over-long prompt must be rejected");
         assert_eq!(bad.tokens, 0);
@@ -1107,6 +1463,7 @@ mod tests {
                     id: 10 + i,
                     prompt: format!("Q: {i}+2=? A: "),
                     max_tokens: 3,
+                    ..Default::default()
                 })
             }));
         }
@@ -1142,8 +1499,11 @@ mod tests {
                         id: i,
                         prompt: format!("Q: {i}+5=? A: "),
                         max_tokens: 3,
+                        ..Default::default()
                     },
                     enqueued: Instant::now(),
+                    deadline: None,
+                    cancel: None,
                     reply: Box::new(move |resp| {
                         let _ = tx.send(resp);
                     }),
@@ -1199,6 +1559,7 @@ mod tests {
                         id: i as u64,
                         prompt: p.clone(),
                         max_tokens: 3,
+                        ..Default::default()
                     });
                     assert!(r.error.is_none());
                     r.text
@@ -1240,19 +1601,86 @@ mod tests {
     }
 
     #[test]
-    fn submit_after_shutdown_is_rejected() {
+    fn submit_after_shutdown_gets_error_reply_not_silence() {
         let batcher = Batcher::new(BatchPolicy::default());
         batcher.shutdown();
+        let (tx, rx) = std::sync::mpsc::channel();
         let ok = batcher.submit_with(
             Request {
                 id: 1,
                 prompt: "x".into(),
                 max_tokens: 1,
+                ..Default::default()
             },
-            Box::new(|_| panic!("reply must not fire for a rejected request")),
+            Box::new(move |resp| {
+                let _ = tx.send(resp);
+            }),
         );
-        assert!(!ok, "post-shutdown submissions must be rejected");
+        assert!(!ok, "post-shutdown submissions must not be queued");
+        let resp = rx.recv().expect("a rejected submission still gets its reply");
+        assert_eq!(resp.error.as_deref(), Some("server shutting down"));
         assert_eq!(batcher.drain_abandoned(), 0, "nothing may have been queued");
+        // The blocking form degrades to an error response, not a panic.
+        let resp = batcher.submit(Request {
+            id: 2,
+            prompt: "x".into(),
+            max_tokens: 1,
+            ..Default::default()
+        });
+        assert_eq!(resp.error.as_deref(), Some("server shutting down"));
+    }
+
+    #[test]
+    fn bounded_queue_sheds_overflow_immediately() {
+        // No workers: the queue cannot drain, so submissions past the
+        // depth bound must be shed synchronously with `overloaded`.
+        let batcher = Batcher::new(BatchPolicy {
+            max_queue_depth: 2,
+            ..Default::default()
+        });
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut accepted = Vec::new();
+        for i in 0..4 {
+            let tx = tx.clone();
+            accepted.push(batcher.submit_with(
+                Request {
+                    id: i,
+                    prompt: "x".into(),
+                    max_tokens: 1,
+                    ..Default::default()
+                },
+                Box::new(move |resp| {
+                    let _ = tx.send(resp);
+                }),
+            ));
+        }
+        assert_eq!(accepted, vec![true, true, false, false]);
+        let shed: Vec<Response> = rx.try_iter().collect();
+        assert_eq!(shed.len(), 2, "overflow replies fire immediately");
+        for resp in &shed {
+            assert_eq!(resp.error.as_deref(), Some("overloaded"));
+        }
+        assert_eq!(batcher.metrics.shed.load(Ordering::Relaxed), 2);
+        assert_eq!(batcher.drain_abandoned(), 2, "the bounded queue held only 2");
+    }
+
+    #[test]
+    fn cancel_token_latches_and_cancel_wins_over_deadline() {
+        let token = CancelToken::new();
+        assert!(!token.is_cancelled());
+        token.cancel();
+        token.cancel();
+        assert!(token.is_cancelled(), "cancel is a one-way latch");
+        let now = Instant::now();
+        let expired = now.checked_sub(Duration::from_millis(1));
+        assert_eq!(failure_kind(&None, None, now), None);
+        assert_eq!(failure_kind(&None, expired, now), Some("timeout"));
+        assert_eq!(failure_kind(&Some(token.clone()), None, now), Some("cancelled"));
+        assert_eq!(
+            failure_kind(&Some(token), expired, now),
+            Some("cancelled"),
+            "a cancelled-and-expired request reports the caller's action"
+        );
     }
 
     #[test]
@@ -1261,6 +1689,7 @@ mod tests {
             id: 0,
             prompt: "x".repeat(20),
             max_tokens: 1000,
+            ..Default::default()
         };
         let (toks, budget) = prepare_prompt(&fits, 96).expect("budget clamps into context");
         assert_eq!(toks.len(), 20);
@@ -1269,12 +1698,14 @@ mod tests {
             id: 0,
             prompt: "x".repeat(500),
             max_tokens: 4,
+            ..Default::default()
         };
         assert!(prepare_prompt(&too_long, 96).is_err(), "over-long prompt rejected");
         let empty = Request {
             id: 0,
             prompt: String::new(),
             max_tokens: 4,
+            ..Default::default()
         };
         let (toks, budget) = prepare_prompt(&empty, 96).unwrap();
         assert_eq!(toks.len(), 1);

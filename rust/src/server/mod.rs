@@ -9,6 +9,14 @@
 //! queues are bounded — a slow reader is disconnected, never an
 //! unbounded buffer or a blocked engine worker.
 //!
+//! The tier carries a **failure model** end to end: per-request
+//! deadlines and [`CancelToken`]s (wired to disconnects and the `cancel`
+//! wire command), bounded admission with `overloaded` shedding, and
+//! panic **supervision** of every engine worker (failed-over with error
+//! replies, no KV leaks, `worker_restarts` counted) — exercised
+//! deterministically by the `SALR_FAULT` op-counter fault-injection
+//! harness (`util::fault`).
+//!
 //! See DESIGN.md "Serving layer" and "KV cache subsystem" for the
 //! scheduler, the block/prefix-cache lifecycle, the
 //! chunked-prefill/streaming wire protocol, and the determinism
@@ -19,7 +27,7 @@ mod batcher;
 mod tcp;
 
 pub use batcher::{
-    spawn_engine_workers, BatchPolicy, Batcher, ReplyFn, Request, Response, ServerMetrics,
-    StreamFn, WorkerMetrics,
+    spawn_engine_workers, BatchPolicy, Batcher, CancelToken, ReplyFn, Request, Response,
+    ServerMetrics, StreamFn, WorkerMetrics,
 };
-pub use tcp::{serve, Client};
+pub use tcp::{serve, serve_on, Client};

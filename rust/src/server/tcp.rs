@@ -37,18 +37,43 @@
 //! alternative, blocking the sender, would let one dead client stall
 //! every sequence on an engine worker.
 //!
+//! **Deadlines + cancellation**: a generation request may carry
+//! `"timeout_ms": N` — the batcher retires it with `{"id": …, "error":
+//! "timeout"}` if it has not completed `N` ms after submission
+//! (`--default-deadline-ms` applies one to every request that doesn't
+//! set its own). `{"cmd": "cancel", "id": N}` cancels in-flight request
+//! `N` *of this connection* (tokens are connection-scoped; the ack is
+//! `{"cmd": "cancel", "ok": bool}`, and the cancelled request still gets
+//! its final `error: "cancelled"` frame). A connection that drops — EOF,
+//! write error, slow-reader severing — cancels **all** of its in-flight
+//! requests automatically, so dead clients stop consuming decode steps
+//! and KV blocks. Pipelining clients that reuse an id for two
+//! simultaneously in-flight requests forfeit cancellation of the older
+//! one (ids should be unique per connection anyway, see above).
+//!
+//! **Idle timeout**: with `--idle-timeout-ms N`, a connection with no
+//! in-flight requests that sends nothing for `N` ms is closed, so
+//! half-open sockets don't pin reader/writer threads for the life of
+//! the process. Connections with requests still in flight are never
+//! idle-closed.
+//!
 //! Control commands: `{"cmd": "metrics"}` returns aggregate serving
-//! metrics; `{"cmd": "shutdown"}` stops the server.
+//! metrics; `{"cmd": "cancel", "id": N}` cancels an in-flight request;
+//! `{"cmd": "shutdown"}` stops the server.
 
-use super::batcher::{spawn_engine_workers, BatchPolicy, Batcher, Request, Response};
+use super::batcher::{
+    spawn_engine_workers, BatchPolicy, Batcher, CancelToken, Request, Response,
+};
 use crate::infer::Engine;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Bounded, non-blocking sender for one connection's reply/stream
 /// frames. The first overflow *poisons* the connection: the socket is
@@ -110,6 +135,21 @@ pub fn serve(
     policy: BatchPolicy,
     ready: Option<Sender<std::net::SocketAddr>>,
 ) -> Result<()> {
+    serve_on(engine, addr, Batcher::new(policy), ready)
+}
+
+/// [`serve`] over a caller-built [`Batcher`] (engine workers are spawned
+/// here either way). This is the injection point for pairing the TCP
+/// front-end with [`Batcher::with_fault`] in deterministic fault tests;
+/// `serve` itself builds the batcher from the policy (arming `SALR_FAULT`
+/// if set).
+pub fn serve_on(
+    engine: Engine,
+    addr: &str,
+    batcher: Arc<Batcher>,
+    ready: Option<Sender<std::net::SocketAddr>>,
+) -> Result<()> {
+    let policy = *batcher.policy();
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
     log::info!(
@@ -125,7 +165,6 @@ pub fn serve(
     if let Some(tx) = ready {
         let _ = tx.send(local);
     }
-    let batcher = Batcher::new(policy);
     let workers = spawn_engine_workers(&batcher, engine);
     let next_id = Arc::new(AtomicU64::new(1));
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -192,13 +231,21 @@ fn final_frame(resp: Response, done_marker: bool) -> Json {
 /// The reader (this thread) parses requests and submits them without
 /// blocking; a dedicated writer thread owns the stream's write half and
 /// serializes every reply line — delta frames included — in completion
-/// order.
+/// order. Every in-flight generation request holds a [`CancelToken`] in
+/// this connection's table: the `cancel` command latches one, and *any*
+/// exit from the read loop (EOF, error, idle close) latches them all, so
+/// a dead connection's requests stop consuming compute at their next
+/// scheduler boundary.
 fn handle_conn(
     stream: TcpStream,
     batcher: &Batcher,
     next_id: &AtomicU64,
     frame_cap: usize,
 ) -> Result<bool> {
+    let idle_ms = batcher.policy().idle_timeout_ms;
+    if idle_ms > 0 {
+        stream.set_read_timeout(Some(Duration::from_millis(idle_ms)))?;
+    }
     let mut reader = BufReader::new(stream.try_clone()?);
     // All replies (generation completions + stream deltas + command
     // responses + errors) go through one **bounded** channel so
@@ -214,27 +261,62 @@ fn handle_conn(
             }
         }
     });
+    // Cancellation handles for this connection's in-flight generation
+    // requests, keyed by request id. Entries are inserted before
+    // submission and removed by the completion callback.
+    let inflight: Arc<Mutex<HashMap<u64, CancelToken>>> = Arc::new(Mutex::new(HashMap::new()));
     let mut line = String::new();
-    let shutdown = loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            break false; // client closed
+    let outcome: Result<bool> = loop {
+        // NB: `line` is cleared after each *processed* line, not here — an
+        // idle-timeout tick can split one line across several read_line
+        // calls, which append to the same buffer.
+        let n = match reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // Idle tick. Close only a connection with nothing in
+                // flight: a client quietly awaiting a long generation is
+                // not idle, and its replies keep flowing regardless.
+                if inflight.lock().unwrap().is_empty() {
+                    log::info!("closing idle connection (silent for {idle_ms} ms)");
+                    break Ok(false);
+                }
+                continue;
+            }
+            Err(e) => break Err(e.into()),
+        };
+        if n == 0 {
+            break Ok(false); // client closed
         }
         let msg = match Json::parse(line.trim()) {
             Ok(m) => m,
             Err(e) => {
                 let err = Json::obj().set("error", format!("bad json: {e}"));
                 let _ = reply_tx.send(err.to_string_compact());
+                line.clear();
                 continue;
             }
         };
+        line.clear();
         match msg.get("cmd").and_then(Json::as_str) {
             Some("shutdown") => {
                 let _ = reply_tx.send(Json::obj().set("ok", true).to_string_compact());
-                break true;
+                break Ok(true);
             }
             Some("metrics") => {
                 let _ = reply_tx.send(render_metrics(batcher).to_string_compact());
+            }
+            Some("cancel") => {
+                // Latch the token of one of *this connection's* in-flight
+                // requests. `ok: false` = no such request (unknown id,
+                // already completed, or another connection's).
+                let target = parse_id(&msg);
+                let token = target.and_then(|id| inflight.lock().unwrap().get(&id).cloned());
+                let hit = token.is_some_and(|t| {
+                    t.cancel();
+                    true
+                });
+                let ack = Json::obj().set("cmd", "cancel").set("ok", hit);
+                let _ = reply_tx.send(ack.to_string_compact());
             }
             _ => {
                 let prompt = msg
@@ -251,25 +333,31 @@ fn handle_conn(
                     .get("stream")
                     .and_then(Json::as_bool)
                     .unwrap_or(false);
-                // Ids must be non-negative integers ≤ 2^53 (JSON numbers
-                // are f64 here); anything else gets a server-assigned id,
-                // which the reply echoes.
-                let id = msg
-                    .get("id")
+                let timeout_ms = msg
+                    .get("timeout_ms")
                     .and_then(Json::as_f64)
                     .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n <= 9_007_199_254_740_992.0)
-                    .map(|n| n as u64)
-                    .unwrap_or_else(|| next_id.fetch_add(1, Ordering::Relaxed));
+                    .map(|n| n as u64);
+                let id = parse_id(&msg).unwrap_or_else(|| next_id.fetch_add(1, Ordering::Relaxed));
+                let token = CancelToken::new();
+                inflight.lock().unwrap().insert(id, token.clone());
                 let req = Request {
                     id,
                     prompt,
                     max_tokens,
+                    timeout_ms,
+                    cancel: Some(token),
                 };
                 let tx = reply_tx.clone();
+                let inflight_done = inflight.clone();
                 let reply = Box::new(move |resp: Response| {
+                    inflight_done.lock().unwrap().remove(&resp.id);
                     let _ = tx.send(final_frame(resp, streaming).to_string_compact());
                 });
-                let accepted = if streaming {
+                // Rejections (shutdown, queue shedding) fire `reply`
+                // themselves — error text, done marker and the inflight
+                // removal included — so both branches need no follow-up.
+                if streaming {
                     let tx = reply_tx.clone();
                     let mut seq = 0u64;
                     batcher.submit_stream_with(
@@ -283,29 +371,33 @@ fn handle_conn(
                             let _ = tx.send(frame.to_string_compact());
                         }),
                         reply,
-                    )
+                    );
                 } else {
-                    batcher.submit_with(req, reply)
-                };
-                if !accepted {
-                    let mut err = Json::obj()
-                        .set("id", id)
-                        .set("error", "server shutting down");
-                    if streaming {
-                        // Streamed requests always terminate with a
-                        // done-tagged frame, error or not.
-                        err = err.set("done", true);
-                    }
-                    let _ = reply_tx.send(err.to_string_compact());
+                    batcher.submit_with(req, reply);
                 }
             }
         }
     };
+    // However the read loop ended — clean EOF, shutdown, idle close or a
+    // socket error — cancel whatever this connection still has in
+    // flight: nobody is left to read the replies.
+    for (_, token) in inflight.lock().unwrap().drain() {
+        token.cancel();
+    }
     // Drop our sender; the writer exits once every in-flight completion
     // has been delivered (their callbacks hold the remaining clones).
     drop(reply_tx);
     let _ = writer_thread.join();
-    Ok(shutdown)
+    outcome
+}
+
+/// The request id, when present and valid. Ids must be non-negative
+/// integers ≤ 2^53 (JSON numbers are f64 in this codec).
+fn parse_id(msg: &Json) -> Option<u64> {
+    msg.get("id")
+        .and_then(Json::as_f64)
+        .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n <= 9_007_199_254_740_992.0)
+        .map(|n| n as u64)
 }
 
 /// Aggregate metrics as a JSON object (the `{"cmd":"metrics"}` reply).
@@ -323,6 +415,7 @@ fn render_metrics(batcher: &Batcher) -> Json {
                     .set("retired", w.retired)
                     .set("prefix_hit_tokens", w.prefix_hit_tokens)
                     .set("cache_blocks_in_use", w.cache_blocks_in_use)
+                    .set("slots_in_use", w.slots_in_use)
             })
             .collect(),
     );
@@ -355,6 +448,13 @@ fn render_metrics(batcher: &Batcher) -> Json {
         .set("cache_blocks_in_use", cache_blocks_total)
         .set("stolen", batcher.metrics.stolen.load(Ordering::Relaxed))
         .set("rejected", batcher.metrics.rejected.load(Ordering::Relaxed))
+        .set("shed", batcher.metrics.shed.load(Ordering::Relaxed))
+        .set("cancelled", batcher.metrics.cancelled.load(Ordering::Relaxed))
+        .set("timeout", batcher.metrics.timed_out.load(Ordering::Relaxed))
+        .set(
+            "worker_restarts",
+            batcher.metrics.worker_restarts.load(Ordering::Relaxed),
+        )
         .set("latency_p50_ms", p50)
         .set("latency_p90_ms", p90)
         .set("latency_p99_ms", p99)
@@ -432,6 +532,15 @@ impl Client {
                 None => return Ok(frame),
             }
         }
+    }
+
+    /// Ask the server to cancel in-flight request `id` submitted on this
+    /// connection. Fire-and-forget: the ack frame
+    /// (`{"cmd":"cancel","ok":bool}`) and the cancelled request's final
+    /// `error: "cancelled"` frame both arrive via [`Client::recv`] — a
+    /// pipelining concern, so no blocking wrapper is offered.
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        self.send(&Json::obj().set("cmd", "cancel").set("id", id))
     }
 
     /// Fetch aggregate serving metrics.

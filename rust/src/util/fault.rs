@@ -1,0 +1,279 @@
+//! Deterministic fault injection for the serving tier.
+//!
+//! A fault plan arms **one** injected failure, described by a spec string
+//! (the `SALR_FAULT` environment variable, or [`FaultPlan::parse`] in
+//! tests):
+//!
+//! ```text
+//! <kind>:<key>=<val>[,<key>=<val>...]
+//! ```
+//!
+//! | clause          | meaning                                                    |
+//! |-----------------|------------------------------------------------------------|
+//! | `panic:`        | panic the worker thread when the trigger fires (exercises the supervisor) |
+//! | `delay:`        | stall the worker thread when the trigger fires             |
+//! | `decode_step=N` | trigger before a worker's `N`-th decode step (1-based)     |
+//! | `prefill=N`     | trigger before a worker's `N`-th prefill chunk (1-based)   |
+//! | `worker=N`      | only engine worker `N` may fire the fault (default: any)   |
+//! | `ms=N`          | stall duration for `delay` faults (default 25 ms)          |
+//!
+//! Examples: `panic:worker=1,decode_step=37` panics engine worker 1
+//! immediately before its 37th decode step; `delay:prefill=3` stalls
+//! whichever worker first reaches its third prefill chunk.
+//!
+//! Triggers are keyed on **op counters** — each worker's count of decode
+//! steps / prefill chunks — never on wall-clock time, so every injected
+//! failure lands at the same scheduler boundary on every run: the same
+//! determinism discipline the kernel and cache layers follow. A plan is
+//! **one-shot**: it fires exactly once per process, then disarms, so a
+//! worker respawned by the supervisor does not immediately re-fault.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// The scheduler operation a fault trigger counts.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum FaultOp {
+    /// One `Engine::decode_step` call in an engine-worker loop.
+    DecodeStep,
+    /// One `Engine::prefill_chunk` call in an engine-worker loop.
+    PrefillChunk,
+}
+
+impl FaultOp {
+    fn name(self) -> &'static str {
+        match self {
+            FaultOp::DecodeStep => "decode_step",
+            FaultOp::PrefillChunk => "prefill",
+        }
+    }
+}
+
+/// What an armed fault does when its trigger fires.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic the calling worker thread with this message.
+    Panic(String),
+    /// Stall the calling worker thread for this long.
+    Delay(Duration),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FaultKind {
+    Panic,
+    Delay(Duration),
+}
+
+/// A parsed, armed fault-injection plan (see the module docs for the
+/// spec grammar). Shared by every worker of one batcher; interior
+/// mutability keeps [`FaultPlan::check`] callable from `&self`.
+#[derive(Debug)]
+pub struct FaultPlan {
+    kind: FaultKind,
+    op: FaultOp,
+    /// 1-based trigger count: fire before the `at`-th matching op.
+    at: u64,
+    /// Restrict firing to this worker id (`None` = any worker).
+    worker: Option<usize>,
+    fired: AtomicBool,
+    /// Per-worker counts of the plan's op, keyed by worker id.
+    counters: Mutex<HashMap<usize, u64>>,
+}
+
+impl FaultPlan {
+    /// Parse a fault spec (`panic:worker=1,decode_step=37`). Errors
+    /// describe the offending clause.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let (kind_s, rest) = spec
+            .split_once(':')
+            .ok_or_else(|| "expected `<kind>:<key>=<val>,...`".to_string())?;
+        let mut trigger: Option<(FaultOp, u64)> = None;
+        let mut worker = None;
+        let mut ms = None;
+        for clause in rest.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (k, v) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("bad clause {clause:?}: expected key=value"))?;
+            let n: u64 = v
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad value in {clause:?}: expected an integer"))?;
+            match k.trim() {
+                "worker" => worker = Some(n as usize),
+                "decode_step" | "prefill" => {
+                    if trigger.is_some() {
+                        return Err("exactly one trigger (decode_step=N or prefill=N)".into());
+                    }
+                    let op = if k.trim() == "prefill" {
+                        FaultOp::PrefillChunk
+                    } else {
+                        FaultOp::DecodeStep
+                    };
+                    trigger = Some((op, n));
+                }
+                "ms" => ms = Some(n),
+                other => return Err(format!("unknown key {other:?}")),
+            }
+        }
+        let (op, at) =
+            trigger.ok_or_else(|| "spec needs a trigger: decode_step=N or prefill=N".to_string())?;
+        if at == 0 {
+            return Err("trigger counts are 1-based: use decode_step=1 for the first step".into());
+        }
+        let kind = match kind_s.trim() {
+            "panic" => {
+                if ms.is_some() {
+                    return Err("ms= only applies to delay faults".into());
+                }
+                FaultKind::Panic
+            }
+            "delay" => FaultKind::Delay(Duration::from_millis(ms.unwrap_or(25))),
+            other => return Err(format!("unknown fault kind {other:?} (expected panic|delay)")),
+        };
+        Ok(FaultPlan {
+            kind,
+            op,
+            at,
+            worker,
+            fired: AtomicBool::new(false),
+            counters: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The plan armed by the `SALR_FAULT` environment variable, if set.
+    /// A malformed spec panics at startup — a fault plan silently
+    /// misparsed would make a CI fault leg silently test nothing.
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var("SALR_FAULT").ok()?;
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(spec) {
+            Ok(plan) => {
+                log::warn!("SALR_FAULT armed: {spec}");
+                Some(plan)
+            }
+            Err(e) => panic!("invalid SALR_FAULT spec {spec:?}: {e}"),
+        }
+    }
+
+    /// Count one occurrence of `op` on `worker` and return the action to
+    /// take if this is the plan's trigger point. Workers call this at the
+    /// op boundary; counting happens for every matching op so the
+    /// trigger's position is independent of which worker fires first.
+    pub fn check(&self, op: FaultOp, worker: usize) -> Option<FaultAction> {
+        if op != self.op {
+            return None;
+        }
+        let count = {
+            let mut counters = self.counters.lock().unwrap();
+            let c = counters.entry(worker).or_insert(0);
+            *c += 1;
+            *c
+        };
+        if let Some(w) = self.worker {
+            if w != worker {
+                return None;
+            }
+        }
+        if count != self.at {
+            return None;
+        }
+        if self.fired.swap(true, Ordering::SeqCst) {
+            return None; // one-shot: already fired elsewhere
+        }
+        Some(match self.kind {
+            FaultKind::Panic => FaultAction::Panic(format!(
+                "injected fault: panic before {} #{} on worker {worker}",
+                self.op.name(),
+                self.at
+            )),
+            FaultKind::Delay(d) => FaultAction::Delay(d),
+        })
+    }
+
+    /// Has the plan's one shot been spent?
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_examples() {
+        let p = FaultPlan::parse("panic:worker=1,decode_step=37").unwrap();
+        assert_eq!(p.op, FaultOp::DecodeStep);
+        assert_eq!(p.at, 37);
+        assert_eq!(p.worker, Some(1));
+        assert_eq!(p.kind, FaultKind::Panic);
+        let d = FaultPlan::parse("delay:prefill=3").unwrap();
+        assert_eq!(d.op, FaultOp::PrefillChunk);
+        assert_eq!(d.at, 3);
+        assert_eq!(d.worker, None);
+        assert_eq!(d.kind, FaultKind::Delay(Duration::from_millis(25)));
+        let d = FaultPlan::parse("delay:decode_step=2,ms=400").unwrap();
+        assert_eq!(d.kind, FaultKind::Delay(Duration::from_millis(400)));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "panic",
+            "panic:",
+            "boom:decode_step=1",
+            "panic:decode_step=0",
+            "panic:decode_step=1,prefill=2",
+            "panic:worker=1",
+            "panic:decode_step=x",
+            "panic:decode_step=1,ms=5",
+            "panic:decode_step=1,frobnicate=2",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec {bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn fires_once_at_the_counted_op_on_the_matching_worker() {
+        let p = FaultPlan::parse("panic:worker=1,decode_step=3").unwrap();
+        // Worker 0 sails past its own third step: wrong worker.
+        for _ in 0..5 {
+            assert_eq!(p.check(FaultOp::DecodeStep, 0), None);
+        }
+        // Prefill chunks on worker 1 do not advance the decode counter.
+        assert_eq!(p.check(FaultOp::PrefillChunk, 1), None);
+        assert_eq!(p.check(FaultOp::DecodeStep, 1), None); // step 1
+        assert_eq!(p.check(FaultOp::DecodeStep, 1), None); // step 2
+        assert!(!p.fired());
+        let action = p.check(FaultOp::DecodeStep, 1); // step 3: fire
+        assert!(matches!(action, Some(FaultAction::Panic(_))));
+        assert!(p.fired());
+        // One-shot: the respawned worker's steps never re-fire.
+        for _ in 0..5 {
+            assert_eq!(p.check(FaultOp::DecodeStep, 1), None);
+        }
+    }
+
+    #[test]
+    fn unfiltered_plan_fires_on_whichever_worker_counts_there_first() {
+        let p = FaultPlan::parse("delay:decode_step=2,ms=7").unwrap();
+        assert_eq!(p.check(FaultOp::DecodeStep, 3), None); // worker 3, step 1
+        assert_eq!(p.check(FaultOp::DecodeStep, 0), None); // worker 0, step 1
+        assert_eq!(
+            p.check(FaultOp::DecodeStep, 0), // worker 0 reaches step 2 first
+            Some(FaultAction::Delay(Duration::from_millis(7)))
+        );
+        // Worker 3's own second step arrives after the shot is spent.
+        assert_eq!(p.check(FaultOp::DecodeStep, 3), None);
+    }
+}

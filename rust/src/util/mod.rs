@@ -8,6 +8,9 @@
 #[warn(missing_docs)]
 pub mod arena;
 pub mod bench;
+// Same documented-API guarantee as `arena`.
+#[warn(missing_docs)]
+pub mod fault;
 pub mod json;
 pub mod logger;
 pub mod mem;

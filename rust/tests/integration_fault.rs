@@ -1,0 +1,725 @@
+//! Fault-tolerance integration: the serving tier under injected panics,
+//! delays, cancellation, deadlines, load shedding and dead connections.
+//!
+//! Every failure here is **deterministic**: panics and stalls are keyed
+//! on per-worker op counters via [`FaultPlan`] (never wall-clock), shed
+//! tests fill the bounded queue before any worker exists, admission-time
+//! deadline tests use `timeout_ms: 0`, and mid-flight cancel/timeout
+//! tests ride a `delay:` fault whose stall dwarfs every other latency in
+//! the test. The acceptance bars (ISSUE 6): a panicking worker fails its
+//! in-flight requests with error replies and is respawned while
+//! survivors stay byte-identical to the fault-free oracle, and every
+//! abnormal exit — cancelled, timed out, shed, panic-failed — returns
+//! the KV accounting gauges exactly to their pre-run values.
+//!
+//! CI runs this file twice: once in the ordinary matrix (each test arms
+//! its own explicit [`Batcher::with_fault`] plan) and once in the fault
+//! leg with `SALR_FAULT=panic:worker=1,decode_step=4`, where
+//! [`tcp_supervision_under_panic_fault_spec`] additionally goes through
+//! the production `serve` → `Batcher::new` → env-parsing path.
+
+use salr::data::{detokenize, tokenize};
+use salr::infer::{Backend, Engine, EngineWeights};
+use salr::model::ParamStore;
+use salr::runtime::ModelCfg;
+use salr::server::{
+    serve, serve_on, spawn_engine_workers, BatchPolicy, Batcher, CancelToken, Client, Request,
+    Response,
+};
+use salr::util::fault::FaultPlan;
+use salr::util::json::Json;
+use salr::util::rng::Rng;
+use std::io::BufRead;
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn test_engine() -> Engine {
+    let cfg = ModelCfg {
+        name: "fault-e2e".into(),
+        vocab_size: 64,
+        d_model: 32,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq_len: 96,
+        rank: 4,
+        lora_alpha: 8.0,
+        residual_rank: 4,
+        batch_size: 2,
+        ctx_keep: 0.5,
+    };
+    let mut rng = Rng::new(500);
+    let base = ParamStore::init_base(&cfg, &mut rng);
+    Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense)
+}
+
+/// The fault-free reference bytes for one prompt.
+fn oracle(engine: &Engine, prompt: &str, max_tokens: usize) -> String {
+    let out = engine.generate_batch(&[tokenize(prompt)], max_tokens);
+    detokenize(&out[0])
+}
+
+fn plan(spec: &str) -> Option<FaultPlan> {
+    Some(FaultPlan::parse(spec).expect("test fault spec"))
+}
+
+/// Spin until `cond` holds (the gauges publish once per scheduler
+/// iteration, a hair after the reply callback fires).
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// A TCP server over an explicit batcher (so tests control the fault
+/// plan regardless of `SALR_FAULT` in the environment).
+fn start_server_on(
+    engine: Engine,
+    batcher: Arc<Batcher>,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        serve_on(engine, "127.0.0.1:0", batcher, Some(tx)).expect("serve");
+    });
+    (rx.recv().expect("server ready"), handle)
+}
+
+fn stop_server(addr: SocketAddr, handle: std::thread::JoinHandle<()>) {
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// The supervision acceptance bar: with two engine workers and an
+/// injected panic before whichever worker first reaches its 4th decode
+/// step, (1) the panicking worker's in-flight requests get error
+/// replies, (2) every surviving response is byte-identical to the
+/// fault-free sequential oracle, (3) `worker_restarts == 1`, and (4) the
+/// respawned worker keeps serving — same bytes — with zero leaked KV.
+#[test]
+fn supervisor_respawns_after_injected_panic_and_survivors_match_oracle() {
+    let engine = test_engine();
+    let prompts: Vec<String> = (0..4).map(|i| format!("Q: {}+{}=? A: ", 3 + i, 20 - i)).collect();
+    let want: Vec<String> = prompts.iter().map(|p| oracle(&engine, p, 12)).collect();
+
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 2,
+            prefill_chunk: 4,
+            prefix_cache: false,
+            ..Default::default()
+        },
+        plan("panic:decode_step=4"),
+    );
+    let workers = spawn_engine_workers(&batcher, engine.fork());
+    let mut joins = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let b = batcher.clone();
+        let p = p.clone();
+        joins.push(std::thread::spawn(move || {
+            b.submit(Request {
+                id: i as u64,
+                prompt: p,
+                max_tokens: 12,
+                ..Default::default()
+            })
+        }));
+    }
+    let responses: Vec<Response> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    // The fault fires exactly once, on a worker holding 1..=max_batch
+    // live sequences — those fail, nothing else does.
+    let failed: Vec<&Response> = responses.iter().filter(|r| r.error.is_some()).collect();
+    assert!(
+        (1..=2).contains(&failed.len()),
+        "only the panicking worker's in-flight requests may fail (got {})",
+        failed.len()
+    );
+    for r in &failed {
+        let err = r.error.as_deref().unwrap();
+        assert!(err.contains("panicked"), "unexpected failure: {err}");
+        assert_eq!(r.tokens, 0, "failed requests discard partial output");
+    }
+    for r in responses.iter().filter(|r| r.error.is_none()) {
+        assert_eq!(
+            r.text, want[r.id as usize],
+            "survivor bytes must match the fault-free oracle"
+        );
+    }
+    assert_eq!(batcher.metrics.worker_restarts.load(Ordering::Relaxed), 1);
+
+    // The respawned worker serves every prompt again, byte-identical.
+    for (i, p) in prompts.iter().enumerate() {
+        let r = batcher.submit(Request {
+            id: 100 + i as u64,
+            prompt: p.clone(),
+            max_tokens: 12,
+            ..Default::default()
+        });
+        assert!(r.error.is_none(), "post-respawn request failed: {:?}", r.error);
+        assert_eq!(r.text, want[i]);
+    }
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+    for (w, m) in batcher.worker_metrics().iter().enumerate() {
+        assert_eq!(m.slots_in_use, 0, "worker {w} leaked a KV slot");
+        assert_eq!(m.cache_blocks_in_use, 0, "worker {w} leaked KV blocks");
+    }
+}
+
+/// The leak acceptance bar: one run mixing every abnormal exit — shed at
+/// the bounded queue, failed by a worker panic, cancelled mid-stream,
+/// expired at admission — must leave the KV gauges at zero and every
+/// slot reusable (a full `max_batch × workers` load succeeds after).
+#[test]
+fn mixed_failures_shed_cancel_timeout_panic_leave_no_kv_leaks() {
+    let engine = test_engine();
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 2,
+            max_queue_depth: 3,
+            prefix_cache: false,
+            ..Default::default()
+        },
+        plan("panic:decode_step=6"),
+    );
+
+    // Overfill the bounded queue before any worker exists: 3 queue, 2 shed.
+    let (tx, rx) = mpsc::channel();
+    for i in 0..5u64 {
+        let tx = tx.clone();
+        batcher.submit_with(
+            Request {
+                id: i,
+                prompt: format!("Q: {i}+3=? A: "),
+                max_tokens: 40,
+                ..Default::default()
+            },
+            Box::new(move |r| {
+                let _ = tx.send(r);
+            }),
+        );
+    }
+    let shed: Vec<Response> = rx.try_iter().collect();
+    assert_eq!(shed.len(), 2, "overflow replies fire synchronously");
+    for r in &shed {
+        assert_eq!(r.error.as_deref(), Some("overloaded"));
+    }
+    assert_eq!(batcher.metrics.shed.load(Ordering::Relaxed), 2);
+
+    // Workers drain the 3 queued requests; the injected panic fails the
+    // first worker to reach decode step 6 mid-flight.
+    let workers = spawn_engine_workers(&batcher, engine.fork());
+    let mut panicked = 0;
+    for _ in 0..3 {
+        let r = rx.recv_timeout(Duration::from_secs(30)).expect("queued reply");
+        match &r.error {
+            Some(e) => {
+                assert!(e.contains("panicked"), "unexpected error: {e}");
+                panicked += 1;
+            }
+            None => assert_eq!(r.tokens, 40),
+        }
+    }
+    assert!((1..=2).contains(&panicked), "the panic fails 1..=max_batch requests");
+    assert_eq!(batcher.metrics.worker_restarts.load(Ordering::Relaxed), 1);
+
+    // Cancel mid-stream: the stream callback latches the request's own
+    // token at its first delta — retired "cancelled" at the next boundary.
+    let token = CancelToken::new();
+    let latch = token.clone();
+    let (ctx, crx) = mpsc::channel();
+    batcher.submit_stream_with(
+        Request {
+            id: 10,
+            prompt: "Q: 5+5=? A: ".into(),
+            max_tokens: 40,
+            timeout_ms: None,
+            cancel: Some(token),
+        },
+        Box::new(move |_delta| latch.cancel()),
+        Box::new(move |r| {
+            let _ = ctx.send(r);
+        }),
+    );
+    let r = crx.recv_timeout(Duration::from_secs(30)).expect("cancel reply");
+    assert_eq!(r.error.as_deref(), Some("cancelled"));
+
+    // Deadline already expired at admission: retired "timeout", no slot.
+    let r = batcher.submit(Request {
+        id: 11,
+        prompt: "Q: 6+6=? A: ".into(),
+        max_tokens: 40,
+        timeout_ms: Some(0),
+        ..Default::default()
+    });
+    assert_eq!(r.error.as_deref(), Some("timeout"));
+    assert_eq!(batcher.metrics.cancelled.load(Ordering::Relaxed), 1);
+    assert_eq!(batcher.metrics.timed_out.load(Ordering::Relaxed), 1);
+
+    // Every slot survived all of the above: a full max_batch × workers
+    // load runs concurrently.
+    let mut joins = Vec::new();
+    for i in 0..4u64 {
+        let b = batcher.clone();
+        joins.push(std::thread::spawn(move || {
+            b.submit(Request {
+                id: 20 + i,
+                prompt: format!("Q: {i}+9=? A: "),
+                max_tokens: 3,
+                ..Default::default()
+            })
+        }));
+    }
+    for j in joins {
+        let r = j.join().unwrap();
+        assert!(r.error.is_none(), "post-fault capacity check failed: {:?}", r.error);
+        assert_eq!(r.tokens, 3);
+    }
+
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+    for (w, m) in batcher.worker_metrics().iter().enumerate() {
+        assert_eq!(m.slots_in_use, 0, "worker {w} leaked a KV slot");
+        assert_eq!(m.cache_blocks_in_use, 0, "worker {w} leaked KV blocks");
+    }
+}
+
+/// With the prefix cache on, abnormal exits must return the block gauge
+/// **exactly** to the retained-chain baseline: a cancelled request's
+/// shared prefix blocks refcount back down, its private decode blocks
+/// free outright, and a resubmission reproduces the warmup bytes.
+#[test]
+fn prefix_cache_accounting_returns_to_baseline_after_cancel_and_timeout() {
+    let engine = test_engine();
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 1,
+            prefill_chunk: 4,
+            kv_block_size: 4,
+            prefix_cache: true,
+            ..Default::default()
+        },
+        None,
+    );
+    let workers = spawn_engine_workers(&batcher, engine.fork());
+    let prompt = "SYSTEM: terse.\nQ: 4+4=? A: ";
+
+    // Warmup registers the prompt's chain in the prefix cache.
+    let warm = batcher.submit(Request {
+        id: 1,
+        prompt: prompt.into(),
+        max_tokens: 4,
+        ..Default::default()
+    });
+    assert!(warm.error.is_none());
+    wait_until("warmup gauges to publish", || {
+        batcher.worker_metrics()[0].slots_in_use == 0
+    });
+    let baseline = batcher.worker_metrics()[0].cache_blocks_in_use;
+    assert!(baseline > 0, "the retired chain must be retained for reuse");
+
+    // Same prompt, cancelled at its first streamed token: its prefix
+    // attach and decode blocks must all come back.
+    let token = CancelToken::new();
+    let latch = token.clone();
+    let (tx, rx) = mpsc::channel();
+    batcher.submit_stream_with(
+        Request {
+            id: 2,
+            prompt: prompt.into(),
+            max_tokens: 40,
+            timeout_ms: None,
+            cancel: Some(token),
+        },
+        Box::new(move |_delta| latch.cancel()),
+        Box::new(move |r| {
+            let _ = tx.send(r);
+        }),
+    );
+    let r = rx.recv_timeout(Duration::from_secs(30)).expect("cancel reply");
+    assert_eq!(r.error.as_deref(), Some("cancelled"));
+
+    // Same prompt, dead on arrival: the admission-time deadline check
+    // never touches the pool.
+    let r = batcher.submit(Request {
+        id: 3,
+        prompt: prompt.into(),
+        max_tokens: 4,
+        timeout_ms: Some(0),
+        ..Default::default()
+    });
+    assert_eq!(r.error.as_deref(), Some("timeout"));
+
+    // The cache still serves the head, byte-identically.
+    let again = batcher.submit(Request {
+        id: 4,
+        prompt: prompt.into(),
+        max_tokens: 4,
+        ..Default::default()
+    });
+    assert!(again.error.is_none());
+    assert_eq!(again.text, warm.text, "post-failure resubmission changed bytes");
+    wait_until("final gauges to publish", || {
+        batcher.worker_metrics()[0].slots_in_use == 0
+    });
+    assert_eq!(
+        batcher.worker_metrics()[0].cache_blocks_in_use, baseline,
+        "abnormal exits must return block accounting exactly to baseline"
+    );
+
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+}
+
+/// A deadline that expires mid-generation (forced by an injected decode
+/// stall much longer than the deadline) retires the request with
+/// `"timeout"` at the next step boundary; the worker then serves the
+/// next request normally.
+#[test]
+fn deadline_expires_mid_generation_under_injected_delay() {
+    let engine = test_engine();
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 1,
+            prefix_cache: false,
+            ..Default::default()
+        },
+        // Stall 400 ms before the 2nd decode step: the 100 ms deadline
+        // expires during the stall however slow the machine is, and the
+        // budget (20 tokens) guarantees the request is still live.
+        plan("delay:decode_step=2,ms=400"),
+    );
+    let workers = spawn_engine_workers(&batcher, engine.fork());
+    let r = batcher.submit(Request {
+        id: 1,
+        prompt: "Q: 6+7=? A: ".into(),
+        max_tokens: 20,
+        timeout_ms: Some(100),
+        ..Default::default()
+    });
+    assert_eq!(r.error.as_deref(), Some("timeout"));
+    assert_eq!(r.tokens, 0, "partial output is discarded");
+    assert_eq!(batcher.metrics.timed_out.load(Ordering::Relaxed), 1);
+
+    let ok = batcher.submit(Request {
+        id: 2,
+        prompt: "Q: 1+2=? A: ".into(),
+        max_tokens: 3,
+        ..Default::default()
+    });
+    assert!(ok.error.is_none());
+    assert_eq!(ok.tokens, 3);
+
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+    let m = &batcher.worker_metrics()[0];
+    assert_eq!((m.slots_in_use, m.cache_blocks_in_use), (0, 0));
+}
+
+/// `--default-deadline-ms` applies to requests that set no timeout of
+/// their own, and a per-request `timeout_ms` overrides it in either
+/// direction — here a generous override rides out a stall the default
+/// would have timed out on, completing byte-identically to the oracle.
+#[test]
+fn policy_default_deadline_applies_and_request_override_wins() {
+    let engine = test_engine();
+    let policy = BatchPolicy {
+        max_batch: 2,
+        engine_workers: 1,
+        prefix_cache: false,
+        default_deadline_ms: 100,
+        ..Default::default()
+    };
+
+    // No per-request timeout: the policy default times it out mid-stall.
+    let batcher = Batcher::with_fault(policy, plan("delay:decode_step=2,ms=400"));
+    let workers = spawn_engine_workers(&batcher, engine.fork());
+    let r = batcher.submit(Request {
+        id: 1,
+        prompt: "Q: 8+3=? A: ".into(),
+        max_tokens: 20,
+        ..Default::default()
+    });
+    assert_eq!(r.error.as_deref(), Some("timeout"));
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+
+    // Explicit override far above the default: the same stall is ridden
+    // out and the response matches the fault-free bytes.
+    let batcher = Batcher::with_fault(policy, plan("delay:decode_step=2,ms=400"));
+    let workers = spawn_engine_workers(&batcher, engine.fork());
+    let r = batcher.submit(Request {
+        id: 2,
+        prompt: "Q: 8+3=? A: ".into(),
+        max_tokens: 6,
+        timeout_ms: Some(600_000),
+        ..Default::default()
+    });
+    assert!(r.error.is_none(), "override must outlive the stall: {:?}", r.error);
+    assert_eq!(r.text, oracle(&engine, "Q: 8+3=? A: ", 6));
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+}
+
+/// A request whose token is already latched when a worker picks it up is
+/// retired at the admission check: no slot allocated, nothing admitted.
+#[test]
+fn pre_cancelled_request_never_allocates_a_slot() {
+    let engine = test_engine();
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 1,
+            prefix_cache: false,
+            ..Default::default()
+        },
+        None,
+    );
+    let workers = spawn_engine_workers(&batcher, engine.fork());
+    let token = CancelToken::new();
+    token.cancel();
+    let r = batcher.submit(Request {
+        id: 1,
+        prompt: "Q: 2+2=? A: ".into(),
+        max_tokens: 4,
+        timeout_ms: None,
+        cancel: Some(token),
+    });
+    assert_eq!(r.error.as_deref(), Some("cancelled"));
+    assert_eq!(batcher.metrics.admitted.load(Ordering::Relaxed), 0);
+    assert_eq!(batcher.metrics.cancelled.load(Ordering::Relaxed), 1);
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+}
+
+/// The `{"cmd":"cancel","id":N}` wire command: acked, and the in-flight
+/// streamed request's final frame arrives tagged `done` with
+/// `error: "cancelled"` — the connection and server both keep working.
+#[test]
+fn tcp_cancel_command_retires_inflight_request() {
+    let engine = test_engine();
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 1,
+            prefix_cache: false,
+            ..Default::default()
+        },
+        // Stall before the 2nd decode step so the cancel command lands
+        // while the request is still live, however fast the model runs.
+        plan("delay:decode_step=2,ms=400"),
+    );
+    let (addr, handle) = start_server_on(engine, batcher);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.send(
+        &Json::obj()
+            .set("id", 5u64)
+            .set("prompt", "Q: 8+9=? A: ")
+            .set("max_tokens", 200u64)
+            .set("stream", true),
+    )
+    .unwrap();
+    let first = c.recv().unwrap();
+    assert!(first.get("delta").is_some(), "expected a delta frame, got {first:?}");
+    c.cancel(5).unwrap();
+    let mut saw_ack = false;
+    let fin = loop {
+        let f = c.recv().unwrap();
+        if f.get("cmd").and_then(Json::as_str) == Some("cancel") {
+            assert_eq!(f.get("ok").and_then(Json::as_bool), Some(true));
+            saw_ack = true;
+            continue;
+        }
+        if f.get("done").and_then(Json::as_bool) == Some(true) {
+            break f;
+        }
+        assert!(f.get("delta").is_some(), "unexpected frame: {f:?}");
+    };
+    assert!(saw_ack, "the cancel command must be acknowledged");
+    assert_eq!(fin.get("error").and_then(Json::as_str), Some("cancelled"));
+
+    // Same connection serves the next request normally.
+    let r = c.generate("Q: 1+3=? A: ", 3).unwrap();
+    assert_eq!(r.get("tokens").and_then(Json::as_usize), Some(3));
+    drop(c);
+    stop_server(addr, handle);
+}
+
+/// A connection that drops mid-generation cancels all of its in-flight
+/// requests: the abandoned request stops consuming decode steps (the
+/// `cancelled` metric ticks) and the server keeps serving.
+#[test]
+fn tcp_disconnect_cancels_inflight_requests() {
+    let engine = test_engine();
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 1,
+            prefix_cache: false,
+            ..Default::default()
+        },
+        plan("delay:decode_step=2,ms=400"),
+    );
+    let (addr, handle) = start_server_on(engine, batcher);
+    {
+        let mut doomed = Client::connect(&addr.to_string()).unwrap();
+        doomed
+            .send(
+                &Json::obj()
+                    .set("id", 9u64)
+                    .set("prompt", "Q: 7+7=? A: ")
+                    .set("max_tokens", 200u64),
+            )
+            .unwrap();
+        // Dropped here: the server reader sees EOF and latches the token.
+    }
+    let mut probe = Client::connect(&addr.to_string()).unwrap();
+    wait_until("the abandoned request to be cancelled", || {
+        let m = probe.metrics().unwrap();
+        m.get("cancelled").and_then(Json::as_usize).unwrap_or(0) >= 1
+    });
+    let r = probe.generate("Q: 2+5=? A: ", 3).unwrap();
+    assert_eq!(r.get("tokens").and_then(Json::as_usize), Some(3));
+    drop(probe);
+    stop_server(addr, handle);
+}
+
+/// `--idle-timeout-ms`: a silent connection with nothing in flight is
+/// closed (the client sees EOF), while a connection quietly awaiting a
+/// generation longer than the idle window is left alone and gets its
+/// reply.
+#[test]
+fn tcp_idle_timeout_closes_silent_connections_but_not_inflight() {
+    let engine = test_engine();
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 1,
+            prefix_cache: false,
+            idle_timeout_ms: 150,
+            ..Default::default()
+        },
+        // The in-flight request takes ≥ 500 ms — well past the idle
+        // window — so staying open proves in-flight connections are
+        // exempt, not merely fast.
+        plan("delay:decode_step=2,ms=500"),
+    );
+    let (addr, handle) = start_server_on(engine, batcher);
+
+    let mut busy = Client::connect(&addr.to_string()).unwrap();
+    busy.send(
+        &Json::obj()
+            .set("id", 1u64)
+            .set("prompt", "Q: 9+1=? A: ")
+            .set("max_tokens", 6u64),
+    )
+    .unwrap();
+    let idle = std::net::TcpStream::connect(addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+
+    // The busy connection is silent for the whole stall yet never closed.
+    let r = busy.recv().unwrap();
+    assert!(r.get("error").is_none(), "in-flight request failed: {r:?}");
+    assert_eq!(r.get("tokens").and_then(Json::as_usize), Some(6));
+
+    // The silent connection was idle-closed: EOF, not a hang.
+    let mut line = String::new();
+    let n = std::io::BufReader::new(idle).read_line(&mut line).unwrap_or(0);
+    assert_eq!(n, 0, "silent connection must be idle-closed");
+    drop(busy);
+    stop_server(addr, handle);
+}
+
+/// Supervision over TCP with the CI fault leg's spec
+/// (`panic:worker=1,decode_step=4`): pipelined load until worker 1 hits
+/// its 4th decode step and is respawned — every request still gets
+/// exactly one final frame (text or a worker-panic error, never
+/// silence), `worker_restarts` surfaces in the metrics reply, and the
+/// server keeps serving afterwards. When `SALR_FAULT` carries this exact
+/// spec (the CI fault leg) the test goes through the production
+/// `serve` → `Batcher::new` env path; otherwise it arms the identical
+/// plan explicitly.
+#[test]
+fn tcp_supervision_under_panic_fault_spec() {
+    const SPEC: &str = "panic:worker=1,decode_step=4";
+    let engine = test_engine();
+    let policy = BatchPolicy {
+        max_batch: 2,
+        engine_workers: 2,
+        prefill_chunk: 4,
+        prefix_cache: false,
+        ..Default::default()
+    };
+    let env_armed = std::env::var("SALR_FAULT")
+        .map(|s| s.trim() == SPEC)
+        .unwrap_or(false);
+    let (addr, handle) = if env_armed {
+        let (tx, rx) = mpsc::channel();
+        let e = engine.fork();
+        let h = std::thread::spawn(move || {
+            serve(e, "127.0.0.1:0", policy, Some(tx)).expect("serve");
+        });
+        (rx.recv().expect("server ready"), h)
+    } else {
+        start_server_on(engine.fork(), Batcher::with_fault(policy, plan(SPEC)))
+    };
+
+    let mut probe = Client::connect(&addr.to_string()).unwrap();
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    let mut round = 0u64;
+    loop {
+        round += 1;
+        for i in 0..8u64 {
+            client
+                .send(
+                    &Json::obj()
+                        .set("id", round * 100 + i)
+                        .set("prompt", format!("Q: {i}+{round}=? A: "))
+                        .set("max_tokens", 8u64),
+                )
+                .unwrap();
+        }
+        for _ in 0..8 {
+            let r = client.recv().unwrap();
+            if let Some(e) = r.get("error").and_then(Json::as_str) {
+                assert!(e.contains("panicked"), "unexpected error: {e}");
+            } else {
+                assert_eq!(r.get("tokens").and_then(Json::as_usize), Some(8));
+            }
+        }
+        let m = probe.metrics().unwrap();
+        if m.get("worker_restarts").and_then(Json::as_usize).unwrap_or(0) >= 1 {
+            break;
+        }
+        assert!(round < 10, "worker 1 never reached its 4th decode step");
+    }
+    // Post-restart, the server still serves correctly.
+    let r = client.generate("Q: 2+2=? A: ", 3).unwrap();
+    assert_eq!(r.get("tokens").and_then(Json::as_usize), Some(3));
+    drop(client);
+    drop(probe);
+    stop_server(addr, handle);
+}

@@ -165,6 +165,7 @@ fn running_sequences_keep_decoding_between_prefill_chunks() {
             id: 1,
             prompt: "Q: 2+2=? A: ".into(),
             max_tokens: 80,
+            ..Default::default()
         },
         Box::new(move |delta| {
             let chunks = bref.metrics.prefill_chunks.load(Ordering::Relaxed);
@@ -186,6 +187,7 @@ fn running_sequences_keep_decoding_between_prefill_chunks() {
         id: 2,
         prompt: "y".repeat(48),
         max_tokens: 1,
+        ..Default::default()
     });
     assert!(y.error.is_none(), "long-but-fitting prompt must be served");
     assert_eq!(y.tokens, 1);
