@@ -7,14 +7,17 @@
 //! client's prompt starts with the same 40-token head, the system-prompt
 //! pattern) with the radix-tree prefix cache off and on, reporting
 //! tokens/s plus `prefix_hit_tokens` / `prefill_tokens` so the skipped
-//! prefill work is visible. Set `SALR_BENCH_JSON=path.json` to emit
+//! prefill work is visible, and a **speculative workload** (repeat
+//! traffic, cache on) with `--spec-decode` off / radix / self,
+//! reporting tokens/s plus `drafted_tokens` / `accepted_tokens` /
+//! `spec_rollbacks`. Set `SALR_BENCH_JSON=path.json` to emit
 //! machine-readable results; env knobs `SALR_BENCH_CLIENTS` (default 16),
 //! `SALR_BENCH_REQS` (default 4 per client) and `SALR_BENCH_CHUNK`
 //! (prefill chunk, default 64, 0 = whole-prompt) scale the load.
 //!
 //! Run: `cargo bench --bench bench_serve`
 
-use salr::infer::{Backend, Engine, EngineWeights};
+use salr::infer::{Backend, Engine, EngineWeights, SpecMode};
 use salr::model::ParamStore;
 use salr::runtime::ModelCfg;
 use salr::server::{spawn_engine_workers, BatchPolicy, Batcher, Request};
@@ -158,6 +161,75 @@ fn run_shared_prefix_load(
     res
 }
 
+struct SpecResult {
+    mode: SpecMode,
+    wall_s: f64,
+    tokens: u64,
+    drafted: u64,
+    accepted: u64,
+    rollbacks: u64,
+    faults: FailureCounters,
+}
+
+/// The speculative workload: repeat traffic (every client cycles the
+/// same 4 prompts) with the prefix cache on, served with speculation
+/// off / radix / self. Repeats are the radix drafter's best case —
+/// after the first round each completion is drafted from the tree and
+/// accepted in full — so the off-vs-radix delta bounds what drafting
+/// buys, and the counters show the acceptance rate behind it.
+fn run_speculative_load(
+    template: &Engine,
+    clients: usize,
+    reqs_per_client: usize,
+    mode: SpecMode,
+) -> SpecResult {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        engine_workers: 2,
+        prefill_chunk: env_usize("SALR_BENCH_CHUNK", 64),
+        kv_block_size: 8,
+        prefix_cache: true,
+        spec_decode: mode,
+        spec_k: 4,
+        ..Default::default()
+    };
+    let batcher = Batcher::new(policy);
+    let handles = spawn_engine_workers(&batcher, template.fork());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let b = batcher.clone();
+            s.spawn(move || {
+                for r in 0..reqs_per_client {
+                    let resp = b.submit(Request {
+                        id: (c * reqs_per_client + r) as u64,
+                        // 4 distinct prompts shared by every client.
+                        prompt: format!("Q: {}+{}=? A: ", 3 + (c + r) % 4, 20 - (c + r) % 4),
+                        max_tokens: 16,
+                        ..Default::default()
+                    });
+                    assert_eq!(resp.tokens, 16);
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let res = SpecResult {
+        mode,
+        wall_s,
+        tokens: batcher.metrics.tokens_out.load(Ordering::Relaxed),
+        drafted: batcher.metrics.drafted_tokens.load(Ordering::Relaxed),
+        accepted: batcher.metrics.accepted_tokens.load(Ordering::Relaxed),
+        rollbacks: batcher.metrics.spec_rollbacks.load(Ordering::Relaxed),
+        faults: FailureCounters::snapshot(&batcher),
+    };
+    batcher.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    res
+}
+
 fn run_load(template: &Engine, workers: usize, clients: usize, reqs_per_client: usize) -> RunResult {
     let policy = BatchPolicy {
         max_batch: 8,
@@ -252,6 +324,21 @@ fn main() {
         faults.accumulate(r.faults);
         shared_rows.push(r);
     }
+    println!("\n# speculative workload: {clients} clients x {reqs} reqs, repeat traffic, cache on, 2 workers, k=4");
+    let mut spec_rows = Vec::new();
+    for mode in [SpecMode::Off, SpecMode::Radix, SpecMode::SelfDraft] {
+        let r = run_speculative_load(&template, clients, reqs, mode);
+        println!(
+            "spec={:<5} {:>8.1} tok/s  drafted {:>6}  accepted {:>6}  rollbacks {:>4}",
+            r.mode.name(),
+            r.tokens as f64 / r.wall_s,
+            r.drafted,
+            r.accepted,
+            r.rollbacks,
+        );
+        faults.accumulate(r.faults);
+        spec_rows.push(r);
+    }
     println!(
         "\n# failure counters (all runs): shed {}  cancelled {}  timeout {}  worker_restarts {}",
         faults.shed, faults.cancelled, faults.timed_out, faults.worker_restarts
@@ -280,6 +367,18 @@ fn main() {
                 .set("tokens_per_sec", r.tokens as f64 / r.wall_s)
                 .set("prefix_hit_tokens", r.prefix_hit_tokens)
                 .set("prefill_tokens", r.prefill_tokens)
+                .set("wall_s", r.wall_s)
+        }));
+        result_rows.extend(spec_rows.iter().map(|r| {
+            Json::obj()
+                .set("mode", "speculative")
+                .set("engine_workers", 2usize)
+                .set("spec_decode", r.mode.name())
+                .set("spec_k", 4usize)
+                .set("tokens_per_sec", r.tokens as f64 / r.wall_s)
+                .set("drafted_tokens", r.drafted)
+                .set("accepted_tokens", r.accepted)
+                .set("spec_rollbacks", r.rollbacks)
                 .set("wall_s", r.wall_s)
         }));
         let results = Json::Arr(result_rows);

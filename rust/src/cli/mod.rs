@@ -138,6 +138,14 @@ SERVE FLAGS:
   --idle-timeout-ms T close a connection with nothing in flight after T ms
                       of silence, freeing its reader/writer threads
                       (default 0 = never)
+  --spec-decode MODE  speculative decoding draft source: off|radix|self
+                      (default off, or SALR_SPEC). radix drafts cached
+                      continuations from the prefix-cache radix tree;
+                      self drafts with the sparse-base-only forward.
+                      Verification is exact: output bytes are identical
+                      to non-speculative decode in every mode
+  --spec-k N          max draft tokens verified per sequence per decode
+                      iteration (default 4)
 
 Clients add \"stream\": true to a request line to receive one
 {\"id\",\"delta\",\"seq\"} frame per generated token before the final reply;

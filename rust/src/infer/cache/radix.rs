@@ -21,11 +21,21 @@
 //!   whose block no live sequence references (pool refcount 1 — the
 //!   tree's own), so eviction frees real memory, never truncates a chain
 //!   a descendant still needs, and never touches data a slot still reads.
+//! * [`RadixTree::propose`] reads draft continuations for speculative
+//!   decoding straight out of the edge labels: a sequence whose history
+//!   walks to a node proposes the tokens spelled by the chain below it.
+//!   The walk is read-only — drafting never perturbs eviction order.
 //!
 //! Recency is a monotonic operation counter, not wall-clock time, so
 //! eviction order is a deterministic function of the operation sequence.
+//! It is indexed in an ordered set keyed `(last_use, id)` — the exact
+//! order the original linear full-node scan minimized over — so
+//! [`RadixTree::evict_one`] finds its victim by walking candidates from
+//! the LRU end (`O(log n)` per recency update, and the eviction scan
+//! touches only the stale end of the order instead of every node).
 
 use super::block::BlockPool;
+use std::collections::BTreeSet;
 
 const NO_NODE: usize = usize::MAX;
 
@@ -53,6 +63,11 @@ pub struct RadixTree {
     tick: u64,
     /// Total blocks evicted over the tree's lifetime.
     evicted: u64,
+    /// Every live node keyed by `(last_use, id)` — ascending iteration
+    /// visits nodes in exactly the order the old linear eviction scan
+    /// ranked them, so `evict_one` takes the first eligible entry.
+    /// Maintained by [`RadixTree::touch`] on every recency bump.
+    by_recency: BTreeSet<(u64, usize)>,
 }
 
 /// One fully matched step of a [`RadixTree::lookup`]: the node's block id.
@@ -82,6 +97,7 @@ impl RadixTree {
             roots: Vec::new(),
             tick: 0,
             evicted: 0,
+            by_recency: BTreeSet::new(),
         }
     }
 
@@ -115,6 +131,17 @@ impl RadixTree {
             .iter()
             .copied()
             .find(|&c| self.nodes[c].tokens == want)
+    }
+
+    /// Bump `id`'s recency to `tick`, keeping the ordered index in sync
+    /// (`O(log n)`). The sole place `last_use` ever changes, so the
+    /// invariant `by_recency == {(n.last_use, id) : live n}` holds by
+    /// construction.
+    fn touch(&mut self, id: usize, tick: u64) {
+        let prev = self.nodes[id].last_use;
+        self.by_recency.remove(&(prev, id));
+        self.by_recency.insert((tick, id));
+        self.nodes[id].last_use = tick;
     }
 
     /// Among `parent`'s children, the node sharing the longest non-empty
@@ -154,7 +181,7 @@ impl RadixTree {
         while tokens.len() - off >= bs {
             match self.find_full(parent, &tokens[off..off + bs]) {
                 Some(c) => {
-                    self.nodes[c].last_use = tick;
+                    self.touch(c, tick);
                     full.push(FullMatch {
                         block: self.nodes[c].block,
                     });
@@ -165,13 +192,73 @@ impl RadixTree {
             }
         }
         let partial = self.find_partial(parent, &tokens[off..]).map(|(c, j)| {
-            self.nodes[c].last_use = tick;
-            PartialMatch {
-                block: self.nodes[c].block,
-                matched: j,
-            }
+            (
+                c,
+                PartialMatch {
+                    block: self.nodes[c].block,
+                    matched: j,
+                },
+            )
         });
-        (full, partial)
+        if let Some((c, _)) = partial {
+            self.touch(c, tick);
+        }
+        (full, partial.map(|(_, p)| p))
+    }
+
+    /// Propose up to `k` draft tokens continuing `history` (a sequence's
+    /// full token stream so far, prompt plus generated) from cached
+    /// chains: walk the history down the tree, then read continuation
+    /// token ids straight out of the edge labels below the walk's end.
+    /// At a branch the earliest-inserted child is followed —
+    /// deterministic in the insertion order, like the rest of the tree.
+    /// Returns an empty draft when the history diverges from every
+    /// cached chain (the caller falls back to plain decode).
+    ///
+    /// Read-only on recency (`&self`): drafting is a hint, and must not
+    /// perturb the eviction order that `lookup`/`insert` define —
+    /// speculative serving evicts exactly like non-speculative serving.
+    pub fn propose(&self, history: &[i32], k: usize) -> Vec<i32> {
+        let bs = self.block_size;
+        let mut off = 0;
+        let mut parent = NO_NODE;
+        while history.len() - off >= bs {
+            match self.find_full(parent, &history[off..off + bs]) {
+                Some(c) => {
+                    off += bs;
+                    parent = c;
+                }
+                None => return Vec::new(), // diverged on a full block
+            }
+        }
+        let mut out = Vec::new();
+        let rem = &history[off..];
+        if !rem.is_empty() {
+            // The in-block tail must match a child's label exactly for
+            // the label's remainder to be a valid continuation.
+            match self
+                .children_of(parent)
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c].tokens[..rem.len()] == *rem)
+            {
+                Some(c) => {
+                    out.extend_from_slice(&self.nodes[c].tokens[rem.len()..]);
+                    parent = c;
+                }
+                None => return out,
+            }
+        }
+        while out.len() < k {
+            let children = self.children_of(parent);
+            let Some(&c) = children.first() else {
+                break;
+            };
+            out.extend_from_slice(&self.nodes[c].tokens);
+            parent = c;
+        }
+        out.truncate(k);
+        out
     }
 
     /// Register a prefilled prompt: `tokens` must cover exactly
@@ -207,7 +294,10 @@ impl RadixTree {
                     id
                 }
             };
-            self.nodes[next].last_use = tick;
+            // New nodes enter the index here too: they were created with
+            // `last_use == tick`, so touch's remove is a no-op and its
+            // insert registers them.
+            self.touch(next, tick);
             parent = next;
         }
     }
@@ -229,15 +319,24 @@ impl RadixTree {
     /// references (pool refcount 1), releasing the block back to `pool`.
     /// Returns `false` when no such leaf exists — every remaining chain
     /// is still pinned by a live sequence. Ties break toward the lowest
-    /// node id, so eviction order is deterministic.
+    /// node id, so eviction order is deterministic — and **identical to
+    /// the original linear full-node scan**, which minimized
+    /// `(last_use, id)` over eligible nodes: the recency index iterates
+    /// ascending on exactly that key, so the first eligible entry is the
+    /// same victim (pinned by a regression test against the old scan).
+    /// Recency updates are `O(log n)` and this scan stops at the first
+    /// evictable node instead of ranking all of them.
     pub fn evict_one(&mut self, pool: &mut BlockPool) -> bool {
+        debug_assert_eq!(self.by_recency.len(), self.len(), "recency index out of sync");
         let victim = self
-            .nodes
+            .by_recency
             .iter()
-            .enumerate()
-            .filter(|(_, n)| n.live && n.children.is_empty() && pool.refcount(n.block) == 1)
-            .min_by_key(|(id, n)| (n.last_use, *id))
-            .map(|(id, _)| id);
+            .copied()
+            .find(|&(_, id)| {
+                let n = &self.nodes[id];
+                n.live && n.children.is_empty() && pool.refcount(n.block) == 1
+            })
+            .map(|(_, id)| id);
         let Some(id) = victim else {
             return false;
         };
@@ -249,6 +348,7 @@ impl RadixTree {
         }
         let freed = pool.release(self.nodes[id].block);
         debug_assert!(freed, "evicted leaf held the only reference");
+        self.by_recency.remove(&(self.nodes[id].last_use, id));
         self.nodes[id].live = false;
         self.nodes[id].children = Vec::new();
         self.nodes[id].tokens = Vec::new();
@@ -350,5 +450,160 @@ mod tests {
         assert!(t.is_empty());
         assert_eq!(p.blocks_in_use(), 0);
         assert_eq!(t.evicted_blocks(), 3);
+    }
+
+    #[test]
+    fn propose_reads_continuations_from_edge_labels() {
+        let mut p = BlockPool::new(8, 1, 2, 1);
+        let mut t = RadixTree::new(2);
+        let blocks: Vec<usize> = (0..4).map(|i| stamped(&mut p, i as f32)).collect();
+        // Chain [1,2][3,4][5,6] plus a fork [1,2][7,8] inserted later.
+        t.insert(&[1, 2, 3, 4, 5, 6], &blocks[..3], &mut p);
+        t.insert(&[1, 2, 7, 8], &[blocks[0], blocks[3]], &mut p);
+        // History ending on a block boundary: continue down the
+        // earliest-inserted branch.
+        assert_eq!(t.propose(&[1, 2], 4), vec![3, 4, 5, 6]);
+        assert_eq!(t.propose(&[1, 2], 3), vec![3, 4, 5]);
+        assert_eq!(t.propose(&[1, 2, 3, 4], 8), vec![5, 6], "draft capped by the chain");
+        // Mid-block history: the label's remainder comes first.
+        assert_eq!(t.propose(&[1, 2, 3], 4), vec![4, 5, 6]);
+        assert_eq!(t.propose(&[1, 2, 7], 4), vec![8]);
+        // Divergence (full-block or in-block) proposes nothing.
+        assert!(t.propose(&[1, 9], 4).is_empty());
+        assert!(t.propose(&[1, 2, 9], 4).is_empty());
+        assert!(t.propose(&[9, 9, 9], 4).is_empty());
+        // Exhausted chain: history walked to a leaf, nothing below.
+        assert!(t.propose(&[1, 2, 3, 4, 5, 6], 4).is_empty());
+        assert_eq!(t.propose(&[], 3), vec![1, 2, 3], "empty history starts at the root");
+    }
+
+    #[test]
+    fn propose_is_read_only_on_recency() {
+        // Drafting must not perturb eviction order: after proposing from
+        // the older chain many times, the older chain still evicts first.
+        let mut p = BlockPool::new(8, 1, 2, 1);
+        let mut t = RadixTree::new(2);
+        let (b0, b1) = (stamped(&mut p, 0.0), stamped(&mut p, 1.0));
+        t.insert(&[1, 2], &[b0], &mut p);
+        t.insert(&[5, 6], &[b1], &mut p);
+        p.release(b0);
+        p.release(b1);
+        let _ = t.lookup(&[5, 6]); // [1,2] is now strictly older
+        for _ in 0..8 {
+            let _ = t.propose(&[1], 2); // would bump [1,2] if it wrote recency
+        }
+        assert!(t.evict_one(&mut p));
+        assert_eq!(p.refcount(b0), 0, "older chain must still evict first");
+        assert_eq!(p.refcount(b1), 1);
+    }
+
+    /// The pre-BTreeSet eviction policy, verbatim: linear scan over all
+    /// nodes minimizing `(last_use, id)` among live, childless,
+    /// tree-only-referenced nodes. The regression oracle for the ordered
+    /// recency index.
+    fn old_scan_victim(t: &RadixTree, p: &BlockPool) -> Option<usize> {
+        t.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.live && n.children.is_empty() && p.refcount(n.block) == 1)
+            .min_by_key(|(id, n)| (n.last_use, *id))
+            .map(|(id, _)| id)
+    }
+
+    #[test]
+    fn eviction_order_matches_the_old_linear_scan() {
+        // Randomized regression: across seeded insert/lookup/pin/unpin
+        // churn, every eviction must pick exactly the node the original
+        // linear scan would have picked, until both agree nothing is
+        // evictable. Catches any divergence between the ordered recency
+        // index and the scan it replaced (stale entries, tie-breaks,
+        // missed bumps).
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x5EC0_11D5);
+        for round in 0..20u64 {
+            // Sized generously past the worst-case live-node count so the
+            // churn itself never exhausts the pool.
+            let mut p = BlockPool::new(160, 1, 2, 1);
+            let mut t = RadixTree::new(2);
+            let mut rng = rng.fork(round);
+            // Small alphabet of 2-token labels so paths collide and fork.
+            let label = |v: usize| [2 * v as i32, 2 * v as i32 + 1];
+            let mut pinned: Vec<usize> = Vec::new();
+            for _ in 0..40 {
+                match rng.below(10) {
+                    0..=4 => {
+                        // Insert a random path of depth 1..=3.
+                        let depth = rng.range(1, 4);
+                        let mut tokens = Vec::new();
+                        let mut blocks = Vec::new();
+                        for _ in 0..depth {
+                            tokens.extend_from_slice(&label(rng.below(4)));
+                            blocks.push(p.alloc().expect("pool sized for the churn"));
+                        }
+                        t.insert(&tokens, &blocks, &mut p);
+                        // Drop the "sequence's" own refs: blocks the tree
+                        // did not retain (duplicates) free immediately,
+                        // the rest become tree-only.
+                        for b in blocks {
+                            p.release(b);
+                        }
+                    }
+                    5..=7 => {
+                        // Recency churn: look up a random path.
+                        let depth = rng.range(1, 4);
+                        let mut tokens = Vec::new();
+                        for _ in 0..depth {
+                            tokens.extend_from_slice(&label(rng.below(4)));
+                        }
+                        let _ = t.lookup(&tokens);
+                    }
+                    8 => {
+                        // Pin a random live node's block, as an attached
+                        // sequence would.
+                        let live: Vec<usize> =
+                            (0..t.nodes.len()).filter(|&i| t.nodes[i].live).collect();
+                        if !live.is_empty() {
+                            let b = t.nodes[live[rng.below(live.len())]].block;
+                            p.retain(b);
+                            pinned.push(b);
+                        }
+                    }
+                    _ => {
+                        // Interleave an eviction mid-churn.
+                        let want = old_scan_victim(&t, &p);
+                        let got = t.evict_one(&mut p);
+                        match want {
+                            Some(id) => {
+                                assert!(got);
+                                assert!(!t.nodes[id].live, "victim diverged from the old scan");
+                            }
+                            None => assert!(!got),
+                        }
+                    }
+                }
+            }
+            // Drain: eviction order must match the old scan node by node.
+            loop {
+                let want = old_scan_victim(&t, &p);
+                let got = t.evict_one(&mut p);
+                match want {
+                    Some(id) => {
+                        assert!(got, "old scan found a victim the index missed");
+                        assert!(!t.nodes[id].live, "victim diverged from the old scan");
+                    }
+                    None => {
+                        assert!(!got, "index evicted what the old scan would not");
+                        break;
+                    }
+                }
+            }
+            // Everything left is pinned; unpin and the tree drains fully.
+            for b in pinned {
+                p.release(b);
+            }
+            while t.evict_one(&mut p) {}
+            assert!(t.is_empty());
+            assert_eq!(p.blocks_in_use(), 0, "round {round} leaked blocks");
+        }
     }
 }

@@ -56,6 +56,20 @@ pub enum Backend {
     BitmapPipelined(PipelineConfig),
 }
 
+/// Result of one speculative [`Engine::decode_verify`] call.
+///
+/// The emitted token stream for the step is `draft[..accepted] ++ [next]`
+/// — always at least one token, so decode progresses even when the whole
+/// draft is rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VerifyOutcome {
+    /// Length of the longest draft prefix that matched greedy decode.
+    pub accepted: usize,
+    /// The greedy token after the accepted prefix: the correction on a
+    /// mismatch, or the free bonus token when every draft was accepted.
+    pub next: i32,
+}
+
 /// One adapted linear in deployment form.
 enum LinearW {
     Dense(Tensor),
@@ -342,6 +356,23 @@ impl Engine {
         }
     }
 
+    /// The *draft* linear: sparse base only, adapters skipped. On a SALR
+    /// deployment this is the paper-native cheap approximation that
+    /// `forward_base_only` provides; on a Dense deployment the adapters
+    /// are already merged into the weight, so the "base" degenerates to
+    /// the full linear — self-drafting then drafts with the full model
+    /// (every draft accepted, no speedup, still byte-correct). The spec
+    /// harness exercises that degenerate path deliberately: correctness
+    /// must not depend on the drafter being weaker than the verifier.
+    fn linear_base(&self, w: &LinearW, x: &[f32], m: usize, out: &mut [f32]) {
+        match w {
+            LinearW::Dense(t) => {
+                gemm_f32_pool(x, t.data(), out, m, t.rows(), t.cols(), &self.pool);
+            }
+            LinearW::Salr(l) => l.forward_base_only(x, m, out, &self.pool),
+        }
+    }
+
     /// Rotary position embedding, half-split layout — mirrors the L2 jax
     /// `_rope` exactly so logits agree with the HLO artifacts.
     fn apply_rope(x: &mut [f32], pos: &[usize], m: usize, heads: usize, hd: usize) {
@@ -388,12 +419,20 @@ impl Engine {
     /// arena, so a steady-state decode loop performs no heap allocation in
     /// this function (the returned guard hands the hidden-state slab back
     /// when the caller drops it).
+    ///
+    /// `base_only = true` routes every adapted linear through
+    /// [`Engine::linear_base`] (sparse base, fused adapters skipped) —
+    /// the speculative self-drafting forward. Draft rows still append K/V
+    /// (attention needs the chain to grow position by position); the
+    /// drafter truncates them away before verification, so base-quality
+    /// K/V never survives into verified state.
     fn forward_rows(
         &self,
         tokens: &[i32],
         pos: &[usize],
         kv: &mut KvSlotPool,
         seq_of_row: &[usize],
+        base_only: bool,
     ) -> Scratch {
         let cfg = &self.weights.cfg;
         let (m, d) = (tokens.len(), cfg.d_model);
@@ -424,13 +463,21 @@ impl Engine {
         // row i attends over pos[i]+1 ≤ max_seq_len cached entries).
         let max_hist = pos.iter().map(|&p| p + 1).max().unwrap_or(0);
         let mut scores = scratch_undef(cfg.max_seq_len.max(max_hist));
+        // Full vs draft-quality linears, chosen once for the whole forward.
+        let lin = |w: &LinearW, x: &[f32], m: usize, out: &mut [f32]| {
+            if base_only {
+                self.linear_base(w, x, m, out);
+            } else {
+                self.linear(w, x, m, out);
+            }
+        };
         for (li, layer) in self.weights.layers.iter().enumerate() {
             // --- attention ---
             h.copy_from_slice(&x);
             Self::rms_norm_rows(&mut h, &layer.attn_norm, m, d);
-            self.linear(&layer.wq, &h, m, &mut q);
-            self.linear(&layer.wk, &h, m, &mut k);
-            self.linear(&layer.wv, &h, m, &mut v);
+            lin(&layer.wq, &h, m, &mut q);
+            lin(&layer.wk, &h, m, &mut k);
+            lin(&layer.wv, &h, m, &mut v);
             // Rotary embedding on q/k (row layout [m, heads*hd] matches the
             // per-head slicing used below).
             Self::apply_rope(&mut q, pos, m, heads, hd);
@@ -501,18 +548,18 @@ impl Engine {
                     }
                 }
             }
-            self.linear(&layer.wo, &att_out, m, &mut h);
+            lin(&layer.wo, &att_out, m, &mut h);
             for i in 0..m * d {
                 x[i] += h[i];
             }
             // --- mlp ---
             h.copy_from_slice(&x);
             Self::rms_norm_rows(&mut h, &layer.mlp_norm, m, d);
-            self.linear(&layer.w_in, &h, m, &mut ff);
+            lin(&layer.w_in, &h, m, &mut ff);
             for f in ff.iter_mut() {
                 *f = gelu(*f);
             }
-            self.linear(&layer.w_out, &ff, m, &mut ff_out);
+            lin(&layer.w_out, &ff, m, &mut ff_out);
             for i in 0..m * d {
                 x[i] += ff_out[i];
             }
@@ -629,7 +676,7 @@ impl Engine {
         );
         let pos: Vec<usize> = (start..start + chunk.len()).collect();
         let rows = vec![slot; chunk.len()];
-        let hidden = self.forward_rows(chunk, &pos, kv, &rows);
+        let hidden = self.forward_rows(chunk, &pos, kv, &rows, false);
         if !last {
             return Ok(None);
         }
@@ -668,12 +715,113 @@ impl Engine {
             return Vec::new();
         }
         let pos: Vec<usize> = slots.iter().map(|&s| kv.seq_len(s)).collect();
-        let hidden = self.forward_rows(current, &pos, kv, slots);
+        let hidden = self.forward_rows(current, &pos, kv, slots, false);
         let mut lg = scratch_undef(m * cfg.vocab_size);
         self.logits_into(&hidden, m, &mut lg);
         (0..m)
             .map(|i| argmax(&lg[i * cfg.vocab_size..(i + 1) * cfg.vocab_size]) as i32)
             .collect()
+    }
+
+    /// Speculatively verify `draft` for one sequence: a single batched
+    /// forward over `[current, draft…]`, greedy-checked position by
+    /// position, with the KV chain rolled back to exactly the accepted
+    /// length.
+    ///
+    /// Exactness argument (the byte-identity invariant the spec suite
+    /// pins): the forward feeds `current` at the slot's frontier and each
+    /// drafted token at the following positions — identical inputs, at
+    /// identical positions, over an identical cache prefix, to what a
+    /// sequential [`Engine::decode_step`] chain would feed, because
+    /// attention row `i` only sees rows `≤ i` (the causal clamp) and
+    /// every linear/norm is per-row. Row `i`'s argmax `g_i` is therefore
+    /// *the* greedy token after `draft[..i]`; we accept `draft[i]` while
+    /// it equals `g_i` and stop at the first mismatch, so the emitted
+    /// stream `draft[..accepted] ++ [next]` is bitwise what sequential
+    /// decode emits — for any draft from any source, correct or garbage.
+    ///
+    /// KV rollback: the forward appended `1 + draft.len()` rows per
+    /// layer, but only `current` and the accepted drafts are real history
+    /// — the chain is truncated to `pre + 1 + accepted`, releasing
+    /// now-dead private tail blocks (COW guarantees the speculative rows
+    /// were never written into shared prefix blocks; see
+    /// [`KvSlotPool::truncate`]). Rejected-token K/V thus never pollutes
+    /// later attention, and the slot's block accounting is exact.
+    ///
+    /// Each call emits `accepted + 1` tokens (`≥ 1`: the corrected token
+    /// always lands, so decode progresses even on total rejection —
+    /// `accepted == draft.len()` means every draft matched and `next` is
+    /// the bonus token from the final row). The caller must leave
+    /// headroom: `1 + draft.len() ≤ kv.remaining(slot)`.
+    ///
+    /// Panic safety: same contract as [`Engine::decode_step`] — an unwind
+    /// leaves lengths inconsistent but block accounting intact, so the
+    /// supervisor's `KvSlotPool::free` restores the pool exactly.
+    pub fn decode_verify(
+        &self,
+        current: i32,
+        draft: &[i32],
+        slot: usize,
+        kv: &mut KvSlotPool,
+    ) -> VerifyOutcome {
+        let cfg = &self.weights.cfg;
+        let m = 1 + draft.len();
+        assert!(
+            m <= kv.remaining(slot),
+            "verify batch overflows the KV slot"
+        );
+        let pre = kv.seq_len(slot);
+        let mut tokens = Vec::with_capacity(m);
+        tokens.push(current);
+        tokens.extend_from_slice(draft);
+        let pos: Vec<usize> = (pre..pre + m).collect();
+        let rows = vec![slot; m];
+        let hidden = self.forward_rows(&tokens, &pos, kv, &rows, false);
+        let mut lg = scratch_undef(m * cfg.vocab_size);
+        self.logits_into(&hidden, m, &mut lg);
+        let greedy =
+            |i: usize| argmax(&lg[i * cfg.vocab_size..(i + 1) * cfg.vocab_size]) as i32;
+        let mut accepted = 0;
+        while accepted < draft.len() && greedy(accepted) == draft[accepted] {
+            accepted += 1;
+        }
+        let next = greedy(accepted);
+        kv.truncate(slot, pre + 1 + accepted);
+        VerifyOutcome { accepted, next }
+    }
+
+    /// Draft `k` tokens for one sequence with the sparse-base-only
+    /// forward (adapters skipped — the paper's cheap approximation of the
+    /// full model), leaving the KV chain exactly as found.
+    ///
+    /// Runs `k` sequential single-row base-only forwards, chaining each
+    /// argmax into the next position. The draft rows' K/V is
+    /// base-quality, so it is truncated away before returning — the
+    /// subsequent [`Engine::decode_verify`] recomputes those positions
+    /// with the full model. On a Dense backend the base *is* the full
+    /// model (adapters merged), so drafts are simply correct; the
+    /// degenerate case costs speed, never bytes.
+    pub fn draft_self(
+        &self,
+        current: i32,
+        k: usize,
+        slot: usize,
+        kv: &mut KvSlotPool,
+    ) -> Vec<i32> {
+        let cfg = &self.weights.cfg;
+        assert!(k <= kv.remaining(slot), "draft overflows the KV slot");
+        let pre = kv.seq_len(slot);
+        let mut draft = Vec::with_capacity(k);
+        let mut cur = current;
+        let mut lg = scratch_undef(cfg.vocab_size);
+        for i in 0..k {
+            let hidden = self.forward_rows(&[cur], &[pre + i], kv, &[slot], true);
+            self.logits_into(&hidden, 1, &mut lg);
+            cur = argmax(&lg) as i32;
+            draft.push(cur);
+        }
+        kv.truncate(slot, pre);
+        draft
     }
 
     /// Greedy generation for a static batch of prompts, decoded to
@@ -733,7 +881,7 @@ impl Engine {
         let slot = kv.alloc().expect("fresh pool has a slot");
         let pos: Vec<usize> = (0..tokens.len()).collect();
         let rows = vec![slot; tokens.len()];
-        let hidden = self.forward_rows(tokens, &pos, &mut kv, &rows);
+        let hidden = self.forward_rows(tokens, &pos, &mut kv, &rows, false);
         let lg = self.logits(&hidden, tokens.len());
         Tensor::from_vec(&[tokens.len(), self.weights.cfg.vocab_size], lg)
     }
@@ -1156,6 +1304,102 @@ mod tests {
             engine.generate_batch(&[p.clone()], 3),
             fork.generate_batch(&[p], 3)
         );
+    }
+
+    #[test]
+    fn decode_verify_matches_sequential_decode_for_any_draft() {
+        // The exactness core: whatever the draft source proposes —
+        // correct continuations, garbage, or a half-right mix — the
+        // emitted stream must be bitwise the sequential greedy stream,
+        // and the KV chain must land at exactly the emitted length.
+        let cfg = test_cfg();
+        let mut rng = Rng::new(420);
+        let base = ParamStore::init_base(&cfg, &mut rng);
+        let engine = Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense);
+        let prompt: Vec<i32> = vec![3, 14, 15, 9];
+        let max_new = 8;
+        let want = engine.generate_batch(&[prompt.clone()], max_new)[0].clone();
+        for k in [1usize, 2, 4] {
+            for policy in 0..3 {
+                let mut kv = engine.new_slot_pool(1);
+                let slot = kv.alloc().unwrap();
+                let mut out = vec![engine.prefill(&prompt, slot, &mut kv)];
+                let (mut drafted, mut accepted) = (0usize, 0usize);
+                while out.len() < max_new {
+                    // The batcher's clamp: emitted = accepted+1 ≤ kk+1
+                    // can never push out past the budget or the slot.
+                    let kk = k
+                        .min(max_new - out.len() - 1)
+                        .min(kv.remaining(slot) - 1);
+                    let cur = *out.last().unwrap();
+                    // `want[out.len()..]` is the true continuation of cur.
+                    let truth = &want[out.len()..(out.len() + kk).min(want.len())];
+                    let draft: Vec<i32> = match policy {
+                        0 => truth.to_vec(),
+                        1 => truth.iter().map(|t| (t + 1) % 64).collect(),
+                        _ => truth
+                            .iter()
+                            .enumerate()
+                            .map(|(i, t)| if i % 2 == 0 { *t } else { (t + 1) % 64 })
+                            .collect(),
+                    };
+                    let v = engine.decode_verify(cur, &draft, slot, &mut kv);
+                    assert!(v.accepted <= draft.len());
+                    drafted += draft.len();
+                    accepted += v.accepted;
+                    out.extend_from_slice(&draft[..v.accepted]);
+                    out.push(v.next);
+                    assert_eq!(
+                        kv.seq_len(slot),
+                        prompt.len() + out.len() - 1,
+                        "rollback must land on the emitted length"
+                    );
+                }
+                assert_eq!(out, want, "k={k} policy={policy} changed the bytes");
+                assert!(accepted <= drafted);
+                if policy == 0 {
+                    assert_eq!(accepted, drafted, "correct drafts must all land");
+                }
+                if policy == 1 && k > 0 {
+                    assert_eq!(accepted, 0, "wrong-first drafts must all reject");
+                }
+                kv.free(slot);
+                assert_eq!(kv.blocks_in_use(), 0, "speculation leaked blocks");
+            }
+        }
+    }
+
+    #[test]
+    fn self_drafted_speculation_is_byte_identical_on_the_salr_backend() {
+        // End-to-end paper-native speculation: sparse-base drafts, full
+        // SALR verify. The draft pass must leave the chain exactly as
+        // found (its base-quality K/V truncated away), and the stream
+        // must match plain sequential decode bitwise.
+        let engine = salr_engine(2, 421);
+        let prompt: Vec<i32> = vec![5, 9, 13];
+        let max_new = 8;
+        let want = engine.generate_batch(&[prompt.clone()], max_new)[0].clone();
+        for k in [1usize, 2, 4] {
+            let mut kv = engine.new_slot_pool(1);
+            let slot = kv.alloc().unwrap();
+            let mut out = vec![engine.prefill(&prompt, slot, &mut kv)];
+            while out.len() < max_new {
+                let kk = k
+                    .min(max_new - out.len() - 1)
+                    .min(kv.remaining(slot) - 1);
+                let cur = *out.last().unwrap();
+                let pre = kv.seq_len(slot);
+                let draft = engine.draft_self(cur, kk, slot, &mut kv);
+                assert_eq!(draft.len(), kk);
+                assert_eq!(kv.seq_len(slot), pre, "drafting must not grow the chain");
+                let v = engine.decode_verify(cur, &draft, slot, &mut kv);
+                out.extend_from_slice(&draft[..v.accepted]);
+                out.push(v.next);
+            }
+            assert_eq!(out, want, "k={k}: self-drafting changed the bytes");
+            kv.free(slot);
+            assert_eq!(kv.blocks_in_use(), 0);
+        }
     }
 
     #[test]

@@ -295,6 +295,60 @@ impl KvSlotPool {
         self.slots[slot].len[layer] = t + 1;
     }
 
+    /// Roll `slot`'s chain back to `new_len` cached positions — the
+    /// speculative-decode rollback. The engine's `decode_verify` appends
+    /// K/V rows for every drafted token during its batched verify
+    /// forward, then truncates the chain to the accepted length; a
+    /// self-drafting pass likewise
+    /// truncates its base-only rows away before verification. Sets every
+    /// per-layer length to `new_len` and releases trailing blocks wholly
+    /// past it (a block covering a partial tail stays — its dead rows are
+    /// simply overwritten by the next push).
+    ///
+    /// Rollback only ever cuts **private** territory: drafts are
+    /// appended past the verified frontier, which lies at or past the
+    /// shared prefix, so shared (immutable, possibly tree-registered)
+    /// blocks are never popped — `debug_assert`ed, keeping the operation
+    /// COW-safe by construction.
+    pub fn truncate(&mut self, slot: usize, new_len: usize) {
+        assert!(
+            new_len <= self.seq_len(slot),
+            "truncate can only shorten a chain"
+        );
+        let bs = self.pool.block_size();
+        debug_assert!(
+            new_len >= self.slots[slot].shared * bs,
+            "speculative rollback cut into the shared prefix"
+        );
+        let keep = new_len.div_ceil(bs);
+        while self.slots[slot].table.len() > keep {
+            let b = self.slots[slot].table.pop().expect("table length checked");
+            self.pool.release(b);
+        }
+        for l in self.slots[slot].len.iter_mut() {
+            *l = new_len;
+        }
+    }
+
+    /// Up to `k` draft tokens continuing `history` (a sequence's full
+    /// token stream so far) from the prefix cache's chains — the *radix
+    /// drafting* source for speculative decoding. Forward-free and
+    /// read-only (no recency bump, so drafting never changes eviction
+    /// order); returns an empty draft when the cache is disabled or holds
+    /// no continuation.
+    pub fn propose_continuation(&self, history: &[i32], k: usize) -> Vec<i32> {
+        match &self.tree {
+            Some(t) => t.propose(history, k),
+            None => Vec::new(),
+        }
+    }
+
+    /// Blocks currently held by the radix tree (the prefix cache's
+    /// retained chains), independent of live-sequence references.
+    pub fn cached_blocks(&self) -> usize {
+        self.tree.as_ref().map_or(0, RadixTree::len)
+    }
+
     /// Read-only view of one `(slot, layer)` chain — what the attention
     /// kernel walks block by block.
     pub fn view(&self, slot: usize, layer: usize) -> KvView<'_> {
@@ -763,6 +817,89 @@ mod tests {
         fill(&mut pool, y, 3, 8, 2);
         assert_eq!(pool.seq_len(x), 8);
         assert_eq!(pool.seq_len(y), 8);
+    }
+
+    #[test]
+    fn truncate_releases_trailing_blocks_and_keeps_the_head_bitwise() {
+        let mut pool = KvSlotPool::with_config(1, 2, 12, 2, cfg(3, false));
+        let s = pool.alloc().unwrap();
+        fill(&mut pool, s, 5, 11, 2); // 4 blocks: 3+3+3+2 rows
+        assert_eq!(pool.blocks_in_use(), 4);
+        // Mid-block rollback: the partially covered block survives.
+        pool.truncate(s, 7);
+        assert_eq!(pool.seq_len(s), 7);
+        assert_eq!(pool.layer_len(s, 1), 7);
+        assert_eq!(pool.blocks_in_use(), 3, "only the wholly dead block freed");
+        for t in 0..7 {
+            let (k, v) = row(5, t);
+            assert_eq!(pool.view(s, 0).key(t), &k[..], "head rows must survive");
+            assert_eq!(pool.view(s, 1).value(t), &v[..]);
+        }
+        // Re-pushing past the cut overwrites the dead tail rows in place
+        // and regrows the chain — exactly like a fresh decode.
+        fill(&mut pool, s, 9, 12, 2);
+        assert_eq!(pool.seq_len(s), 12);
+        let (k9, _) = row(9, 7);
+        assert_eq!(pool.view(s, 0).key(7), &k9[..], "rollback rows overwritten");
+        // Boundary rollback frees every trailing block; truncate to the
+        // current length is a no-op.
+        pool.truncate(s, 6);
+        assert_eq!(pool.blocks_in_use(), 2);
+        pool.truncate(s, 6);
+        assert_eq!(pool.blocks_in_use(), 2);
+        pool.truncate(s, 0);
+        assert_eq!(pool.blocks_in_use(), 0);
+        pool.free(s);
+    }
+
+    #[test]
+    fn truncate_never_pops_shared_prefix_blocks() {
+        // A rollback at the verified frontier of an attached sequence
+        // releases only private tail blocks; the shared (tree-referenced)
+        // head keeps its refcounts and bytes.
+        let mut pool = KvSlotPool::with_config(2, 1, 12, 2, cfg(4, true));
+        let prompt: Vec<i32> = (0..8).collect();
+        let a = pool.alloc().unwrap();
+        fill(&mut pool, a, 1, 8, 1);
+        pool.register_prefix(a, &prompt);
+        pool.free(a);
+        let baseline = pool.blocks_in_use();
+        let b = pool.alloc().unwrap();
+        assert_eq!(pool.attach_prefix(b, &prompt), 7);
+        fill(&mut pool, b, 1, 8, 1); // finish the prompt's last position
+        // Simulate a verify forward: 3 speculative rows past the prompt,
+        // then roll back to one accepted token.
+        fill(&mut pool, b, 2, 11, 1);
+        pool.truncate(b, 9);
+        assert_eq!(pool.seq_len(b), 9);
+        for t in 0..7 {
+            let (k, _) = row(1, t);
+            assert_eq!(pool.view(b, 0).key(t), &k[..], "shared head corrupted");
+        }
+        let (k2, _) = row(2, 8);
+        assert_eq!(pool.view(b, 0).key(8), &k2[..], "accepted row corrupted");
+        pool.free(b);
+        assert_eq!(pool.blocks_in_use(), baseline, "rollback leaked blocks");
+    }
+
+    #[test]
+    fn propose_continuation_is_gated_on_the_cache() {
+        let mut off = KvSlotPool::with_config(1, 1, 8, 2, cfg(4, false));
+        let s = off.alloc().unwrap();
+        assert!(off.propose_continuation(&[1, 2, 3], 4).is_empty());
+        assert_eq!(off.cached_blocks(), 0);
+        off.free(s);
+        let mut on = KvSlotPool::with_config(1, 1, 8, 2, cfg(2, true));
+        let s = on.alloc().unwrap();
+        let prompt: Vec<i32> = vec![4, 5, 6, 7, 8, 9];
+        fill(&mut on, s, 1, 6, 1);
+        on.register_prefix(s, &prompt);
+        assert_eq!(on.cached_blocks(), 3);
+        // A second request that has generated [4,5,6] so far drafts the
+        // registered continuation, token-exact.
+        assert_eq!(on.propose_continuation(&[4, 5, 6], 2), vec![7, 8]);
+        assert_eq!(on.propose_continuation(&[4, 5, 6, 7], 8), vec![8, 9]);
+        assert!(on.propose_continuation(&[4, 9], 2).is_empty());
     }
 
     #[test]

@@ -16,9 +16,18 @@
 //! sharing a prompt head attach the cached head's blocks instead of
 //! re-running prefill over identical tokens.
 
+//!
+//! Decode can run **speculatively** ([`spec`]): a cheap drafter proposes
+//! k tokens, one batched [`Engine::decode_verify`] forward greedily
+//! checks them, and the KV chain rolls back to the accepted length —
+//! exact verification keeps the token stream bitwise identical to
+//! non-speculative decode.
+
 pub mod cache;
 mod engine;
 mod kv_cache;
+pub mod spec;
 
-pub use engine::{Backend, Engine, EngineWeights};
+pub use engine::{Backend, Engine, EngineWeights, VerifyOutcome};
 pub use kv_cache::{KvCacheConfig, KvSlotPool, KvView};
+pub use spec::{Drafter, RadixDrafter, SelfDrafter, SpecMode};

@@ -1,0 +1,160 @@
+//! Speculative-decoding draft sources.
+//!
+//! Speculation here is *exact*: drafts are proposals, verification is one
+//! batched greedy forward ([`Engine::decode_verify`]), and a wrong draft
+//! costs only wasted work — never a changed byte. That puts all the
+//! freedom in the drafter, which is what this module abstracts:
+//!
+//! * [`RadixDrafter`] — prompt-lookup drafting off the prefix cache. The
+//!   radix tree already stores previously generated block chains keyed by
+//!   their token paths; after a prefix hit the cached continuation *is* a
+//!   draft, read straight from the tree's edge labels with no forward
+//!   pass at all. Free drafts, high acceptance on repeated traffic.
+//! * [`SelfDrafter`] — the paper-native drafter. A SALR layer is a
+//!   sparse base plus a fused low-rank correction; running the base alone
+//!   ([`Engine::draft_self`] → `SalrLayer::forward_base_only`) skips
+//!   every adapter GEMM and yields a cheap approximation of the full
+//!   model. The verify pass restores exactly the correction the draft
+//!   dropped.
+//!
+//! The scheduler picks a source per [`SpecMode`] (`--spec-decode`, or
+//! `SALR_SPEC` for CI matrices) and drives draft → verify per sequence
+//! per iteration; `server/batcher.rs` owns that loop and the
+//! `drafted_tokens` / `accepted_tokens` / `spec_rollbacks` counters.
+
+use super::engine::Engine;
+use super::kv_cache::KvSlotPool;
+
+/// Which speculative draft source the scheduler runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpecMode {
+    /// No speculation: one token per decode forward (the default).
+    Off,
+    /// Draft cached continuations from the radix prefix cache.
+    Radix,
+    /// Draft with the sparse-base-only forward (adapters skipped).
+    SelfDraft,
+}
+
+impl SpecMode {
+    /// Parse a mode name as spelled on `--spec-decode` / `SALR_SPEC`.
+    pub fn parse(s: &str) -> Option<SpecMode> {
+        match s {
+            "off" => Some(SpecMode::Off),
+            "radix" => Some(SpecMode::Radix),
+            "self" => Some(SpecMode::SelfDraft),
+            _ => None,
+        }
+    }
+
+    /// The flag spelling (`off` / `radix` / `self`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpecMode::Off => "off",
+            SpecMode::Radix => "radix",
+            SpecMode::SelfDraft => "self",
+        }
+    }
+
+    /// Mode from `SALR_SPEC`, defaulting to [`SpecMode::Off`]. Panics on
+    /// a malformed value — a typo'd CI matrix leg must fail loudly, not
+    /// silently run without speculation (same contract as `SALR_FAULT`).
+    pub fn env_default() -> SpecMode {
+        match std::env::var("SALR_SPEC") {
+            Ok(s) => SpecMode::parse(&s)
+                .unwrap_or_else(|| panic!("SALR_SPEC: unknown mode {s:?} (off|radix|self)")),
+            Err(_) => SpecMode::Off,
+        }
+    }
+
+    /// The draft source for this mode, or `None` for [`SpecMode::Off`].
+    pub fn drafter(self) -> Option<Box<dyn Drafter>> {
+        match self {
+            SpecMode::Off => None,
+            SpecMode::Radix => Some(Box::new(RadixDrafter)),
+            SpecMode::SelfDraft => Some(Box::new(SelfDrafter)),
+        }
+    }
+}
+
+/// A speculative draft source.
+///
+/// Contract: return up to `k` proposed next tokens for the sequence whose
+/// full token history (prompt plus generated output, ending with the
+/// token about to be fed) is `history`, leaving `kv.seq_len(slot)`
+/// exactly as found. Returning fewer than `k` tokens (or none) is always
+/// legal — the scheduler verifies whatever comes back, and an empty draft
+/// degenerates to a plain decode step. Drafts may be arbitrarily wrong;
+/// exact verification makes quality a throughput knob, not a correctness
+/// one.
+pub trait Drafter: Send {
+    /// Propose up to `k` tokens to follow `history`.
+    fn draft(
+        &self,
+        engine: &Engine,
+        kv: &mut KvSlotPool,
+        slot: usize,
+        history: &[i32],
+        k: usize,
+    ) -> Vec<i32>;
+}
+
+/// Prompt-lookup drafting from the radix prefix cache: propose the cached
+/// continuation of `history` read from the tree's edge labels. No forward
+/// pass, no KV traffic, read-only on the cache (eviction order is
+/// untouched). Misses — cache off, no matching chain, or `history` ends
+/// mid-divergence — yield an empty or short draft.
+pub struct RadixDrafter;
+
+impl Drafter for RadixDrafter {
+    fn draft(
+        &self,
+        _engine: &Engine,
+        kv: &mut KvSlotPool,
+        _slot: usize,
+        history: &[i32],
+        k: usize,
+    ) -> Vec<i32> {
+        kv.propose_continuation(history, k)
+    }
+}
+
+/// Paper-native self-drafting: k chained single-row sparse-base-only
+/// forwards through [`Engine::draft_self`]. The draft rows' base-quality
+/// K/V is truncated away before returning, so the chain is exactly as
+/// found. On a Dense backend (adapters merged) the base is the full
+/// model and drafting degenerates to correct-but-not-cheaper — the spec
+/// test matrix runs it anyway to pin that correctness never depends on
+/// the drafter being weak.
+pub struct SelfDrafter;
+
+impl Drafter for SelfDrafter {
+    fn draft(
+        &self,
+        engine: &Engine,
+        kv: &mut KvSlotPool,
+        slot: usize,
+        history: &[i32],
+        k: usize,
+    ) -> Vec<i32> {
+        let cur = *history.last().expect("history ends with the current token");
+        engine.draft_self(cur, k, slot, kv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in [SpecMode::Off, SpecMode::Radix, SpecMode::SelfDraft] {
+            assert_eq!(SpecMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(SpecMode::parse("radixx"), None);
+        assert_eq!(SpecMode::parse(""), None);
+        assert!(SpecMode::Off.drafter().is_none());
+        assert!(SpecMode::Radix.drafter().is_some());
+        assert!(SpecMode::SelfDraft.drafter().is_some());
+    }
+}

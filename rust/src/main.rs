@@ -132,6 +132,14 @@ fn run(args: &Args) -> Result<()> {
                 default_deadline_ms: args.usize_or("default-deadline-ms", 0)? as u64,
                 max_queue_depth: args.usize_or("max-queue-depth", 0)?,
                 idle_timeout_ms: args.usize_or("idle-timeout-ms", 0)? as u64,
+                // Speculation defaults from SALR_SPEC; an explicit flag
+                // overrides, including `--spec-decode off` against the env.
+                spec_decode: match args.flag("spec-decode") {
+                    Some(s) => salr::infer::SpecMode::parse(s)
+                        .ok_or_else(|| anyhow::anyhow!("--spec-decode must be off|radix|self"))?,
+                    None => defaults.spec_decode,
+                },
+                spec_k: args.usize_or("spec-k", defaults.spec_k)?.max(1),
             };
             serve(engine, &args.str_or("addr", "127.0.0.1:7433"), policy, None)
         }

@@ -89,6 +89,33 @@ impl SalrLayer {
         }
     }
 
+    /// `y[m, d_out] = x @ Ŵ` — the sparse base **without** the fused
+    /// adapter correction.
+    ///
+    /// This is the paper-native speculative *drafter*: the pruned base is a
+    /// cheap approximation of the full layer (it skips the entire
+    /// `(x A_cat) B_cat` fused GEMM, i.e. the LoRA update plus the
+    /// truncated-SVD residual correction), and the exact greedy verify pass
+    /// through [`SalrLayer::forward`] restores precisely what was dropped.
+    /// Draft batches are decode-sized (`m = spec_k ≤ 32` in practice) so
+    /// small m takes the zero-skipping direct kernel; larger m falls back
+    /// to the sequential sparse GEMM — never the pipelined path, whose
+    /// decode-amortization setup is wasted on adapter-free work.
+    pub fn forward_base_only(
+        &self,
+        x: &[f32],
+        m: usize,
+        out: &mut [f32],
+        pool: &crate::util::pool::WorkerPool,
+    ) {
+        const DIRECT_M_MAX: usize = 32;
+        if m <= DIRECT_M_MAX {
+            crate::gemm::sparse::bitmap_gemm_direct_pool(x, &self.w_hat, out, m, pool);
+        } else {
+            crate::gemm::sparse::bitmap_gemm_sequential_pool(x, &self.w_hat, out, m, pool);
+        }
+    }
+
     /// Sequential (non-pipelined) reference forward, for tests.
     pub fn forward_reference(&self, x: &Tensor) -> Tensor {
         let dense = self.w_hat.decode();
@@ -188,6 +215,31 @@ mod tests {
         assert_eq!(y1, y3, "pipelined pool width must not change the bits");
         let want = layer.forward_reference(&x);
         assert!(max_abs_diff(&Tensor::from_vec(&[m, 64], y1), &want) < 1e-2);
+    }
+
+    #[test]
+    fn base_only_forward_is_the_sparse_base_exactly() {
+        // Both the small-m (direct) and large-m (sequential) draft paths
+        // must equal x @ decode(Ŵ) with no adapter contribution, and the
+        // full forward must differ — otherwise self-drafting degenerates
+        // into verifying against itself.
+        let mut rng = Rng::new(306);
+        let layer = make_layer(&mut rng, 96, 64, 8, 16);
+        let pool = crate::util::pool::WorkerPool::new(2);
+        let dense = layer.w_hat.decode();
+        for m in [3usize, 40] {
+            let x = Tensor::randn(&[m, 96], 1.0, &mut rng);
+            let want = matmul(&x, &dense);
+            let mut got = vec![0.0f32; m * 64];
+            layer.forward_base_only(x.data(), m, &mut got, &pool);
+            let got = Tensor::from_vec(&[m, 64], got);
+            assert!(max_abs_diff(&got, &want) < 1e-3, "m={m}");
+            let full = layer.forward_reference(&x);
+            assert!(
+                max_abs_diff(&got, &full) > 1e-3,
+                "adapters must contribute on this layer (m={m})"
+            );
+        }
     }
 
     #[test]

@@ -21,7 +21,14 @@
 //!    registers its full blocks in the prefix cache for later requests;
 //! 3. *decode*: one [`Engine::decode_step`] over every fully-prefilled
 //!    sequence, so running requests keep producing tokens **between**
-//!    another request's prefill chunks;
+//!    another request's prefill chunks. With speculation enabled
+//!    ([`BatchPolicy::spec_decode`], `--spec-decode {off,radix,self}`)
+//!    this becomes draft + verify per sequence: a
+//!    [`Drafter`](crate::infer::Drafter) proposes up to
+//!    [`BatchPolicy::spec_k`] tokens and one batched
+//!    [`Engine::decode_verify`] forward accepts the longest greedy-exact
+//!    prefix, emitting `accepted + 1` tokens per iteration instead of 1
+//!    (`drafted_tokens` / `accepted_tokens` / `spec_rollbacks` count it);
 //! 4. *retire*: finished sequences free their KV slots, fire their reply
 //!    callbacks and (counted) make room for the next admissions.
 //!
@@ -62,7 +69,7 @@
 //! injection harness (`SALR_FAULT`), in `rust/tests/integration_fault.rs`.
 
 use crate::data::{detokenize, token_byte, tokenize};
-use crate::infer::{Engine, KvCacheConfig, KvSlotPool};
+use crate::infer::{Engine, KvCacheConfig, KvSlotPool, SpecMode};
 use crate::util::fault::{FaultAction, FaultOp, FaultPlan};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -188,6 +195,16 @@ pub struct BatchPolicy {
     /// requests that stays silent this long is closed, so half-open
     /// sockets stop pinning reader/writer threads. `0` disables it.
     pub idle_timeout_ms: u64,
+    /// Speculative decoding mode (the `--spec-decode` flag; defaults to
+    /// the `SALR_SPEC` env override so the CI matrix can exercise
+    /// speculation suite-wide). Verification is greedy-exact, so every
+    /// mode produces byte-identical output — the choice is a throughput
+    /// knob, never a correctness one.
+    pub spec_decode: SpecMode,
+    /// Maximum tokens drafted per sequence per scheduler iteration (the
+    /// `--spec-k` flag; clamped per sequence to its remaining budget and
+    /// KV headroom). Ignored when [`BatchPolicy::spec_decode`] is `Off`.
+    pub spec_k: usize,
 }
 
 impl Default for BatchPolicy {
@@ -208,6 +225,8 @@ impl Default for BatchPolicy {
             default_deadline_ms: 0,
             max_queue_depth: 0,
             idle_timeout_ms: 0,
+            spec_decode: SpecMode::env_default(),
+            spec_k: 4,
         }
     }
 }
@@ -261,6 +280,16 @@ pub struct ServerMetrics {
     /// Panicked engine workers replaced by the supervisor (see
     /// [`Batcher::supervised_worker_loop`]).
     pub worker_restarts: AtomicU64,
+    /// Tokens proposed by the speculative drafter across all sequences
+    /// (0 with `--spec-decode off`). Always `>= accepted_tokens`.
+    pub drafted_tokens: AtomicU64,
+    /// Drafted tokens that survived exact verification and were emitted.
+    /// The per-iteration bonus/correction token is **not** counted here —
+    /// `accepted_tokens / drafted_tokens` is the pure draft hit rate.
+    pub accepted_tokens: AtomicU64,
+    /// Verify steps in which at least one drafted token was rejected
+    /// (the KV chain rolled back past speculative rows).
+    pub spec_rollbacks: AtomicU64,
     /// Highest batch occupancy any worker reached.
     pub max_occupancy: AtomicU64,
     /// Per-request end-to-end latencies (µs), for percentile queries.
@@ -925,6 +954,8 @@ impl Batcher {
         let max_ctx = engine.weights.cfg.max_seq_len;
         let nslots = self.policy.max_batch.max(1);
         let chunk = self.policy.prefill_chunk;
+        // One drafter instance per loop entry (`None` = non-speculative).
+        let drafter = self.policy.spec_decode.drafter();
         let WorkerState { kv, live, local } = state;
 
         loop {
@@ -960,16 +991,70 @@ impl Batcher {
                 .collect();
             if !ready.is_empty() {
                 self.fault_point(FaultOp::DecodeStep, worker);
-                let current: Vec<i32> = ready.iter().map(|&i| live[i].current).collect();
-                let slots: Vec<usize> = ready.iter().map(|&i| live[i].slot).collect();
                 self.metrics.record_step(ready.len());
                 local.steps += 1;
-                let next = engine.decode_step(&current, &slots, kv);
-                for (j, &i) in ready.iter().enumerate() {
-                    let seq = &mut live[i];
-                    seq.current = next[j];
-                    seq.out.push(next[j]);
-                    seq.stream_token(next[j]);
+                if let Some(drafter) = &drafter {
+                    // Speculative iteration: draft + verify per sequence.
+                    // Each verify emits `accepted + 1` tokens, so a good
+                    // draft advances a sequence several positions in one
+                    // forward; a bad one degenerates to plain decode.
+                    for &i in &ready {
+                        let seq = &mut live[i];
+                        // Clamp so the `k+1`-row verify forward can never
+                        // overrun the token budget (emitted ≤ k+1) or the
+                        // KV slot (appends ≤ k+1 rows before rollback).
+                        // `out.len() < budget` here: budget-reached
+                        // sequences retired before this loop.
+                        let k = self
+                            .policy
+                            .spec_k
+                            .min(seq.budget.saturating_sub(seq.out.len() + 1))
+                            .min(kv.remaining(seq.slot).saturating_sub(1));
+                        let draft = if k == 0 {
+                            Vec::new()
+                        } else {
+                            // History = prompt ++ out; `current` (the
+                            // token about to be fed) is its last element.
+                            let mut hist =
+                                Vec::with_capacity(seq.prompt.len() + seq.out.len());
+                            hist.extend_from_slice(&seq.prompt);
+                            hist.extend_from_slice(&seq.out);
+                            let mut d = drafter.draft(engine, kv, seq.slot, &hist, k);
+                            d.truncate(k); // defensive: the clamp is load-bearing
+                            d
+                        };
+                        // Fault point between draft and verify: the draft
+                        // is computed (self-drafting has appended and
+                        // rolled back its base-only KV rows) but nothing
+                        // is verified — a panic here is the worst spot
+                        // for speculative KV accounting.
+                        self.fault_point(FaultOp::VerifyStep, worker);
+                        let v = engine.decode_verify(seq.current, &draft, seq.slot, kv);
+                        self.metrics
+                            .drafted_tokens
+                            .fetch_add(draft.len() as u64, Ordering::Relaxed);
+                        self.metrics
+                            .accepted_tokens
+                            .fetch_add(v.accepted as u64, Ordering::Relaxed);
+                        if v.accepted < draft.len() {
+                            self.metrics.spec_rollbacks.fetch_add(1, Ordering::Relaxed);
+                        }
+                        for &tok in draft[..v.accepted].iter().chain([v.next].iter()) {
+                            seq.out.push(tok);
+                            seq.stream_token(tok);
+                        }
+                        seq.current = v.next;
+                    }
+                } else {
+                    let current: Vec<i32> = ready.iter().map(|&i| live[i].current).collect();
+                    let slots: Vec<usize> = ready.iter().map(|&i| live[i].slot).collect();
+                    let next = engine.decode_step(&current, &slots, kv);
+                    for (j, &i) in ready.iter().enumerate() {
+                        let seq = &mut live[i];
+                        seq.current = next[j];
+                        seq.out.push(next[j]);
+                        seq.stream_token(next[j]);
+                    }
                 }
                 // Retire immediately after the step, so a finished
                 // request's reply fires before (and its latency never
@@ -1144,6 +1229,24 @@ impl Batcher {
             if live[i].prefill_done() && live[i].out.len() >= live[i].budget {
                 let mut seq = live.swap_remove(i);
                 seq.finish_stream();
+                // Radix drafting feeds on generated continuations: at
+                // retirement, register the sequence's *whole* chain —
+                // prompt plus generated tokens — not just the prompt the
+                // prefill path registered. A repeat of the prompt then
+                // both attaches the cached head AND drafts the previous
+                // completion from the tree's edge labels (greedy decode
+                // is deterministic, so those drafts verify fully). Every
+                // registered row is a verified full-model row — rejected
+                // speculative rows were truncated before ever being
+                // registrable. Keyed on mode: other modes keep the exact
+                // pre-speculation cache contents.
+                if self.policy.spec_decode == SpecMode::Radix && self.policy.prefix_cache {
+                    let mut hist =
+                        Vec::with_capacity(seq.prompt.len() + seq.out.len() - 1);
+                    hist.extend_from_slice(&seq.prompt);
+                    hist.extend_from_slice(&seq.out[..seq.out.len() - 1]);
+                    kv.register_prefix(seq.slot, &hist);
+                }
                 kv.free(seq.slot);
                 local.retired += 1;
                 local.tokens += seq.out.len() as u64;
@@ -1598,6 +1701,76 @@ mod tests {
             prefill_by_mode[1] < prefill_by_mode[0],
             "cache-on must run strictly fewer prefill tokens"
         );
+    }
+
+    #[test]
+    fn speculative_modes_serve_identical_bytes_and_count_drafts() {
+        // All three spec modes over the same traffic: byte-identical
+        // responses (exact verification), drafted >= accepted, and the
+        // drafters actually engage — self-drafting from the first decode,
+        // radix drafting once a completed continuation is registered.
+        let eng = engine();
+        let prompts: Vec<String> =
+            (0..3).map(|_| "Q: what is 6*7? A: ".to_string()).collect();
+        let mut texts_by_mode = Vec::new();
+        for mode in [SpecMode::Off, SpecMode::Radix, SpecMode::SelfDraft] {
+            let batcher = Batcher::new(BatchPolicy {
+                max_batch: 2,
+                engine_workers: 1,
+                prefill_chunk: 4,
+                kv_block_size: 4,
+                prefix_cache: true,
+                spec_decode: mode,
+                spec_k: 4,
+                ..Default::default()
+            });
+            let handles = spawn_engine_workers(&batcher, eng.fork());
+            let texts: Vec<String> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let r = batcher.submit(Request {
+                        id: i as u64,
+                        prompt: p.clone(),
+                        max_tokens: 8,
+                        ..Default::default()
+                    });
+                    assert!(r.error.is_none(), "mode={}: {:?}", mode.name(), r.error);
+                    assert_eq!(r.tokens, 8, "mode={}", mode.name());
+                    r.text
+                })
+                .collect();
+            let drafted = batcher.metrics.drafted_tokens.load(Ordering::Relaxed);
+            let accepted = batcher.metrics.accepted_tokens.load(Ordering::Relaxed);
+            assert!(accepted <= drafted, "mode={}", mode.name());
+            match mode {
+                SpecMode::Off => assert_eq!(drafted, 0, "off must never draft"),
+                // Sequential identical prompts: request 2+ draft request
+                // 1's registered continuation, and greedy determinism
+                // makes those drafts verify in full.
+                SpecMode::Radix => {
+                    assert!(drafted > 0, "radix never engaged");
+                    assert_eq!(accepted, drafted, "cached continuations must verify");
+                }
+                // Dense test engine: the "base" is the full model, so
+                // every self-draft is correct.
+                SpecMode::SelfDraft => {
+                    assert!(drafted > 0, "self-drafting never engaged");
+                    assert_eq!(accepted, drafted);
+                    assert_eq!(
+                        batcher.metrics.spec_rollbacks.load(Ordering::Relaxed),
+                        0
+                    );
+                }
+            }
+            texts_by_mode.push(texts);
+            batcher.shutdown();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        assert_eq!(texts_by_mode[0], texts_by_mode[1], "radix changed bytes");
+        assert_eq!(texts_by_mode[0], texts_by_mode[2], "self-draft changed bytes");
     }
 
     #[test]

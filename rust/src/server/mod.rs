@@ -17,6 +17,13 @@
 //! deterministically by the `SALR_FAULT` op-counter fault-injection
 //! harness (`util::fault`).
 //!
+//! Decode can run **speculatively** (`--spec-decode {radix,self}`,
+//! [`crate::infer::SpecMode`]): each iteration drafts up to `--spec-k`
+//! tokens per sequence (radix-tree continuations or the sparse-base-only
+//! forward) and verifies them in one batched forward with exact greedy
+//! acceptance — output stays byte-identical to non-speculative serving,
+//! counted by `drafted_tokens` / `accepted_tokens` / `spec_rollbacks`.
+//!
 //! See DESIGN.md "Serving layer" and "KV cache subsystem" for the
 //! scheduler, the block/prefix-cache lifecycle, the
 //! chunked-prefill/streaming wire protocol, and the determinism

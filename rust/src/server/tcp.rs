@@ -455,6 +455,18 @@ fn render_metrics(batcher: &Batcher) -> Json {
             "worker_restarts",
             batcher.metrics.worker_restarts.load(Ordering::Relaxed),
         )
+        .set(
+            "drafted_tokens",
+            batcher.metrics.drafted_tokens.load(Ordering::Relaxed),
+        )
+        .set(
+            "accepted_tokens",
+            batcher.metrics.accepted_tokens.load(Ordering::Relaxed),
+        )
+        .set(
+            "spec_rollbacks",
+            batcher.metrics.spec_rollbacks.load(Ordering::Relaxed),
+        )
         .set("latency_p50_ms", p50)
         .set("latency_p90_ms", p90)
         .set("latency_p99_ms", p99)

@@ -14,6 +14,7 @@
 //! | `delay:`        | stall the worker thread when the trigger fires             |
 //! | `decode_step=N` | trigger before a worker's `N`-th decode step (1-based)     |
 //! | `prefill=N`     | trigger before a worker's `N`-th prefill chunk (1-based)   |
+//! | `verify_step=N` | trigger before a worker's `N`-th speculative verify (1-based) |
 //! | `worker=N`      | only engine worker `N` may fire the fault (default: any)   |
 //! | `ms=N`          | stall duration for `delay` faults (default 25 ms)          |
 //!
@@ -40,6 +41,13 @@ pub enum FaultOp {
     DecodeStep,
     /// One `Engine::prefill_chunk` call in an engine-worker loop.
     PrefillChunk,
+    /// One speculative draft+verify for one sequence in an engine-worker
+    /// loop. The trigger sits between the draft and the verify forward
+    /// (`Engine::decode_verify`): the drafter has run — self-drafting
+    /// has appended and rolled back its base-only KV rows — but nothing
+    /// is verified yet, the worst spot for speculative KV accounting,
+    /// which is exactly why it is a fault point.
+    VerifyStep,
 }
 
 impl FaultOp {
@@ -47,6 +55,7 @@ impl FaultOp {
         match self {
             FaultOp::DecodeStep => "decode_step",
             FaultOp::PrefillChunk => "prefill",
+            FaultOp::VerifyStep => "verify_step",
         }
     }
 }
@@ -106,14 +115,17 @@ impl FaultPlan {
                 .map_err(|_| format!("bad value in {clause:?}: expected an integer"))?;
             match k.trim() {
                 "worker" => worker = Some(n as usize),
-                "decode_step" | "prefill" => {
+                "decode_step" | "prefill" | "verify_step" => {
                     if trigger.is_some() {
-                        return Err("exactly one trigger (decode_step=N or prefill=N)".into());
+                        return Err(
+                            "exactly one trigger (decode_step=N, prefill=N or verify_step=N)"
+                                .into(),
+                        );
                     }
-                    let op = if k.trim() == "prefill" {
-                        FaultOp::PrefillChunk
-                    } else {
-                        FaultOp::DecodeStep
+                    let op = match k.trim() {
+                        "prefill" => FaultOp::PrefillChunk,
+                        "verify_step" => FaultOp::VerifyStep,
+                        _ => FaultOp::DecodeStep,
                     };
                     trigger = Some((op, n));
                 }
@@ -121,8 +133,9 @@ impl FaultPlan {
                 other => return Err(format!("unknown key {other:?}")),
             }
         }
-        let (op, at) =
-            trigger.ok_or_else(|| "spec needs a trigger: decode_step=N or prefill=N".to_string())?;
+        let (op, at) = trigger.ok_or_else(|| {
+            "spec needs a trigger: decode_step=N, prefill=N or verify_step=N".to_string()
+        })?;
         if at == 0 {
             return Err("trigger counts are 1-based: use decode_step=1 for the first step".into());
         }
@@ -223,6 +236,25 @@ mod tests {
         assert_eq!(d.kind, FaultKind::Delay(Duration::from_millis(25)));
         let d = FaultPlan::parse("delay:decode_step=2,ms=400").unwrap();
         assert_eq!(d.kind, FaultKind::Delay(Duration::from_millis(400)));
+        let v = FaultPlan::parse("panic:worker=0,verify_step=2").unwrap();
+        assert_eq!(v.op, FaultOp::VerifyStep);
+        assert_eq!(v.at, 2);
+        assert_eq!(v.worker, Some(0));
+    }
+
+    #[test]
+    fn verify_counter_is_independent_of_the_others() {
+        let p = FaultPlan::parse("panic:verify_step=2").unwrap();
+        // Decode steps and prefill chunks never advance the verify count.
+        assert_eq!(p.check(FaultOp::DecodeStep, 0), None);
+        assert_eq!(p.check(FaultOp::PrefillChunk, 0), None);
+        assert_eq!(p.check(FaultOp::VerifyStep, 0), None); // verify 1
+        let action = p.check(FaultOp::VerifyStep, 0); // verify 2: fire
+        match action {
+            Some(FaultAction::Panic(msg)) => assert!(msg.contains("verify_step #2")),
+            other => panic!("expected a panic action, got {other:?}"),
+        }
+        assert_eq!(p.check(FaultOp::VerifyStep, 0), None, "one-shot");
     }
 
     #[test]

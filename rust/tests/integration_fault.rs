@@ -19,7 +19,7 @@
 //! the production `serve` → `Batcher::new` → env-parsing path.
 
 use salr::data::{detokenize, tokenize};
-use salr::infer::{Backend, Engine, EngineWeights};
+use salr::infer::{Backend, Engine, EngineWeights, SpecMode};
 use salr::model::ParamStore;
 use salr::runtime::ModelCfg;
 use salr::server::{
@@ -651,6 +651,243 @@ fn tcp_idle_timeout_closes_silent_connections_but_not_inflight() {
     assert_eq!(n, 0, "silent connection must be idle-closed");
     drop(busy);
     stop_server(addr, handle);
+}
+
+/// A panic injected at the speculative fault point — between a
+/// sequence's draft and its verify forward, where the drafter has
+/// already appended and rolled back KV rows — must behave exactly like
+/// any other worker panic: in-flight requests on the panicking worker
+/// fail with error replies, survivors stay byte-identical to the
+/// fault-free oracle, the worker is respawned and serves the same bytes
+/// again, and no KV slot or block outlives the crash.
+#[test]
+fn verify_step_panic_respawns_and_survivors_stay_byte_identical() {
+    let engine = test_engine();
+    let prompts: Vec<String> = (0..4).map(|i| format!("Q: {}+{}=? A: ", 4 + i, 19 - i)).collect();
+    let want: Vec<String> = prompts.iter().map(|p| oracle(&engine, p, 12)).collect();
+
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 2,
+            prefill_chunk: 4,
+            prefix_cache: false,
+            spec_decode: SpecMode::SelfDraft,
+            spec_k: 4,
+            ..Default::default()
+        },
+        // The verify counter ticks once per sequence per iteration, so
+        // with 12-token budgets every worker passes 6 long before its
+        // load drains.
+        plan("panic:verify_step=6"),
+    );
+    let workers = spawn_engine_workers(&batcher, engine.fork());
+    let mut joins = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let b = batcher.clone();
+        let p = p.clone();
+        joins.push(std::thread::spawn(move || {
+            b.submit(Request {
+                id: i as u64,
+                prompt: p,
+                max_tokens: 12,
+                ..Default::default()
+            })
+        }));
+    }
+    let responses: Vec<Response> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    let failed = responses.iter().filter(|r| r.error.is_some()).count();
+    assert!(
+        (1..=2).contains(&failed),
+        "only the panicking worker's in-flight requests may fail (got {failed})"
+    );
+    for r in &responses {
+        match &r.error {
+            Some(e) => assert!(e.contains("panicked"), "unexpected failure: {e}"),
+            None => assert_eq!(
+                r.text, want[r.id as usize],
+                "survivor bytes must match the fault-free oracle"
+            ),
+        }
+    }
+    assert_eq!(batcher.metrics.worker_restarts.load(Ordering::Relaxed), 1);
+
+    // The respawned worker keeps speculating, byte-identically.
+    for (i, p) in prompts.iter().enumerate() {
+        let r = batcher.submit(Request {
+            id: 100 + i as u64,
+            prompt: p.clone(),
+            max_tokens: 12,
+            ..Default::default()
+        });
+        assert!(r.error.is_none(), "post-respawn request failed: {:?}", r.error);
+        assert_eq!(r.text, want[i]);
+    }
+    assert!(
+        batcher.metrics.drafted_tokens.load(Ordering::Relaxed) > 0,
+        "the run must actually have speculated"
+    );
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+    for (w, m) in batcher.worker_metrics().iter().enumerate() {
+        assert_eq!(m.slots_in_use, 0, "worker {w} leaked a KV slot");
+        assert_eq!(m.cache_blocks_in_use, 0, "worker {w} leaked KV blocks");
+    }
+}
+
+/// Speculation composed with the rest of the failure machinery: radix
+/// drafting + prefix cache + chunked prefill, then a mid-stream cancel
+/// and a dead-on-arrival deadline on the same prompt. The block gauge
+/// must return exactly to the retained-chain baseline, the resubmission
+/// must reproduce the warmup bytes, and — because cached chains replay a
+/// deterministic greedy decode — every radix draft must verify in full.
+#[test]
+fn speculative_serving_survives_cancel_and_deadline_with_gauges_at_baseline() {
+    let engine = test_engine();
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 1,
+            prefill_chunk: 4,
+            kv_block_size: 4,
+            prefix_cache: true,
+            spec_decode: SpecMode::Radix,
+            spec_k: 4,
+            ..Default::default()
+        },
+        None,
+    );
+    let workers = spawn_engine_workers(&batcher, engine.fork());
+    let prompt = "SYSTEM: terse.\nQ: 3+9=? A: ";
+
+    // Warmup registers the prompt chain and its completion in the tree.
+    let warm = batcher.submit(Request {
+        id: 1,
+        prompt: prompt.into(),
+        max_tokens: 6,
+        ..Default::default()
+    });
+    assert!(warm.error.is_none());
+    wait_until("warmup gauges to publish", || {
+        batcher.worker_metrics()[0].slots_in_use == 0
+    });
+    let baseline = batcher.worker_metrics()[0].cache_blocks_in_use;
+    assert!(baseline > 0, "the retired chain must be retained for reuse");
+
+    // Same prompt, cancelled at its first streamed token — mid-flight,
+    // while radix drafts are being verified.
+    let token = CancelToken::new();
+    let latch = token.clone();
+    let (tx, rx) = mpsc::channel();
+    batcher.submit_stream_with(
+        Request {
+            id: 2,
+            prompt: prompt.into(),
+            max_tokens: 40,
+            timeout_ms: None,
+            cancel: Some(token),
+        },
+        Box::new(move |_delta| latch.cancel()),
+        Box::new(move |r| {
+            let _ = tx.send(r);
+        }),
+    );
+    let r = rx.recv_timeout(Duration::from_secs(30)).expect("cancel reply");
+    assert_eq!(r.error.as_deref(), Some("cancelled"));
+
+    // Same prompt, expired at admission: never touches the pool.
+    let r = batcher.submit(Request {
+        id: 3,
+        prompt: prompt.into(),
+        max_tokens: 6,
+        timeout_ms: Some(0),
+        ..Default::default()
+    });
+    assert_eq!(r.error.as_deref(), Some("timeout"));
+
+    // Resubmission: drafts the warmup completion and reproduces it.
+    let again = batcher.submit(Request {
+        id: 4,
+        prompt: prompt.into(),
+        max_tokens: 6,
+        ..Default::default()
+    });
+    assert!(again.error.is_none());
+    assert_eq!(again.text, warm.text, "post-failure resubmission changed bytes");
+
+    let drafted = batcher.metrics.drafted_tokens.load(Ordering::Relaxed);
+    let accepted = batcher.metrics.accepted_tokens.load(Ordering::Relaxed);
+    assert!(drafted > 0, "repeat traffic must produce radix drafts");
+    assert_eq!(
+        accepted, drafted,
+        "cached chains replay a deterministic greedy decode: full acceptance"
+    );
+    assert_eq!(batcher.metrics.spec_rollbacks.load(Ordering::Relaxed), 0);
+
+    wait_until("final gauges to publish", || {
+        batcher.worker_metrics()[0].slots_in_use == 0
+    });
+    assert_eq!(
+        batcher.worker_metrics()[0].cache_blocks_in_use, baseline,
+        "speculative failures must return block accounting exactly to baseline"
+    );
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+}
+
+/// A deadline that expires while a sequence is mid-speculation (forced
+/// by a stall at the verify fault point) retires the request with
+/// `"timeout"`; the worker then serves the next speculative request
+/// normally with zero leaked KV.
+#[test]
+fn deadline_expires_mid_speculation_under_injected_delay() {
+    let engine = test_engine();
+    let batcher = Batcher::with_fault(
+        BatchPolicy {
+            max_batch: 2,
+            engine_workers: 1,
+            prefix_cache: false,
+            spec_decode: SpecMode::SelfDraft,
+            spec_k: 4,
+            ..Default::default()
+        },
+        // Stall 400 ms at the 2nd verify point: the 100 ms deadline
+        // expires during the stall, with the request still well under
+        // its 20-token budget.
+        plan("delay:verify_step=2,ms=400"),
+    );
+    let workers = spawn_engine_workers(&batcher, engine.fork());
+    let r = batcher.submit(Request {
+        id: 1,
+        prompt: "Q: 6+8=? A: ".into(),
+        max_tokens: 20,
+        timeout_ms: Some(100),
+        ..Default::default()
+    });
+    assert_eq!(r.error.as_deref(), Some("timeout"));
+    assert_eq!(r.tokens, 0, "partial output is discarded");
+    assert_eq!(batcher.metrics.timed_out.load(Ordering::Relaxed), 1);
+
+    let ok = batcher.submit(Request {
+        id: 2,
+        prompt: "Q: 1+5=? A: ".into(),
+        max_tokens: 3,
+        ..Default::default()
+    });
+    assert!(ok.error.is_none());
+    assert_eq!(ok.tokens, 3);
+
+    batcher.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+    let m = &batcher.worker_metrics()[0];
+    assert_eq!((m.slots_in_use, m.cache_blocks_in_use), (0, 0));
 }
 
 /// Supervision over TCP with the CI fault leg's spec

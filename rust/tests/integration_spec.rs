@@ -1,0 +1,286 @@
+//! Speculative-decoding acceptance: exact verification means the token
+//! stream is **bitwise identical** to non-speculative decode, no matter
+//! how good or bad the drafts are. This suite pins that invariant across
+//! the full configuration matrix the PR ships:
+//!
+//! * draft source: `radix` (prompt-lookup from the prefix-cache tree)
+//!   and `self` (sparse-base-only forward),
+//! * draft length k ∈ {1, 2, 4} (including k larger than the remaining
+//!   token budget, so the scheduler's clamp path runs),
+//! * engine workers ∈ {1, 2},
+//! * prefix cache on and off,
+//!
+//! every cell compared byte-for-byte against the 1-worker sequential
+//! whole-prefill oracle with speculation off. On top of identity the
+//! suite checks the accounting: `drafted_tokens ≥ accepted_tokens`,
+//! drafts actually happen where the matrix says they must, and after the
+//! load drains every worker's KV/slot gauges are back at baseline (no
+//! slot or block leaked to a rolled-back draft).
+
+use salr::infer::{Backend, Engine, EngineWeights, SpecMode};
+use salr::model::ParamStore;
+use salr::runtime::ModelCfg;
+use salr::salr::build_salr;
+use salr::server::{serve, BatchPolicy, Client};
+use salr::util::json::Json;
+use salr::util::rng::Rng;
+use std::net::SocketAddr;
+
+fn test_cfg() -> ModelCfg {
+    ModelCfg {
+        name: "spec-e2e".into(),
+        vocab_size: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq_len: 96,
+        rank: 4,
+        lora_alpha: 8.0,
+        residual_rank: 4,
+        batch_size: 4,
+        ctx_keep: 0.5,
+    }
+}
+
+/// Dense engine: adapters merged, so the self-drafting base equals the
+/// full model. The degenerate-but-legal case.
+fn dense_engine() -> Engine {
+    let cfg = test_cfg();
+    let mut rng = Rng::new(7700);
+    let base = ParamStore::init_base(&cfg, &mut rng);
+    Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense)
+}
+
+/// SALR engine: the sparse base genuinely differs from base + adapters,
+/// so self-drafting can produce wrong drafts that verification must
+/// correct (the case byte-identity is actually hard for).
+fn salr_engine() -> Engine {
+    let cfg = test_cfg();
+    let mut rng = Rng::new(7701);
+    let base = ParamStore::init_base(&cfg, &mut rng);
+    let build = build_salr(&cfg, &base, 0.5, 3);
+    let adapters = ParamStore::init_adapters(&cfg, &mut rng, true);
+    Engine::new(
+        EngineWeights::salr(&cfg, &build.params, &adapters, None),
+        Backend::BitmapSequential,
+    )
+}
+
+fn start_server(engine: Engine, policy: BatchPolicy) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        serve(engine, "127.0.0.1:0", policy, Some(tx)).expect("serve");
+    });
+    (rx.recv().expect("server ready"), handle)
+}
+
+fn stop_server(addr: SocketAddr, handle: std::thread::JoinHandle<()>) {
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// Serve `prompts` one at a time over one connection; return the response
+/// texts and the final metrics snapshot (taken after all load drained).
+fn serve_sequentially(
+    engine: Engine,
+    policy: BatchPolicy,
+    prompts: &[(String, usize)],
+) -> (Vec<String>, Json) {
+    let (addr, handle) = start_server(engine, policy);
+    let mut texts = Vec::new();
+    {
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        for (p, n) in prompts {
+            let r = c.generate(p, *n).unwrap();
+            assert!(r.get("error").is_none(), "request failed: {r:?}");
+            texts.push(r.get("text").and_then(Json::as_str).unwrap().to_string());
+        }
+    }
+    let mut probe = Client::connect(&addr.to_string()).unwrap();
+    let metrics = probe.metrics().unwrap();
+    drop(probe);
+    stop_server(addr, handle);
+    (texts, metrics)
+}
+
+fn counter(m: &Json, key: &str) -> u64 {
+    m.get(key).and_then(Json::as_usize).unwrap_or_else(|| panic!("metrics missing {key}")) as u64
+}
+
+/// Every worker's end-of-run gauges: slots all free, and (when the prefix
+/// cache is off) zero KV blocks still allocated. With the cache on,
+/// retained chains legitimately hold blocks — but never slots.
+fn assert_gauges_at_baseline(m: &Json, prefix_cache: bool, ctx: &str) {
+    let workers = match m.get("workers") {
+        Some(Json::Arr(w)) => w,
+        other => panic!("{ctx}: metrics missing workers array, got {other:?}"),
+    };
+    for (i, w) in workers.iter().enumerate() {
+        assert_eq!(
+            w.get("slots_in_use").and_then(Json::as_usize),
+            Some(0),
+            "{ctx}: worker {i} leaked a KV slot"
+        );
+    }
+    if !prefix_cache {
+        assert_eq!(
+            counter(m, "cache_blocks_in_use"),
+            0,
+            "{ctx}: cache off must end with zero blocks allocated \
+             (a rolled-back draft leaked its KV blocks)"
+        );
+    }
+}
+
+/// Repeated prompts so radix drafting has chains to propose from (the
+/// second occurrence of each prompt drafts the first one's completion),
+/// with token budgets both below and above `spec_k` to run the clamp.
+fn spec_prompts() -> Vec<(String, usize)> {
+    let base: Vec<(String, usize)> = (0..4)
+        .map(|i| (format!("Q: {}+{}=? A: ", 3 + i, 20 - i), 3 + i % 4))
+        .collect();
+    let mut prompts = base.clone();
+    prompts.extend(base); // exact repeats: radix-draft fodder
+    prompts
+}
+
+/// The full matrix on the dense engine: both drafters, k ∈ {1,2,4},
+/// 1 and 2 engine workers, prefix cache on and off — all byte-identical
+/// to the speculation-off 1-worker sequential whole-prefill oracle.
+#[test]
+fn speculative_decode_is_byte_identical_across_the_matrix() {
+    let engine = dense_engine();
+    let prompts = spec_prompts();
+
+    let oracle_policy = BatchPolicy {
+        max_batch: 4,
+        engine_workers: 1,
+        num_threads: 1,
+        prefill_chunk: 0,
+        prefix_cache: false,
+        spec_decode: SpecMode::Off,
+        ..Default::default()
+    };
+    let (reference, m) = serve_sequentially(engine.fork(), oracle_policy, &prompts);
+    assert_eq!(counter(&m, "drafted_tokens"), 0, "spec off must never draft");
+    assert_eq!(counter(&m, "accepted_tokens"), 0);
+    assert_eq!(counter(&m, "spec_rollbacks"), 0);
+
+    for &mode in &[SpecMode::Radix, SpecMode::SelfDraft] {
+        for &workers in &[1usize, 2] {
+            for &prefix_cache in &[false, true] {
+                for &k in &[1usize, 2, 4] {
+                    let ctx = format!(
+                        "mode={} workers={workers} cache={prefix_cache} k={k}",
+                        mode.name()
+                    );
+                    let policy = BatchPolicy {
+                        max_batch: 4,
+                        engine_workers: workers,
+                        prefill_chunk: 4,
+                        kv_block_size: 4,
+                        prefix_cache,
+                        spec_decode: mode,
+                        spec_k: k,
+                        ..Default::default()
+                    };
+                    let (texts, m) = serve_sequentially(engine.fork(), policy, &prompts);
+                    assert_eq!(texts, reference, "{ctx}: speculation changed response bytes");
+                    let drafted = counter(&m, "drafted_tokens");
+                    let accepted = counter(&m, "accepted_tokens");
+                    assert!(
+                        drafted >= accepted,
+                        "{ctx}: accepted {accepted} > drafted {drafted}"
+                    );
+                    // Where drafts are guaranteed to happen, they must:
+                    // self-drafting always proposes; radix needs cached
+                    // chains, which repeat prompts on one worker provide.
+                    if mode == SpecMode::SelfDraft || (prefix_cache && workers == 1) {
+                        assert!(drafted > 0, "{ctx}: expected speculative drafts");
+                    }
+                    if !prefix_cache && mode == SpecMode::Radix {
+                        assert_eq!(
+                            drafted, 0,
+                            "{ctx}: radix drafting needs the prefix cache"
+                        );
+                    }
+                    assert_gauges_at_baseline(&m, prefix_cache, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// The hard case for exactness: on a SALR backend the sparse base really
+/// differs from the full model, so self-drafts can be wrong and the
+/// verify pass must roll the KV chain back mid-stream. Bytes must still
+/// match the speculation-off oracle exactly, with gauges at baseline.
+#[test]
+fn self_drafting_on_the_salr_backend_is_exact_under_rollbacks() {
+    let engine = salr_engine();
+    let prompts = spec_prompts();
+
+    let oracle_policy = BatchPolicy {
+        max_batch: 4,
+        engine_workers: 1,
+        num_threads: 1,
+        prefill_chunk: 0,
+        prefix_cache: false,
+        spec_decode: SpecMode::Off,
+        ..Default::default()
+    };
+    let (reference, _) = serve_sequentially(engine.fork(), oracle_policy, &prompts);
+
+    for &(workers, prefix_cache) in &[(1usize, false), (1, true), (2, false), (2, true)] {
+        let ctx = format!("salr self-draft workers={workers} cache={prefix_cache}");
+        let policy = BatchPolicy {
+            max_batch: 4,
+            engine_workers: workers,
+            prefill_chunk: 4,
+            kv_block_size: 4,
+            prefix_cache,
+            spec_decode: SpecMode::SelfDraft,
+            spec_k: 4,
+            ..Default::default()
+        };
+        let (texts, m) = serve_sequentially(engine.fork(), policy, &prompts);
+        assert_eq!(texts, reference, "{ctx}: speculation changed response bytes");
+        let drafted = counter(&m, "drafted_tokens");
+        let accepted = counter(&m, "accepted_tokens");
+        assert!(drafted > 0, "{ctx}: self-drafting must draft");
+        assert!(drafted >= accepted, "{ctx}: accepted > drafted");
+        assert_gauges_at_baseline(&m, prefix_cache, &ctx);
+    }
+}
+
+/// Radix drafting on repeated traffic is the throughput case the drafter
+/// exists for: with one worker and the prefix cache on, the second serving
+/// of each prompt drafts the first serving's completion, and greedy
+/// determinism makes every one of those drafts accepted in full.
+#[test]
+fn radix_drafting_accepts_repeated_completions_in_full() {
+    let engine = dense_engine();
+    let prompts = spec_prompts();
+    let policy = BatchPolicy {
+        max_batch: 4,
+        engine_workers: 1,
+        prefill_chunk: 4,
+        kv_block_size: 4,
+        prefix_cache: true,
+        spec_decode: SpecMode::Radix,
+        spec_k: 4,
+        ..Default::default()
+    };
+    let (_, m) = serve_sequentially(engine.fork(), policy, &prompts);
+    let drafted = counter(&m, "drafted_tokens");
+    let accepted = counter(&m, "accepted_tokens");
+    assert!(drafted > 0, "repeat traffic must produce radix drafts");
+    assert_eq!(
+        accepted, drafted,
+        "cached continuations of a deterministic greedy decode must be \
+         accepted in full (a rejection means verify and decode disagree)"
+    );
+    assert_eq!(counter(&m, "spec_rollbacks"), 0);
+}

@@ -1,0 +1,248 @@
+//! Model-based randomized testing of the KV-cache core: drive
+//! [`RadixTree`] + [`BlockPool`] through seeded random op sequences
+//! (insert / lookup / propose / pin / unpin / evict) and after **every**
+//! op compare the real structures against a naive reference model — a
+//! flat map from full-block token paths to block ids plus a pin ledger.
+//!
+//! The invariants the model makes checkable:
+//!
+//! * **Refcount exactness** — every cached block's pool refcount is
+//!   exactly `1 (tree) + pins`, blocks the tree declined to retain
+//!   (duplicate inserts) free immediately, and `blocks_in_use` equals
+//!   the model's cardinality. No leaks, no double-frees, ever.
+//! * **Ancestor closure** — every proper block-prefix of a cached path
+//!   is itself cached: chains never dangle mid-path.
+//! * **Eviction safety** — `evict_one` removes exactly one *leaf* whose
+//!   block no sequence pins; it never truncates a chain something still
+//!   references, and it reports `false` only when the model agrees
+//!   nothing is evictable.
+//! * **Draft consistency** — every `propose` continuation spells a path
+//!   that is actually cached (speculation can only draft real chains).
+//!
+//! Token labels are 2-token pairs `[2v, 2v+1]`, so two distinct labels
+//! never share a token: lookups either match a block fully or not at
+//! all, which keeps the reference model exact without modeling
+//! mid-block partial matches (those are unit-tested in `cache::radix`).
+
+use salr::infer::cache::{BlockPool, RadixTree};
+use salr::util::rng::Rng;
+use std::collections::HashMap;
+
+const BS: usize = 2; // tokens per block
+const ALPHABET: usize = 4; // distinct labels
+const MAX_DEPTH: usize = 3;
+
+fn label(v: usize) -> [i32; BS] {
+    [2 * v as i32, 2 * v as i32 + 1]
+}
+
+fn random_path(rng: &mut Rng) -> Vec<i32> {
+    let depth = rng.range(1, MAX_DEPTH + 1);
+    let mut tokens = Vec::with_capacity(depth * BS);
+    for _ in 0..depth {
+        tokens.extend_from_slice(&label(rng.below(ALPHABET)));
+    }
+    tokens
+}
+
+/// The naive reference: cached full-block paths → block id, plus how
+/// many extra (sequence) refs we hold per block.
+struct Model {
+    paths: HashMap<Vec<i32>, usize>,
+    pins: HashMap<usize, u32>,
+}
+
+impl Model {
+    fn pins_on(&self, block: usize) -> u32 {
+        self.pins.get(&block).copied().unwrap_or(0)
+    }
+
+    /// A path is a leaf when no cached path extends it.
+    fn is_leaf(&self, path: &[i32]) -> bool {
+        !self
+            .paths
+            .keys()
+            .any(|p| p.len() > path.len() && p[..path.len()] == *path)
+    }
+
+    /// Does the model predict an evictable node (leaf + unpinned)?
+    fn has_evictable(&self) -> bool {
+        self.paths
+            .iter()
+            .any(|(path, &b)| self.is_leaf(path) && self.pins_on(b) == 0)
+    }
+
+    /// Every invariant that must hold between ops.
+    fn check(&self, tree: &mut RadixTree, pool: &BlockPool) {
+        assert_eq!(
+            pool.blocks_in_use(),
+            self.paths.len(),
+            "blocks in use must equal cached paths (leak or double-free)"
+        );
+        assert_eq!(tree.len(), self.paths.len(), "node count diverged");
+        for (path, &block) in &self.paths {
+            // Refcount exactness: one tree ref plus our pins, no more.
+            assert_eq!(
+                pool.refcount(block),
+                1 + self.pins_on(block),
+                "refcount of block {block} (path {path:?}) is not tree+pins"
+            );
+            // Ancestor closure: every proper block-prefix is cached too.
+            let mut n = BS;
+            while n < path.len() {
+                assert!(
+                    self.paths.contains_key(&path[..n]),
+                    "path {path:?} cached without its ancestor {:?}",
+                    &path[..n]
+                );
+                n += BS;
+            }
+            // The real tree serves the whole chain, in order.
+            let (full, partial) = tree.lookup(path);
+            let want: Vec<usize> = (1..=path.len() / BS)
+                .map(|i| self.paths[&path[..i * BS]])
+                .collect();
+            let got: Vec<usize> = full.iter().map(|m| m.block).collect();
+            assert_eq!(got, want, "lookup of {path:?} lost part of its chain");
+            assert!(partial.is_none(), "whole-label paths never match partially");
+        }
+    }
+}
+
+#[test]
+fn radix_tree_and_block_pool_match_a_naive_reference_model() {
+    let mut seed_rng = Rng::new(0xCAC4E_0D31);
+    for round in 0..12u64 {
+        let mut rng = seed_rng.fork(round);
+        // Sized past the worst case (4 + 16 + 64 distinct paths) plus
+        // transient insert allocations, so churn never exhausts the pool.
+        let mut pool = BlockPool::new(96, 1, BS, 1);
+        let mut tree = RadixTree::new(BS);
+        let mut model = Model {
+            paths: HashMap::new(),
+            pins: HashMap::new(),
+        };
+        for op in 0..120 {
+            match rng.below(12) {
+                0..=4 => {
+                    // Insert a random path; the tree retains blocks only
+                    // for prefixes it does not already cache.
+                    let tokens = random_path(&mut rng);
+                    let blocks: Vec<usize> = (0..tokens.len() / BS)
+                        .map(|_| pool.alloc().expect("pool sized for the churn"))
+                        .collect();
+                    tree.insert(&tokens, &blocks, &mut pool);
+                    for (i, &b) in blocks.iter().enumerate() {
+                        let prefix = tokens[..(i + 1) * BS].to_vec();
+                        if !model.paths.contains_key(&prefix) {
+                            model.paths.insert(prefix, b);
+                        }
+                        // Drop the sequence's own ref: duplicates free
+                        // here; retained blocks drop to the tree ref.
+                        pool.release(b);
+                    }
+                }
+                5..=6 => {
+                    // Recency churn (the model is order-blind; this only
+                    // stresses that recency bumps never corrupt state).
+                    let _ = tree.lookup(&random_path(&mut rng));
+                }
+                7 => {
+                    // Draft consistency: whatever propose returns must
+                    // spell a cached chain continuing the history.
+                    let hist = random_path(&mut rng);
+                    let k = rng.range(1, 7);
+                    let out = tree.propose(&hist, k);
+                    assert!(out.len() <= k, "draft longer than requested");
+                    if !out.is_empty() {
+                        let mut combined = hist.clone();
+                        combined.extend_from_slice(&out);
+                        let mut n = BS;
+                        while n <= combined.len() {
+                            assert!(
+                                model.paths.contains_key(&combined[..n]),
+                                "proposed continuation {out:?} of {hist:?} is \
+                                 not a cached chain at prefix {:?}",
+                                &combined[..n]
+                            );
+                            n += BS;
+                        }
+                    }
+                }
+                8 => {
+                    // Pin a random cached block, as an attached sequence.
+                    if !model.paths.is_empty() {
+                        let blocks: Vec<usize> = model.paths.values().copied().collect();
+                        let b = blocks[rng.below(blocks.len())];
+                        pool.retain(b);
+                        *model.pins.entry(b).or_insert(0) += 1;
+                    }
+                }
+                9 => {
+                    // Unpin one.
+                    let pinned: Vec<usize> = model
+                        .pins
+                        .iter()
+                        .filter(|(_, &c)| c > 0)
+                        .map(|(&b, _)| b)
+                        .collect();
+                    if !pinned.is_empty() {
+                        let b = pinned[rng.below(pinned.len())];
+                        pool.release(b);
+                        *model.pins.get_mut(&b).unwrap() -= 1;
+                    }
+                }
+                _ => {
+                    // Evict, and hold the tree to the model's verdict.
+                    let predicted = model.has_evictable();
+                    let got = tree.evict_one(&mut pool);
+                    assert_eq!(
+                        got, predicted,
+                        "op {op}: evict_one disagreed with the model about \
+                         whether an unpinned leaf exists"
+                    );
+                    if got {
+                        // Exactly one path lost its tree ref; it must have
+                        // been an unpinned leaf. (Blocks are unique per
+                        // node, so the refcount drop identifies it.)
+                        let gone: Vec<Vec<i32>> = model
+                            .paths
+                            .iter()
+                            .filter(|(_, &b)| pool.refcount(b) == model.pins_on(b))
+                            .map(|(p, _)| p.clone())
+                            .collect();
+                        assert_eq!(
+                            gone.len(),
+                            1,
+                            "eviction must remove exactly one node, removed {gone:?}"
+                        );
+                        let victim = &gone[0];
+                        assert!(
+                            model.is_leaf(victim),
+                            "evicted {victim:?} still has cached descendants \
+                             (eviction truncated a referenced chain)"
+                        );
+                        let b = model.paths[victim];
+                        assert_eq!(
+                            model.pins_on(b),
+                            0,
+                            "evicted {victim:?} while a sequence pinned it"
+                        );
+                        model.paths.remove(&gone[0]);
+                    }
+                }
+            }
+            model.check(&mut tree, &pool);
+        }
+        // Drain: unpin everything, then eviction must empty the cache.
+        for (&b, &c) in &model.pins {
+            for _ in 0..c {
+                pool.release(b);
+            }
+        }
+        model.pins.clear();
+        while tree.evict_one(&mut pool) {}
+        assert!(tree.is_empty(), "round {round}: drain left nodes behind");
+        assert_eq!(pool.blocks_in_use(), 0, "round {round}: drain leaked blocks");
+    }
+}
