@@ -1,7 +1,9 @@
 //! Dense GEMM throughput across shapes, thread counts **and micro-kernel
 //! dispatch** (the compute stage's roofline on this machine — the
-//! denominator of every speedup claim), plus the pipelined SALR GEMM vs
-//! the sequential bitmap baseline at the same thread counts.
+//! denominator of every speedup claim), the pipelined SALR GEMM vs the
+//! decode-then-GEMM baseline at the same thread counts, and the
+//! compressed-resident comparison: decode-then-GEMM vs fused pack-decode
+//! per weight format (bitmap, nf4).
 //!
 //! The scalar-vs-SIMD rows pin the micro-kernel explicitly
 //! (`gemm_f32_pool_with_kernel`), so a single run on one host measures
@@ -10,10 +12,12 @@
 //! Set `SALR_BENCH_JSON=path.json` to emit machine-readable results (the
 //! `BENCH_gemm.json` perf-trajectory file is regenerated this way).
 
-use salr::gemm::dense::{gemm_f32_acc_pool, gemm_f32_pool, gemm_f32_pool_with_kernel, gemm_flops};
+use salr::gemm::dense::{
+    gemm_f32_acc_pool, gemm_f32_pool, gemm_f32_pool_with_kernel, gemm_flops, gemm_src_pool,
+};
 use salr::gemm::kernel::Kernel;
 use salr::gemm::pipeline::{salr_gemm_pipelined, PipelineConfig};
-use salr::gemm::sparse::bitmap_gemm_sequential_pool;
+use salr::model::{WeightFormat, WeightStore};
 use salr::prune::prune_global;
 use salr::sparse::BitmapMatrix;
 use salr::tensor::Tensor;
@@ -93,7 +97,7 @@ fn main() {
     }
     println!("{}", bk.comparison_table("scalar vs SIMD micro-kernel"));
 
-    // Pipelined SALR GEMM at 50% sparsity vs the sequential bitmap
+    // Pipelined SALR GEMM at 50% sparsity vs the decode-then-GEMM
     // baseline, per thread count.
     let (m, k, n, r) = (64usize, 1024usize, 1024usize, 32usize);
     let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
@@ -105,17 +109,21 @@ fn main() {
     let mut c = vec![0.0f32; m * n];
     let mut u = vec![0.0f32; m * r];
     let flops = gemm_flops(m, k, n);
-    println!("# pipelined SALR GEMM ({m}x{k}x{n} @50%) vs sequential\n");
+    println!("# pipelined SALR GEMM ({m}x{k}x{n} @50%) vs decode-then-GEMM\n");
     // Separate harness so the comparison table's speedup column is
-    // relative to the sequential baseline, not the dense rows above.
+    // relative to the decode-then-GEMM baseline, not the dense rows above.
     let mut bs = Bench::new();
-    // Sequential baseline does the same math as the pipelined rows (base
-    // GEMM + fused adapter update), pinned to the matching thread count so
-    // the comparison isolates the *overlap*, not the core count.
+    // The baseline does the same math as the pipelined rows (full decode,
+    // base GEMM, fused adapter update), pinned to the matching thread
+    // count so the comparison isolates the *overlap*, not the core count.
+    // The dense scratch is allocated once outside the timed loop so each
+    // iteration measures decode + GEMM, not malloc.
+    let mut wdense = vec![0.0f32; k * n];
     for &t in &THREADS {
         let pool = WorkerPool::with_threads(t);
-        bs.run_with_work(&format!("salr sequential {m}x{k}x{n}@50% t={t}"), flops, &mut || {
-            bitmap_gemm_sequential_pool(x.data(), &bm, &mut c, m, &pool);
+        bs.run_with_work(&format!("salr decode-then-GEMM {m}x{k}x{n}@50% t={t}"), flops, &mut || {
+            bm.decode_rows_into(0, k, &mut wdense);
+            gemm_f32_pool(x.data(), &wdense, &mut c, m, k, n, &pool);
             gemm_f32_pool(x.data(), a_cat.data(), &mut u, m, k, r, &pool);
             gemm_f32_acc_pool(&u, b_cat.data(), &mut c, m, r, n, &pool);
             black_box(&c);
@@ -139,7 +147,39 @@ fn main() {
             black_box(&c);
         });
     }
-    println!("{}", bs.comparison_table("pipelined SALR vs sequential"));
+    println!("{}", bs.comparison_table("pipelined SALR vs decode-then-GEMM"));
+
+    // Compressed-resident formats: decode-then-GEMM (expand the whole
+    // matrix into a dense scratch, then plain GEMM) vs the fused
+    // pack-decode path (each K×NR panel expanded from the compressed
+    // bytes inside the pack step). Both rows start from the same
+    // WeightStore, so per format the work differs only in *where* the
+    // decode happens — this is the bandwidth argument of the
+    // compressed-weight kernel path, measured.
+    println!("# weight formats ({m}x{k}x{n} @50%): decode-then-GEMM vs fused pack-decode\n");
+    let mut bf = Bench::new();
+    let fpool = WorkerPool::with_threads(4);
+    for &fmt in &[WeightFormat::Bitmap, WeightFormat::Nf4] {
+        let store = WeightStore::encode(&w, fmt);
+        bf.run_with_work(
+            &format!("{} decode-then-GEMM t=4", fmt.name()),
+            flops,
+            &mut || {
+                store.decode_rows_into(0, k, &mut wdense);
+                gemm_f32_pool(x.data(), &wdense, &mut c, m, k, n, &fpool);
+                black_box(&c);
+            },
+        );
+        bf.run_with_work(
+            &format!("{} fused pack-decode t=4", fmt.name()),
+            flops,
+            &mut || {
+                gemm_src_pool(x.data(), &store, &mut c, m, &fpool);
+                black_box(&c);
+            },
+        );
+    }
+    println!("{}", bf.comparison_table("decode placement per weight format"));
 
     if let Ok(path) = std::env::var("SALR_BENCH_JSON") {
         let meta = Json::obj()
@@ -158,6 +198,9 @@ fn main() {
             all.extend(v);
         }
         if let Json::Arr(v) = bs.results_json() {
+            all.extend(v);
+        }
+        if let Json::Arr(v) = bf.results_json() {
             all.extend(v);
         }
         salr::util::bench::write_bench_doc(&path, meta, Json::Arr(all))

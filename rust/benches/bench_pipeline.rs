@@ -1,10 +1,11 @@
-//! The two-stage pipeline ablation: sequential full-decode, panel-streamed
-//! (no overlap), direct zero-skipping, and the pipelined ring-buffer design
-//! at several depths, panel sizes and worker counts — the system core of
-//! the paper's inference speedup.
+//! The two-stage pipeline ablation: decode-then-GEMM, fused pack-decode,
+//! direct zero-skipping, and the pipelined ring-buffer design at several
+//! depths, panel sizes and worker counts — the system core of the paper's
+//! inference speedup.
 
-use salr::gemm::pipeline::{bitmap_gemm_pipelined, salr_gemm_pipelined, PipelineConfig};
-use salr::gemm::sparse::{bitmap_gemm_panelled, bitmap_gemm_sequential_pool};
+use salr::gemm::dense::gemm_src_pool;
+use salr::gemm::pipeline::{gemm_pipelined, salr_gemm_pipelined, PipelineConfig};
+use salr::gemm::sparse::{sparse_gemm_direct, sparse_gemm_direct_pool};
 use salr::prune::prune_global;
 use salr::sparse::BitmapMatrix;
 use salr::tensor::Tensor;
@@ -29,37 +30,46 @@ fn main() {
     println!("# decode+GEMM strategies ({m}x{k}x{n} @50%)\n");
     let mut b = Bench::new();
     // Pinned to one thread: this row is the genuinely-sequential naive
-    // deployment every other strategy is compared against. (Scratch is
+    // deployment every other strategy is compared against — materialize
+    // the dense matrix once up front, then run a plain GEMM. (Scratch is
     // arena-internal everywhere now — steady-state iterations allocate
     // nothing, so the harness measures kernels, not malloc.)
     let serial = WorkerPool::with_threads(1);
-    b.run_with_work("sequential (full decode, then GEMM)", flops, &mut || {
-        bitmap_gemm_sequential_pool(x.data(), &bm, &mut c, m, &serial);
+    let dense = bm.decode();
+    b.run_with_work("decode-then-GEMM (pre-decoded dense)", flops, &mut || {
+        salr::gemm::dense::gemm_f32_pool(x.data(), dense.data(), &mut c, m, k, n, &serial);
+        black_box(&c);
+    });
+    // Fused pack-decode: the same dense micro-kernel, but each K×NR panel
+    // is expanded from the bitmap inside the pack step — no resident
+    // dense W anywhere.
+    b.run_with_work("fused pack-decode (per-tile expand)", flops, &mut || {
+        gemm_src_pool(x.data(), &bm, &mut c, m, &serial);
         black_box(&c);
     });
     b.run_with_work("direct (zero-skipping, no decode)", flops, &mut || {
-        salr::gemm::sparse::bitmap_gemm_direct(x.data(), &bm, &mut c, m);
+        sparse_gemm_direct(x.data(), &bm, &mut c, m);
         black_box(&c);
     });
-    // The decode-hot-path kernel striped across the pool (bitwise
-    // identical to the serial row above at every width).
+    // The decode-hot-path kernels striped across the pool (bitwise
+    // identical to their serial rows above at every width).
     for &t in &[2usize, 4] {
         let pool = WorkerPool::with_threads(t);
         b.run_with_work(&format!("direct striped t={t}"), flops, &mut || {
-            salr::gemm::sparse::bitmap_gemm_direct_pool(x.data(), &bm, &mut c, m, &pool);
+            sparse_gemm_direct_pool(x.data(), &bm, &mut c, m, &pool);
+            black_box(&c);
+        });
+        b.run_with_work(&format!("fused pack-decode t={t}"), flops, &mut || {
+            gemm_src_pool(x.data(), &bm, &mut c, m, &pool);
             black_box(&c);
         });
     }
-    b.run_with_work("panelled (streamed, no overlap)", flops, &mut || {
-        bitmap_gemm_panelled(x.data(), &bm, &mut c, m, 64);
-        black_box(&c);
-    });
     for &(panel, depth) in &[(32usize, 2usize), (64, 3), (128, 3), (256, 4)] {
         b.run_with_work(
             &format!("pipelined panel={panel} depth={depth}"),
             flops,
             &mut || {
-                bitmap_gemm_pipelined(
+                gemm_pipelined(
                     x.data(),
                     &bm,
                     &mut c,
@@ -77,7 +87,7 @@ fn main() {
     // Worker-count scaling at the default geometry.
     for &t in &[1usize, 2, 4, 8] {
         b.run_with_work(&format!("pipelined panel=64 depth=3 t={t}"), flops, &mut || {
-            bitmap_gemm_pipelined(x.data(), &bm, &mut c, m, PipelineConfig::with_threads(t));
+            gemm_pipelined(x.data(), &bm, &mut c, m, PipelineConfig::with_threads(t));
             black_box(&c);
         });
     }
@@ -108,7 +118,6 @@ fn main() {
         );
     }
     // Dense baseline at the same shape.
-    let dense = bm.decode();
     b2.run_with_work("dense GEMM (pre-decoded baseline)", flops, &mut || {
         salr::gemm::dense::gemm_f32(x.data(), dense.data(), &mut c, m, k, n);
         black_box(&c);

@@ -66,12 +66,15 @@ fn main() {
     );
 
     // 4. Adapter concatenation + the two-stage pipelined SALR linear.
-    let layer = SalrLayer::new(bm, &lora_a, &lora_b, 2.0, Some((&res_a, &res_b)));
+    // The layer holds a WeightStore — the bitmap stays the resident form
+    // and the pipeline's pack step decodes it per panel.
+    let store = salr::model::WeightStore::from_bitmap(bm);
+    let layer = SalrLayer::new(store, &lora_a, &lora_b, 2.0, Some((&res_a, &res_b)));
     let x = Tensor::randn(&[m, d_in], 1.0, &mut rng);
     let mut y = vec![0.0f32; m * d_out];
     salr_gemm_pipelined(
         x.data(),
-        &layer.w_hat,
+        &layer.base,
         layer.adapters.a_cat.data(),
         layer.adapters.b_cat.data(),
         layer.adapters.total_rank(),
@@ -85,7 +88,7 @@ fn main() {
     let mut scaled_a = lora_a.clone();
     scaled_a.scale(2.0);
     let stack = AdapterStack::concat(&[(&scaled_a, &lora_b), (&res_a, &res_b)]);
-    let mut want = matmul(&x, &layer.w_hat.decode()).into_vec();
+    let mut want = matmul(&x, &layer.base.decode()).into_vec();
     stack.apply_fused_acc(x.data(), m, &mut want);
     let want = Tensor::from_vec(&[m, d_out], want);
     let diff = salr::tensor::max_abs_diff(&y, &want);

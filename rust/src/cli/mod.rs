@@ -111,6 +111,12 @@ COMMON FLAGS:
   --addr HOST:PORT  serve address (default 127.0.0.1:7433)
   --backend NAME    dense|bitmap|pipeline (default pipeline)
   --threads N       GEMM + pipeline worker threads (default: all cores)
+  --weight-format F resident form of the sparse base weights:
+                    f32 (dense copy), bitmap (mask + f32 nonzeros, exact),
+                    nf4 (mask + NF4-quantized nonzeros, lossy ~5x smaller)
+                    (default bitmap, or SALR_WEIGHT_FORMAT); the GEMM
+                    kernels decode compressed formats per tile — no dense
+                    copy of the base is ever materialized
 
 SERVE FLAGS:
   --engine-workers W  continuous-batching engine worker loops (default 1);

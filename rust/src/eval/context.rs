@@ -199,11 +199,33 @@ impl ExpContext {
 
 /// Build the deployment engine for a fine-tuned baseline.
 /// `nm` re-prunes to an N:M pattern (Table 4's 2:4 protocol).
+/// The resident weight format for sparse deployments comes from
+/// `SALR_WEIGHT_FORMAT` (default bitmap); the CLI's `--weight-format`
+/// flag goes through [`deploy_engine_with_format`].
 pub fn deploy_engine(
     cfg: &ModelCfg,
     spec: &BaselineSpec,
     adapters: &ParamStore,
     nm: Option<NmPattern>,
+) -> Result<Engine> {
+    deploy_engine_with_format(
+        cfg,
+        spec,
+        adapters,
+        nm,
+        crate::model::WeightFormat::env_default(),
+    )
+}
+
+/// [`deploy_engine`] with an explicit resident weight format for the
+/// sparse deployments (dense baselines ignore it — their weights are
+/// merged dense matrices by definition).
+pub fn deploy_engine_with_format(
+    cfg: &ModelCfg,
+    spec: &BaselineSpec,
+    adapters: &ParamStore,
+    nm: Option<NmPattern>,
+    fmt: crate::model::WeightFormat,
 ) -> Result<Engine> {
     let weights = match spec.baseline {
         Baseline::Pretrained => EngineWeights::dense_merged(cfg, &spec.params, None),
@@ -243,12 +265,12 @@ pub fn deploy_engine(
                 );
             }
             return Ok(Engine::new(
-                EngineWeights::salr(cfg, &merged, &zero_adapters, nm),
+                EngineWeights::salr_with_format(cfg, &merged, &zero_adapters, nm, fmt),
                 Backend::BitmapPipelined(Default::default()),
             ));
         }
         Baseline::DeepSparse | Baseline::Salr | Baseline::SalrFrozenResidual => {
-            EngineWeights::salr(cfg, &spec.params, adapters, nm)
+            EngineWeights::salr_with_format(cfg, &spec.params, adapters, nm, fmt)
         }
     };
     let backend = if spec.baseline.deploys_sparse() {

@@ -9,6 +9,6 @@ mod report;
 mod tables;
 
 pub use accuracy::{math_accuracy, mcq_accuracy};
-pub use context::{deploy_engine, ExpContext, RunKey, Task};
+pub use context::{deploy_engine, deploy_engine_with_format, ExpContext, RunKey, Task};
 pub use report::Report;
 pub use tables::{run_experiment, EXPERIMENTS};

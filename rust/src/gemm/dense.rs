@@ -20,7 +20,10 @@
 //! benchmarks compare.
 
 use crate::gemm::kernel::{Kernel, MR, NR};
-use crate::util::arena::scratch_raw;
+use crate::model::{WeightStore, WeightView};
+use crate::quant::SparseNf4Matrix;
+use crate::sparse::BitmapMatrix;
+use crate::util::arena::{scratch_raw, scratch_undef};
 use crate::util::pool::{SendPtr, WorkerPool};
 
 /// Outer cache blocking: M rows per L2 block.
@@ -115,9 +118,10 @@ pub fn gemm_f32_acc_pool_with_kernel(
     if m * n * k <= 32 * 32 * 32 {
         return gemm_small_acc(a, b, c, m, k, n);
     }
+    let src = DenseB { b, k, n };
     let bands = m.div_ceil(BAND);
     if bands == 1 || pool.threads() == 1 {
-        return gemm_band_acc(a, b, c, m, k, n, kern);
+        return gemm_band_acc(a, &src, c, m, k, n, kern);
     }
     let cptr = SendPtr(c.as_mut_ptr());
     pool.run(bands, &|bi| {
@@ -127,16 +131,337 @@ pub fn gemm_f32_acc_pool_with_kernel(
         // SAFETY: band `bi` exclusively owns C rows [r0, r1) (and only
         // reads the matching A rows), so bands race on nothing.
         let band_c = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), rows * n) };
-        gemm_band_acc(&a[r0 * k..], b, band_c, rows, k, n, kern);
+        gemm_band_acc(&a[r0 * k..], &src, band_c, rows, k, n, kern);
+    });
+}
+
+/// A B-operand the blocked GEMM can pack panels from directly — dense f32
+/// slices or *compressed* weight matrices (bitmap / bitmap+NF4), which
+/// expand inside the pack step so no dense copy of the operand ever
+/// exists. The packed panel layout is identical for every source
+/// (`packed[panel][p][lane]`, zero-padded to NR lanes), and the expanded
+/// values are bit-for-bit the ones a full decode would produce, so the
+/// fused path's output is bitwise identical to decode-then-GEMM.
+pub trait PackB: Sync {
+    /// Rows of the B operand (the GEMM's `k`).
+    fn k_rows(&self) -> usize;
+    /// Columns of the B operand (the GEMM's `n`).
+    fn n_cols(&self) -> usize;
+    /// Pack `B[pc..pc+kb, jc..jc+nb]` into NR-wide column panels
+    /// (`packed[pj*kb*NR + p*NR + lane]`, zero-padded), decoding from the
+    /// native representation. `jc` is always a multiple of [`NC`].
+    fn pack_b_panels(&self, packed: &mut Vec<f32>, pc: usize, jc: usize, kb: usize, nb: usize);
+    /// Decode rows `[r0, r1)` to dense row-major f32 — the small-problem
+    /// fallback (and the pipeline's decode stage) share this.
+    fn decode_rows_into(&self, r0: usize, r1: usize, out: &mut [f32]);
+}
+
+/// A dense row-major `k × n` f32 slice as a [`PackB`] source.
+pub struct DenseB<'a> {
+    /// Row-major `k × n` data.
+    pub b: &'a [f32],
+    /// Rows.
+    pub k: usize,
+    /// Columns.
+    pub n: usize,
+}
+
+impl PackB for DenseB<'_> {
+    fn k_rows(&self) -> usize {
+        self.k
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n
+    }
+
+    fn pack_b_panels(&self, packed: &mut Vec<f32>, pc: usize, jc: usize, kb: usize, nb: usize) {
+        let n = self.n;
+        let b = self.b;
+        let npanels = nb.div_ceil(NR);
+        let len = npanels * kb * NR;
+        // Zero only when the geometry changes. Stale values in a reused
+        // buffer's padding lanes are harmless: the micro-kernels accumulate
+        // all NR lanes but write back only the `nr` real ones.
+        if packed.len() != len {
+            packed.clear();
+            packed.resize(len, 0.0);
+        }
+        for pj in 0..npanels {
+            let j0 = jc + pj * NR;
+            let lanes = NR.min(jc + nb - j0);
+            let dst_base = pj * kb * NR;
+            for p in 0..kb {
+                let src = (pc + p) * n + j0;
+                let dst = dst_base + p * NR;
+                packed[dst..dst + lanes].copy_from_slice(&b[src..src + lanes]);
+            }
+        }
+    }
+
+    fn decode_rows_into(&self, r0: usize, r1: usize, out: &mut [f32]) {
+        out[..(r1 - r0) * self.n].copy_from_slice(&self.b[r0 * self.n..r1 * self.n]);
+    }
+}
+
+/// Shared compressed-pack walk: expand the bitmap tile
+/// `[pc..pc+kb) × [jc..jc+nb)` straight into zeroed NR-lane panels,
+/// word-at-a-time (one u64 mask load per 64 columns, popcount-driven
+/// scatter touching only set bits). `value(voff)` supplies the `voff`-th
+/// nonzero of the row-major stream — stored f32s for the bitmap format,
+/// LUT-dequantized NF4 for the quantized one. Bits are consumed in
+/// ascending column order, so values land exactly where a full
+/// decode-then-pack would put them.
+#[allow(clippy::too_many_arguments)]
+fn pack_sparse_panels(
+    masks: &[u8],
+    row_offsets: &[u32],
+    bpr: usize,
+    value: impl Fn(usize) -> f32,
+    packed: &mut Vec<f32>,
+    pc: usize,
+    jc: usize,
+    kb: usize,
+    nb: usize,
+) {
+    let npanels = nb.div_ceil(NR);
+    let len = npanels * kb * NR;
+    // Scatter writes only the nonzeros, so (unlike the dense pack) the
+    // whole tile re-zeroes on every call.
+    packed.clear();
+    packed.resize(len, 0.0);
+    // `jc` is a multiple of NC (a multiple of 8), so the tile starts on a
+    // mask-byte boundary; `jc+nb` is either the next NC boundary or the
+    // final column, so every set bit in bytes [b0, bend) belongs to the
+    // tile (encode zero-pads mask bits past the last column).
+    let b0 = jc / 8;
+    let bend = bpr.min((jc + nb).div_ceil(8));
+    for p in 0..kb {
+        let gp = pc + p;
+        let row_masks = &masks[gp * bpr..(gp + 1) * bpr];
+        // Value offset at column jc: row offset + popcount of the mask
+        // prefix, folded 64 bits at a time.
+        let mut voff = row_offsets[gp] as usize;
+        let prefix = &row_masks[..b0];
+        let mut iw = 0;
+        while iw + 8 <= prefix.len() {
+            let w: [u8; 8] = prefix[iw..iw + 8].try_into().unwrap();
+            voff += u64::from_le_bytes(w).count_ones() as usize;
+            iw += 8;
+        }
+        for &byte in &prefix[iw..] {
+            voff += byte.count_ones() as usize;
+        }
+        // Scatter the tile's set bits into the panel layout.
+        let bytes = &row_masks[b0..bend];
+        let mut bi = 0;
+        while bi + 8 <= bytes.len() {
+            let w: [u8; 8] = bytes[bi..bi + 8].try_into().unwrap();
+            let mut mword = u64::from_le_bytes(w);
+            let base = (b0 + bi) * 8;
+            while mword != 0 {
+                let t = mword.trailing_zeros() as usize;
+                let j = base + t - jc;
+                packed[(j / NR) * kb * NR + p * NR + (j % NR)] = value(voff);
+                voff += 1;
+                mword &= mword - 1;
+            }
+            bi += 8;
+        }
+        for (off, &byte) in bytes[bi..].iter().enumerate() {
+            let mut mb = byte;
+            let base = (b0 + bi + off) * 8;
+            while mb != 0 {
+                let t = mb.trailing_zeros() as usize;
+                let j = base + t - jc;
+                packed[(j / NR) * kb * NR + p * NR + (j % NR)] = value(voff);
+                voff += 1;
+                mb &= mb - 1;
+            }
+        }
+    }
+}
+
+impl PackB for BitmapMatrix {
+    fn k_rows(&self) -> usize {
+        self.rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.cols()
+    }
+
+    fn pack_b_panels(&self, packed: &mut Vec<f32>, pc: usize, jc: usize, kb: usize, nb: usize) {
+        let values = self.values();
+        pack_sparse_panels(
+            self.masks(),
+            self.row_offsets(),
+            self.bytes_per_row(),
+            |voff| values[voff],
+            packed,
+            pc,
+            jc,
+            kb,
+            nb,
+        );
+    }
+
+    fn decode_rows_into(&self, r0: usize, r1: usize, out: &mut [f32]) {
+        BitmapMatrix::decode_rows_into(self, r0, r1, out);
+    }
+}
+
+impl PackB for SparseNf4Matrix {
+    fn k_rows(&self) -> usize {
+        self.rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.cols()
+    }
+
+    fn pack_b_panels(&self, packed: &mut Vec<f32>, pc: usize, jc: usize, kb: usize, nb: usize) {
+        pack_sparse_panels(
+            self.masks(),
+            self.row_offsets(),
+            self.bytes_per_row(),
+            |voff| self.value(voff),
+            packed,
+            pc,
+            jc,
+            kb,
+            nb,
+        );
+    }
+
+    fn decode_rows_into(&self, r0: usize, r1: usize, out: &mut [f32]) {
+        SparseNf4Matrix::decode_rows_into(self, r0, r1, out);
+    }
+}
+
+impl PackB for WeightStore {
+    fn k_rows(&self) -> usize {
+        self.rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.cols()
+    }
+
+    fn pack_b_panels(&self, packed: &mut Vec<f32>, pc: usize, jc: usize, kb: usize, nb: usize) {
+        match self.view() {
+            WeightView::Dense(t) => DenseB {
+                b: t.data(),
+                k: t.rows(),
+                n: t.cols(),
+            }
+            .pack_b_panels(packed, pc, jc, kb, nb),
+            WeightView::Bitmap(bm) => PackB::pack_b_panels(bm, packed, pc, jc, kb, nb),
+            WeightView::BitmapNf4(snf) => PackB::pack_b_panels(snf, packed, pc, jc, kb, nb),
+        }
+    }
+
+    fn decode_rows_into(&self, r0: usize, r1: usize, out: &mut [f32]) {
+        WeightStore::decode_rows_into(self, r0, r1, out);
+    }
+}
+
+/// `C = X @ W` where W is any [`PackB`] source (overwrite), dispatched
+/// kernel, explicit pool — the engine's fused compressed-weight GEMM.
+pub fn gemm_src_pool<S: PackB + ?Sized>(
+    a: &[f32],
+    src: &S,
+    c: &mut [f32],
+    m: usize,
+    pool: &WorkerPool,
+) {
+    gemm_src_pool_with_kernel(a, src, c, m, pool, Kernel::active());
+}
+
+/// `C += X @ W` for any [`PackB`] source on an explicit pool.
+pub fn gemm_src_acc_pool<S: PackB + ?Sized>(
+    a: &[f32],
+    src: &S,
+    c: &mut [f32],
+    m: usize,
+    pool: &WorkerPool,
+) {
+    gemm_src_acc_pool_with_kernel(a, src, c, m, pool, Kernel::active());
+}
+
+/// [`gemm_src_pool`] with an explicit micro-kernel (parity tests).
+pub fn gemm_src_pool_with_kernel<S: PackB + ?Sized>(
+    a: &[f32],
+    src: &S,
+    c: &mut [f32],
+    m: usize,
+    pool: &WorkerPool,
+    kern: Kernel,
+) {
+    c[..m * src.n_cols()].fill(0.0);
+    gemm_src_acc_pool_with_kernel(a, src, c, m, pool, kern);
+}
+
+/// `C += X @ W` from any packable B source, mirroring
+/// [`gemm_f32_acc_pool_with_kernel`]'s dispatch structure *exactly* —
+/// same small-problem cutoff (decode to arena scratch, same ikj kernel),
+/// same BAND partitioning, same packed-panel blocking — which is what
+/// makes the fused output bitwise identical to decode-then-GEMM at every
+/// shape, pool width and kernel.
+pub fn gemm_src_acc_pool_with_kernel<S: PackB + ?Sized>(
+    a: &[f32],
+    src: &S,
+    c: &mut [f32],
+    m: usize,
+    pool: &WorkerPool,
+    kern: Kernel,
+) {
+    let k = src.k_rows();
+    let n = src.n_cols();
+    assert!(a.len() >= m * k, "A too small");
+    assert!(c.len() >= m * n, "C too small");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if m * n * k <= 32 * 32 * 32 {
+        // The dense path skips packing here, so there is no pack step to
+        // fuse into: decode the (tiny) operand into arena scratch and run
+        // the identical ikj kernel.
+        let mut dense = scratch_undef(k * n);
+        src.decode_rows_into(0, k, &mut dense);
+        return gemm_small_acc(a, &dense, c, m, k, n);
+    }
+    let bands = m.div_ceil(BAND);
+    if bands == 1 || pool.threads() == 1 {
+        return gemm_band_acc(a, src, c, m, k, n, kern);
+    }
+    let cptr = SendPtr(c.as_mut_ptr());
+    pool.run(bands, &|bi| {
+        let r0 = bi * BAND;
+        let r1 = ((bi + 1) * BAND).min(m);
+        let rows = r1 - r0;
+        // SAFETY: band `bi` exclusively owns C rows [r0, r1) (and only
+        // reads the matching A rows), so bands race on nothing.
+        let band_c = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), rows * n) };
+        gemm_band_acc(&a[r0 * k..], src, band_c, rows, k, n, kern);
     });
 }
 
 /// Serial blocked GEMM over one row band (`C[m,n] += A[m,k] @ B[k,n]`),
-/// packing each B panel once per (jc, pc) block and each A block once per
-/// (pc, ic). Pack buffers are borrowed from the executing thread's scratch
-/// arena — pool workers are persistent, so after warmup this function
-/// performs zero heap allocations.
-fn gemm_band_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, kern: Kernel) {
+/// packing each B panel once per (jc, pc) block — decoding it from the
+/// source's native (possibly compressed) representation — and each A
+/// block once per (pc, ic). Pack buffers are borrowed from the executing
+/// thread's scratch arena — pool workers are persistent, so after warmup
+/// this function performs zero heap allocations.
+fn gemm_band_acc<S: PackB + ?Sized>(
+    a: &[f32],
+    src: &S,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    kern: Kernel,
+) {
     // Hints sized to the first (jc, pc, ic) block — the largest the packs
     // will need for this problem, so best-fit pairs slabs stably.
     let mut packed_b = scratch_raw(NC.min(n).div_ceil(NR) * NR * KC.min(k));
@@ -145,46 +470,12 @@ fn gemm_band_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
         let nb = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
             let kb = KC.min(k - pc);
-            pack_b_panels(b, &mut packed_b, n, pc, jc, kb, nb);
+            src.pack_b_panels(&mut packed_b, pc, jc, kb, nb);
             for ic in (0..m).step_by(MC) {
                 let mb = MC.min(m - ic);
                 pack_a_panels(a, &mut packed_a, k, ic, pc, mb, kb);
                 block_kernel(&packed_a, &packed_b, c, n, ic, jc, mb, kb, nb, kern);
             }
-        }
-    }
-}
-
-/// Pack `B[pc..pc+kb, jc..jc+nb]` into NR-wide column panels, panel-major
-/// (`packed[panel][p][lane]`, zero-padded to NR lanes), so the micro-kernel
-/// reads one contiguous NR-row per k step instead of striding by `n`.
-#[allow(clippy::too_many_arguments)]
-fn pack_b_panels(
-    b: &[f32],
-    packed: &mut Vec<f32>,
-    n: usize,
-    pc: usize,
-    jc: usize,
-    kb: usize,
-    nb: usize,
-) {
-    let npanels = nb.div_ceil(NR);
-    let len = npanels * kb * NR;
-    // Zero only when the geometry changes. Stale values in a reused
-    // buffer's padding lanes are harmless: the micro-kernels accumulate
-    // all NR lanes but write back only the `nr` real ones.
-    if packed.len() != len {
-        packed.clear();
-        packed.resize(len, 0.0);
-    }
-    for pj in 0..npanels {
-        let j0 = jc + pj * NR;
-        let lanes = NR.min(jc + nb - j0);
-        let dst_base = pj * kb * NR;
-        for p in 0..kb {
-            let src = (pc + p) * n + j0;
-            let dst = dst_base + p * NR;
-            packed[dst..dst + lanes].copy_from_slice(&b[src..src + lanes]);
         }
     }
 }
@@ -499,6 +790,108 @@ mod tests {
             before,
             "steady-state GEMM allocated"
         );
+    }
+
+    fn sparse_tensor(rng: &mut Rng, r: usize, c: usize, p: f64) -> Tensor {
+        let mut t = Tensor::randn(&[r, c], 1.0, rng);
+        crate::prune::prune_global(&mut [&mut t], p);
+        t
+    }
+
+    #[test]
+    fn fused_pack_decode_bitwise_matches_decode_then_gemm() {
+        // The tentpole oracle matrix: {bitmap, bitmap+NF4} sources ×
+        // ragged shapes (m % 4 ≠ 0, n % 16 ≠ 0, k = 1, k > KC, and a
+        // small-path shape under the 32³ cutoff) × pool widths {1,2,4} ×
+        // {scalar, dispatched} kernels. The fused pack expands compressed
+        // bytes directly into the B panels; its output must be bitwise
+        // identical to decoding the operand to dense f32 first and
+        // running the ordinary blocked GEMM with the same pool + kernel.
+        use crate::model::{WeightFormat, WeightStore};
+        let mut rng = Rng::new(17);
+        for &(m, k, n) in &[
+            (5usize, 257usize, 33usize), // ragged m and n, k crosses KC
+            (7, 300, 47),                // ragged everything
+            (13, 128, 31),               // n % 16 = 15
+            (200, 1, 200),               // k = 1
+            (8, 600, 32),                // k spans multiple KC panels
+            (70, 64, 130),               // m spans bands, ragged n
+            (6, 20, 9),                  // under the small-problem cutoff
+        ] {
+            let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let w = sparse_tensor(&mut rng, k, n, 0.5);
+            for fmt in [WeightFormat::Bitmap, WeightFormat::Nf4] {
+                let store = WeightStore::encode(&w, fmt);
+                // Oracle operand: the *store's* decode (for NF4 the
+                // dequantized values), densely multiplied.
+                let dense_w = store.decode();
+                for &t in &[1usize, 2, 4] {
+                    let pool = WorkerPool::with_threads(t);
+                    for kern in [Kernel::scalar(), Kernel::active()] {
+                        let mut want = vec![0.0f32; m * n];
+                        gemm_f32_pool_with_kernel(
+                            x.data(),
+                            dense_w.data(),
+                            &mut want,
+                            m,
+                            k,
+                            n,
+                            &pool,
+                            kern,
+                        );
+                        let mut got = vec![0.0f32; m * n];
+                        gemm_src_pool_with_kernel(x.data(), &store, &mut got, m, &pool, kern);
+                        assert!(
+                            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "({m},{k},{n}) fmt={:?} t={t} kern={} fused diverged",
+                            fmt,
+                            kern.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_acc_accumulates_on_top() {
+        use crate::model::{WeightFormat, WeightStore};
+        let mut rng = Rng::new(18);
+        let (m, k, n) = (37usize, 96usize, 50usize);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let w = sparse_tensor(&mut rng, k, n, 0.5);
+        let store = WeightStore::encode(&w, WeightFormat::Bitmap);
+        let pool = WorkerPool::with_threads(2);
+        let mut want = vec![3.0f32; m * n];
+        gemm_f32_acc_pool(x.data(), w.data(), &mut want, m, k, n, &pool);
+        let mut got = vec![3.0f32; m * n];
+        gemm_src_acc_pool(x.data(), &store, &mut got, m, &pool);
+        assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn fused_pack_steady_state_does_not_grow_the_arena() {
+        use crate::model::{WeightFormat, WeightStore};
+        let mut rng = Rng::new(19);
+        let (m, k, n) = (48usize, 300usize, 64usize);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let w = sparse_tensor(&mut rng, k, n, 0.5);
+        let pool = WorkerPool::with_threads(1);
+        for fmt in [WeightFormat::Bitmap, WeightFormat::Nf4] {
+            let store = WeightStore::encode(&w, fmt);
+            let mut c = vec![0.0f32; m * n];
+            gemm_src_pool(x.data(), &store, &mut c, m, &pool);
+            let before = crate::util::arena::thread_allocated_bytes();
+            for _ in 0..10 {
+                gemm_src_pool(x.data(), &store, &mut c, m, &pool);
+            }
+            assert_eq!(
+                crate::util::arena::thread_allocated_bytes(),
+                before,
+                "steady-state fused GEMM allocated ({:?})",
+                fmt
+            );
+        }
     }
 
     #[test]

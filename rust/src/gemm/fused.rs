@@ -105,6 +105,25 @@ impl AdapterStack {
         dense::gemm_f32_acc_pool(&u, self.b_cat.data(), out, m, tr, n, pool);
     }
 
+    /// Full SALR forward on the compressed-weight pack path:
+    /// `out = X @ W + (X A_cat) B_cat`, where `W` is any [`dense::PackB`]
+    /// source (a [`crate::model::WeightStore`], a bitmap, an NF4 store, or
+    /// a dense operand) decoded per tile inside the packed GEMM — no dense
+    /// copy of W is ever materialized. The base product lands first, then
+    /// the adapter update accumulates on top, matching the non-pipelined
+    /// engine path's accumulation order.
+    pub fn apply_with_base_pool<S: dense::PackB + ?Sized>(
+        &self,
+        x: &[f32],
+        base: &S,
+        m: usize,
+        out: &mut [f32],
+        pool: &crate::util::pool::WorkerPool,
+    ) {
+        dense::gemm_src_pool(x, base, out, m, pool);
+        self.apply_fused_acc_pool(x, m, out, pool);
+    }
+
     /// Sequential baseline: apply each adapter as two small GEMMs,
     /// accumulating — 2n kernel invocations (paper's inefficient case).
     pub fn apply_sequential(&self, x: &[f32], m: usize, out: &mut [f32]) {
@@ -211,6 +230,39 @@ mod tests {
         stack.apply_fused(x.data(), 2, &mut delta);
         for i in 0..24 {
             assert!((base[i] - 1.0 - delta[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn base_plus_adapters_matches_decode_then_gemm_bitwise() {
+        // apply_with_base_pool decodes the compressed base inside the pack
+        // step; the oracle decodes it up front and runs the same dense
+        // GEMM + the same adapter accumulate — identical kernels in
+        // identical order, so the bits must match.
+        let mut rng = Rng::new(133);
+        let (m, k, n) = (6usize, 96usize, 40usize);
+        let adapters = random_adapters(&mut rng, k, n, &[4, 4]);
+        let refs: Vec<(&Tensor, &Tensor)> = adapters.iter().map(|(a, b)| (a, b)).collect();
+        let stack = AdapterStack::concat(&refs);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        crate::prune::prune_global(&mut [&mut w], 0.5);
+        let pool = crate::util::pool::WorkerPool::new(2);
+        for fmt in [
+            crate::model::WeightFormat::Bitmap,
+            crate::model::WeightFormat::Nf4,
+        ] {
+            let store = crate::model::WeightStore::encode(&w, fmt);
+            let dense_w = store.decode();
+            let mut want = vec![0.0f32; m * n];
+            dense::gemm_f32_pool(x.data(), dense_w.data(), &mut want, m, k, n, &pool);
+            stack.apply_fused_acc_pool(x.data(), m, &mut want, &pool);
+            let mut got = vec![0.0f32; m * n];
+            stack.apply_with_base_pool(x.data(), &store, m, &mut got, &pool);
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{fmt:?} diverged from decode-then-GEMM"
+            );
         }
     }
 

@@ -41,10 +41,20 @@ pub const NR: usize = 16;
 /// keeps every implementation bitwise interchangeable.
 pub type MicroKernelFn = fn(pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR], kb: usize);
 
-/// A selected micro-kernel implementation (copyable function handle).
+/// The dispatched axpy contract: `dst[j] += s * src[j]` element-wise.
+/// Each output element receives exactly one multiply and one add, so
+/// vectorizing *across* elements cannot reorder any element's
+/// accumulation — every implementation is bitwise interchangeable (same
+/// mul-then-add, never FMA, rule as the micro-kernel). This is the inner
+/// loop of the pipeline consumers (`panel_acc_stripe` / `addmul_stripe`),
+/// whose zero-skip outer loops stay scalar.
+pub type AxpyFn = fn(s: f32, src: &[f32], dst: &mut [f32]);
+
+/// A selected micro-kernel implementation (copyable function handles).
 #[derive(Clone, Copy)]
 pub struct Kernel {
     micro: MicroKernelFn,
+    axpy: AxpyFn,
     name: &'static str,
 }
 
@@ -54,6 +64,7 @@ impl Kernel {
     pub fn scalar() -> Kernel {
         Kernel {
             micro: micro_scalar,
+            axpy: axpy_scalar,
             name: "scalar",
         }
     }
@@ -74,6 +85,13 @@ impl Kernel {
     #[inline]
     pub fn run(&self, pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR], kb: usize) {
         (self.micro)(pa, pb, acc, kb)
+    }
+
+    /// `dst[j] += s * src[j]` over `min(src.len(), dst.len())` elements,
+    /// with this kernel's axpy implementation.
+    #[inline]
+    pub fn axpy(&self, s: f32, src: &[f32], dst: &mut [f32]) {
+        (self.axpy)(s, src, dst)
     }
 }
 
@@ -105,6 +123,7 @@ fn detect() -> Kernel {
     if std::arch::is_x86_feature_detected!("avx2") {
         return Kernel {
             micro: x86::micro_avx2,
+            axpy: x86::axpy_avx2,
             name: "avx2",
         };
     }
@@ -112,6 +131,7 @@ fn detect() -> Kernel {
     {
         Kernel {
             micro: neon::micro_neon,
+            axpy: neon::axpy_neon,
             name: "neon",
         }
     }
@@ -139,10 +159,46 @@ fn micro_scalar(pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR], kb: usize) {
     }
 }
 
+/// Portable reference axpy: one mul and one add per element, in index
+/// order. The SIMD variants compute exactly these per-element operations,
+/// just more of them per instruction.
+fn axpy_scalar(s: f32, src: &[f32], dst: &mut [f32]) {
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d += s * x;
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use super::{MR, NR};
     use std::arch::x86_64::*;
+
+    /// AVX2 axpy: 8 lanes per step, scalar tail. Safe wrapper — only
+    /// ever selected after `is_x86_feature_detected!("avx2")`.
+    pub(super) fn axpy_avx2(s: f32, src: &[f32], dst: &mut [f32]) {
+        // SAFETY: the dispatcher guarantees AVX2 is present on this host.
+        unsafe { axpy_avx2_impl(s, src, dst) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_avx2_impl(s: f32, src: &[f32], dst: &mut [f32]) {
+        let n = src.len().min(dst.len());
+        let sv = _mm256_set1_ps(s);
+        let mut j = 0;
+        while j + 8 <= n {
+            let x = _mm256_loadu_ps(src.as_ptr().add(j));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(j));
+            // mul then add, NOT fma: bitwise parity with the scalar axpy.
+            _mm256_storeu_ps(
+                dst.as_mut_ptr().add(j),
+                _mm256_add_ps(d, _mm256_mul_ps(sv, x)),
+            );
+            j += 8;
+        }
+        for jj in j..n {
+            dst[jj] += s * src[jj];
+        }
+    }
 
     /// AVX2 micro-kernel: 4 rows × 2 × 256-bit lanes. Safe wrapper — only
     /// ever selected after `is_x86_feature_detected!("avx2")`.
@@ -200,6 +256,30 @@ mod x86 {
 mod neon {
     use super::{MR, NR};
     use std::arch::aarch64::*;
+
+    /// NEON axpy: 4 lanes per step, scalar tail. NEON is part of the
+    /// aarch64 baseline, so no runtime detection is needed.
+    pub(super) fn axpy_neon(s: f32, src: &[f32], dst: &mut [f32]) {
+        // SAFETY: NEON is mandatory on aarch64.
+        unsafe { axpy_neon_impl(s, src, dst) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_neon_impl(s: f32, src: &[f32], dst: &mut [f32]) {
+        let n = src.len().min(dst.len());
+        let sv = vdupq_n_f32(s);
+        let mut j = 0;
+        while j + 4 <= n {
+            let x = vld1q_f32(src.as_ptr().add(j));
+            let d = vld1q_f32(dst.as_ptr().add(j));
+            // mul then add, NOT vfmaq: bitwise parity with scalar.
+            vst1q_f32(dst.as_mut_ptr().add(j), vaddq_f32(d, vmulq_f32(sv, x)));
+            j += 4;
+        }
+        for jj in j..n {
+            dst[jj] += s * src[jj];
+        }
+    }
 
     /// NEON micro-kernel: 4 rows × 4 × 128-bit lanes. NEON is part of the
     /// aarch64 baseline, so no runtime detection is needed.
@@ -322,6 +402,30 @@ mod tests {
             Kernel::scalar().run(&pa, &pb, &mut from_zero, kb);
             for j in 0..NR {
                 assert!((via_scalar[r][j] - 1.0 - from_zero[r][j]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_active_matches_scalar_bitwise() {
+        // Ragged lengths straddling the 4- and 8-lane SIMD widths, plus
+        // zero-length and a scale of exactly 0.0 (must still execute the
+        // mul+add per element: -0.0 inputs make 0.0*x sign-sensitive).
+        let mut rng = Rng::new(71);
+        for &len in &[0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 64, 130] {
+            for &s in &[0.0f32, 1.0, -0.75, 3.5e-3] {
+                let src: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let base: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let mut via_scalar = base.clone();
+                Kernel::scalar().axpy(s, &src, &mut via_scalar);
+                let mut via_active = base.clone();
+                Kernel::active().axpy(s, &src, &mut via_active);
+                assert_eq!(
+                    via_scalar.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    via_active.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "axpy kernel {} diverged at len={len} s={s}",
+                    Kernel::active().name()
+                );
             }
         }
     }

@@ -9,11 +9,15 @@
 //!   fallback);
 //! * [`dense`] — a blocked, register-tiled f32 GEMM with both operands
 //!   packed into contiguous panels, parallelized over M row bands on the
-//!   persistent worker pool (the baseline and the compute stage of the
-//!   pipeline);
-//! * [`sparse`] — bitmap-decode-then-GEMM, sequential (the naive
-//!   deployment), plus the column-stripe kernels the parallel consumers
-//!   share with the fallback paths;
+//!   persistent worker pool; its B-operand pack step is generic over
+//!   [`dense::PackB`], so compressed weights (bitmap, bitmap+NF4, or a
+//!   [`crate::model::WeightStore`]) decode per tile *inside* the pack —
+//!   straight from compressed bytes into the micro-kernel, with no dense
+//!   scratch copy of W;
+//! * [`sparse`] — the direct sparse kernels that never densify at all
+//!   (the small-m decode hot path, generic over [`sparse::SparseSource`]),
+//!   plus the column-stripe kernels the parallel pipeline consumers share
+//!   with the fallback paths;
 //! * [`pipeline`] — the paper's two-stage design generalized to P decode
 //!   workers filling a lock-free ring of dense K-panels while C consumer
 //!   workers apply disjoint output stripes;

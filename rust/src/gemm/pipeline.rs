@@ -2,8 +2,11 @@
 //! multiple workers per stage.
 //!
 //! Stage 1 (decode): `P` decode workers reconstruct dense K-panels of the
-//! bitmap-encoded weight matrix (worker `d` owns panels `d, d+P, …`) using
-//! the byte-mask/LUT rule.
+//! compressed weight matrix (worker `d` owns panels `d, d+P, …`) using the
+//! source's decode rule — bitmap byte-mask scatter, NF4 LUT dequantize, or
+//! a plain copy for dense operands. The pipeline is generic over
+//! [`PackB`], so any weight representation the packed GEMM accepts also
+//! streams through the ring.
 //! Stage 2 (GEMM): `C` consumer workers each own a disjoint stripe of
 //! output columns and apply every panel — in panel order — to their stripe.
 //!
@@ -21,8 +24,8 @@
 //! order the single-threaded fallback uses — so results are **bitwise
 //! identical** across thread counts and across runs.
 
+use crate::gemm::dense::PackB;
 use crate::gemm::sparse::{addmul_stripe, panel_acc, panel_acc_stripe};
-use crate::sparse::BitmapMatrix;
 use crate::util::arena;
 use crate::util::pool::{SendPtr, WorkerPool};
 use crossbeam_utils::CachePadded;
@@ -151,16 +154,16 @@ fn stage_split(threads: usize, npanels: usize, n: usize) -> (usize, usize) {
 /// Decode worker `d` of `stride`: reconstructs panels `d, d+stride, …`
 /// into their ring slots, at most `depth` panels ahead of the slowest
 /// consumer.
-fn decode_role(
+fn decode_role<S: PackB + ?Sized>(
     ring: &PanelRing,
-    w: &BitmapMatrix,
+    w: &S,
     panel_k: usize,
     npanels: usize,
     d: usize,
     stride: usize,
 ) {
     let _bail = Bail(&ring.dead);
-    let k = w.rows();
+    let k = w.k_rows();
     let mut pi = d;
     while pi < npanels {
         let mut waited = 0u32;
@@ -233,9 +236,9 @@ fn consume_role(
 /// run concurrently — guaranteed for top-level callers by the pool's FIFO
 /// queue, but not for a caller that is itself a pool task).
 #[allow(clippy::too_many_arguments)]
-fn run_pipelined(
+fn run_pipelined<S: PackB + ?Sized>(
     x: &[f32],
-    w: &BitmapMatrix,
+    w: &S,
     u: &[f32],
     b_cat: &[f32],
     rank_total: usize,
@@ -246,7 +249,7 @@ fn run_pipelined(
     ring_depth: usize,
     pool: &WorkerPool,
 ) {
-    let (k, n) = (w.rows(), w.cols());
+    let (k, n) = (w.k_rows(), w.n_cols());
     let (decoders, consumers) = stage_split(pool.threads(), npanels, n);
     // Slot buffers come from the calling thread's arena and go back to it
     // once every stage has finished — steady-state prefill GEMMs reuse
@@ -278,50 +281,42 @@ fn run_pipelined(
     }
 }
 
-/// `C[m,n] = X[m,k] @ W[k,n]` with bitmap `W`, decode and GEMM overlapped
-/// across `cfg.num_threads` workers (0 = all cores). Falls back to the
-/// panel-streamed sequential path when there is no parallel resource.
+/// `C[m,n] = X[m,k] @ W[k,n]` with compressed `W` (any [`PackB`] source),
+/// decode and GEMM overlapped across `cfg.num_threads` workers (0 = all
+/// cores). Falls back to the panel-streamed sequential path when there is
+/// no parallel resource.
 ///
 /// Resolves a registry pool from the thread knob; callers that own a pool
 /// (the engine, per-worker private pools) should use
-/// [`bitmap_gemm_pipelined_pool`] so every execution path shares one
-/// thread budget.
-pub fn bitmap_gemm_pipelined(
+/// [`gemm_pipelined_pool`] so every execution path shares one thread
+/// budget.
+pub fn gemm_pipelined<S: PackB + ?Sized>(
     x: &[f32],
-    w: &BitmapMatrix,
+    w: &S,
     c: &mut [f32],
     m: usize,
     cfg: PipelineConfig,
 ) {
-    bitmap_gemm_pipelined_pool(x, w, c, m, cfg, &WorkerPool::with_threads(cfg.num_threads));
+    gemm_pipelined_pool(x, w, c, m, cfg, &WorkerPool::with_threads(cfg.num_threads));
 }
 
-/// [`bitmap_gemm_pipelined`] on an explicit pool: the stage workers (and
-/// the degenerate fallback) run on `pool`, ignoring `cfg.num_threads` —
-/// this is what makes `--threads 1` ablations apples-to-apples when the
-/// engine owns a private (un-registered) pool.
-pub fn bitmap_gemm_pipelined_pool(
+/// [`gemm_pipelined`] on an explicit pool: the stage workers (and the
+/// degenerate fallback) run on `pool`, ignoring `cfg.num_threads` — this
+/// is what makes `--threads 1` ablations apples-to-apples when the engine
+/// owns a private (un-registered) pool. Equivalent to the adapter-fused
+/// entry with a rank-0 adapter, and shares its code so the two stay
+/// bitwise aligned.
+pub fn gemm_pipelined_pool<S: PackB + ?Sized>(
     x: &[f32],
-    w: &BitmapMatrix,
+    w: &S,
     c: &mut [f32],
     m: usize,
     cfg: PipelineConfig,
     pool: &WorkerPool,
 ) {
-    let (k, n) = (w.rows(), w.cols());
+    let (k, n) = (w.k_rows(), w.n_cols());
     assert!(x.len() >= m * k && c.len() >= m * n);
-    c[..m * n].fill(0.0);
-    if k == 0 || n == 0 || m == 0 {
-        return;
-    }
-    let panel_k = cfg.panel_k.max(1).min(k);
-    let npanels = k.div_ceil(panel_k);
-    if npanels == 1 || cfg.ring_depth < 2 || pool.threads() < 2 {
-        // Degenerate: no overlap possible; run sequentially.
-        crate::gemm::sparse::bitmap_gemm_panelled(x, w, c, m, panel_k);
-        return;
-    }
-    run_pipelined(x, w, &[], &[], 0, c, m, panel_k, npanels, cfg.ring_depth, pool);
+    salr_gemm_pipelined_pool(x, w, &[], &[], 0, c, m, cfg, pool);
 }
 
 /// Fold the low-rank adapter update into the same call:
@@ -330,9 +325,9 @@ pub fn bitmap_gemm_pipelined_pool(
 /// pool from `cfg.num_threads`; pool-owning callers use
 /// [`salr_gemm_pipelined_pool`].
 #[allow(clippy::too_many_arguments)]
-pub fn salr_gemm_pipelined(
+pub fn salr_gemm_pipelined<S: PackB + ?Sized>(
     x: &[f32],
-    w: &BitmapMatrix,
+    w: &S,
     a_cat: &[f32],
     b_cat: &[f32],
     rank_total: usize,
@@ -359,9 +354,9 @@ pub fn salr_gemm_pipelined(
 /// with its own pool, so private per-engine-worker pools are honored end
 /// to end.
 #[allow(clippy::too_many_arguments)]
-pub fn salr_gemm_pipelined_pool(
+pub fn salr_gemm_pipelined_pool<S: PackB + ?Sized>(
     x: &[f32],
-    w: &BitmapMatrix,
+    w: &S,
     a_cat: &[f32],
     b_cat: &[f32],
     rank_total: usize,
@@ -370,7 +365,7 @@ pub fn salr_gemm_pipelined_pool(
     cfg: PipelineConfig,
     pool: &WorkerPool,
 ) {
-    let (k, n) = (w.rows(), w.cols());
+    let (k, n) = (w.k_rows(), w.n_cols());
     c[..m * n].fill(0.0);
     if m == 0 || n == 0 {
         return;
@@ -413,6 +408,8 @@ pub fn salr_gemm_pipelined_pool(
 mod tests {
     use super::*;
     use crate::prune::prune_global;
+    use crate::quant::SparseNf4Matrix;
+    use crate::sparse::BitmapMatrix;
     use crate::tensor::{add, matmul, matmul_naive, max_abs_diff, Tensor};
     use crate::util::rng::Rng;
 
@@ -431,7 +428,7 @@ mod tests {
             let bm = BitmapMatrix::encode(&w);
             let want = matmul_naive(&x, &w);
             let mut c = vec![0.0f32; m * n];
-            bitmap_gemm_pipelined(
+            gemm_pipelined(
                 x.data(),
                 &bm,
                 &mut c,
@@ -485,7 +482,7 @@ mod tests {
         let bm = BitmapMatrix::encode(&w);
         let want = matmul_naive(&x, &w);
         let mut c = vec![0.0f32; 3 * 16];
-        bitmap_gemm_pipelined(
+        gemm_pipelined(
             x.data(),
             &bm,
             &mut c,
@@ -508,10 +505,10 @@ mod tests {
         prune_global(&mut [&mut w], 0.5);
         let bm = BitmapMatrix::encode(&w);
         let mut first = vec![0.0f32; 4 * 32];
-        bitmap_gemm_pipelined(x.data(), &bm, &mut first, 4, PipelineConfig::default());
+        gemm_pipelined(x.data(), &bm, &mut first, 4, PipelineConfig::default());
         for _ in 0..10 {
             let mut c = vec![0.0f32; 4 * 32];
-            bitmap_gemm_pipelined(x.data(), &bm, &mut c, 4, PipelineConfig::default());
+            gemm_pipelined(x.data(), &bm, &mut c, 4, PipelineConfig::default());
             assert_eq!(c, first, "pipeline must be deterministic");
         }
     }
@@ -552,9 +549,9 @@ mod tests {
             );
             assert_eq!(c, via_knob, "private pool width {threads} changed bits");
             let mut cb = vec![0.0f32; m * n];
-            bitmap_gemm_pipelined_pool(x.data(), &bm, &mut cb, m, cfg, &private);
+            gemm_pipelined_pool(x.data(), &bm, &mut cb, m, cfg, &private);
             let mut want = vec![0.0f32; m * n];
-            bitmap_gemm_pipelined(x.data(), &bm, &mut want, m, cfg);
+            gemm_pipelined(x.data(), &bm, &mut want, m, cfg);
             assert_eq!(cb, want, "bitmap private pool width {threads} changed bits");
         }
     }
@@ -578,7 +575,7 @@ mod tests {
                 num_threads: t,
             };
             let mut c = vec![0.0f32; m * n];
-            bitmap_gemm_pipelined(x.data(), &bm, &mut c, m, cfg);
+            gemm_pipelined(x.data(), &bm, &mut c, m, cfg);
             match &base {
                 None => base = Some(c),
                 Some(bref) => assert_eq!(&c, bref, "bitmap t={t} changed bits"),
@@ -589,6 +586,41 @@ mod tests {
                 None => salr_base = Some(cs),
                 Some(sref) => assert_eq!(&cs, sref, "salr t={t} changed bits"),
             }
+        }
+    }
+
+    #[test]
+    fn pipelined_sources_are_bitwise_identical_when_values_agree() {
+        // Every PackB source streams panels through the same ring and the
+        // same consumer kernel, so two sources that decode to the same
+        // f32 values must produce the same bits: a WeightStore wrapping a
+        // bitmap matches the bare bitmap, and an NF4 store matches a
+        // bitmap re-encoding of its dequantized values.
+        let mut rng = Rng::new(126);
+        let (m, k, n) = (5usize, 160usize, 40usize);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        prune_global(&mut [&mut w], 0.5);
+        let bm = BitmapMatrix::encode(&w);
+        let store = crate::model::WeightStore::from_bitmap(bm.clone());
+        let snf = SparseNf4Matrix::from_bitmap(&bm, 64);
+        let bm_of_dq = BitmapMatrix::encode(&snf.decode());
+        for &t in &[1usize, 3] {
+            let cfg = PipelineConfig {
+                panel_k: 48,
+                ring_depth: 3,
+                num_threads: t,
+            };
+            let mut via_bm = vec![0.0f32; m * n];
+            gemm_pipelined(x.data(), &bm, &mut via_bm, m, cfg);
+            let mut via_store = vec![0.0f32; m * n];
+            gemm_pipelined(x.data(), &store, &mut via_store, m, cfg);
+            assert_eq!(via_store, via_bm, "store t={t} changed bits");
+            let mut via_nf4 = vec![0.0f32; m * n];
+            gemm_pipelined(x.data(), &snf, &mut via_nf4, m, cfg);
+            let mut via_dq = vec![0.0f32; m * n];
+            gemm_pipelined(x.data(), &bm_of_dq, &mut via_dq, m, cfg);
+            assert_eq!(via_nf4, via_dq, "nf4 t={t} changed bits");
         }
     }
 }

@@ -1,54 +1,103 @@
-//! Sequential bitmap-decode-then-GEMM: the naive deployment of bitmap
-//! weights (decode everything, then multiply). The two-stage pipeline in
-//! [`super::pipeline`] overlaps the same two phases.
+//! Direct sparse GEMM kernels over compressed weight operands.
 //!
-//! All scratch (decode targets, transposed X/C working sets) is borrowed
-//! from the executing thread's arena ([`crate::util::arena`]) — callers
-//! pass no buffers, and steady-state calls perform no heap allocation.
+//! The decode-to-dense-scratch layer that used to live here
+//! (`bitmap_gemm_sequential` / `bitmap_gemm_panelled`) is gone: batch
+//! GEMMs over compressed weights now decode inside the blocked GEMM's
+//! panel pack step ([`super::dense::PackB`]), so the only kernels left in
+//! this module are the ones that never materialize dense weights at all:
+//!
+//! * [`sparse_gemm_direct`] / [`sparse_gemm_direct_pool`] — the small-m
+//!   decode-batch hot path, walking the bitmap directly (≈ nnz·m MACs);
+//!   generic over a [`SparseSource`], so the bitmap+NF4 store runs the
+//!   same kernel with per-element LUT dequantization.
+//! * [`panel_acc`] / `panel_acc_stripe` / `addmul_stripe` — the pipeline
+//!   consumers' column-stripe accumulators, with a zero-skip outer loop
+//!   and a dispatched SIMD axpy ([`crate::gemm::kernel::Kernel::axpy`])
+//!   inner loop.
+//!
+//! All scratch (transposed X/C working sets) is borrowed from the
+//! executing thread's arena ([`crate::util::arena`]) — callers pass no
+//! buffers, and steady-state calls perform no heap allocation.
 
-use crate::gemm::dense;
+use crate::gemm::kernel::Kernel;
+use crate::quant::SparseNf4Matrix;
 use crate::sparse::BitmapMatrix;
 use crate::util::arena::{scratch_f32, scratch_undef};
 use crate::util::pool::{SendPtr, WorkerPool};
 
-/// `C[m,n] = X[m,k] @ W[k,n]` where `W` is bitmap-encoded.
-/// Fully decodes `W` into arena scratch first (sequential baseline);
-/// the dense multiply runs on the process-global pool.
-pub fn bitmap_gemm_sequential(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize) {
-    bitmap_gemm_sequential_pool(x, w, c, m, &WorkerPool::global());
+/// A bitmap-masked sparse operand the direct kernels can walk without
+/// decoding: the mask layout of [`BitmapMatrix`] plus random access into
+/// the row-major nonzero stream. `value(voff)` is the only place the two
+/// compressed formats differ — a stored f32 for the bitmap format, a
+/// LUT-dequantized NF4 code for the quantized one — so every walk order
+/// (and therefore every accumulation order) is shared, which keeps the
+/// parallel kernels bitwise identical across formats' code paths.
+pub trait SparseSource: Sync {
+    /// Weight rows (the GEMM's `k`).
+    fn rows(&self) -> usize;
+    /// Weight columns (the GEMM's `n`).
+    fn cols(&self) -> usize;
+    /// Byte-blocked bitmap, `bytes_per_row` per row.
+    fn masks(&self) -> &[u8];
+    /// Per-row offsets into the nonzero stream (len = rows + 1).
+    fn row_offsets(&self) -> &[u32];
+    /// `ceil(cols / 8)`.
+    fn bytes_per_row(&self) -> usize;
+    /// The `voff`-th nonzero of the row-major stream.
+    fn value(&self, voff: usize) -> f32;
 }
 
-/// [`bitmap_gemm_sequential`] with an explicit pool for the dense multiply
-/// — pass a 1-thread pool for a genuinely sequential ablation baseline.
-pub fn bitmap_gemm_sequential_pool(
-    x: &[f32],
-    w: &BitmapMatrix,
-    c: &mut [f32],
-    m: usize,
-    pool: &WorkerPool,
-) {
-    let (k, n) = (w.rows(), w.cols());
-    // Decode overwrites every element (zeros included), so the scratch
-    // needs no pre-clearing.
-    let mut scratch = scratch_undef(k * n);
-    w.decode_rows_into(0, k, &mut scratch);
-    dense::gemm_f32_pool(x, &scratch, c, m, k, n, pool);
+impl SparseSource for BitmapMatrix {
+    fn rows(&self) -> usize {
+        BitmapMatrix::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        BitmapMatrix::cols(self)
+    }
+
+    fn masks(&self) -> &[u8] {
+        BitmapMatrix::masks(self)
+    }
+
+    fn row_offsets(&self) -> &[u32] {
+        BitmapMatrix::row_offsets(self)
+    }
+
+    fn bytes_per_row(&self) -> usize {
+        BitmapMatrix::bytes_per_row(self)
+    }
+
+    #[inline]
+    fn value(&self, voff: usize) -> f32 {
+        self.values()[voff]
+    }
 }
 
-/// Panel-streamed variant: decode a K-panel of `W`, multiply, move on —
-/// same total work but bounded scratch (`panel_k × n`), no overlap.
-pub fn bitmap_gemm_panelled(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize, panel_k: usize) {
-    let (k, n) = (w.rows(), w.cols());
-    c[..m * n].fill(0.0);
-    let mut scratch = scratch_undef(panel_k * n);
-    let mut p0 = 0;
-    while p0 < k {
-        let p1 = (p0 + panel_k).min(k);
-        let kb = p1 - p0;
-        w.decode_rows_into(p0, p1, &mut scratch);
-        // C += X[:, p0..p1] @ panel — strided A access via a gathered copy.
-        panel_acc(x, &scratch[..kb * n], c, m, k, n, p0, kb);
-        p0 = p1;
+impl SparseSource for SparseNf4Matrix {
+    fn rows(&self) -> usize {
+        SparseNf4Matrix::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        SparseNf4Matrix::cols(self)
+    }
+
+    fn masks(&self) -> &[u8] {
+        SparseNf4Matrix::masks(self)
+    }
+
+    fn row_offsets(&self) -> &[u32] {
+        SparseNf4Matrix::row_offsets(self)
+    }
+
+    fn bytes_per_row(&self) -> usize {
+        SparseNf4Matrix::bytes_per_row(self)
+    }
+
+    #[inline]
+    fn value(&self, voff: usize) -> f32 {
+        SparseNf4Matrix::value(self, voff)
     }
 }
 
@@ -60,7 +109,7 @@ pub fn bitmap_gemm_panelled(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize
 ///
 /// Internally works on transposed X/C arena scratch so the m-loop is
 /// contiguous and vectorizes.
-pub fn bitmap_gemm_direct(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize) {
+pub fn sparse_gemm_direct<S: SparseSource + ?Sized>(x: &[f32], w: &S, c: &mut [f32], m: usize) {
     let (k, n) = (w.rows(), w.cols());
     assert!(x.len() >= m * k && c.len() >= m * n);
     if m == 0 {
@@ -76,7 +125,6 @@ pub fn bitmap_gemm_direct(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize) 
         }
     }
     let masks = w.masks();
-    let values = w.values();
     let bpr = w.bytes_per_row();
     let mut voff = 0usize;
     for p in 0..k {
@@ -87,7 +135,7 @@ pub fn bitmap_gemm_direct(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize) 
             while mbits != 0 {
                 let t = mbits.trailing_zeros() as usize;
                 let j = b * 8 + t;
-                let v = values[voff];
+                let v = w.value(voff);
                 voff += 1;
                 let crow = &mut ct[j * m..(j + 1) * m];
                 for i in 0..m {
@@ -104,7 +152,7 @@ pub fn bitmap_gemm_direct(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize) 
     }
 }
 
-/// [`bitmap_gemm_direct`] parallelized over **column stripes** on the
+/// [`sparse_gemm_direct`] parallelized over **column stripes** on the
 /// caller's pool — the decode-batch hot path of the serving engine.
 ///
 /// Each stripe task owns a disjoint byte-block range of W's columns (and
@@ -116,9 +164,9 @@ pub fn bitmap_gemm_direct(x: &[f32], w: &BitmapMatrix, c: &mut [f32], m: usize) 
 /// the single-threaded kernel at every pool width. The transposed
 /// working set lives in the calling thread's arena; stripe tasks borrow
 /// it and allocate nothing.
-pub fn bitmap_gemm_direct_pool(
+pub fn sparse_gemm_direct_pool<S: SparseSource + ?Sized>(
     x: &[f32],
-    w: &BitmapMatrix,
+    w: &S,
     c: &mut [f32],
     m: usize,
     pool: &WorkerPool,
@@ -131,7 +179,7 @@ pub fn bitmap_gemm_direct_pool(
     let bpr = w.bytes_per_row();
     let stripes = pool.threads().min(bpr);
     if stripes <= 1 || k == 0 {
-        return bitmap_gemm_direct(x, w, c, m);
+        return sparse_gemm_direct(x, w, c, m);
     }
     // Transposed so the m-loop is contiguous — same layout as the serial
     // kernel. xT fully overwritten; cT accumulates from zero.
@@ -145,7 +193,6 @@ pub fn bitmap_gemm_direct_pool(
     {
         let xt = &*xt;
         let masks = w.masks();
-        let values = w.values();
         let offs = w.row_offsets();
         let cptr = SendPtr(ct.as_mut_ptr());
         pool.run(stripes, &|s| {
@@ -165,7 +212,7 @@ pub fn bitmap_gemm_direct_pool(
                     while mbits != 0 {
                         let t = mbits.trailing_zeros() as usize;
                         let j = b * 8 + t;
-                        let v = values[voff];
+                        let v = w.value(voff);
                         voff += 1;
                         // SAFETY: stripe `s` exclusively owns cT columns
                         // [b0*8, b1*8), and j lies in that range.
@@ -211,6 +258,12 @@ pub(crate) fn panel_acc(
 /// the full-width version, which keeps results bitwise independent of the
 /// stripe count.
 ///
+/// The outer loops keep the zero-skip (an activation of exactly 0.0
+/// contributes no term — `0.0 + c == c` for every finite c the panels
+/// produce); the contiguous inner loop runs the dispatched SIMD axpy,
+/// which performs the identical per-element mul-then-add in the identical
+/// order, so SIMD dispatch never changes a bit.
+///
 /// # Safety
 /// `c` must point to an `m*n` f32 buffer, and no other thread may access
 /// columns `[j0, j1)` of it concurrently.
@@ -227,6 +280,7 @@ pub(crate) unsafe fn panel_acc_stripe(
     j0: usize,
     j1: usize,
 ) {
+    let kern = Kernel::active();
     for i in 0..m {
         let xrow = &x[i * k + p0..i * k + p0 + kb];
         for (p, &xv) in xrow.iter().enumerate() {
@@ -234,17 +288,17 @@ pub(crate) unsafe fn panel_acc_stripe(
                 continue;
             }
             let prow = &panel[p * n + j0..p * n + j1];
-            let crow = c.add(i * n + j0);
-            for (jj, &pv) in prow.iter().enumerate() {
-                *crow.add(jj) += xv * pv;
-            }
+            let crow = std::slice::from_raw_parts_mut(c.add(i * n + j0), j1 - j0);
+            kern.axpy(xv, prow, crow);
         }
     }
 }
 
 /// `C[:, j0..j1] += U[m, r] @ B[r, n][:, j0..j1]` through a raw base
 /// pointer — the adapter-update stripe applied by each pipeline consumer
-/// before it starts consuming panels.
+/// before it starts consuming panels. Zero-skip outer loops, dispatched
+/// SIMD axpy inner loop (same bitwise-identity argument as
+/// [`panel_acc_stripe`]).
 ///
 /// # Safety
 /// Same contract as [`panel_acc_stripe`].
@@ -259,6 +313,7 @@ pub(crate) unsafe fn addmul_stripe(
     j0: usize,
     j1: usize,
 ) {
+    let kern = Kernel::active();
     for i in 0..m {
         let urow = &u[i * r..(i + 1) * r];
         for (p, &uv) in urow.iter().enumerate() {
@@ -266,10 +321,8 @@ pub(crate) unsafe fn addmul_stripe(
                 continue;
             }
             let brow = &bmat[p * n + j0..p * n + j1];
-            let crow = c.add(i * n + j0);
-            for (jj, &bv) in brow.iter().enumerate() {
-                *crow.add(jj) += uv * bv;
-            }
+            let crow = std::slice::from_raw_parts_mut(c.add(i * n + j0), j1 - j0);
+            kern.axpy(uv, brow, crow);
         }
     }
 }
@@ -290,17 +343,6 @@ mod tests {
     }
 
     #[test]
-    fn sequential_matches_dense() {
-        let mut rng = Rng::new(110);
-        let (x, w, bm) = setup(&mut rng, 9, 64, 33);
-        let want = matmul_naive(&x, &w);
-        let mut c = vec![0.0f32; 9 * 33];
-        bitmap_gemm_sequential(x.data(), &bm, &mut c, 9);
-        let c = Tensor::from_vec(&[9, 33], c);
-        assert!(max_abs_diff(&c, &want) < 1e-3);
-    }
-
-    #[test]
     fn direct_matches_dense() {
         let mut rng = Rng::new(112);
         for &(m, k, n, p) in &[
@@ -315,7 +357,7 @@ mod tests {
             let bm = BitmapMatrix::encode(&w);
             let want = matmul_naive(&x, &w);
             let mut c = vec![0.0f32; m * n];
-            bitmap_gemm_direct(x.data(), &bm, &mut c, m);
+            sparse_gemm_direct(x.data(), &bm, &mut c, m);
             let c = Tensor::from_vec(&[m, n], c);
             assert!(max_abs_diff(&c, &want) < 1e-3, "({m},{k},{n},{p})");
         }
@@ -326,7 +368,8 @@ mod tests {
         // Column-striped parallel direct GEMM: same bits as the serial
         // kernel at every pool width (each column accumulates in ascending
         // weight-row order regardless of the stripe count), including
-        // ragged column counts that don't align to byte blocks.
+        // ragged column counts that don't align to byte blocks — for both
+        // compressed formats.
         let mut rng = Rng::new(113);
         for &(m, k, n, p) in &[
             (1usize, 64usize, 48usize, 0.5f64),
@@ -338,18 +381,52 @@ mod tests {
             let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
             crate::prune::prune_global(&mut [&mut w], p);
             let bm = BitmapMatrix::encode(&w);
+            let snf = SparseNf4Matrix::from_bitmap(&bm, 64);
             let mut serial = vec![0.0f32; m * n];
-            bitmap_gemm_direct(x.data(), &bm, &mut serial, m);
+            sparse_gemm_direct(x.data(), &bm, &mut serial, m);
+            let mut serial_nf = vec![0.0f32; m * n];
+            sparse_gemm_direct(x.data(), &snf, &mut serial_nf, m);
             for threads in [1usize, 2, 3, 8] {
                 let pool = WorkerPool::new(threads);
                 let mut c = vec![0.0f32; m * n];
-                bitmap_gemm_direct_pool(x.data(), &bm, &mut c, m, &pool);
+                sparse_gemm_direct_pool(x.data(), &bm, &mut c, m, &pool);
                 assert_eq!(c, serial, "({m},{k},{n},{p}) threads={threads}");
+                let mut cn = vec![0.0f32; m * n];
+                sparse_gemm_direct_pool(x.data(), &snf, &mut cn, m, &pool);
+                assert_eq!(cn, serial_nf, "nf4 ({m},{k},{n},{p}) threads={threads}");
             }
             let want = matmul_naive(&x, &w);
             let c = Tensor::from_vec(&[m, n], serial);
             assert!(max_abs_diff(&c, &want) < 1e-3, "({m},{k},{n},{p})");
         }
+    }
+
+    #[test]
+    fn direct_nf4_matches_dequantize_then_dense_oracle() {
+        // The NF4 direct walk dequantizes per element inside the kernel;
+        // run the same kernel on a bitmap re-encoding of the dequantized
+        // matrix (the decode-then-GEMM form) and the bits must match,
+        // since both see the identical f32 stream in identical order.
+        let mut rng = Rng::new(115);
+        let (m, k, n) = (5usize, 80usize, 37usize);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        prune_global(&mut [&mut w], 0.5);
+        let snf = SparseNf4Matrix::encode(&w, 64);
+        let dq = snf.decode();
+        let bm_of_dq = BitmapMatrix::encode(&dq);
+        let mut via_nf4 = vec![0.0f32; m * n];
+        sparse_gemm_direct(x.data(), &snf, &mut via_nf4, m);
+        let mut via_bitmap = vec![0.0f32; m * n];
+        sparse_gemm_direct(x.data(), &bm_of_dq, &mut via_bitmap, m);
+        assert!(via_nf4
+            .iter()
+            .zip(&via_bitmap)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // And it is close to the true (unquantized) product.
+        let want = matmul_naive(&x, &w);
+        let c = Tensor::from_vec(&[m, n], via_nf4);
+        assert!(max_abs_diff(&c, &want) < 0.5);
     }
 
     #[test]
@@ -360,28 +437,76 @@ mod tests {
         let mut rng = Rng::new(114);
         let (x, _w, bm) = setup(&mut rng, 4, 96, 64);
         let mut c = vec![0.0f32; 4 * 64];
-        bitmap_gemm_direct(x.data(), &bm, &mut c, 4);
+        sparse_gemm_direct(x.data(), &bm, &mut c, 4);
         let before = crate::util::arena::thread_allocated_bytes();
         for _ in 0..10 {
-            bitmap_gemm_direct(x.data(), &bm, &mut c, 4);
+            sparse_gemm_direct(x.data(), &bm, &mut c, 4);
         }
         assert_eq!(
             crate::util::arena::thread_allocated_bytes(),
             before,
-            "bitmap_gemm_direct allocated in steady state"
+            "sparse_gemm_direct allocated in steady state"
         );
     }
 
     #[test]
-    fn panelled_matches_dense_various_panels() {
-        let mut rng = Rng::new(111);
-        let (x, w, bm) = setup(&mut rng, 7, 100, 25);
-        let want = matmul_naive(&x, &w);
-        for &panel in &[1usize, 8, 33, 100, 200] {
-            let mut c = vec![0.0f32; 7 * 25];
-            bitmap_gemm_panelled(x.data(), &bm, &mut c, 7, panel);
-            let c = Tensor::from_vec(&[7, 25], c);
-            assert!(max_abs_diff(&c, &want) < 1e-3, "panel={panel}");
+    fn panel_acc_stripes_compose_to_full_width() {
+        // Striped panel application (the pipeline consumer kernel) must
+        // equal the full-width call bit-for-bit however the columns are
+        // split, and the SIMD axpy must not change bits vs its own
+        // zero-skip semantics (xv == 0.0 rows contribute nothing).
+        let mut rng = Rng::new(116);
+        let (m, k, n) = (6usize, 40usize, 53usize);
+        let (p0, kb) = (8usize, 16usize);
+        let mut x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        // Plant exact zeros in the panel's x columns to exercise the skip.
+        for i in 0..m {
+            x.set(i, p0 + 1, 0.0);
+            x.set(i, p0 + 7, 0.0);
         }
+        let panel = Tensor::randn(&[kb, n], 1.0, &mut rng);
+        let mut full = vec![0.5f32; m * n];
+        panel_acc(x.data(), panel.data(), &mut full, m, k, n, p0, kb);
+        for splits in [2usize, 3, 5] {
+            let mut striped = vec![0.5f32; m * n];
+            let cptr = striped.as_mut_ptr();
+            for s in 0..splits {
+                let j0 = s * n / splits;
+                let j1 = (s + 1) * n / splits;
+                // SAFETY: single-threaded here; stripes are disjoint.
+                unsafe {
+                    panel_acc_stripe(x.data(), panel.data(), cptr, m, k, n, p0, kb, j0, j1);
+                }
+            }
+            assert!(
+                striped.iter().zip(&full).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "splits={splits}"
+            );
+        }
+    }
+
+    #[test]
+    fn addmul_stripes_compose_to_full_width() {
+        let mut rng = Rng::new(117);
+        let (m, r, n) = (4usize, 6usize, 29usize);
+        let u = Tensor::randn(&[m, r], 1.0, &mut rng);
+        let bmat = Tensor::randn(&[r, n], 1.0, &mut rng);
+        let mut full = vec![0.0f32; m * n];
+        // SAFETY: single-threaded; full width.
+        unsafe {
+            addmul_stripe(u.data(), bmat.data(), full.as_mut_ptr(), m, r, n, 0, n);
+        }
+        let want = matmul_naive(&u, &bmat);
+        let ft = Tensor::from_vec(&[m, n], full.clone());
+        assert!(max_abs_diff(&ft, &want) < 1e-3);
+        let mut striped = vec![0.0f32; m * n];
+        let cptr = striped.as_mut_ptr();
+        for (j0, j1) in [(0usize, 13usize), (13, 14), (14, 29)] {
+            // SAFETY: single-threaded; stripes are disjoint.
+            unsafe {
+                addmul_stripe(u.data(), bmat.data(), cptr, m, r, n, j0, j1);
+            }
+        }
+        assert!(striped.iter().zip(&full).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 }

@@ -101,7 +101,15 @@ fn run(args: &Args) -> Result<()> {
                 sparsity: args.f64_or("sparsity", 0.5)?,
             };
             let (spec, adapters, _) = ctx.run(&key)?;
-            let mut engine = deploy_engine(&ctx.cfg, &spec, &adapters, None)?;
+            // Resident weight format defaults from SALR_WEIGHT_FORMAT
+            // (bitmap when unset); an explicit flag overrides the env.
+            let wfmt = match args.flag("weight-format") {
+                Some(s) => salr::model::WeightFormat::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("--weight-format must be f32|bitmap|nf4"))?,
+                None => salr::model::WeightFormat::env_default(),
+            };
+            let mut engine =
+                salr::eval::deploy_engine_with_format(&ctx.cfg, &spec, &adapters, None, wfmt)?;
             engine.backend = match args.str_or("backend", "pipeline").as_str() {
                 "dense" => Backend::Dense,
                 "bitmap" => Backend::BitmapSequential,

@@ -5,6 +5,10 @@
 
 mod params;
 mod serialize;
+mod store;
 
 pub use params::ParamStore;
-pub use serialize::{load_model, save_model, Encoding, ModelFile, TensorRecord};
+pub use serialize::{
+    decode_tensor_store, load_model, load_stores, save_model, Encoding, ModelFile, TensorRecord,
+};
+pub use store::{WeightFormat, WeightStore, WeightView, NF4_BLOCK};

@@ -11,7 +11,8 @@
 //!   per tensor: u16 name_len | name | u8 encoding | u32 payload_len | payload
 
 use super::params::ParamStore;
-use crate::quant::Nf4Matrix;
+use super::store::{WeightStore, NF4_BLOCK};
+use crate::quant::{Nf4Matrix, SparseNf4Matrix};
 use crate::sparse::BitmapMatrix;
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Context, Result};
@@ -57,8 +58,6 @@ impl ModelFile {
     }
 }
 
-const NF4_BLOCK: usize = 64;
-
 fn encode_dense(t: &Tensor) -> Vec<u8> {
     let mut out = Vec::with_capacity(8 + t.len() * 4 + 4 * t.ndim());
     out.extend_from_slice(&(t.ndim() as u32).to_le_bytes());
@@ -92,41 +91,14 @@ fn decode_dense(bytes: &[u8]) -> Result<Tensor> {
 
 fn encode_sparse_nf4(t: &Tensor) -> Vec<u8> {
     // Bitmap *pattern* (1 bit/elem) + NF4 codes of the kept values only
-    // (4.5 bits/nnz): the QSALR format of Table 6.
-    let bm = BitmapMatrix::encode(t);
-    let kept = Tensor::from_vec(&[1, bm.nnz().max(1)], {
-        let mut v = bm.values().to_vec();
-        if v.is_empty() {
-            v.push(0.0);
-        }
-        v
-    });
-    let nf4 = Nf4Matrix::quantize(&kept, NF4_BLOCK);
-    let bm_bytes = bm.pattern_bytes();
-    let nf_bytes = nf4.to_bytes();
-    let mut out = Vec::with_capacity(8 + bm_bytes.len() + nf_bytes.len());
-    out.extend_from_slice(&(bm_bytes.len() as u32).to_le_bytes());
-    out.extend_from_slice(&(nf_bytes.len() as u32).to_le_bytes());
-    out.extend_from_slice(&bm_bytes);
-    out.extend_from_slice(&nf_bytes);
-    out
+    // (4.5 bits/nnz): the QSALR format of Table 6. The byte layout is the
+    // runtime store's own — the serialized payload IS the resident
+    // representation, so loading it never densifies.
+    SparseNf4Matrix::encode(t, NF4_BLOCK).to_bytes()
 }
 
 fn decode_sparse_nf4(bytes: &[u8]) -> Result<Tensor> {
-    ensure!(bytes.len() >= 8, "sparse-nf4: truncated");
-    let bl = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
-    let nl = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
-    ensure!(bytes.len() == 8 + bl + nl, "sparse-nf4: bad payload");
-    let pattern = &bytes[8..8 + bl];
-    let nf4 = Nf4Matrix::from_bytes(&bytes[8 + bl..])?;
-    let nnz = u32::from_le_bytes(pattern[8..12].try_into()?) as usize;
-    let mut vals = nf4.dequantize().into_vec();
-    vals.truncate(nnz.max(1));
-    if nnz == 0 {
-        vals.clear();
-    }
-    let bm = BitmapMatrix::from_pattern_and_values(pattern, vals)?;
-    Ok(bm.decode())
+    Ok(SparseNf4Matrix::from_bytes(bytes)?.decode())
 }
 
 /// Choose + apply an encoding for one tensor.
@@ -189,8 +161,8 @@ pub fn save_model(
     Ok(buf.len() as u64)
 }
 
-/// Load a serialized model (all tensors decoded to dense).
-pub fn load_model(path: impl AsRef<Path>) -> Result<ParamStore> {
+/// Parse a serialized model file into its per-tensor records.
+fn read_file_records(path: impl AsRef<Path>) -> Result<Vec<TensorRecord>> {
     let mut bytes = Vec::new();
     std::fs::File::open(path.as_ref())
         .with_context(|| format!("opening {:?}", path.as_ref()))?
@@ -200,10 +172,12 @@ pub fn load_model(path: impl AsRef<Path>) -> Result<ParamStore> {
     ensure!(version == VERSION, "unsupported model version {version}");
     let count = u32::from_le_bytes(bytes[12..16].try_into()?) as usize;
     let mut p = 16usize;
-    let mut store = ParamStore::new();
+    let mut records = Vec::with_capacity(count);
     for _ in 0..count {
+        ensure!(bytes.len() >= p + 2, "truncated record header");
         let nlen = u16::from_le_bytes(bytes[p..p + 2].try_into()?) as usize;
         p += 2;
+        ensure!(bytes.len() >= p + nlen + 5, "truncated record header");
         let name = std::str::from_utf8(&bytes[p..p + nlen])?.to_string();
         p += nlen;
         let enc = match bytes[p] {
@@ -216,15 +190,50 @@ pub fn load_model(path: impl AsRef<Path>) -> Result<ParamStore> {
         p += 1;
         let plen = u32::from_le_bytes(bytes[p..p + 4].try_into()?) as usize;
         p += 4;
-        let rec = TensorRecord {
-            name: name.clone(),
+        ensure!(bytes.len() >= p + plen, "truncated record payload");
+        records.push(TensorRecord {
+            name,
             encoding: enc,
             payload: bytes[p..p + plen].to_vec(),
-        };
+        });
         p += plen;
-        store.insert(&name, decode_tensor(&rec)?);
+    }
+    Ok(records)
+}
+
+/// Load a serialized model (all tensors decoded to dense).
+pub fn load_model(path: impl AsRef<Path>) -> Result<ParamStore> {
+    let mut store = ParamStore::new();
+    for rec in read_file_records(path)? {
+        store.insert(&rec.name, decode_tensor(&rec)?);
     }
     Ok(store)
+}
+
+/// Decode a record into its **resident** form: compressed encodings stay
+/// compressed (the serialized payload of `Bitmap`/`SparseNf4` is already
+/// the runtime [`WeightStore`] representation — no dense f32 copy is ever
+/// materialized on this path; `Dense`/`Nf4` records decode to a dense
+/// store).
+pub fn decode_tensor_store(rec: &TensorRecord) -> Result<WeightStore> {
+    Ok(match rec.encoding {
+        Encoding::Dense => WeightStore::dense(decode_dense(&rec.payload)?),
+        Encoding::Bitmap => WeightStore::from_bitmap(BitmapMatrix::from_bytes(&rec.payload)?),
+        Encoding::Nf4 => WeightStore::dense(Nf4Matrix::from_bytes(&rec.payload)?.dequantize()),
+        Encoding::SparseNf4 => {
+            WeightStore::from_sparse_nf4(SparseNf4Matrix::from_bytes(&rec.payload)?)
+        }
+    })
+}
+
+/// Load a serialized model **without densifying** compressed tensors:
+/// every record becomes a [`WeightStore`] in its serialized
+/// representation, ready to hand to the compressed-weight GEMM tiers.
+pub fn load_stores(path: impl AsRef<Path>) -> Result<Vec<(String, WeightStore)>> {
+    read_file_records(path)?
+        .iter()
+        .map(|rec| Ok((rec.name.clone(), decode_tensor_store(rec)?)))
+        .collect()
 }
 
 #[cfg(test)]
@@ -329,5 +338,105 @@ mod tests {
         // 256·256 · (1 bit map + 0.8 · 4.5 bits values) / 8 ≈ 38 KB + dense norm.
         assert!(size > 30_000 && size < 60_000, "size={size}");
         std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn sparse_nf4_payload_is_the_runtime_store_representation() {
+        // The serialized SparseNf4 payload must be byte-identical to the
+        // runtime store's own to_bytes(), and decoding the record must be
+        // byte-identical to quantize-then-dequantize through the runtime
+        // store — the file format and the resident format are one.
+        let mut rng = Rng::new(205);
+        let mut w = Tensor::randn(&[60, 41], 0.05, &mut rng);
+        prune_global(&mut [&mut w], 0.5);
+        let rec = encode_tensor("w", &w, Encoding::SparseNf4).unwrap();
+        let store = SparseNf4Matrix::encode(&w, NF4_BLOCK);
+        assert_eq!(rec.payload, store.to_bytes());
+        let via_record = decode_tensor(&rec).unwrap();
+        let via_store = store.decode();
+        assert_eq!(via_record, via_store);
+    }
+
+    #[test]
+    fn load_stores_keeps_compressed_tensors_compressed() {
+        // Round-trip through the store-level loader: compressed records
+        // come back in their compressed resident form (no dense f32 copy
+        // registered), and decoding them matches the dense loader exactly.
+        let mut rng = Rng::new(206);
+        let mut w = Tensor::randn(&[80, 64], 0.05, &mut rng);
+        prune_global(&mut [&mut w], 0.5);
+        let mut p = ParamStore::new();
+        p.insert("layer0.wq", w.clone());
+        p.insert("layer0.wk", w.clone());
+        p.insert("norm", Tensor::full(&[64], 1.0));
+        let path = tmpfile("stores");
+        save_model(&path, &p, |name, _| match name {
+            "layer0.wq" => Encoding::Bitmap,
+            "layer0.wk" => Encoding::SparseNf4,
+            _ => Encoding::Dense,
+        })
+        .unwrap();
+        let dense0 = crate::util::mem::dense_weight_bytes();
+        let stores = load_stores(&path).unwrap();
+        let by_name: std::collections::HashMap<_, _> =
+            stores.iter().map(|(n, s)| (n.as_str(), s)).collect();
+        assert_eq!(
+            by_name["layer0.wq"].format(),
+            crate::model::WeightFormat::Bitmap
+        );
+        assert_eq!(
+            by_name["layer0.wk"].format(),
+            crate::model::WeightFormat::Nf4
+        );
+        assert!(by_name["norm"].format().is_dense());
+        // Only the dense norm registered resident dense bytes.
+        assert_eq!(
+            crate::util::mem::dense_weight_bytes() - dense0,
+            64 * 4,
+            "compressed records must not materialize dense weights on load"
+        );
+        let dense_load = load_model(&path).unwrap();
+        for (name, store) in &stores {
+            assert_eq!(&store.decode(), dense_load.get(name).unwrap(), "{name}");
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn sparse_nf4_roundtrip_error_is_blockwise_bounded() {
+        // Worst-case error bound for the quantize→serialize→load
+        // round-trip: within each 64-value stream block the absolute
+        // error of a kept value is at most scale × (half the widest
+        // codebook gap), and pruned positions are exactly zero.
+        let mut rng = Rng::new(207);
+        let mut w = Tensor::randn(&[48, 80], 0.05, &mut rng);
+        prune_global(&mut [&mut w], 0.5);
+        let rec = encode_tensor("w", &w, Encoding::SparseNf4).unwrap();
+        let back = decode_tensor(&rec).unwrap();
+        let codebook = crate::quant::NF4_CODEBOOK;
+        let max_gap = codebook
+            .windows(2)
+            .map(|p| p[1] - p[0])
+            .fold(0.0f32, f32::max);
+        // Recompute the per-block scales the encoder used.
+        let kept: Vec<f32> = w.data().iter().copied().filter(|v| *v != 0.0).collect();
+        let mut kept_idx = 0usize;
+        for (a, b) in w.data().iter().zip(back.data()) {
+            if *a == 0.0 {
+                assert_eq!(*b, 0.0, "pruned position must stay exactly zero");
+                continue;
+            }
+            let block = &kept[(kept_idx / NF4_BLOCK) * NF4_BLOCK
+                ..((kept_idx / NF4_BLOCK) * NF4_BLOCK + NF4_BLOCK).min(kept.len())];
+            let absmax = block.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let scale = if absmax == 0.0 { 1.0 } else { absmax };
+            let bound = scale * max_gap / 2.0 + 1e-6;
+            assert!(
+                (a - b).abs() <= bound,
+                "kept value error {} exceeds blockwise bound {bound}",
+                (a - b).abs()
+            );
+            kept_idx += 1;
+        }
     }
 }

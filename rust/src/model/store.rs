@@ -1,0 +1,352 @@
+//! The engine's resident base-weight representation.
+//!
+//! A [`WeightStore`] is the *only* form in which a linear layer's base
+//! matrix Ŵ lives inside [`crate::salr::SalrLayer`] and
+//! [`crate::infer::EngineWeights`]: dense f32, bitmap-sparse, or
+//! bitmap+NF4. In the compressed formats no persistent dense copy exists —
+//! the GEMM tier decodes per tile inside its panel pack step
+//! ([`crate::gemm::dense::PackB`]), so weights stream from memory at
+//! compressed size and the freed RAM becomes KV blocks.
+//!
+//! Every construction/Drop is accounted in [`crate::util::mem`]'s
+//! per-thread resident-weight counters, which is how the test suite
+//! asserts that engine construction in a compressed format leaves zero
+//! resident dense weight bytes behind.
+
+use crate::quant::SparseNf4Matrix;
+use crate::sparse::BitmapMatrix;
+use crate::tensor::Tensor;
+use crate::util::mem;
+
+/// NF4 block size used for the bitmap+NF4 store and the `SparseNf4`
+/// serialization encoding (the QLoRA default).
+pub const NF4_BLOCK: usize = 64;
+
+/// Which resident representation a base weight matrix uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightFormat {
+    /// Dense f32 (pruned zeros stored explicitly).
+    F32,
+    /// Bitmap mask + packed f32 nonzeros (exact, ~2× smaller at p=0.5).
+    Bitmap,
+    /// Bitmap mask + NF4-quantized nonzeros (lossy, ~5× smaller).
+    Nf4,
+}
+
+impl WeightFormat {
+    /// Parse a `--weight-format` / `SALR_WEIGHT_FORMAT` token.
+    pub fn parse(s: &str) -> Option<WeightFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "dense" => Some(WeightFormat::F32),
+            "bitmap" => Some(WeightFormat::Bitmap),
+            "nf4" => Some(WeightFormat::Nf4),
+            _ => None,
+        }
+    }
+
+    /// The flag/env token for this format.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightFormat::F32 => "f32",
+            WeightFormat::Bitmap => "bitmap",
+            WeightFormat::Nf4 => "nf4",
+        }
+    }
+
+    /// The format `SALR_WEIGHT_FORMAT` selects, defaulting to `Bitmap`
+    /// (the paper's deployment form and the pre-flag behavior). CI runs
+    /// the whole suite once per format through this default.
+    pub fn env_default() -> WeightFormat {
+        match std::env::var("SALR_WEIGHT_FORMAT") {
+            Ok(s) => WeightFormat::parse(&s).unwrap_or(WeightFormat::Bitmap),
+            Err(_) => WeightFormat::Bitmap,
+        }
+    }
+
+    /// Whether this format holds a dense f32 copy resident.
+    pub fn is_dense(&self) -> bool {
+        matches!(self, WeightFormat::F32)
+    }
+}
+
+#[derive(Debug, PartialEq)]
+enum Repr {
+    Dense(Tensor),
+    Bitmap(BitmapMatrix),
+    BitmapNf4(SparseNf4Matrix),
+}
+
+/// Borrowed view of a store's representation, for consumers that pick a
+/// kernel per variant (small-m direct sparse GEMM, merge, stats).
+pub enum WeightView<'a> {
+    /// Dense f32 matrix.
+    Dense(&'a Tensor),
+    /// Bitmap mask + f32 nonzeros.
+    Bitmap(&'a BitmapMatrix),
+    /// Bitmap mask + NF4 nonzeros.
+    BitmapNf4(&'a SparseNf4Matrix),
+}
+
+/// A base weight matrix in its resident (possibly compressed) form.
+///
+/// Construction goes through [`WeightStore::dense`] /
+/// [`WeightStore::encode`] so the [`crate::util::mem`] resident-byte
+/// counters always match what is actually held; `Drop` (and `Clone`)
+/// keep them balanced.
+#[derive(Debug)]
+pub struct WeightStore {
+    repr: Repr,
+    /// Bytes registered with the mem counters at construction.
+    tracked: i64,
+}
+
+impl WeightStore {
+    fn track(repr: Repr) -> WeightStore {
+        let tracked = match &repr {
+            Repr::Dense(t) => {
+                let b = (t.len() * 4) as i64;
+                mem::track_dense_weight_bytes(b);
+                b
+            }
+            Repr::Bitmap(bm) => {
+                let b = bm.storage_bytes() as i64;
+                mem::track_compressed_weight_bytes(b);
+                b
+            }
+            Repr::BitmapNf4(snf) => {
+                let b = snf.storage_bytes() as i64;
+                mem::track_compressed_weight_bytes(b);
+                b
+            }
+        };
+        WeightStore { repr, tracked }
+    }
+
+    /// Hold a dense f32 matrix (the `f32` weight format).
+    pub fn dense(t: Tensor) -> WeightStore {
+        Self::track(Repr::Dense(t))
+    }
+
+    /// Hold an already-encoded bitmap matrix.
+    pub fn from_bitmap(bm: BitmapMatrix) -> WeightStore {
+        Self::track(Repr::Bitmap(bm))
+    }
+
+    /// Hold an already-encoded bitmap+NF4 matrix.
+    pub fn from_sparse_nf4(snf: SparseNf4Matrix) -> WeightStore {
+        Self::track(Repr::BitmapNf4(snf))
+    }
+
+    /// Encode a dense matrix into the requested resident format. `F32`
+    /// keeps the values as-is; `Bitmap` is exact over the nonzeros; `Nf4`
+    /// additionally NF4-quantizes them ([`NF4_BLOCK`]-wide blocks over
+    /// the nonzero stream).
+    pub fn encode(t: &Tensor, fmt: WeightFormat) -> WeightStore {
+        match fmt {
+            WeightFormat::F32 => Self::dense(t.clone()),
+            WeightFormat::Bitmap => Self::from_bitmap(BitmapMatrix::encode(t)),
+            WeightFormat::Nf4 => Self::from_sparse_nf4(SparseNf4Matrix::encode(t, NF4_BLOCK)),
+        }
+    }
+
+    /// The resident format of this store.
+    pub fn format(&self) -> WeightFormat {
+        match &self.repr {
+            Repr::Dense(_) => WeightFormat::F32,
+            Repr::Bitmap(_) => WeightFormat::Bitmap,
+            Repr::BitmapNf4(_) => WeightFormat::Nf4,
+        }
+    }
+
+    /// Borrow the concrete representation.
+    pub fn view(&self) -> WeightView<'_> {
+        match &self.repr {
+            Repr::Dense(t) => WeightView::Dense(t),
+            Repr::Bitmap(bm) => WeightView::Bitmap(bm),
+            Repr::BitmapNf4(snf) => WeightView::BitmapNf4(snf),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match &self.repr {
+            Repr::Dense(t) => t.rows(),
+            Repr::Bitmap(bm) => bm.rows(),
+            Repr::BitmapNf4(snf) => snf.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match &self.repr {
+            Repr::Dense(t) => t.cols(),
+            Repr::Bitmap(bm) => bm.cols(),
+            Repr::BitmapNf4(snf) => snf.cols(),
+        }
+    }
+
+    /// Materialize the full dense matrix (reference paths and merges only
+    /// — never on the serving hot path).
+    pub fn decode(&self) -> Tensor {
+        match &self.repr {
+            Repr::Dense(t) => t.clone(),
+            Repr::Bitmap(bm) => bm.decode(),
+            Repr::BitmapNf4(snf) => snf.decode(),
+        }
+    }
+
+    /// Decode rows `[r0, r1)` into `out` (row-major, `(r1-r0) × cols`) —
+    /// the pipeline decode stage's unit of work, uniform across formats.
+    pub fn decode_rows_into(&self, r0: usize, r1: usize, out: &mut [f32]) {
+        match &self.repr {
+            Repr::Dense(t) => {
+                let cols = t.cols();
+                out[..(r1 - r0) * cols].copy_from_slice(&t.data()[r0 * cols..r1 * cols]);
+            }
+            Repr::Bitmap(bm) => bm.decode_rows_into(r0, r1, out),
+            Repr::BitmapNf4(snf) => snf.decode_rows_into(r0, r1, out),
+        }
+    }
+
+    /// Resident bytes of this representation (what the mem counters hold).
+    pub fn storage_bytes(&self) -> usize {
+        self.tracked as usize
+    }
+
+    /// Bytes of the equivalent dense f32 matrix.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows() * self.cols() * 4
+    }
+
+    /// Nonzero count (dense stores count exact nonzeros).
+    pub fn nnz(&self) -> usize {
+        match &self.repr {
+            Repr::Dense(t) => t.nnz(),
+            Repr::Bitmap(bm) => bm.nnz(),
+            Repr::BitmapNf4(snf) => snf.nnz(),
+        }
+    }
+}
+
+impl Clone for WeightStore {
+    fn clone(&self) -> WeightStore {
+        // Re-register through the constructors so counters stay balanced.
+        let repr = match &self.repr {
+            Repr::Dense(t) => Repr::Dense(t.clone()),
+            Repr::Bitmap(bm) => Repr::Bitmap(bm.clone()),
+            Repr::BitmapNf4(snf) => Repr::BitmapNf4(snf.clone()),
+        };
+        Self::track(repr)
+    }
+}
+
+impl PartialEq for WeightStore {
+    fn eq(&self, other: &WeightStore) -> bool {
+        self.repr == other.repr
+    }
+}
+
+impl Drop for WeightStore {
+    fn drop(&mut self) {
+        match &self.repr {
+            Repr::Dense(_) => mem::track_dense_weight_bytes(-self.tracked),
+            Repr::Bitmap(_) | Repr::BitmapNf4(_) => {
+                mem::track_compressed_weight_bytes(-self.tracked)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::prune_global;
+    use crate::util::rng::Rng;
+
+    fn sparse_tensor(seed: u64, r: usize, c: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor::randn(&[r, c], 1.0, &mut rng);
+        prune_global(&mut [&mut t], 0.5);
+        t
+    }
+
+    #[test]
+    fn formats_parse_and_roundtrip_names() {
+        for fmt in [WeightFormat::F32, WeightFormat::Bitmap, WeightFormat::Nf4] {
+            assert_eq!(WeightFormat::parse(fmt.name()), Some(fmt));
+        }
+        assert_eq!(WeightFormat::parse("dense"), Some(WeightFormat::F32));
+        assert_eq!(WeightFormat::parse("NF4"), Some(WeightFormat::Nf4));
+        assert_eq!(WeightFormat::parse("nope"), None);
+    }
+
+    #[test]
+    fn dense_and_bitmap_decode_exactly() {
+        let t = sparse_tensor(900, 13, 37);
+        for fmt in [WeightFormat::F32, WeightFormat::Bitmap] {
+            let s = WeightStore::encode(&t, fmt);
+            assert_eq!(s.rows(), 13);
+            assert_eq!(s.cols(), 37);
+            assert_eq!(s.decode(), t, "{:?}", fmt);
+            assert_eq!(s.nnz(), t.nnz());
+        }
+    }
+
+    #[test]
+    fn nf4_decode_matches_matrix_decode() {
+        let t = sparse_tensor(901, 9, 70);
+        let s = WeightStore::encode(&t, WeightFormat::Nf4);
+        let oracle = SparseNf4Matrix::encode(&t, NF4_BLOCK).decode();
+        assert_eq!(s.decode(), oracle);
+    }
+
+    #[test]
+    fn decode_rows_matches_full_decode_across_formats() {
+        let t = sparse_tensor(902, 16, 41);
+        for fmt in [WeightFormat::F32, WeightFormat::Bitmap, WeightFormat::Nf4] {
+            let s = WeightStore::encode(&t, fmt);
+            let full = s.decode();
+            let mut buf = vec![f32::NAN; 5 * 41];
+            s.decode_rows_into(3, 8, &mut buf);
+            for k in 0..5 {
+                assert_eq!(&buf[k * 41..(k + 1) * 41], full.row(3 + k), "{:?}", fmt);
+            }
+        }
+    }
+
+    #[test]
+    fn mem_counters_balance_over_lifecycle() {
+        let d0 = mem::dense_weight_bytes();
+        let c0 = mem::compressed_weight_bytes();
+        let t = sparse_tensor(903, 32, 64);
+        {
+            let dense = WeightStore::encode(&t, WeightFormat::F32);
+            assert_eq!(mem::dense_weight_bytes() - d0, dense.storage_bytes() as i64);
+            assert_eq!(mem::compressed_weight_bytes(), c0);
+            let bm = WeightStore::encode(&t, WeightFormat::Bitmap);
+            let nf = WeightStore::encode(&t, WeightFormat::Nf4);
+            assert_eq!(
+                mem::compressed_weight_bytes() - c0,
+                (bm.storage_bytes() + nf.storage_bytes()) as i64
+            );
+            // Clones register too…
+            let extra = bm.clone();
+            assert_eq!(
+                mem::compressed_weight_bytes() - c0,
+                (bm.storage_bytes() + nf.storage_bytes() + extra.storage_bytes()) as i64
+            );
+        }
+        // …and everything unregisters on drop.
+        assert_eq!(mem::dense_weight_bytes(), d0);
+        assert_eq!(mem::compressed_weight_bytes(), c0);
+    }
+
+    #[test]
+    fn compressed_formats_are_smaller_than_dense() {
+        let t = sparse_tensor(904, 64, 128);
+        let dense = WeightStore::encode(&t, WeightFormat::F32);
+        let bm = WeightStore::encode(&t, WeightFormat::Bitmap);
+        let nf = WeightStore::encode(&t, WeightFormat::Nf4);
+        assert!(bm.storage_bytes() < dense.storage_bytes());
+        assert!(nf.storage_bytes() < bm.storage_bytes());
+        assert_eq!(dense.storage_bytes(), dense.dense_bytes());
+    }
+}

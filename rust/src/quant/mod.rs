@@ -3,4 +3,4 @@
 
 pub mod nf4;
 
-pub use nf4::{Nf4Matrix, NF4_CODEBOOK};
+pub use nf4::{Nf4Matrix, SparseNf4Matrix, NF4_CODEBOOK};

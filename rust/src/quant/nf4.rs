@@ -5,6 +5,7 @@
 //! QSALR (paper Table 6) composes this with a 20% static sparsity mask:
 //! the *kept* values are NF4-quantized, the mask stays a bitmap.
 
+use crate::sparse::BitmapMatrix;
 use crate::tensor::Tensor;
 
 /// The standard NF4 codebook (QLoRA, Dettmers et al. 2023): 16 values in
@@ -182,6 +183,226 @@ impl Nf4Matrix {
     }
 }
 
+/// Bitmap sparsity pattern + NF4-quantized nonzero stream: the QSALR
+/// compressed form (paper Table 6). The mask is the same byte-blocked
+/// bitmap as [`BitmapMatrix`]; the kept values are NF4-quantized as one
+/// `1 × max(nnz, 1)` tensor, so a value's block scale depends on its
+/// *rank in the nonzero stream*, not its matrix position.
+///
+/// [`SparseNf4Matrix::value`] is the single dequantization rule: every
+/// consumer (full decode, per-row pipeline decode, the fused GEMM pack)
+/// computes `NF4_CODEBOOK[code] * scale` through it, which is what makes
+/// the fused kernel path bitwise identical to dequantize-then-GEMM.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseNf4Matrix {
+    rows: usize,
+    cols: usize,
+    /// `ceil(cols/8)` mask bytes per row, row-major (BitmapMatrix layout).
+    masks: Vec<u8>,
+    /// Per-row offsets into the nonzero stream (len = rows + 1).
+    row_offsets: Vec<u32>,
+    nnz: usize,
+    /// NF4 codes + scales over the nonzero stream (shape 1 × max(nnz,1)).
+    values: Nf4Matrix,
+}
+
+impl SparseNf4Matrix {
+    /// Encode a dense matrix: exact zeros become mask holes, kept values
+    /// are NF4-quantized with the given block size.
+    pub fn encode(t: &Tensor, block: usize) -> SparseNf4Matrix {
+        Self::from_bitmap(&BitmapMatrix::encode(t), block)
+    }
+
+    /// Re-quantize an already-bitmap-encoded matrix. The kept values are
+    /// quantized as a `1 × max(nnz, 1)` tensor (a zero placeholder when
+    /// the matrix is empty, so the NF4 payload is never zero-length).
+    pub fn from_bitmap(bm: &BitmapMatrix, block: usize) -> SparseNf4Matrix {
+        let mut kept = bm.values().to_vec();
+        if kept.is_empty() {
+            kept.push(0.0);
+        }
+        let len = kept.len();
+        let values = Nf4Matrix::quantize(&Tensor::from_vec(&[1, len], kept), block);
+        SparseNf4Matrix {
+            rows: bm.rows(),
+            cols: bm.cols(),
+            masks: bm.masks().to_vec(),
+            row_offsets: bm.row_offsets().to_vec(),
+            nnz: bm.nnz(),
+            values,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Bytes per row of bitmap.
+    pub fn bytes_per_row(&self) -> usize {
+        self.cols.div_ceil(8)
+    }
+
+    pub fn masks(&self) -> &[u8] {
+        &self.masks
+    }
+
+    pub fn row_offsets(&self) -> &[u32] {
+        &self.row_offsets
+    }
+
+    /// Dequantize the `voff`-th nonzero of the stream. One LUT lookup and
+    /// one multiply — the inlined per-element decode the fused GEMM pack
+    /// and the pipelined row decode both go through.
+    #[inline]
+    pub fn value(&self, voff: usize) -> f32 {
+        let byte = self.values.codes[voff / 2];
+        let code = if voff % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        NF4_CODEBOOK[code as usize] * self.values.scales[voff / self.values.block]
+    }
+
+    /// Decode one row into a caller-provided buffer of length `cols`,
+    /// word-at-a-time like [`BitmapMatrix::decode_row_into`], but scattering
+    /// LUT-dequantized values instead of stored f32s.
+    pub fn decode_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert!(out.len() >= self.cols);
+        let bpr = self.bytes_per_row();
+        let mut voff = self.row_offsets[i] as usize;
+        let row_masks = &self.masks[i * bpr..(i + 1) * bpr];
+        let words = self.cols / 64;
+        for wi in 0..words {
+            let mbytes: [u8; 8] = row_masks[wi * 8..wi * 8 + 8].try_into().unwrap();
+            let mut m = u64::from_le_bytes(mbytes);
+            let seg = &mut out[wi * 64..wi * 64 + 64];
+            seg.fill(0.0);
+            while m != 0 {
+                let t = m.trailing_zeros() as usize;
+                seg[t] = self.value(voff);
+                voff += 1;
+                m &= m - 1;
+            }
+        }
+        // Byte tail for the remaining < 64 columns.
+        for b in words * 8..bpr {
+            let base = b * 8;
+            let lanes = (self.cols - base).min(8);
+            out[base..base + lanes].fill(0.0);
+            let mut m = row_masks[b];
+            while m != 0 {
+                let t = m.trailing_zeros() as usize;
+                out[base + t] = self.value(voff);
+                voff += 1;
+                m &= m - 1;
+            }
+        }
+    }
+
+    /// Decode a contiguous block of rows `[r0, r1)` into `out` (row-major,
+    /// `(r1-r0) × cols`) — the pipeline's decode-stage unit of work.
+    pub fn decode_rows_into(&self, r0: usize, r1: usize, out: &mut [f32]) {
+        let cols = self.cols;
+        for (k, i) in (r0..r1).enumerate() {
+            self.decode_row_into(i, &mut out[k * cols..(k + 1) * cols]);
+        }
+    }
+
+    /// Decode the full matrix to dense (dequantized) f32.
+    pub fn decode(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        let cols = self.cols;
+        for i in 0..self.rows {
+            self.decode_row_into(i, &mut out.data_mut()[i * cols..(i + 1) * cols]);
+        }
+        out
+    }
+
+    /// Serialized size: length prefixes + pattern + NF4 payload.
+    pub fn storage_bytes(&self) -> usize {
+        8 + 16 + self.masks.len() + self.values.storage_bytes()
+    }
+
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_bytes() as f64 / self.storage_bytes() as f64
+    }
+
+    /// Serialize: `[u32 pattern_len][u32 nf4_len][pattern][nf4]` — the
+    /// exact `Encoding::SparseNf4` tensor payload of the model file format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut pattern = Vec::with_capacity(16 + self.masks.len());
+        pattern.extend_from_slice(&(self.rows as u32).to_le_bytes());
+        pattern.extend_from_slice(&(self.cols as u32).to_le_bytes());
+        pattern.extend_from_slice(&(self.nnz as u32).to_le_bytes());
+        pattern.extend_from_slice(&0xB17Bu32.to_le_bytes()); // pattern magic
+        pattern.extend_from_slice(&self.masks);
+        let nf = self.values.to_bytes();
+        let mut out = Vec::with_capacity(8 + pattern.len() + nf.len());
+        out.extend_from_slice(&(pattern.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(nf.len() as u32).to_le_bytes());
+        out.extend_from_slice(&pattern);
+        out.extend_from_slice(&nf);
+        out
+    }
+
+    /// Deserialize from `to_bytes` output.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<SparseNf4Matrix> {
+        use anyhow::{bail, ensure};
+        ensure!(bytes.len() >= 8, "sparse-nf4: truncated length prefix");
+        let plen = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+        let nlen = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        ensure!(bytes.len() == 8 + plen + nlen, "sparse-nf4: bad payload size");
+        let pattern = &bytes[8..8 + plen];
+        ensure!(pattern.len() >= 16, "sparse-nf4: truncated pattern header");
+        let rows = u32::from_le_bytes(pattern[0..4].try_into()?) as usize;
+        let cols = u32::from_le_bytes(pattern[4..8].try_into()?) as usize;
+        let nnz = u32::from_le_bytes(pattern[8..12].try_into()?) as usize;
+        let magic = u32::from_le_bytes(pattern[12..16].try_into()?);
+        if magic != 0xB17B {
+            bail!("sparse-nf4: bad pattern magic {magic:#x}");
+        }
+        let bpr = cols.div_ceil(8);
+        ensure!(pattern.len() == 16 + rows * bpr, "sparse-nf4: bad pattern size");
+        let masks = pattern[16..].to_vec();
+        let mut row_offsets = Vec::with_capacity(rows + 1);
+        row_offsets.push(0u32);
+        let mut acc = 0u32;
+        for i in 0..rows {
+            for b in 0..bpr {
+                acc += masks[i * bpr + b].count_ones();
+            }
+            row_offsets.push(acc);
+        }
+        ensure!(acc as usize == nnz, "sparse-nf4: popcount != nnz");
+        let values = Nf4Matrix::from_bytes(&bytes[8 + plen..])?;
+        ensure!(
+            values.rows * values.cols == nnz.max(1),
+            "sparse-nf4: value stream length mismatch"
+        );
+        Ok(SparseNf4Matrix {
+            rows,
+            cols,
+            masks,
+            row_offsets,
+            nnz,
+            values,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +464,101 @@ mod tests {
         let back = Nf4Matrix::from_bytes(&q.to_bytes()).unwrap();
         assert_eq!(back, q);
         assert_eq!(back.dequantize(), q.dequantize());
+    }
+
+    fn random_sparse(rng: &mut Rng, r: usize, c: usize, p: f64) -> Tensor {
+        let mut t = Tensor::randn(&[r, c], 1.0, rng);
+        crate::prune::prune_global(&mut [&mut t], p);
+        t
+    }
+
+    #[test]
+    fn sparse_nf4_decode_matches_pattern_plus_dequantize_oracle() {
+        // The fused representation must reproduce exactly what the
+        // two-step serialize path produces: quantize the kept values as a
+        // 1×nnz tensor, dequantize, scatter through the bitmap pattern.
+        let mut rng = Rng::new(110);
+        for &(r, c, p) in &[(16usize, 64usize, 0.5), (7, 13, 0.3), (3, 130, 0.9), (1, 1, 1.0)] {
+            let t = random_sparse(&mut rng, r, c, p);
+            let bm = BitmapMatrix::encode(&t);
+            let snf = SparseNf4Matrix::from_bitmap(&bm, 64);
+            let mut kept = bm.values().to_vec();
+            if kept.is_empty() {
+                kept.push(0.0);
+            }
+            let klen = kept.len();
+            let q = Nf4Matrix::quantize(&Tensor::from_vec(&[1, klen], kept), 64);
+            let mut dq = q.dequantize().data().to_vec();
+            dq.truncate(bm.nnz());
+            let oracle = BitmapMatrix::from_pattern_and_values(&bm.pattern_bytes(), dq)
+                .unwrap()
+                .decode();
+            let got = snf.decode();
+            assert_eq!(got.data().len(), oracle.data().len());
+            for (a, b) in got.data().iter().zip(oracle.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "({r},{c},{p})");
+            }
+            // And the inline accessor agrees with the decoded stream.
+            for v in 0..bm.nnz() {
+                assert_eq!(snf.value(v).to_bits(), q.dequantize().data()[v].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_nf4_serialization_roundtrip() {
+        let mut rng = Rng::new(111);
+        let t = random_sparse(&mut rng, 19, 41, 0.5);
+        let snf = SparseNf4Matrix::encode(&t, 64);
+        let bytes = snf.to_bytes();
+        assert_eq!(bytes.len(), snf.storage_bytes());
+        let back = SparseNf4Matrix::from_bytes(&bytes).unwrap();
+        assert_eq!(back, snf);
+        assert!(SparseNf4Matrix::from_bytes(&bytes[..6]).is_err());
+        let mut corrupt = bytes.clone();
+        corrupt[8 + 12] = 0xFF; // pattern magic
+        assert!(SparseNf4Matrix::from_bytes(&corrupt).is_err());
+    }
+
+    #[test]
+    fn sparse_nf4_empty_matrix_roundtrips() {
+        let t = Tensor::zeros(&[5, 9]);
+        let snf = SparseNf4Matrix::encode(&t, 64);
+        assert_eq!(snf.nnz(), 0);
+        assert_eq!(snf.decode(), t);
+        let back = SparseNf4Matrix::from_bytes(&snf.to_bytes()).unwrap();
+        assert_eq!(back, snf);
+    }
+
+    #[test]
+    fn sparse_nf4_worst_case_error_is_bounded() {
+        // Per-entry worst case: half the widest codebook gap times the
+        // absmax of the value's 64-wide *stream* block (zeros are exact —
+        // they are mask holes, never quantized).
+        let mut rng = Rng::new(112);
+        let t = random_sparse(&mut rng, 24, 96, 0.5);
+        let bm = BitmapMatrix::encode(&t);
+        let snf = SparseNf4Matrix::from_bitmap(&bm, 64);
+        let dq = snf.decode();
+        let max_gap = NF4_CODEBOOK
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .fold(0.0f32, f32::max);
+        let kept = bm.values();
+        for (v, &x) in kept.iter().enumerate() {
+            let blk = &kept[v / 64 * 64..((v / 64 + 1) * 64).min(kept.len())];
+            let scale = blk.iter().fold(0.0f32, |m, &y| m.max(y.abs()));
+            let err = (snf.value(v) - x).abs();
+            assert!(
+                err <= scale * max_gap / 2.0 + 1e-6,
+                "voff={v} err={err} scale={scale}"
+            );
+        }
+        for idx in 0..t.len() {
+            if t.data()[idx] == 0.0 {
+                assert_eq!(dq.data()[idx], 0.0, "hole {idx} must decode to exact zero");
+            }
+        }
     }
 
     #[test]

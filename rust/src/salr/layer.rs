@@ -1,16 +1,20 @@
-//! A deployed SALR linear layer: bitmap-sparse base weight + concatenated
-//! low-rank adapters, executed through the two-stage pipeline.
+//! A deployed SALR linear layer: compressed base weight (bitmap-sparse or
+//! bitmap+NF4, held as a [`WeightStore`] — never a resident dense matrix
+//! in compressed modes) + concatenated low-rank adapters, executed through
+//! the compressed-weight GEMM tiers.
 
 use crate::gemm::fused::AdapterStack;
 use crate::gemm::pipeline::{salr_gemm_pipelined_pool, PipelineConfig};
-use crate::sparse::BitmapMatrix;
+use crate::model::{WeightStore, WeightView};
 use crate::tensor::Tensor;
 
 /// One adapted linear layer in deployment form.
 #[derive(Clone, Debug)]
 pub struct SalrLayer {
-    /// Bitmap-encoded pruned base weight `Ŵ[d_in, d_out]`.
-    pub w_hat: BitmapMatrix,
+    /// Pruned base weight `Ŵ[d_in, d_out]` in its resident (compressed)
+    /// form. GEMMs decode it per tile/panel inside the kernels; no path
+    /// through this layer materializes a persistent dense copy.
+    pub base: WeightStore,
     /// Concatenated adapters: LoRA (scaled) ‖ residual.
     pub adapters: AdapterStack,
     pub d_in: usize,
@@ -21,13 +25,13 @@ impl SalrLayer {
     /// Assemble from components. The LoRA scaling `s = α/r` is folded into
     /// `A` so the fused GEMM needs no per-adapter scalars.
     pub fn new(
-        w_hat: BitmapMatrix,
+        base: WeightStore,
         lora_a: &Tensor,
         lora_b: &Tensor,
         scaling: f32,
         residual: Option<(&Tensor, &Tensor)>,
     ) -> SalrLayer {
-        let (d_in, d_out) = (w_hat.rows(), w_hat.cols());
+        let (d_in, d_out) = (base.rows(), base.cols());
         let mut a_scaled = lora_a.clone();
         a_scaled.scale(scaling);
         let adapters = match residual {
@@ -35,10 +39,28 @@ impl SalrLayer {
             None => AdapterStack::concat(&[(&a_scaled, lora_b)]),
         };
         SalrLayer {
-            w_hat,
+            base,
             adapters,
             d_in,
             d_out,
+        }
+    }
+
+    /// `out = x @ Ŵ` for decode-sized batches, dispatching on the resident
+    /// representation: both compressed forms take the zero-skipping direct
+    /// sparse kernel (walking masks, dequantizing NF4 codes per element);
+    /// a dense store takes the packed dense GEMM.
+    fn base_direct(&self, x: &[f32], m: usize, out: &mut [f32], pool: &crate::util::pool::WorkerPool) {
+        match self.base.view() {
+            WeightView::Bitmap(bm) => {
+                crate::gemm::sparse::sparse_gemm_direct_pool(x, bm, out, m, pool)
+            }
+            WeightView::BitmapNf4(snf) => {
+                crate::gemm::sparse::sparse_gemm_direct_pool(x, snf, out, m, pool)
+            }
+            WeightView::Dense(t) => {
+                crate::gemm::dense::gemm_f32_pool(x, t.data(), out, m, self.d_in, self.d_out, pool)
+            }
         }
     }
 
@@ -72,12 +94,12 @@ impl SalrLayer {
     ) {
         const DIRECT_M_MAX: usize = 32;
         if m <= DIRECT_M_MAX {
-            crate::gemm::sparse::bitmap_gemm_direct_pool(x, &self.w_hat, out, m, pool);
+            self.base_direct(x, m, out, pool);
             self.adapters.apply_fused_acc_pool(x, m, out, pool);
         } else {
             salr_gemm_pipelined_pool(
                 x,
-                &self.w_hat,
+                &self.base,
                 self.adapters.a_cat.data(),
                 self.adapters.b_cat.data(),
                 self.adapters.total_rank(),
@@ -98,8 +120,9 @@ impl SalrLayer {
     /// truncated-SVD residual correction), and the exact greedy verify pass
     /// through [`SalrLayer::forward`] restores precisely what was dropped.
     /// Draft batches are decode-sized (`m = spec_k ≤ 32` in practice) so
-    /// small m takes the zero-skipping direct kernel; larger m falls back
-    /// to the sequential sparse GEMM — never the pipelined path, whose
+    /// small m takes the zero-skipping direct kernel; larger m takes the
+    /// fused pack-decode blocked GEMM (per-tile decode inside the B pack —
+    /// no dense scratch copy of Ŵ) — never the pipelined path, whose
     /// decode-amortization setup is wasted on adapter-free work.
     pub fn forward_base_only(
         &self,
@@ -110,15 +133,15 @@ impl SalrLayer {
     ) {
         const DIRECT_M_MAX: usize = 32;
         if m <= DIRECT_M_MAX {
-            crate::gemm::sparse::bitmap_gemm_direct_pool(x, &self.w_hat, out, m, pool);
+            self.base_direct(x, m, out, pool);
         } else {
-            crate::gemm::sparse::bitmap_gemm_sequential_pool(x, &self.w_hat, out, m, pool);
+            crate::gemm::dense::gemm_src_pool(x, &self.base, out, m, pool);
         }
     }
 
     /// Sequential (non-pipelined) reference forward, for tests.
     pub fn forward_reference(&self, x: &Tensor) -> Tensor {
-        let dense = self.w_hat.decode();
+        let dense = self.base.decode();
         let base = crate::tensor::matmul(x, &dense);
         let mut out = base.into_vec();
         self.adapters.apply_fused_acc(x.data(), x.rows(), &mut out);
@@ -128,7 +151,7 @@ impl SalrLayer {
     /// Merge everything into one dense matrix (for eval through the HLO
     /// path or for measuring the effective update).
     pub fn merge_dense(&self) -> Tensor {
-        let dense = self.w_hat.decode();
+        let dense = self.base.decode();
         let update = crate::tensor::matmul(
             &self.adapters.a_cat,
             &self.adapters.b_cat,
@@ -136,9 +159,9 @@ impl SalrLayer {
         crate::tensor::add(&dense, &update)
     }
 
-    /// Deployment storage: bitmap + values + adapter factors.
+    /// Deployment storage: compressed base + adapter factors.
     pub fn storage_bytes(&self) -> usize {
-        self.w_hat.storage_bytes()
+        self.base.storage_bytes()
             + (self.adapters.a_cat.len() + self.adapters.b_cat.len()) * 4
     }
 
@@ -151,18 +174,30 @@ impl SalrLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::WeightFormat;
     use crate::prune::prune_global;
     use crate::tensor::{matmul, max_abs_diff};
     use crate::util::rng::Rng;
 
-    fn make_layer(rng: &mut Rng, d_in: usize, d_out: usize, r: usize, rr: usize) -> SalrLayer {
+    fn make_layer_fmt(
+        rng: &mut Rng,
+        d_in: usize,
+        d_out: usize,
+        r: usize,
+        rr: usize,
+        fmt: WeightFormat,
+    ) -> SalrLayer {
         let mut w = Tensor::randn(&[d_in, d_out], 1.0, rng);
         prune_global(&mut [&mut w], 0.5);
         let la = Tensor::randn(&[d_in, r], 0.1, rng);
         let lb = Tensor::randn(&[r, d_out], 0.1, rng);
         let ra = Tensor::randn(&[d_in, rr], 0.1, rng);
         let rb = Tensor::randn(&[rr, d_out], 0.1, rng);
-        SalrLayer::new(BitmapMatrix::encode(&w), &la, &lb, 2.0, Some((&ra, &rb)))
+        SalrLayer::new(WeightStore::encode(&w, fmt), &la, &lb, 2.0, Some((&ra, &rb)))
+    }
+
+    fn make_layer(rng: &mut Rng, d_in: usize, d_out: usize, r: usize, rr: usize) -> SalrLayer {
+        make_layer_fmt(rng, d_in, d_out, r, rr, WeightFormat::Bitmap)
     }
 
     #[test]
@@ -226,7 +261,7 @@ mod tests {
         let mut rng = Rng::new(306);
         let layer = make_layer(&mut rng, 96, 64, 8, 16);
         let pool = crate::util::pool::WorkerPool::new(2);
-        let dense = layer.w_hat.decode();
+        let dense = layer.base.decode();
         for m in [3usize, 40] {
             let x = Tensor::randn(&[m, 96], 1.0, &mut rng);
             let want = matmul(&x, &dense);
@@ -249,7 +284,13 @@ mod tests {
         prune_global(&mut [&mut w], 0.5);
         let la = Tensor::randn(&[32, 4], 0.2, &mut rng);
         let lb = Tensor::randn(&[4, 24], 0.2, &mut rng);
-        let layer = SalrLayer::new(BitmapMatrix::encode(&w), &la, &lb, 3.0, None);
+        let layer = SalrLayer::new(
+            WeightStore::encode(&w, WeightFormat::Bitmap),
+            &la,
+            &lb,
+            3.0,
+            None,
+        );
         let x = Tensor::randn(&[2, 32], 1.0, &mut rng);
         let want = crate::tensor::add(&matmul(&x, &w), &{
             let mut u = matmul(&matmul(&x, &la), &lb);
@@ -278,5 +319,36 @@ mod tests {
         // ~0.53x dense for the bitmap + small adapters.
         let ratio = layer.storage_bytes() as f64 / layer.dense_bytes() as f64;
         assert!(ratio < 0.75, "ratio={ratio}");
+        // NF4 shrinks the value payload 8x on top of the bitmap.
+        let mut rng = Rng::new(303);
+        let nf4 = make_layer_fmt(&mut rng, 256, 256, 8, 16, WeightFormat::Nf4);
+        assert!(nf4.storage_bytes() < layer.storage_bytes());
+    }
+
+    #[test]
+    fn every_format_forwards_close_to_its_own_reference() {
+        // Each resident format must agree with its own decode()-based
+        // reference on both batch tiers (direct kernel at m=4, pipelined
+        // at m=40) — the quantization error lives in the stored values,
+        // never in the kernels.
+        let mut rng = Rng::new(307);
+        for fmt in [WeightFormat::F32, WeightFormat::Bitmap, WeightFormat::Nf4] {
+            let mut lrng = Rng::new(308);
+            let layer = make_layer_fmt(&mut lrng, 96, 64, 8, 16, fmt);
+            assert_eq!(layer.base.format(), fmt);
+            let pool = crate::util::pool::WorkerPool::new(2);
+            for m in [4usize, 40] {
+                let x = Tensor::randn(&[m, 96], 1.0, &mut rng);
+                let want = layer.forward_reference(&x);
+                let mut got = vec![0.0f32; m * 64];
+                layer.forward(x.data(), m, &mut got, PipelineConfig::default(), &pool);
+                let got = Tensor::from_vec(&[m, 64], got);
+                assert!(
+                    max_abs_diff(&got, &want) < 1e-2,
+                    "{fmt:?} m={m} diff={}",
+                    max_abs_diff(&got, &want)
+                );
+            }
+        }
     }
 }

@@ -1,5 +1,45 @@
-//! Process memory accounting from `/proc` (Linux), used by the Table-3
-//! fine-tuning-memory experiment.
+//! Process memory accounting: `/proc` RSS (Linux, the Table-3
+//! fine-tuning-memory experiment) plus exact resident-weight-byte
+//! counters maintained by [`crate::model::WeightStore`].
+//!
+//! The counters split resident base-weight bytes by representation —
+//! dense f32 vs compressed (bitmap / bitmap+NF4) — so tests can assert
+//! the tentpole invariant directly: constructing an engine in a
+//! compressed weight format must not leave any persistent dense f32
+//! copy of Ŵ behind (`dense_weight_bytes()` delta stays 0).
+
+use std::cell::Cell;
+
+thread_local! {
+    static DENSE_WEIGHT_BYTES: Cell<i64> = const { Cell::new(0) };
+    static COMPRESSED_WEIGHT_BYTES: Cell<i64> = const { Cell::new(0) };
+}
+
+/// Net bytes of *dense f32* base-weight stores constructed (minus
+/// dropped) **on this thread**. Per-thread, like
+/// [`crate::util::arena::thread_allocated_bytes`], so test assertions
+/// stay exact under parallel test execution: an engine built on the
+/// calling thread registers all of its stores here.
+pub fn dense_weight_bytes() -> i64 {
+    DENSE_WEIGHT_BYTES.with(|c| c.get())
+}
+
+/// Net bytes of *compressed* base-weight stores (bitmap masks + value
+/// payloads, NF4 codes + scales) constructed on this thread.
+pub fn compressed_weight_bytes() -> i64 {
+    COMPRESSED_WEIGHT_BYTES.with(|c| c.get())
+}
+
+/// Account `delta` resident dense-weight bytes (negative on drop).
+/// Called by `WeightStore` constructors/Drop — not for general use.
+pub fn track_dense_weight_bytes(delta: i64) {
+    DENSE_WEIGHT_BYTES.with(|c| c.set(c.get() + delta));
+}
+
+/// Account `delta` resident compressed-weight bytes (negative on drop).
+pub fn track_compressed_weight_bytes(delta: i64) {
+    COMPRESSED_WEIGHT_BYTES.with(|c| c.set(c.get() + delta));
+}
 
 /// Current resident set size in bytes, or 0 if unavailable.
 pub fn rss_bytes() -> u64 {
@@ -47,6 +87,28 @@ mod tests {
         // We're always on linux in this environment.
         assert!(rss_bytes() > 0);
         assert!(peak_rss_bytes() >= rss_bytes() / 2);
+    }
+
+    #[test]
+    fn weight_counters_are_exact_per_thread() {
+        let d0 = dense_weight_bytes();
+        let c0 = compressed_weight_bytes();
+        track_dense_weight_bytes(1024);
+        track_compressed_weight_bytes(512);
+        assert_eq!(dense_weight_bytes() - d0, 1024);
+        assert_eq!(compressed_weight_bytes() - c0, 512);
+        track_dense_weight_bytes(-1024);
+        track_compressed_weight_bytes(-512);
+        assert_eq!(dense_weight_bytes(), d0);
+        assert_eq!(compressed_weight_bytes(), c0);
+        // And another thread's counter is independent of ours.
+        std::thread::spawn(|| {
+            track_dense_weight_bytes(1 << 30);
+            assert_eq!(dense_weight_bytes(), 1 << 30);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(dense_weight_bytes(), d0);
     }
 
     #[test]

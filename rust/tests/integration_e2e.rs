@@ -4,9 +4,9 @@
 //! multi-worker pipeline across thread counts.
 
 use salr::gemm::dense::gemm_f32_pool;
-use salr::gemm::pipeline::{bitmap_gemm_pipelined, salr_gemm_pipelined, PipelineConfig};
+use salr::gemm::pipeline::{gemm_pipelined, salr_gemm_pipelined, PipelineConfig};
 use salr::infer::{Backend, Engine, EngineWeights};
-use salr::model::ParamStore;
+use salr::model::{ParamStore, WeightFormat};
 use salr::prune::prune_global;
 use salr::runtime::ModelCfg;
 use salr::salr::build_salr;
@@ -54,9 +54,11 @@ fn salr_pipeline_matches_dense_merged_end_to_end() {
         Backend::Dense,
     );
     // Deployment: bitmap-encoded base + factored adapters through the
-    // two-stage pipeline.
+    // two-stage pipeline. Pinned to the exact bitmap format — this test
+    // compares numerically against the dense merge, which the lossy nf4
+    // leg of the CI matrix (SALR_WEIGHT_FORMAT=nf4) would not satisfy.
     let sparse = Engine::new(
-        EngineWeights::salr(&cfg, &build.params, &adapters, None),
+        EngineWeights::salr_with_format(&cfg, &build.params, &adapters, None, WeightFormat::Bitmap),
         Backend::BitmapPipelined(PipelineConfig::default()),
     );
     let tokens: Vec<i32> = vec![3, 11, 19, 27, 35, 43];
@@ -131,12 +133,12 @@ fn pipelined_gemm_correct_and_deterministic_across_threads() {
             num_threads: t,
         };
         let mut c = vec![0.0f32; m * n];
-        bitmap_gemm_pipelined(x.data(), &bm, &mut c, m, cfg);
+        gemm_pipelined(x.data(), &bm, &mut c, m, cfg);
         let ct = Tensor::from_vec(&[m, n], c.clone());
         assert!(max_abs_diff(&ct, &want_base) < 1e-3, "bitmap t={t}");
         for _ in 0..5 {
             let mut c2 = vec![0.0f32; m * n];
-            bitmap_gemm_pipelined(x.data(), &bm, &mut c2, m, cfg);
+            gemm_pipelined(x.data(), &bm, &mut c2, m, cfg);
             assert_eq!(c2, c, "bitmap t={t} nondeterministic");
         }
         match &base_ref {

@@ -5,7 +5,7 @@
 
 use salr::data::tokenize;
 use salr::infer::{Backend, Engine, EngineWeights};
-use salr::model::ParamStore;
+use salr::model::{ParamStore, WeightFormat};
 use salr::runtime::{Runtime, Value};
 use salr::salr::build_salr;
 use salr::sparse::BitmapMatrix;
@@ -225,8 +225,10 @@ fn salr_eval_artifact_matches_native_salr_engine() {
     }
     let hlo = exec.run(&bindings).unwrap().remove(0);
 
+    // Pinned to the exact bitmap format: the HLO reference runs dense
+    // math, so the lossy nf4 CI leg would not meet the tolerance.
     let engine = Engine::new(
-        EngineWeights::salr(&cfg, &build.params, &adapters, None),
+        EngineWeights::salr_with_format(&cfg, &build.params, &adapters, None, WeightFormat::Bitmap),
         Backend::BitmapPipelined(Default::default()),
     );
     let seq = &tokens[..cfg.max_seq_len];
