@@ -10,21 +10,31 @@
 //! prefill work is visible, and a **speculative workload** (repeat
 //! traffic, cache on) with `--spec-decode` off / radix / self,
 //! reporting tokens/s plus `drafted_tokens` / `accepted_tokens` /
-//! `spec_rollbacks`. Set `SALR_BENCH_JSON=path.json` to emit
-//! machine-readable results; env knobs `SALR_BENCH_CLIENTS` (default 16),
-//! `SALR_BENCH_REQS` (default 4 per client) and `SALR_BENCH_CHUNK`
-//! (prefill chunk, default 64, 0 = whole-prompt) scale the load.
+//! `spec_rollbacks` — and finally a **router workload** (the same load
+//! pushed over TCP through the router tier fronting two real engine
+//! backends), once healthy and once with one backend killed mid-run by
+//! an injected `backend_down` fault, reporting tokens/s plus the
+//! routing counters (`hash_routed` / `spilled` / `failovers`) so the
+//! cost of degraded operation is a number, not a guess. Set
+//! `SALR_BENCH_JSON=path.json` to emit machine-readable results; env
+//! knobs `SALR_BENCH_CLIENTS` (default 16), `SALR_BENCH_REQS` (default
+//! 4 per client) and `SALR_BENCH_CHUNK` (prefill chunk, default 64,
+//! 0 = whole-prompt) scale the load.
 //!
 //! Run: `cargo bench --bench bench_serve`
 
 use salr::infer::{Backend, Engine, EngineWeights, SpecMode};
 use salr::model::ParamStore;
 use salr::runtime::ModelCfg;
-use salr::server::{spawn_engine_workers, BatchPolicy, Batcher, Request};
+use salr::server::{
+    serve_on, serve_router_on, spawn_engine_workers, BatchPolicy, Batcher, Client, Request,
+    Router, RouterPolicy,
+};
+use salr::util::fault::FaultPlan;
 use salr::util::json::Json;
 use salr::util::rng::Rng;
 use std::sync::atomic::Ordering;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
 
@@ -230,6 +240,147 @@ fn run_speculative_load(
     res
 }
 
+struct RouterResult {
+    degraded: bool,
+    wall_s: f64,
+    completed: u64,
+    lost: u64,
+    routed: u64,
+    hash_routed: u64,
+    spilled: u64,
+    failovers: u64,
+}
+
+/// One real TCP engine backend for the router workload (fault-free and
+/// env-insulated: router rows inject faults at the router, never here).
+fn start_router_backend(
+    template: &Engine,
+    chunk: usize,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        engine_workers: 1,
+        prefill_chunk: chunk,
+        kv_block_size: 8,
+        prefix_cache: false,
+        ..Default::default()
+    };
+    let batcher = Batcher::with_fault(policy, None);
+    let engine = template.fork();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        serve_on(engine, "127.0.0.1:0", batcher, Some(tx)).expect("router bench backend");
+    });
+    (rx.recv().expect("backend ready"), handle)
+}
+
+/// The router workload: the full load over TCP through the router tier
+/// fronting two single-worker engine backends. The degraded row kills
+/// backend 0 partway through with an injected `backend_down` fault
+/// (keyed on its delivered-frame counter, so the kill point scales with
+/// the load): unstarted requests fail over and complete, anything
+/// mid-stream gets the clean `backend lost` error, and the tokens/s
+/// delta prices the half-fleet + failover re-execution cost.
+fn run_router_load(
+    template: &Engine,
+    clients: usize,
+    reqs_per_client: usize,
+    degraded: bool,
+) -> RouterResult {
+    let chunk = env_usize("SALR_BENCH_CHUNK", 64);
+    let (a0, h0) = start_router_backend(template, chunk);
+    let (a1, h1) = start_router_backend(template, chunk);
+    let fault = if degraded {
+        let at = (clients * reqs_per_client / 4).max(2);
+        Some(FaultPlan::parse(&format!("backend_down:backend=0,reply={at}")).expect("bench fault"))
+    } else {
+        None
+    };
+    let policy = RouterPolicy { heartbeat_ms: 20, ..RouterPolicy::default() };
+    let router = Router::with_fault(&[a0.to_string(), a1.to_string()], policy, fault);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let r = router.clone();
+    let router_handle = std::thread::spawn(move || {
+        serve_router_on(r, "127.0.0.1:0", Some(tx)).expect("router bench");
+    });
+    let ra = rx.recv().expect("router ready");
+    {
+        // Loading before the first heartbeat probe lands would measure
+        // `no healthy backend` rejections, not routing.
+        let mut probe = Client::connect(&ra.to_string()).unwrap();
+        let t0 = Instant::now();
+        loop {
+            let m = probe.metrics().unwrap();
+            let healthy = m
+                .get("backends")
+                .and_then(Json::as_arr)
+                .map(|bs| {
+                    bs.iter()
+                        .filter(|b| {
+                            b.get("backend_state").and_then(Json::as_str) == Some("healthy")
+                        })
+                        .count()
+                })
+                .unwrap_or(0);
+            if healthy == 2 {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(30), "backends never became healthy");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    let t0 = Instant::now();
+    let (mut completed, mut lost) = (0u64, 0u64);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = ra.to_string();
+                s.spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    let (mut ok, mut err) = (0u64, 0u64);
+                    for r in 0..reqs_per_client {
+                        let resp = client
+                            .generate(&format!("Q: {}+{}=? A: ", 10 + c % 10, 3 + r % 10), 16)
+                            .unwrap();
+                        if resp.get("error").is_some() {
+                            err += 1;
+                        } else {
+                            ok += 1;
+                        }
+                    }
+                    (ok, err)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (ok, err) = h.join().unwrap();
+            completed += ok;
+            lost += err;
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = router.metrics_json();
+    let counter = |k: &str| m.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let res = RouterResult {
+        degraded,
+        wall_s,
+        completed,
+        lost,
+        routed: counter("routed"),
+        hash_routed: counter("hash_routed"),
+        spilled: counter("spilled"),
+        failovers: counter("failovers"),
+    };
+    Client::connect(&ra.to_string()).unwrap().shutdown().unwrap();
+    router_handle.join().unwrap();
+    for (a, h) in [(a0, h0), (a1, h1)] {
+        Client::connect(&a.to_string()).unwrap().shutdown().unwrap();
+        h.join().unwrap();
+    }
+    res
+}
+
 fn run_load(template: &Engine, workers: usize, clients: usize, reqs_per_client: usize) -> RunResult {
     let policy = BatchPolicy {
         max_batch: 8,
@@ -339,8 +490,24 @@ fn main() {
         faults.accumulate(r.faults);
         spec_rows.push(r);
     }
+    println!("\n# router workload: {clients} clients x {reqs} reqs over TCP, 2 backends x 1 worker");
+    let mut router_rows = Vec::new();
+    for degraded in [false, true] {
+        let r = run_router_load(&template, clients, reqs, degraded);
+        println!(
+            "degraded={:<5} {:>8.1} tok/s  completed {:>4}  lost {:>3}  hash_routed {:>4}  spilled {:>4}  failovers {:>3}",
+            r.degraded,
+            (r.completed * 16) as f64 / r.wall_s,
+            r.completed,
+            r.lost,
+            r.hash_routed,
+            r.spilled,
+            r.failovers,
+        );
+        router_rows.push(r);
+    }
     println!(
-        "\n# failure counters (all runs): shed {}  cancelled {}  timeout {}  worker_restarts {}",
+        "\n# failure counters (all engine-local runs): shed {}  cancelled {}  timeout {}  worker_restarts {}",
         faults.shed, faults.cancelled, faults.timed_out, faults.worker_restarts
     );
 
@@ -379,6 +546,20 @@ fn main() {
                 .set("drafted_tokens", r.drafted)
                 .set("accepted_tokens", r.accepted)
                 .set("spec_rollbacks", r.rollbacks)
+                .set("wall_s", r.wall_s)
+        }));
+        result_rows.extend(router_rows.iter().map(|r| {
+            Json::obj()
+                .set("mode", "router")
+                .set("backends", 2usize)
+                .set("degraded", r.degraded)
+                .set("tokens_per_sec", (r.completed * 16) as f64 / r.wall_s)
+                .set("completed", r.completed)
+                .set("lost", r.lost)
+                .set("routed", r.routed)
+                .set("hash_routed", r.hash_routed)
+                .set("spilled", r.spilled)
+                .set("failovers", r.failovers)
                 .set("wall_s", r.wall_s)
         }));
         let results = Json::Arr(result_rows);

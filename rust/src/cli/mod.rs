@@ -97,6 +97,8 @@ COMMANDS:
   pretrain        pretrain the base model and cache it
   finetune        fine-tune one baseline (--baseline, --task, --sparsity)
   serve           start the inference server (--addr, --backend)
+  router          start the front-end router tier over N running
+                  `serve` backends (--backends host:port,host:port,...)
   compress        prune+encode a model, print size accounting
   info            print manifest + config summary
 
@@ -152,6 +154,38 @@ SERVE FLAGS:
                       to non-speculative decode in every mode
   --spec-k N          max draft tokens verified per sequence per decode
                       iteration (default 4)
+
+ROUTER FLAGS:
+  --backends LIST     comma-separated backend addresses (required); each
+                      is a running `salr serve` process
+  --addr HOST:PORT    router listen address (default 127.0.0.1:7400)
+  --heartbeat-ms T    health-probe + reconnect tick interval (default 200)
+  --miss-threshold M  consecutive unanswered probes before a backend is
+                      marked unhealthy and its connection torn down
+                      (default 3); it reintegrates after a probe succeeds
+  --spill-depth N     backend load (queue_depth + slots_in_use +
+                      router-side inflight) above which the hash owner is
+                      bypassed for the least-loaded healthy backend
+                      (default 8)
+  --hash-blocks N     leading KV blocks of the prompt fed to the
+                      consistent hash (default 2); prompts shorter than
+                      one block hash whole
+  --kv-block-size N   must match the backends' --kv-block-size so hash
+                      granularity aligns with prefix sharing (default 16)
+  --vnodes N          virtual ring nodes per backend (default 32)
+  --backoff-base-ms T first reconnect backoff, doubling per consecutive
+                      failure (default 50)
+  --backoff-max-ms T  reconnect backoff ceiling (default 2000)
+  --connect-timeout-ms T  backend dial timeout (default 1000)
+  --stream-frame-cap N    per-client reply-queue bound, as in serve
+
+The router speaks the same wire protocol as serve. Extra router
+commands: {\"cmd\":\"drain\",\"backend\":N} decommissions backend N without
+dropping a request; {\"cmd\":\"metrics\"} reports per-backend
+state/load/routing counters. A request whose backend dies before its
+first streamed token is retried once on another healthy backend
+(byte-identical: greedy decode is deterministic); mid-stream deaths
+get a clean {\"error\":\"backend lost\"} final.
 
 Clients add \"stream\": true to a request line to receive one
 {\"id\",\"delta\",\"seq\"} frame per generated token before the final reply;

@@ -9,7 +9,7 @@ use salr::gemm::pipeline::PipelineConfig;
 use salr::infer::Backend;
 use salr::model::{save_model, Encoding};
 use salr::salr::BaselineSpec;
-use salr::server::{serve, BatchPolicy};
+use salr::server::{serve, serve_router, BatchPolicy, RouterPolicy};
 use salr::train::TrainConfig;
 use salr::util::pool::WorkerPool;
 
@@ -150,6 +150,47 @@ fn run(args: &Args) -> Result<()> {
                 spec_k: args.usize_or("spec-k", defaults.spec_k)?.max(1),
             };
             serve(engine, &args.str_or("addr", "127.0.0.1:7433"), policy, None)
+        }
+        "router" => {
+            // The router tier needs no model artifacts: it fronts
+            // engine processes started separately with `salr serve`.
+            let spec = args
+                .flag("backends")
+                .or_else(|| args.flag("backend"))
+                .map(str::to_string)
+                .unwrap_or_default();
+            let backends: Vec<String> = spec
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if backends.is_empty() {
+                bail!("router needs --backends host:port[,host:port,...]");
+            }
+            let d = RouterPolicy::default();
+            let policy = RouterPolicy {
+                heartbeat_ms: args.usize_or("heartbeat-ms", d.heartbeat_ms as usize)? as u64,
+                miss_threshold: args
+                    .usize_or("miss-threshold", d.miss_threshold as usize)?
+                    .max(1) as u64,
+                spill_depth: args.usize_or("spill-depth", d.spill_depth as usize)? as u64,
+                hash_blocks: args.usize_or("hash-blocks", d.hash_blocks)?.max(1),
+                kv_block_size: args.usize_or("kv-block-size", d.kv_block_size)?.max(1),
+                vnodes: args.usize_or("vnodes", d.vnodes)?.max(1),
+                backoff_base_ms: args
+                    .usize_or("backoff-base-ms", d.backoff_base_ms as usize)?
+                    .max(1) as u64,
+                backoff_max_ms: args
+                    .usize_or("backoff-max-ms", d.backoff_max_ms as usize)?
+                    .max(1) as u64,
+                stream_frame_cap: args
+                    .usize_or("stream-frame-cap", d.stream_frame_cap)?
+                    .max(1),
+                connect_timeout_ms: args
+                    .usize_or("connect-timeout-ms", d.connect_timeout_ms as usize)?
+                    .max(1) as u64,
+            };
+            serve_router(&backends, &args.str_or("addr", "127.0.0.1:7400"), policy, None)
         }
         "compress" => {
             let ctx = ctx_from(args)?;

@@ -1,0 +1,291 @@
+//! Router-side state for one engine backend: the multiplexed
+//! connection, the in-flight request table, health/heartbeat gauges and
+//! the per-backend routing counters.
+//!
+//! A [`Backend`] owns exactly one TCP connection to its engine process
+//! at a time. Every client request the router forwards there is
+//! multiplexed over that connection under a router-assigned id and
+//! parked in the backend's `inflight` table until its final frame comes
+//! back. The connection lifecycle follows one discipline:
+//!
+//! * **writers never clean up** — [`Backend::send_line`] and the fault
+//!   injector only *shut down* the socket on failure
+//!   ([`Backend::shut_socket`]), leaving the connection entry in place;
+//! * **the pump thread is the single disposer** — the reader loop in
+//!   `server::router` notices the dead socket, calls
+//!   [`Backend::sever`] with the epoch it was spawned under, and only
+//!   the caller that wins that epoch check drains and re-disposes the
+//!   inflight table (failover / `backend lost` errors).
+//!
+//! The epoch counter makes severing idempotent: a stale pump (one
+//! spawned for a connection that has since been replaced) fails the
+//! check and exits without touching state that now belongs to the new
+//! connection.
+
+use super::tcp::FrameTx;
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Health state of one backend, as the router sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendState {
+    /// Connected and its last heartbeat probe was answered: routable.
+    Healthy,
+    /// Not routable: disconnected (reconnecting under backoff), or
+    /// connected but not yet proven by a heartbeat reply. Reintegration
+    /// requires a successful probe, never just a successful `connect` —
+    /// a backend that accepts TCP but cannot answer is still down.
+    Unhealthy,
+    /// Draining: no new requests are routed here; in-flight sequences
+    /// finish and deliver. Moves to [`BackendState::Down`] once the
+    /// inflight table empties (or the connection is lost).
+    Draining,
+    /// Permanently out of rotation: a completed drain or an injected
+    /// `backend_down` fault. The router never reconnects.
+    Down,
+}
+
+impl BackendState {
+    /// Wire name used in the router's metrics reply.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendState::Healthy => "healthy",
+            BackendState::Unhealthy => "unhealthy",
+            BackendState::Draining => "draining",
+            BackendState::Down => "down",
+        }
+    }
+}
+
+/// Monotonic per-backend routing counters (reported per backend in the
+/// router metrics reply; the aggregate view sums them).
+#[derive(Default)]
+pub(crate) struct BackendCounters {
+    /// Requests forwarded to this backend, by any rule.
+    pub(crate) routed: AtomicU64,
+    /// Requests that landed here because the consistent-hash ring made
+    /// this backend the owner of their prompt head.
+    pub(crate) hash_routed: AtomicU64,
+    /// Requests that landed here by least-loaded spill — their ring
+    /// owner was over the spill depth (or unhealthy).
+    pub(crate) spilled: AtomicU64,
+    /// Requests failed over *away* from this backend after its
+    /// connection died before their first streamed token.
+    pub(crate) failovers: AtomicU64,
+    /// Heartbeat probes this backend failed to answer in time.
+    pub(crate) missed_heartbeats: AtomicU64,
+}
+
+/// One forwarded request parked in a backend's inflight table. Carries
+/// everything the router needs to re-dispatch it on another backend
+/// (pre-first-token failover) or synthesize its `backend lost` final.
+pub(crate) struct Inflight {
+    /// The exact request line forwarded (router id already substituted);
+    /// re-sent verbatim on failover, so the retry is the same request.
+    pub(crate) line: String,
+    /// The id the client used — substituted back into every reply frame.
+    pub(crate) client_id: u64,
+    /// Whether the client asked for per-token streaming (decides the
+    /// `"done"` marker on synthesized error finals).
+    pub(crate) stream: bool,
+    /// First delta frame already delivered to the client. A started
+    /// request is never retried: its retry would replay tokens the
+    /// client has already seen. Greedy decode makes the *unstarted*
+    /// retry exact — same prompt, same bytes.
+    pub(crate) started: bool,
+    /// Already failed over once; a second loss is a `backend lost`.
+    pub(crate) retried: bool,
+    /// The owning client connection's bounded reply sender.
+    pub(crate) tx: FrameTx,
+    /// The owning client connection's id → (backend, router id) map,
+    /// shared here so whoever disposes the request can unregister it.
+    pub(crate) conn_map: Arc<Mutex<HashMap<u64, (usize, u64)>>>,
+}
+
+/// Router-side handle for one engine backend (see the module docs for
+/// the connection-lifecycle discipline).
+pub(crate) struct Backend {
+    /// `host:port` this backend serves on.
+    pub(crate) addr: String,
+    /// Stable index: the consistent-hash ring, fault specs
+    /// (`backend=N`) and the metrics reply all key on it.
+    pub(crate) index: usize,
+    /// The live connection's write half (`None` while disconnected).
+    conn: Mutex<Option<Arc<TcpStream>>>,
+    /// Bumped on every sever; a pump thread only disposes state if its
+    /// spawn-time epoch still matches.
+    epoch: AtomicU64,
+    state: Mutex<BackendState>,
+    /// Forwarded requests awaiting their final frame, by router id.
+    pub(crate) inflight: Mutex<HashMap<u64, Inflight>>,
+    /// Last heartbeat's admission backlog (`queue_depth` gauge).
+    pub(crate) queue_depth: AtomicU64,
+    /// Last heartbeat's occupied decode slots (`slots_in_use` gauge).
+    pub(crate) slots_in_use: AtomicU64,
+    /// Last heartbeat's `cache_blocks_in_use` gauge (leak checks).
+    pub(crate) cache_blocks_in_use: AtomicU64,
+    /// Consecutive unanswered heartbeat probes.
+    pub(crate) missed: AtomicU64,
+    /// A probe is in flight; answered by the pump on a metrics-shaped
+    /// reply, counted as a miss by the next tick otherwise.
+    pub(crate) probe_outstanding: AtomicBool,
+    /// Consecutive failed `connect` attempts — the circuit-breaker
+    /// input: backoff doubles per failure up to the policy cap.
+    pub(crate) consec_fails: AtomicU64,
+    /// Earliest instant the next reconnect attempt may run.
+    pub(crate) next_attempt: Mutex<Instant>,
+    pub(crate) counters: BackendCounters,
+}
+
+impl Backend {
+    pub(crate) fn new(addr: String, index: usize) -> Backend {
+        Backend {
+            addr,
+            index,
+            conn: Mutex::new(None),
+            epoch: AtomicU64::new(0),
+            state: Mutex::new(BackendState::Unhealthy),
+            inflight: Mutex::new(HashMap::new()),
+            queue_depth: AtomicU64::new(0),
+            slots_in_use: AtomicU64::new(0),
+            cache_blocks_in_use: AtomicU64::new(0),
+            missed: AtomicU64::new(0),
+            probe_outstanding: AtomicBool::new(false),
+            consec_fails: AtomicU64::new(0),
+            next_attempt: Mutex::new(Instant::now()),
+            counters: BackendCounters::default(),
+        }
+    }
+
+    pub(crate) fn state(&self) -> BackendState {
+        *self.state.lock().unwrap()
+    }
+
+    pub(crate) fn set_state(&self, s: BackendState) {
+        *self.state.lock().unwrap() = s;
+    }
+
+    /// `Down` is terminal: once set, no transition out is ever applied.
+    /// Used by state changes that race a `backend_down` fault.
+    pub(crate) fn set_state_unless_down(&self, s: BackendState) {
+        let mut cur = self.state.lock().unwrap();
+        if *cur != BackendState::Down {
+            *cur = s;
+        }
+    }
+
+    /// Install a freshly connected stream and return the epoch the new
+    /// pump thread must carry into [`Backend::sever`].
+    pub(crate) fn install_conn(&self, stream: Arc<TcpStream>) -> u64 {
+        let mut conn = self.conn.lock().unwrap();
+        *conn = Some(stream);
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Write one line to the backend connection. On any failure the
+    /// socket is shut down but the connection entry is kept — the pump
+    /// thread observes the dead socket and runs the one true disposal
+    /// path. Returns `false` if the line was not delivered.
+    pub(crate) fn send_line(&self, line: &str) -> bool {
+        let conn = self.conn.lock().unwrap();
+        let Some(stream) = conn.as_ref() else {
+            return false;
+        };
+        let mut w = stream.as_ref();
+        if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            return false;
+        }
+        true
+    }
+
+    /// Shut the live socket down without clearing the connection entry:
+    /// the pump thread will notice and run disposal. Safe when
+    /// disconnected (no-op).
+    pub(crate) fn shut_socket(&self) {
+        if let Some(stream) = self.conn.lock().unwrap().as_ref() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    /// Tear the connection down, if `epoch` still names the current
+    /// connection (`None` = unconditionally). Returns `true` only for
+    /// the single caller that actually performed the sever — that
+    /// caller (and nobody else) must dispose the inflight table.
+    pub(crate) fn sever(&self, epoch: Option<u64>) -> bool {
+        let mut conn = self.conn.lock().unwrap();
+        if let Some(e) = epoch {
+            if e != self.epoch.load(Ordering::SeqCst) {
+                return false;
+            }
+        }
+        if let Some(stream) = conn.take() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        } else if epoch.is_none() {
+            // Unconditional sever of an already-clear connection: there
+            // is nothing left to dispose either.
+            return false;
+        }
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        self.probe_outstanding.store(false, Ordering::SeqCst);
+        true
+    }
+
+    /// Is a connection currently installed (healthy or not)?
+    pub(crate) fn connected(&self) -> bool {
+        self.conn.lock().unwrap().is_some()
+    }
+
+    /// The load signal routing compares: the backend's last-reported
+    /// admission backlog and occupied decode slots, plus what the
+    /// router has forwarded there and not yet seen finish (which the
+    /// next heartbeat has not observed yet).
+    pub(crate) fn load(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+            + self.slots_in_use.load(Ordering::Relaxed)
+            + self.inflight.lock().unwrap().len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sever_is_epoch_guarded_and_one_shot() {
+        let b = Backend::new("127.0.0.1:1".into(), 0);
+        // No connection: an unconditional sever has nothing to dispose.
+        assert!(!b.sever(None));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let epoch = b.install_conn(Arc::new(stream));
+        assert!(b.connected());
+        // A stale epoch (pump of a previous connection) must not win.
+        assert!(!b.sever(Some(epoch + 1)));
+        assert!(b.connected());
+        // The matching epoch wins exactly once.
+        assert!(b.sever(Some(epoch)));
+        assert!(!b.connected());
+        assert!(!b.sever(Some(epoch)), "second disposer must lose");
+    }
+
+    #[test]
+    fn down_is_terminal() {
+        let b = Backend::new("127.0.0.1:1".into(), 0);
+        b.set_state(BackendState::Down);
+        b.set_state_unless_down(BackendState::Healthy);
+        assert_eq!(b.state(), BackendState::Down);
+    }
+
+    #[test]
+    fn load_counts_router_side_inflight() {
+        let b = Backend::new("127.0.0.1:1".into(), 0);
+        b.queue_depth.store(3, Ordering::Relaxed);
+        b.slots_in_use.store(2, Ordering::Relaxed);
+        assert_eq!(b.load(), 5);
+    }
+}

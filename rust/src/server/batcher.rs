@@ -689,10 +689,13 @@ impl Batcher {
             let mut q = self.queue.lock().unwrap();
             if self.shutdown.load(Ordering::SeqCst) {
                 drop(q);
+                // "shutting down" is wire-visible contract: the router
+                // retries a request shed with exactly this error on
+                // another backend when it has not streamed yet.
                 (pend.reply)(error_response(
                     pend.req.id,
                     pend.enqueued,
-                    "server shutting down".into(),
+                    "shutting down".into(),
                 ));
                 return false;
             }
@@ -751,6 +754,17 @@ impl Batcher {
     /// Snapshot of per-worker counters, indexed by worker id.
     pub fn worker_metrics(&self) -> Vec<WorkerMetrics> {
         self.worker_metrics.lock().unwrap().clone()
+    }
+
+    /// Requests admitted but not yet scheduled: the shared queue plus
+    /// every worker's claim board. This is the admission-depth half of
+    /// the load signal the router tier balances on (the other half is
+    /// the `slots_in_use` gauge), reported as `queue_depth` in the
+    /// wire metrics reply.
+    pub fn queue_depth(&self) -> usize {
+        let queued = self.queue.lock().unwrap().len();
+        let boarded: usize = self.boards.lock().unwrap().iter().map(|b| b.len()).sum();
+        queued + boarded
     }
 
     /// Pop up to `room` waiting requests off the shared queue; if the
@@ -1791,7 +1805,7 @@ mod tests {
         );
         assert!(!ok, "post-shutdown submissions must not be queued");
         let resp = rx.recv().expect("a rejected submission still gets its reply");
-        assert_eq!(resp.error.as_deref(), Some("server shutting down"));
+        assert_eq!(resp.error.as_deref(), Some("shutting down"));
         assert_eq!(batcher.drain_abandoned(), 0, "nothing may have been queued");
         // The blocking form degrades to an error response, not a panic.
         let resp = batcher.submit(Request {
@@ -1800,7 +1814,7 @@ mod tests {
             max_tokens: 1,
             ..Default::default()
         });
-        assert_eq!(resp.error.as_deref(), Some("server shutting down"));
+        assert_eq!(resp.error.as_deref(), Some("shutting down"));
     }
 
     #[test]

@@ -24,17 +24,30 @@
 //! acceptance — output stays byte-identical to non-speculative serving,
 //! counted by `drafted_tokens` / `accepted_tokens` / `spec_rollbacks`.
 //!
-//! See DESIGN.md "Serving layer" and "KV cache subsystem" for the
-//! scheduler, the block/prefix-cache lifecycle, the
+//! Above the single process sits the **router tier**
+//! ([`serve_router`], the `router` subcommand): a front-end TCP
+//! process speaking the same wire protocol over `N` independent
+//! engine backends, with heartbeat health checks, consistent-hash
+//! cache-aware routing with least-loaded spill, exact pre-first-token
+//! failover, and graceful per-backend drain — the same failure-model
+//! discipline lifted across the process boundary (see
+//! `server::router`).
+//!
+//! See DESIGN.md "Serving layer", "KV cache subsystem" and "Router
+//! tier" for the scheduler, the block/prefix-cache lifecycle, the
 //! chunked-prefill/streaming wire protocol, and the determinism
 //! argument; `rust/benches/bench_serve.rs` measures tokens/s, batch
 //! occupancy and prefix-hit rates at 1/2/4 engine workers.
 
+mod backend;
 mod batcher;
+mod router;
 mod tcp;
 
+pub use backend::BackendState;
 pub use batcher::{
     spawn_engine_workers, BatchPolicy, Batcher, CancelToken, ReplyFn, Request, Response,
     ServerMetrics, StreamFn, WorkerMetrics,
 };
+pub use router::{serve_router, serve_router_on, Router, RouterPolicy};
 pub use tcp::{serve, serve_on, Client};

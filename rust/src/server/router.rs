@@ -1,0 +1,1022 @@
+//! Front-end router tier: one TCP process speaking the existing wire
+//! protocol, fronting `N` independent engine backends.
+//!
+//! ```text
+//!                        ┌──────────► backend 0 (salr serve)
+//!  clients ──► router ───┤   one multiplexed conn per backend,
+//!                        │   pump thread routes frames by id
+//!                        └──────────► backend N-1 (salr serve)
+//! ```
+//!
+//! The router lifts the single-process failure model of the serving
+//! tier (deadlines, cancellation, bounded queues, supervision) across
+//! the process boundary:
+//!
+//! * **health**: every backend is probed with `{"cmd":"metrics"}` on a
+//!   heartbeat interval; its reply doubles as the load signal
+//!   (`queue_depth` + `slots_in_use`). A backend that misses
+//!   `miss_threshold` consecutive beats is marked unhealthy and its
+//!   connection torn down; reconnects run under exponential backoff
+//!   with deterministic jitter (the circuit breaker), and the backend
+//!   reintegrates only after a *probe* succeeds — never on bare TCP
+//!   connect.
+//! * **cache-aware routing**: requests consistent-hash on their
+//!   prompt's leading KV-block-aligned token blocks, so repeat and
+//!   shared-prefix traffic lands on the backend whose radix-tree
+//!   prefix cache already holds those blocks. When the owner's load
+//!   exceeds `spill_depth`, the request spills to the least-loaded
+//!   healthy backend instead (counted `spilled` vs `hash_routed`).
+//! * **failover**: a request whose backend dies before its first
+//!   streamed token is re-sent, once, to another healthy backend.
+//!   Greedy decode is deterministic, so the unstarted retry returns
+//!   byte-identical output — the client cannot observe the failover.
+//!   A request that already streamed (or already retried once) gets a
+//!   clean final `{"error": "backend lost"}` instead, and no router
+//!   state survives it.
+//! * **drain**: `{"cmd":"drain","backend":N}` marks backend `N`
+//!   draining (no new routes) and forwards `{"cmd":"drain"}` to it;
+//!   the backend finishes its in-flight sequences, their finals flow
+//!   back normally, and the ring's hash range redistributes to the
+//!   next backends in ring order without a request being dropped. A
+//!   submission that races into the draining backend is rejected there
+//!   with `"shutting down"` and transparently re-dispatched.
+//!
+//! Every one of these paths is deterministically testable: the
+//! `SALR_FAULT` network kinds (`conn_drop`, `reply_delay`,
+//! `backend_down`) key on per-backend counters of the router's two op
+//! points — `fwd` (a request forward) and `reply` (a backend data
+//! frame) — see [`crate::util::fault`].
+
+use super::backend::{Backend, BackendState, Inflight};
+use super::tcp::{parse_id, FrameTx};
+use crate::util::fault::{FaultAction, FaultOp, FaultPlan};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for the router tier (all have serviceable defaults;
+/// the `router` subcommand exposes each as a flag).
+#[derive(Clone, Copy, Debug)]
+pub struct RouterPolicy {
+    /// Heartbeat interval: how often every backend is probed with
+    /// `{"cmd":"metrics"}` and reconnects are attempted.
+    pub heartbeat_ms: u64,
+    /// Consecutive unanswered probes before a backend is marked
+    /// unhealthy and its connection torn down.
+    pub miss_threshold: u64,
+    /// Load (backend `queue_depth` + `slots_in_use` + router-side
+    /// inflight) above which the ring owner is bypassed and the
+    /// request spills to the least-loaded healthy backend.
+    pub spill_depth: u64,
+    /// How many leading KV blocks of the prompt feed the consistent
+    /// hash (prompts shorter than one block hash whole).
+    pub hash_blocks: usize,
+    /// Token positions per KV block — must match the backends'
+    /// `--kv-block-size` for the hash to align with their
+    /// prefix-sharing granularity.
+    pub kv_block_size: usize,
+    /// Virtual nodes per backend on the consistent-hash ring.
+    pub vnodes: usize,
+    /// First reconnect backoff; doubles per consecutive failure.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling.
+    pub backoff_max_ms: u64,
+    /// Per-client-connection reply-queue bound (same slow-reader
+    /// severing contract as the serving tier).
+    pub stream_frame_cap: usize,
+    /// TCP connect timeout for backend dials.
+    pub connect_timeout_ms: u64,
+}
+
+impl Default for RouterPolicy {
+    fn default() -> RouterPolicy {
+        RouterPolicy {
+            heartbeat_ms: 200,
+            miss_threshold: 3,
+            spill_depth: 8,
+            hash_blocks: 2,
+            kv_block_size: 16,
+            vnodes: 32,
+            backoff_base_ms: 50,
+            backoff_max_ms: 2000,
+            stream_frame_cap: 1024,
+            connect_timeout_ms: 1000,
+        }
+    }
+}
+
+/// Aggregate routing counters (per-backend breakdowns live on each
+/// [`Backend`]). `routed` counts *forwards*, not requests: a failover
+/// forwards the same request again and counts again.
+#[derive(Default)]
+struct RouterAggregates {
+    routed: AtomicU64,
+    hash_routed: AtomicU64,
+    spilled: AtomicU64,
+    failovers: AtomicU64,
+}
+
+/// The router: backends, the consistent-hash ring, and the shared
+/// counters. Construct with [`Router::new`] (arms `SALR_FAULT`) or
+/// [`Router::with_fault`] (tests), then serve with [`serve_router_on`].
+pub struct Router {
+    backends: Vec<Arc<Backend>>,
+    /// `(hash, backend index)`, sorted by hash. Keyed on backend
+    /// *index* — not address — so the prompt→backend mapping is a pure
+    /// function of the backend list's order, stable across runs and
+    /// processes.
+    ring: Vec<(u64, usize)>,
+    policy: RouterPolicy,
+    metrics: RouterAggregates,
+    next_rid: AtomicU64,
+    next_client_id: AtomicU64,
+    fault: Option<FaultPlan>,
+    shutdown: AtomicBool,
+    heartbeat: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// FNV-1a, the codebase's standing choice for cheap stable hashing.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl Router {
+    /// Build a router over `addrs` (one `host:port` per backend),
+    /// arming the `SALR_FAULT` environment spec if set. The heartbeat
+    /// thread starts immediately; backends begin `unhealthy` and
+    /// become routable when their first probe is answered.
+    pub fn new(addrs: &[String], policy: RouterPolicy) -> Arc<Router> {
+        Router::with_fault(addrs, policy, FaultPlan::from_env())
+    }
+
+    /// [`Router::new`] with an explicit (or no) fault plan — the
+    /// injection point for deterministic network-fault tests.
+    pub fn with_fault(
+        addrs: &[String],
+        policy: RouterPolicy,
+        fault: Option<FaultPlan>,
+    ) -> Arc<Router> {
+        let backends: Vec<Arc<Backend>> = addrs
+            .iter()
+            .enumerate()
+            .map(|(i, a)| Arc::new(Backend::new(a.clone(), i)))
+            .collect();
+        let mut ring = Vec::with_capacity(backends.len() * policy.vnodes.max(1));
+        for b in 0..backends.len() {
+            for v in 0..policy.vnodes.max(1) {
+                ring.push((fnv1a(format!("backend-{b}-vnode-{v}").as_bytes()), b));
+            }
+        }
+        ring.sort_unstable();
+        let router = Arc::new(Router {
+            backends,
+            ring,
+            policy,
+            metrics: RouterAggregates::default(),
+            next_rid: AtomicU64::new(1),
+            next_client_id: AtomicU64::new(1),
+            fault,
+            shutdown: AtomicBool::new(false),
+            heartbeat: Mutex::new(None),
+        });
+        let hb = {
+            // A `Weak` breaks the Router → JoinHandle → Arc<Router>
+            // cycle: a router dropped without `stop()` ends its
+            // heartbeat at the next tick instead of leaking both.
+            let weak = Arc::downgrade(&router);
+            std::thread::spawn(move || heartbeat_loop(&weak))
+        };
+        *router.heartbeat.lock().unwrap() = Some(hb);
+        router
+    }
+
+    /// The consistent-hash key: the prompt's leading
+    /// `hash_blocks × kv_block_size` tokens (whole prompt when shorter
+    /// than one block), truncated to *full* blocks so two prompts
+    /// sharing their cached head hash identically even when their
+    /// tails diverge mid-block.
+    fn hash_key(&self, prompt: &str) -> u64 {
+        let toks = crate::data::tokenizer::tokenize(prompt);
+        let block = self.policy.kv_block_size.max(1);
+        let full_blocks = (toks.len() / block).min(self.policy.hash_blocks.max(1));
+        let take = if full_blocks == 0 {
+            toks.len()
+        } else {
+            full_blocks * block
+        };
+        let mut bytes = Vec::with_capacity(take * 4);
+        for t in &toks[..take] {
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        fnv1a(&bytes)
+    }
+
+    /// Backend indices in ring order starting at `key`'s position,
+    /// deduplicated — the owner first, then the backends its range
+    /// redistributes to when it is unavailable.
+    fn ring_order(&self, key: u64) -> Vec<usize> {
+        let start = self.ring.partition_point(|&(h, _)| h < key);
+        let mut seen = vec![false; self.backends.len()];
+        let mut order = Vec::with_capacity(self.backends.len());
+        for i in 0..self.ring.len() {
+            let (_, b) = self.ring[(start + i) % self.ring.len()];
+            if !seen[b] {
+                seen[b] = true;
+                order.push(b);
+                if order.len() == self.backends.len() {
+                    break;
+                }
+            }
+        }
+        order
+    }
+
+    /// The ring owner of `prompt`, health ignored — the pure
+    /// prompt→backend mapping. Public so tests (and capacity planning)
+    /// can craft prompts that land on a chosen backend.
+    pub fn owner_of_prompt(&self, prompt: &str) -> usize {
+        self.ring_order(self.hash_key(prompt))[0]
+    }
+
+    /// Pick the backend for one request and bump the routing counters.
+    /// `None` = no healthy backend exists right now.
+    fn route(&self, prompt: &str) -> Option<Arc<Backend>> {
+        let order = self.ring_order(self.hash_key(prompt));
+        let owner = order
+            .iter()
+            .map(|&i| &self.backends[i])
+            .find(|b| b.state() == BackendState::Healthy)?;
+        let chosen = if owner.load() > self.policy.spill_depth {
+            // Owner overloaded: spill to the least-loaded healthy
+            // backend (ties break on index, deterministically). The
+            // owner itself stays a candidate — if it is *still* the
+            // least loaded, the request stays put.
+            self.backends
+                .iter()
+                .filter(|b| b.state() == BackendState::Healthy)
+                .min_by_key(|b| (b.load(), b.index))
+                .unwrap_or(owner)
+        } else {
+            owner
+        };
+        self.metrics.routed.fetch_add(1, Ordering::Relaxed);
+        chosen.counters.routed.fetch_add(1, Ordering::Relaxed);
+        if chosen.index == owner.index {
+            self.metrics.hash_routed.fetch_add(1, Ordering::Relaxed);
+            chosen.counters.hash_routed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.metrics.spilled.fetch_add(1, Ordering::Relaxed);
+            chosen.counters.spilled.fetch_add(1, Ordering::Relaxed);
+        }
+        Some(chosen.clone())
+    }
+
+    fn fault_check(&self, op: FaultOp, backend: usize) -> Option<FaultAction> {
+        self.fault.as_ref()?.check(op, backend)
+    }
+
+    /// Apply a network fault action against `b`. Returns `false` when
+    /// the connection was killed — the caller's frame, if any, goes
+    /// down with it (a dead link loses in-transit frames).
+    fn apply_network_action(&self, b: &Backend, action: FaultAction) -> bool {
+        match action {
+            FaultAction::Delay(d) => {
+                std::thread::sleep(d);
+                true
+            }
+            FaultAction::DropConn => {
+                log::warn!("injected fault: dropping connection to backend {}", b.index);
+                b.shut_socket();
+                false
+            }
+            FaultAction::BackendDown => {
+                log::warn!("injected fault: backend {} down permanently", b.index);
+                b.set_state(BackendState::Down);
+                b.shut_socket();
+                false
+            }
+            // Parse-time class validation keeps engine actions off
+            // network ops; tolerate rather than poison the pump.
+            FaultAction::Panic(msg) => {
+                log::error!("ignoring engine fault action on a network op: {msg}");
+                true
+            }
+        }
+    }
+
+    /// Forward one generation request. `msg` is the client's parsed
+    /// request line; the router substitutes its own globally unique id
+    /// before the line goes on a multiplexed backend connection.
+    fn submit(
+        self: &Arc<Router>,
+        msg: Json,
+        tx: &FrameTx,
+        conn_map: &Arc<Mutex<HashMap<u64, (usize, u64)>>>,
+    ) {
+        let client_id = parse_id(&msg)
+            .unwrap_or_else(|| self.next_client_id.fetch_add(1, Ordering::Relaxed));
+        let stream = msg.get("stream").and_then(Json::as_bool).unwrap_or(false);
+        let prompt = msg.get("prompt").and_then(Json::as_str).unwrap_or("").to_string();
+        let rid = self.next_rid.fetch_add(1, Ordering::Relaxed);
+        let line = msg.set("id", rid).to_string_compact();
+        let Some(b) = self.route(&prompt) else {
+            let mut j = Json::obj().set("id", client_id).set("error", "no healthy backend");
+            if stream {
+                j = j.set("done", true);
+            }
+            let _ = tx.send(j.to_string_compact());
+            return;
+        };
+        let entry = Inflight {
+            line: line.clone(),
+            client_id,
+            stream,
+            started: false,
+            retried: false,
+            tx: tx.clone(),
+            conn_map: conn_map.clone(),
+        };
+        conn_map.lock().unwrap().insert(client_id, (b.index, rid));
+        b.inflight.lock().unwrap().insert(rid, entry);
+        if let Some(a) = self.fault_check(FaultOp::RouterFwd, b.index) {
+            self.apply_network_action(&b, a);
+        }
+        if !b.send_line(&line) {
+            // Whoever removes the entry owns its disposal — the pump
+            // (on the dead connection) and this path race for it.
+            let removed = b.inflight.lock().unwrap().remove(&rid);
+            if let Some(e) = removed {
+                self.redispatch(rid, e, b.index);
+            }
+        }
+    }
+
+    /// Pre-first-token failover: re-send `e` (retried once, ever) on
+    /// the least-loaded healthy backend other than `from`.
+    fn redispatch(self: &Arc<Router>, rid: u64, mut e: Inflight, from: usize) {
+        debug_assert!(!e.started, "started requests are never redispatched");
+        if e.retried {
+            self.fail(e, "backend lost");
+            return;
+        }
+        e.retried = true;
+        self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+        self.backends[from].counters.failovers.fetch_add(1, Ordering::Relaxed);
+        let target = self
+            .backends
+            .iter()
+            .filter(|b| b.index != from && b.state() == BackendState::Healthy)
+            .min_by_key(|b| (b.load(), b.index))
+            .cloned();
+        let Some(t) = target else {
+            self.fail(e, "backend lost");
+            return;
+        };
+        log::info!(
+            "failing request {rid} over from backend {from} to backend {}",
+            t.index
+        );
+        self.metrics.routed.fetch_add(1, Ordering::Relaxed);
+        t.counters.routed.fetch_add(1, Ordering::Relaxed);
+        let line = e.line.clone();
+        e.conn_map.lock().unwrap().insert(e.client_id, (t.index, rid));
+        t.inflight.lock().unwrap().insert(rid, e);
+        if let Some(a) = self.fault_check(FaultOp::RouterFwd, t.index) {
+            self.apply_network_action(&t, a);
+        }
+        if !t.send_line(&line) {
+            let removed = t.inflight.lock().unwrap().remove(&rid);
+            if let Some(e) = removed {
+                // Already retried: a second loss is terminal.
+                self.fail(e, "backend lost");
+            }
+        }
+    }
+
+    /// Deliver a request's final frame to its client, id substituted
+    /// back, and unregister it from its connection's map.
+    fn deliver_final(&self, e: Inflight, frame: Json) {
+        e.conn_map.lock().unwrap().remove(&e.client_id);
+        let _ = e.tx.send(frame.set("id", e.client_id).to_string_compact());
+    }
+
+    /// Synthesize an error final for a request the router could not
+    /// complete. Streamed requests get the `"done"` terminator so a
+    /// client waiting on the documented marker never hangs.
+    fn fail(&self, e: Inflight, error: &str) {
+        e.conn_map.lock().unwrap().remove(&e.client_id);
+        let mut j = Json::obj().set("id", e.client_id).set("error", error);
+        if e.stream {
+            j = j.set("done", true);
+        }
+        let _ = e.tx.send(j.to_string_compact());
+    }
+
+    /// The single disposal path for a lost backend connection: sever
+    /// (epoch-guarded — exactly one caller wins), transition state,
+    /// then fail over or error out everything that was in flight.
+    fn on_conn_lost(self: &Arc<Router>, b: &Arc<Backend>, epoch: u64) {
+        if !b.sever(Some(epoch)) {
+            return; // a newer connection owns this backend now
+        }
+        match b.state() {
+            // A draining backend that closed its connection has
+            // finished: everything it admitted was delivered.
+            BackendState::Draining => b.set_state(BackendState::Down),
+            BackendState::Down => {}
+            _ => {
+                log::warn!("lost connection to backend {} ({})", b.index, b.addr);
+                b.set_state(BackendState::Unhealthy);
+            }
+        }
+        let entries: Vec<(u64, Inflight)> = {
+            let mut inflight = b.inflight.lock().unwrap();
+            inflight.drain().collect()
+        };
+        for (rid, e) in entries {
+            if e.started || e.retried {
+                // Mid-stream (or second) loss: a retry would replay
+                // delivered tokens, so the contract is a clean error.
+                self.fail(e, "backend lost");
+            } else {
+                self.redispatch(rid, e, b.index);
+            }
+        }
+    }
+
+    /// Handle a frame that carries no request id: a heartbeat
+    /// (metrics-shaped) reply, or a command ack — acks are dropped.
+    fn on_control_frame(&self, b: &Backend, frame: &Json) {
+        let (Some(depth), Some(slots)) = (
+            frame.get("queue_depth").and_then(Json::as_f64),
+            frame.get("slots_in_use").and_then(Json::as_f64),
+        ) else {
+            return; // an ok/cancel ack
+        };
+        b.queue_depth.store(depth as u64, Ordering::Relaxed);
+        b.slots_in_use.store(slots as u64, Ordering::Relaxed);
+        if let Some(blocks) = frame.get("cache_blocks_in_use").and_then(Json::as_f64) {
+            b.cache_blocks_in_use.store(blocks as u64, Ordering::Relaxed);
+        }
+        b.missed.store(0, Ordering::Relaxed);
+        b.probe_outstanding.store(false, Ordering::SeqCst);
+        if b.state() == BackendState::Unhealthy {
+            // Reintegration: a *probe* succeeded over the live
+            // connection — not merely a TCP connect.
+            log::info!("backend {} ({}) reintegrated", b.index, b.addr);
+            b.consec_fails.store(0, Ordering::Relaxed);
+            b.set_state_unless_down(BackendState::Healthy);
+        }
+    }
+
+    /// Begin draining backend `index`: stop routing new requests to it
+    /// and forward `{"cmd":"drain"}` so it finishes in-flight work and
+    /// exits. Returns `false` for an unknown index or a backend
+    /// already down.
+    pub fn drain_backend(&self, index: usize) -> bool {
+        let Some(b) = self.backends.get(index) else {
+            return false;
+        };
+        if b.state() == BackendState::Down {
+            return false;
+        }
+        log::info!("draining backend {index} ({})", b.addr);
+        // Order matters: no new routes *before* the backend stops
+        // admitting, so nothing slips in behind the drain.
+        b.set_state(BackendState::Draining);
+        b.send_line(r#"{"cmd":"drain"}"#);
+        true
+    }
+
+    /// The router's `{"cmd":"metrics"}` reply: aggregate counters plus
+    /// one object per backend (state, load gauges, routing counters).
+    pub fn metrics_json(&self) -> Json {
+        let mut inflight_total = 0u64;
+        let backends = Json::Arr(
+            self.backends
+                .iter()
+                .map(|b| {
+                    let inflight = b.inflight.lock().unwrap().len() as u64;
+                    inflight_total += inflight;
+                    Json::obj()
+                        .set("addr", b.addr.as_str())
+                        .set("backend_state", b.state().as_str())
+                        .set("queue_depth", b.queue_depth.load(Ordering::Relaxed))
+                        .set("slots_in_use", b.slots_in_use.load(Ordering::Relaxed))
+                        .set(
+                            "cache_blocks_in_use",
+                            b.cache_blocks_in_use.load(Ordering::Relaxed),
+                        )
+                        .set("inflight", inflight)
+                        .set("routed", b.counters.routed.load(Ordering::Relaxed))
+                        .set("hash_routed", b.counters.hash_routed.load(Ordering::Relaxed))
+                        .set("spilled", b.counters.spilled.load(Ordering::Relaxed))
+                        .set("failovers", b.counters.failovers.load(Ordering::Relaxed))
+                        .set(
+                            "missed_heartbeats",
+                            b.counters.missed_heartbeats.load(Ordering::Relaxed),
+                        )
+                })
+                .collect(),
+        );
+        Json::obj()
+            .set("routed", self.metrics.routed.load(Ordering::Relaxed))
+            .set("hash_routed", self.metrics.hash_routed.load(Ordering::Relaxed))
+            .set("spilled", self.metrics.spilled.load(Ordering::Relaxed))
+            .set("failovers", self.metrics.failovers.load(Ordering::Relaxed))
+            .set("inflight", inflight_total)
+            .set("backends", backends)
+    }
+
+    /// Stop the router: end the heartbeat thread, take every backend
+    /// down and dispose whatever was still in flight (clients get
+    /// `backend lost`; their connections are closing anyway).
+    pub fn stop(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for b in &self.backends {
+            b.set_state(BackendState::Down);
+        }
+        for b in &self.backends {
+            b.sever(None);
+            let entries: Vec<Inflight> = {
+                let mut inflight = b.inflight.lock().unwrap();
+                inflight.drain().map(|(_, e)| e).collect()
+            };
+            for e in entries {
+                self.fail(e, "backend lost");
+            }
+        }
+        if let Some(h) = self.heartbeat.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        // The heartbeat thread holds only a Weak and exits at its next
+        // tick once this flag is set (or its upgrade fails); setting it
+        // here covers routers dropped without an explicit `stop()`.
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// The reader ("pump") thread of one backend connection: routes every
+/// incoming frame — stream deltas and finals by router id back to
+/// their clients, id-less control frames to the heartbeat handler —
+/// and, when the connection dies, runs the disposal path exactly once.
+fn pump_loop(router: &Arc<Router>, b: &Arc<Backend>, stream: TcpStream, epoch: u64) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let Ok(frame) = Json::parse(trimmed) else {
+            log::warn!("backend {} sent unparseable frame", b.index);
+            continue;
+        };
+        let Some(rid) = parse_id(&frame) else {
+            router.on_control_frame(b, &frame);
+            continue;
+        };
+        // Fault point: one data frame about to be delivered. A
+        // connection-killing action loses this frame with the link —
+        // exactly what a real mid-stream death does.
+        if let Some(a) = router.fault_check(FaultOp::RouterReply, b.index) {
+            if !router.apply_network_action(b, a) {
+                break;
+            }
+        }
+        if frame.get("delta").is_some() {
+            let routed = {
+                let mut inflight = b.inflight.lock().unwrap();
+                inflight.get_mut(&rid).map(|e| {
+                    e.started = true;
+                    (e.client_id, e.tx.clone())
+                })
+            };
+            if let Some((client_id, tx)) = routed {
+                let _ = tx.send(frame.set("id", client_id).to_string_compact());
+            }
+        } else {
+            let entry = b.inflight.lock().unwrap().remove(&rid);
+            if let Some(e) = entry {
+                let shed_by_drain = !e.started
+                    && !e.retried
+                    && frame.get("error").and_then(Json::as_str) == Some("shutting down");
+                if shed_by_drain {
+                    // The forward raced the backend's drain: it was
+                    // never admitted, so re-dispatching it elsewhere is
+                    // exact — this is how a drain drops zero requests.
+                    router.redispatch(rid, e, b.index);
+                } else {
+                    router.deliver_final(e, frame);
+                }
+            }
+        }
+    }
+    router.on_conn_lost(b, epoch);
+}
+
+/// The heartbeat thread: one ticker for all backends — probes live
+/// connections, counts misses, tears down silent backends, dials
+/// disconnected ones under exponential backoff + jitter, and completes
+/// drains whose inflight tables have emptied.
+fn heartbeat_loop(weak: &std::sync::Weak<Router>) {
+    let mut rngs: Vec<Rng> = Vec::new();
+    loop {
+        // Upgrade per tick and drop before sleeping: the thread keeps
+        // the router alive only while actually inspecting it.
+        let Some(router) = weak.upgrade() else {
+            return;
+        };
+        if router.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let interval = router.policy.heartbeat_ms.max(1);
+        if rngs.is_empty() {
+            // Deterministic per-backend jitter streams: reconnect
+            // storms decorrelate, runs stay reproducible.
+            rngs = (0..router.backends.len())
+                .map(|i| Rng::new(0x51a1_0b00 + i as u64))
+                .collect();
+        }
+        heartbeat_tick(&router, &mut rngs);
+        drop(router);
+        // Sleep in short slices so `stop()` joins promptly even under
+        // a long heartbeat interval.
+        let mut slept = 0u64;
+        while slept < interval {
+            let step = (interval - slept).min(20);
+            std::thread::sleep(Duration::from_millis(step));
+            slept += step;
+            match weak.upgrade() {
+                Some(r) if !r.shutdown.load(Ordering::SeqCst) => {}
+                _ => return,
+            }
+        }
+    }
+}
+
+/// One heartbeat pass over every backend (see [`heartbeat_loop`]).
+fn heartbeat_tick(router: &Arc<Router>, rngs: &mut [Rng]) {
+    let policy = router.policy;
+    {
+        for b in &router.backends {
+            match b.state() {
+                BackendState::Down => continue,
+                BackendState::Draining => {
+                    if b.inflight.lock().unwrap().is_empty() {
+                        // In-process backends never close the router's
+                        // connection when they exit their accept loop,
+                        // so drain completion is detected here, not
+                        // only at EOF.
+                        b.set_state(BackendState::Down);
+                        b.sever(None);
+                        log::info!("backend {} drained", b.index);
+                    }
+                    continue;
+                }
+                BackendState::Healthy | BackendState::Unhealthy => {}
+            }
+            if b.connected() {
+                if b.probe_outstanding.load(Ordering::SeqCst) {
+                    let missed = b.missed.fetch_add(1, Ordering::Relaxed) + 1;
+                    b.counters.missed_heartbeats.fetch_add(1, Ordering::Relaxed);
+                    if missed >= policy.miss_threshold {
+                        log::warn!(
+                            "backend {} missed {missed} heartbeats: marking unhealthy",
+                            b.index
+                        );
+                        // State first, socket second: no new routes
+                        // land between the two, and the pump thread
+                        // does the actual disposal.
+                        b.set_state_unless_down(BackendState::Unhealthy);
+                        b.shut_socket();
+                    }
+                } else {
+                    b.probe_outstanding.store(true, Ordering::SeqCst);
+                    b.send_line(r#"{"cmd":"metrics"}"#);
+                }
+            } else if *b.next_attempt.lock().unwrap() <= Instant::now() {
+                match dial(&b.addr, policy.connect_timeout_ms) {
+                    Ok(stream) => {
+                        let reader = match stream.try_clone() {
+                            Ok(r) => r,
+                            Err(_) => continue, // treat as a failed dial next tick
+                        };
+                        let epoch = b.install_conn(Arc::new(stream));
+                        let (router, b2) = (router.clone(), b.clone());
+                        std::thread::spawn(move || pump_loop(&router, &b2, reader, epoch));
+                        // Probe immediately: reintegration happens when
+                        // (and only when) this probe is answered.
+                        b.missed.store(0, Ordering::Relaxed);
+                        b.probe_outstanding.store(true, Ordering::SeqCst);
+                        b.send_line(r#"{"cmd":"metrics"}"#);
+                    }
+                    Err(_) => {
+                        let fails = b.consec_fails.fetch_add(1, Ordering::Relaxed) + 1;
+                        let backoff = policy
+                            .backoff_base_ms
+                            .saturating_mul(1u64 << (fails - 1).min(16))
+                            .min(policy.backoff_max_ms.max(policy.backoff_base_ms));
+                        let jitter =
+                            rngs[b.index].below((backoff / 4 + 1) as usize) as u64;
+                        *b.next_attempt.lock().unwrap() =
+                            Instant::now() + Duration::from_millis(backoff + jitter);
+                        log::info!(
+                            "backend {} unreachable (attempt {fails}); next dial in ~{backoff} ms",
+                            b.index
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn dial(addr: &str, timeout_ms: u64) -> std::io::Result<TcpStream> {
+    let sa = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::NotFound, "no address"))?;
+    TcpStream::connect_timeout(&sa, Duration::from_millis(timeout_ms.max(1)))
+}
+
+/// Serve the router tier on `addr` over `backend_addrs`, until a
+/// `{"cmd":"shutdown"}` arrives. Arms `SALR_FAULT` if set. If `ready`
+/// is provided, the bound address is sent once listening.
+pub fn serve_router(
+    backend_addrs: &[String],
+    addr: &str,
+    policy: RouterPolicy,
+    ready: Option<Sender<std::net::SocketAddr>>,
+) -> Result<()> {
+    serve_router_on(Router::new(backend_addrs, policy), addr, ready)
+}
+
+/// [`serve_router`] over a caller-built [`Router`] — the injection
+/// point for [`Router::with_fault`] in deterministic network-fault
+/// tests.
+pub fn serve_router_on(
+    router: Arc<Router>,
+    addr: &str,
+    ready: Option<Sender<std::net::SocketAddr>>,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding router {addr}"))?;
+    let local = listener.local_addr()?;
+    log::info!(
+        "router on {local} fronting {} backend(s): {}",
+        router.backends.len(),
+        router
+            .backends
+            .iter()
+            .map(|b| b.addr.as_str())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    if let Some(tx) = ready {
+        let _ = tx.send(local);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = stream?;
+        let router = router.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            match handle_client(&router, stream) {
+                Ok(true) => {
+                    stop.store(true, Ordering::SeqCst);
+                    let _ = TcpStream::connect(local);
+                }
+                Ok(false) => {}
+                Err(e) => log::warn!("router connection error: {e:#}"),
+            }
+        });
+    }
+    router.stop();
+    Ok(())
+}
+
+/// One client connection on the router: same wire protocol as the
+/// serving tier, same bounded-reply-queue backpressure. Returns
+/// `Ok(true)` if this connection requested router shutdown.
+fn handle_client(router: &Arc<Router>, stream: TcpStream) -> Result<bool> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let (tx, reply_rx) =
+        std::sync::mpsc::sync_channel::<String>(router.policy.stream_frame_cap.max(1));
+    let reply_tx = FrameTx::new(tx, Some(Arc::new(stream.try_clone()?)));
+    let mut writer = stream;
+    let writer_thread = std::thread::spawn(move || {
+        use std::io::Write;
+        for line in reply_rx {
+            if writeln!(writer, "{line}").is_err() {
+                break;
+            }
+        }
+    });
+    // This connection's live requests: client id → (backend index,
+    // router id). Shared with every Inflight entry so whichever thread
+    // disposes a request also unregisters it here.
+    let conn_map: Arc<Mutex<HashMap<u64, (usize, u64)>>> = Arc::new(Mutex::new(HashMap::new()));
+    let mut line = String::new();
+    let outcome: Result<bool> = loop {
+        line.clear();
+        let n = match reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) => break Err(e.into()),
+        };
+        if n == 0 {
+            break Ok(false);
+        }
+        let msg = match Json::parse(line.trim()) {
+            Ok(m) => m,
+            Err(e) => {
+                let err = Json::obj().set("error", format!("bad json: {e}"));
+                let _ = reply_tx.send(err.to_string_compact());
+                continue;
+            }
+        };
+        match msg.get("cmd").and_then(Json::as_str) {
+            Some("shutdown") => {
+                let _ = reply_tx.send(Json::obj().set("ok", true).to_string_compact());
+                break Ok(true);
+            }
+            Some("metrics") => {
+                let _ = reply_tx.send(router.metrics_json().to_string_compact());
+            }
+            Some("drain") => {
+                // `{"cmd":"drain","backend":N}`: decommission one
+                // backend without dropping a request.
+                let ok = msg
+                    .get("backend")
+                    .and_then(Json::as_usize)
+                    .is_some_and(|i| router.drain_backend(i));
+                let _ = reply_tx.send(Json::obj().set("ok", ok).to_string_compact());
+            }
+            Some("cancel") => {
+                // Translate the client's id to the router id and relay
+                // to whichever backend holds the request. Best-effort
+                // across failover; the cancelled request's final
+                // `error: "cancelled"` frame flows back normally.
+                let target = parse_id(&msg)
+                    .and_then(|cid| conn_map.lock().unwrap().get(&cid).copied());
+                let hit = target.is_some_and(|(bidx, rid)| {
+                    router.backends[bidx].send_line(
+                        &Json::obj().set("cmd", "cancel").set("id", rid).to_string_compact(),
+                    )
+                });
+                let ack = Json::obj().set("cmd", "cancel").set("ok", hit);
+                let _ = reply_tx.send(ack.to_string_compact());
+            }
+            _ => router.submit(msg, &reply_tx, &conn_map),
+        }
+    };
+    // The client is gone (or asked us to stop): cancel whatever it
+    // still has in flight on the backends. The finals those cancels
+    // produce are dropped at this connection's dead FrameTx; the pump
+    // removing them is what keeps the router's tables empty.
+    let live: Vec<(usize, u64)> = conn_map.lock().unwrap().drain().map(|(_, v)| v).collect();
+    for (bidx, rid) in live {
+        router.backends[bidx]
+            .send_line(&Json::obj().set("cmd", "cancel").set("id", rid).to_string_compact());
+    }
+    drop(reply_tx);
+    let _ = writer_thread.join();
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(n: usize) -> Arc<Router> {
+        let addrs: Vec<String> = (0..n).map(|i| format!("127.0.0.1:{}", 20000 + i)).collect();
+        // Long heartbeat + far-future dial time keep the heartbeat
+        // thread inert for these pure routing-math tests.
+        let policy = RouterPolicy {
+            heartbeat_ms: 5_000,
+            ..RouterPolicy::default()
+        };
+        let r = Router::with_fault(&addrs, policy, None);
+        for b in &r.backends {
+            *b.next_attempt.lock().unwrap() = Instant::now() + Duration::from_secs(3600);
+        }
+        r
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_covers_every_backend() {
+        let a = router(3);
+        let b = router(3);
+        assert_eq!(a.ring, b.ring, "ring must be a pure function of n and vnodes");
+        let mut seen = [false; 3];
+        for &(_, idx) in &a.ring {
+            seen[idx] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every backend owns ring range");
+        a.stop();
+        b.stop();
+    }
+
+    #[test]
+    fn hash_key_is_block_aligned() {
+        let r = router(2);
+        let block = r.policy.kv_block_size; // 16 bytes with the byte tokenizer
+        let head = "x".repeat(block * r.policy.hash_blocks);
+        // Same leading blocks, different tails: same owner.
+        let a = format!("{head}-tail-one");
+        let b = format!("{head}-a-completely-different-tail");
+        assert_eq!(r.hash_key(&a), r.hash_key(&b));
+        assert_eq!(r.owner_of_prompt(&a), r.owner_of_prompt(&b));
+        // A mid-block divergence *past* the hashed blocks must not
+        // change the key; one *inside* the first block must.
+        let c = format!("y{}", &head[1..]);
+        assert_ne!(r.hash_key(&head), r.hash_key(&c));
+        // Prompts shorter than one block hash whole: distinct shorts
+        // get distinct keys.
+        assert_ne!(r.hash_key("ab"), r.hash_key("cd"));
+        assert_eq!(r.hash_key("ab"), r.hash_key("ab"));
+        r.stop();
+    }
+
+    #[test]
+    fn ring_order_redistributes_without_reshuffling() {
+        // Consistent hashing's point: removing one backend only moves
+        // the keys it owned; everyone else's owner is unchanged.
+        let r = router(3);
+        let prompts: Vec<String> = (0..64).map(|i| format!("prompt number {i:03}")).collect();
+        for p in &prompts {
+            let order = r.ring_order(r.hash_key(p));
+            assert_eq!(order.len(), 3);
+            let owner = order[0];
+            // The fallback owner (first in ring order after the owner)
+            // is what the range redistributes to on owner loss.
+            assert_ne!(order[1], owner);
+        }
+        // All three backends own a non-trivial share of 64 prompts.
+        let mut share = [0usize; 3];
+        for p in &prompts {
+            share[r.owner_of_prompt(p)] += 1;
+        }
+        assert!(share.iter().all(|&s| s > 0), "share: {share:?}");
+        r.stop();
+    }
+
+    #[test]
+    fn route_skips_unhealthy_and_spills_on_load() {
+        let r = router(2);
+        // No healthy backend: no route.
+        assert!(r.route("hello").is_none());
+        r.backends[0].set_state(BackendState::Healthy);
+        r.backends[1].set_state(BackendState::Healthy);
+        let p = "a prompt that hashes somewhere".to_string();
+        let owner = r.owner_of_prompt(&p);
+        let other = 1 - owner;
+        let b = r.route(&p).unwrap();
+        assert_eq!(b.index, owner, "healthy owner takes its hash range");
+        assert_eq!(r.backends[owner].counters.hash_routed.load(Ordering::Relaxed), 1);
+        // Owner over the spill depth: least-loaded healthy wins.
+        r.backends[owner]
+            .queue_depth
+            .store(r.policy.spill_depth + 5, Ordering::Relaxed);
+        let b = r.route(&p).unwrap();
+        assert_eq!(b.index, other, "overloaded owner spills");
+        assert_eq!(r.backends[other].counters.spilled.load(Ordering::Relaxed), 1);
+        // Owner unhealthy: its range redistributes in ring order.
+        r.backends[owner].queue_depth.store(0, Ordering::Relaxed);
+        r.backends[owner].set_state(BackendState::Unhealthy);
+        let b = r.route(&p).unwrap();
+        assert_eq!(b.index, other);
+        assert_eq!(
+            r.backends[other].counters.hash_routed.load(Ordering::Relaxed),
+            1,
+            "redistributed range is hash routing, not spill"
+        );
+        r.stop();
+    }
+}

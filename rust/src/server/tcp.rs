@@ -59,7 +59,11 @@
 //!
 //! Control commands: `{"cmd": "metrics"}` returns aggregate serving
 //! metrics; `{"cmd": "cancel", "id": N}` cancels an in-flight request;
-//! `{"cmd": "shutdown"}` stops the server.
+//! `{"cmd": "shutdown"}` (alias `{"cmd": "drain"}`) **drains** the
+//! server — new submissions are rejected with `error: "shutting down"`,
+//! every request already admitted finishes and delivers its reply
+//! (streamed frames included), then the process exits. Nothing in
+//! flight is aborted; this is the backend half of router-driven drain.
 
 use super::batcher::{
     spawn_engine_workers, BatchPolicy, Batcher, CancelToken, Request, Response,
@@ -79,9 +83,11 @@ use std::time::Duration;
 /// frames. The first overflow *poisons* the connection: the socket is
 /// shut down (the client sees EOF), the frame is dropped, and every
 /// later frame is dropped too — the queue can never hold more than its
-/// bound, and the sending engine worker never blocks.
+/// bound, and the sending engine worker never blocks. Shared with the
+/// router front-end (`server::router`), whose client connections carry
+/// the same backpressure contract.
 #[derive(Clone)]
-struct FrameTx {
+pub(crate) struct FrameTx {
     tx: SyncSender<String>,
     poisoned: Arc<AtomicBool>,
     /// The connection to sever on overflow (`None` only in unit tests).
@@ -89,7 +95,7 @@ struct FrameTx {
 }
 
 impl FrameTx {
-    fn new(tx: SyncSender<String>, conn: Option<Arc<TcpStream>>) -> FrameTx {
+    pub(crate) fn new(tx: SyncSender<String>, conn: Option<Arc<TcpStream>>) -> FrameTx {
         FrameTx {
             tx,
             poisoned: Arc::new(AtomicBool::new(false)),
@@ -99,7 +105,7 @@ impl FrameTx {
 
     /// Enqueue one reply line; `false` means the frame was dropped
     /// (overflow, already-poisoned connection, or writer gone).
-    fn send(&self, line: String) -> bool {
+    pub(crate) fn send(&self, line: String) -> bool {
         if self.poisoned.load(Ordering::Relaxed) {
             return false;
         }
@@ -298,7 +304,14 @@ fn handle_conn(
         };
         line.clear();
         match msg.get("cmd").and_then(Json::as_str) {
-            Some("shutdown") => {
+            Some("shutdown") | Some("drain") => {
+                // Stop admissions *before* the ack goes out, so a client
+                // that sees the ack can rely on later submissions being
+                // rejected with "shutting down". Everything already
+                // admitted (this connection's own requests included)
+                // finishes and delivers its reply: shutdown drains, it
+                // does not abort — see the `Ok(true)` exit path below.
+                batcher.shutdown();
                 let _ = reply_tx.send(Json::obj().set("ok", true).to_string_compact());
                 break Ok(true);
             }
@@ -378,11 +391,19 @@ fn handle_conn(
             }
         }
     };
-    // However the read loop ended — clean EOF, shutdown, idle close or a
-    // socket error — cancel whatever this connection still has in
-    // flight: nobody is left to read the replies.
-    for (_, token) in inflight.lock().unwrap().drain() {
-        token.cancel();
+    // How the read loop ended decides what happens to this connection's
+    // in-flight requests. A *drain* exit (`Ok(true)`: shutdown/drain
+    // command) leaves them running — the whole point of draining is that
+    // admitted work finishes and delivers its replies, and this thread
+    // blocks on the writer below until the last final frame has gone out.
+    // Any other exit — clean EOF, idle close, socket error — cancels them
+    // all: nobody is left to read the replies. (This used to cancel
+    // unconditionally, which made `shutdown` abort the issuing
+    // connection's own generations mid-stream.)
+    if !matches!(outcome, Ok(true)) {
+        for (_, token) in inflight.lock().unwrap().drain() {
+            token.cancel();
+        }
     }
     // Drop our sender; the writer exits once every in-flight completion
     // has been delivered (their callbacks hold the remaining clones).
@@ -392,8 +413,9 @@ fn handle_conn(
 }
 
 /// The request id, when present and valid. Ids must be non-negative
-/// integers ≤ 2^53 (JSON numbers are f64 in this codec).
-fn parse_id(msg: &Json) -> Option<u64> {
+/// integers ≤ 2^53 (JSON numbers are f64 in this codec). Shared with
+/// the router tier, which speaks the same frames.
+pub(crate) fn parse_id(msg: &Json) -> Option<u64> {
     msg.get("id")
         .and_then(Json::as_f64)
         .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n <= 9_007_199_254_740_992.0)
@@ -405,6 +427,7 @@ fn render_metrics(batcher: &Batcher) -> Json {
     let (p50, p90, p99) = batcher.metrics.latency_percentiles();
     let worker_metrics = batcher.worker_metrics();
     let cache_blocks_total: u64 = worker_metrics.iter().map(|w| w.cache_blocks_in_use).sum();
+    let slots_total: u64 = worker_metrics.iter().map(|w| w.slots_in_use).sum();
     let workers = Json::Arr(
         worker_metrics
             .iter()
@@ -446,6 +469,10 @@ fn render_metrics(batcher: &Batcher) -> Json {
             batcher.metrics.prefix_hit_tokens.load(Ordering::Relaxed),
         )
         .set("cache_blocks_in_use", cache_blocks_total)
+        // The router tier's load signal: admission backlog plus decode
+        // slots currently held, polled on every heartbeat.
+        .set("queue_depth", batcher.queue_depth() as u64)
+        .set("slots_in_use", slots_total)
         .set("stolen", batcher.metrics.stolen.load(Ordering::Relaxed))
         .set("rejected", batcher.metrics.rejected.load(Ordering::Relaxed))
         .set("shed", batcher.metrics.shed.load(Ordering::Relaxed))
@@ -560,9 +587,20 @@ impl Client {
         self.call(&Json::obj().set("cmd", "metrics"))
     }
 
-    /// Ask the server to stop (replies `{"ok": true}` first).
+    /// Ask the server to stop (replies `{"ok": true}` first). Everything
+    /// already admitted still finishes — `shutdown` drains, it does not
+    /// abort; only *new* submissions are rejected (`"shutting down"`).
     pub fn shutdown(&mut self) -> Result<Json> {
         self.call(&Json::obj().set("cmd", "shutdown"))
+    }
+
+    /// Ask the server to drain and exit: stop admitting, finish every
+    /// in-flight sequence, deliver their replies, then stop. Today an
+    /// alias for [`Client::shutdown`] (the commands are one drain path);
+    /// the separate verb is what a router sends when decommissioning one
+    /// backend of many.
+    pub fn drain(&mut self) -> Result<Json> {
+        self.call(&Json::obj().set("cmd", "drain"))
     }
 }
 

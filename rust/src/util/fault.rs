@@ -12,20 +12,37 @@
 //! |-----------------|------------------------------------------------------------|
 //! | `panic:`        | panic the worker thread when the trigger fires (exercises the supervisor) |
 //! | `delay:`        | stall the worker thread when the trigger fires             |
+//! | `conn_drop:`    | sever the router↔backend connection when the trigger fires (exercises reconnect + failover) |
+//! | `reply_delay:`  | stall a backend reply frame in the router's pump thread    |
+//! | `backend_down:` | take the backend down permanently — sever and stop all reconnects (exercises mid-stream loss + redistribution) |
 //! | `decode_step=N` | trigger before a worker's `N`-th decode step (1-based)     |
 //! | `prefill=N`     | trigger before a worker's `N`-th prefill chunk (1-based)   |
 //! | `verify_step=N` | trigger before a worker's `N`-th speculative verify (1-based) |
+//! | `fwd=N`         | trigger before the router's `N`-th request forward to a backend (1-based) |
+//! | `reply=N`       | trigger before the router delivers a backend's `N`-th data frame (1-based) |
 //! | `worker=N`      | only engine worker `N` may fire the fault (default: any)   |
-//! | `ms=N`          | stall duration for `delay` faults (default 25 ms)          |
+//! | `backend=N`     | only backend `N` may fire the fault (router synonym for `worker=`) |
+//! | `ms=N`          | stall duration for `delay`/`reply_delay` faults (default 25 ms) |
 //!
 //! Examples: `panic:worker=1,decode_step=37` panics engine worker 1
 //! immediately before its 37th decode step; `delay:prefill=3` stalls
-//! whichever worker first reaches its third prefill chunk.
+//! whichever worker first reaches its third prefill chunk;
+//! `backend_down:backend=1,fwd=2` takes router backend 1 down permanently
+//! just before the router forwards its 2nd request to it.
+//!
+//! Kinds and triggers come in two classes that must match: the **engine**
+//! kinds (`panic`, `delay`) pair with the engine-worker triggers
+//! (`decode_step`, `prefill`, `verify_step`), and the **network** kinds
+//! (`conn_drop`, `reply_delay`, `backend_down`) pair with the router
+//! triggers (`fwd`, `reply`). A cross-class spec is rejected at parse
+//! time — a network fault keyed on an engine op would never fire and a
+//! CI leg armed with it would silently test nothing.
 //!
 //! Triggers are keyed on **op counters** — each worker's count of decode
-//! steps / prefill chunks — never on wall-clock time, so every injected
-//! failure lands at the same scheduler boundary on every run: the same
-//! determinism discipline the kernel and cache layers follow. A plan is
+//! steps / prefill chunks, each backend's count of forwards / reply
+//! frames — never on wall-clock time, so every injected failure lands at
+//! the same scheduler boundary on every run: the same determinism
+//! discipline the kernel and cache layers follow. A plan is
 //! **one-shot**: it fires exactly once per process, then disarms, so a
 //! worker respawned by the supervisor does not immediately re-fault.
 
@@ -48,6 +65,19 @@ pub enum FaultOp {
     /// is verified yet, the worst spot for speculative KV accounting,
     /// which is exactly why it is a fault point.
     VerifyStep,
+    /// One request forward from the router to a backend. The trigger
+    /// sits after the routing decision (the counters are bumped, the
+    /// request is in the router's inflight table) but before the line
+    /// is written to the backend socket — the spot where a send-side
+    /// connection loss must trip pre-first-token failover.
+    RouterFwd,
+    /// One data frame (stream delta or final reply) arriving from a
+    /// backend, counted in the router's per-backend pump thread before
+    /// the frame is delivered to the client. `conn_drop`/`backend_down`
+    /// here model a backend dying *mid-stream*, after bytes have been
+    /// promised to the client — the case that must surface
+    /// `error: "backend lost"` rather than a silent retry.
+    RouterReply,
 }
 
 impl FaultOp {
@@ -56,7 +86,15 @@ impl FaultOp {
             FaultOp::DecodeStep => "decode_step",
             FaultOp::PrefillChunk => "prefill",
             FaultOp::VerifyStep => "verify_step",
+            FaultOp::RouterFwd => "fwd",
+            FaultOp::RouterReply => "reply",
         }
+    }
+
+    /// Network-class ops are counted by the router per backend; engine
+    /// ops are counted by the batcher per worker.
+    fn is_network(self) -> bool {
+        matches!(self, FaultOp::RouterFwd | FaultOp::RouterReply)
     }
 }
 
@@ -65,14 +103,34 @@ impl FaultOp {
 pub enum FaultAction {
     /// Panic the calling worker thread with this message.
     Panic(String),
-    /// Stall the calling worker thread for this long.
+    /// Stall the calling thread for this long (engine `delay` and
+    /// router `reply_delay` faults both resolve to this action).
     Delay(Duration),
+    /// Sever the router↔backend connection. The backend stays eligible
+    /// for reconnection — this models a transient network cut.
+    DropConn,
+    /// Take the backend down permanently: sever the connection and mark
+    /// the backend `Down` so the router never reconnects. This models a
+    /// crashed or decommissioned engine process.
+    BackendDown,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum FaultKind {
     Panic,
     Delay(Duration),
+    ConnDrop,
+    ReplyDelay(Duration),
+    BackendDown,
+}
+
+impl FaultKind {
+    fn is_network(self) -> bool {
+        matches!(
+            self,
+            FaultKind::ConnDrop | FaultKind::ReplyDelay(_) | FaultKind::BackendDown
+        )
+    }
 }
 
 /// A parsed, armed fault-injection plan (see the module docs for the
@@ -84,10 +142,11 @@ pub struct FaultPlan {
     op: FaultOp,
     /// 1-based trigger count: fire before the `at`-th matching op.
     at: u64,
-    /// Restrict firing to this worker id (`None` = any worker).
+    /// Restrict firing to this worker id — or backend index, for the
+    /// network ops, which count per backend (`None` = any).
     worker: Option<usize>,
     fired: AtomicBool,
-    /// Per-worker counts of the plan's op, keyed by worker id.
+    /// Per-worker (or per-backend) counts of the plan's op.
     counters: Mutex<HashMap<usize, u64>>,
 }
 
@@ -114,17 +173,23 @@ impl FaultPlan {
                 .parse()
                 .map_err(|_| format!("bad value in {clause:?}: expected an integer"))?;
             match k.trim() {
-                "worker" => worker = Some(n as usize),
-                "decode_step" | "prefill" | "verify_step" => {
+                // `backend=` is the network-spec synonym: the router
+                // counts ops per backend index in the same slot the
+                // batcher uses for worker ids.
+                "worker" | "backend" => worker = Some(n as usize),
+                "decode_step" | "prefill" | "verify_step" | "fwd" | "reply" => {
                     if trigger.is_some() {
                         return Err(
-                            "exactly one trigger (decode_step=N, prefill=N or verify_step=N)"
+                            "exactly one trigger (decode_step=N, prefill=N, verify_step=N, \
+                             fwd=N or reply=N)"
                                 .into(),
                         );
                     }
                     let op = match k.trim() {
                         "prefill" => FaultOp::PrefillChunk,
                         "verify_step" => FaultOp::VerifyStep,
+                        "fwd" => FaultOp::RouterFwd,
+                        "reply" => FaultOp::RouterReply,
                         _ => FaultOp::DecodeStep,
                     };
                     trigger = Some((op, n));
@@ -134,7 +199,8 @@ impl FaultPlan {
             }
         }
         let (op, at) = trigger.ok_or_else(|| {
-            "spec needs a trigger: decode_step=N, prefill=N or verify_step=N".to_string()
+            "spec needs a trigger: decode_step=N, prefill=N, verify_step=N, fwd=N or reply=N"
+                .to_string()
         })?;
         if at == 0 {
             return Err("trigger counts are 1-based: use decode_step=1 for the first step".into());
@@ -142,13 +208,42 @@ impl FaultPlan {
         let kind = match kind_s.trim() {
             "panic" => {
                 if ms.is_some() {
-                    return Err("ms= only applies to delay faults".into());
+                    return Err("ms= only applies to delay/reply_delay faults".into());
                 }
                 FaultKind::Panic
             }
             "delay" => FaultKind::Delay(Duration::from_millis(ms.unwrap_or(25))),
-            other => return Err(format!("unknown fault kind {other:?} (expected panic|delay)")),
+            "conn_drop" => {
+                if ms.is_some() {
+                    return Err("ms= only applies to delay/reply_delay faults".into());
+                }
+                FaultKind::ConnDrop
+            }
+            "reply_delay" => FaultKind::ReplyDelay(Duration::from_millis(ms.unwrap_or(25))),
+            "backend_down" => {
+                if ms.is_some() {
+                    return Err("ms= only applies to delay/reply_delay faults".into());
+                }
+                FaultKind::BackendDown
+            }
+            other => {
+                return Err(format!(
+                    "unknown fault kind {other:?} \
+                     (expected panic|delay|conn_drop|reply_delay|backend_down)"
+                ))
+            }
         };
+        if kind.is_network() != op.is_network() {
+            return Err(format!(
+                "kind {kind_s:?} pairs with {} triggers ({})",
+                if kind.is_network() { "network" } else { "engine" },
+                if kind.is_network() {
+                    "fwd=N or reply=N"
+                } else {
+                    "decode_step=N, prefill=N or verify_step=N"
+                }
+            ));
+        }
         Ok(FaultPlan {
             kind,
             op,
@@ -208,7 +303,9 @@ impl FaultPlan {
                 self.op.name(),
                 self.at
             )),
-            FaultKind::Delay(d) => FaultAction::Delay(d),
+            FaultKind::Delay(d) | FaultKind::ReplyDelay(d) => FaultAction::Delay(d),
+            FaultKind::ConnDrop => FaultAction::DropConn,
+            FaultKind::BackendDown => FaultAction::BackendDown,
         })
     }
 
@@ -240,6 +337,69 @@ mod tests {
         assert_eq!(v.op, FaultOp::VerifyStep);
         assert_eq!(v.at, 2);
         assert_eq!(v.worker, Some(0));
+    }
+
+    #[test]
+    fn parses_the_network_kinds() {
+        let p = FaultPlan::parse("backend_down:backend=1,fwd=2").unwrap();
+        assert_eq!(p.op, FaultOp::RouterFwd);
+        assert_eq!(p.at, 2);
+        assert_eq!(p.worker, Some(1));
+        assert_eq!(p.kind, FaultKind::BackendDown);
+        let p = FaultPlan::parse("conn_drop:reply=3").unwrap();
+        assert_eq!(p.op, FaultOp::RouterReply);
+        assert_eq!(p.at, 3);
+        assert_eq!(p.worker, None);
+        assert_eq!(p.kind, FaultKind::ConnDrop);
+        let p = FaultPlan::parse("reply_delay:reply=1,ms=40,backend=0").unwrap();
+        assert_eq!(p.kind, FaultKind::ReplyDelay(Duration::from_millis(40)));
+        assert_eq!(p.worker, Some(0));
+        // `worker=` parses as a synonym on network specs too.
+        let p = FaultPlan::parse("conn_drop:worker=1,fwd=1").unwrap();
+        assert_eq!(p.worker, Some(1));
+    }
+
+    #[test]
+    fn rejects_cross_class_kind_trigger_pairs() {
+        for bad in [
+            // Engine kinds never key on network triggers...
+            "panic:fwd=1",
+            "delay:reply=2",
+            // ...and network kinds never key on engine ops.
+            "conn_drop:decode_step=1",
+            "backend_down:prefill=2",
+            "reply_delay:verify_step=1",
+            // Only the delaying kinds take a duration.
+            "conn_drop:fwd=1,ms=5",
+            "backend_down:fwd=1,ms=5",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec {bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn network_ops_count_per_backend_and_fire_once() {
+        let p = FaultPlan::parse("backend_down:backend=1,fwd=2").unwrap();
+        // Forwards to backend 0 never advance backend 1's count, and
+        // reply frames never advance the fwd count.
+        for _ in 0..4 {
+            assert_eq!(p.check(FaultOp::RouterFwd, 0), None);
+        }
+        assert_eq!(p.check(FaultOp::RouterReply, 1), None);
+        assert_eq!(p.check(FaultOp::RouterFwd, 1), None); // fwd 1
+        assert_eq!(
+            p.check(FaultOp::RouterFwd, 1), // fwd 2: fire
+            Some(FaultAction::BackendDown)
+        );
+        assert!(p.fired());
+        assert_eq!(p.check(FaultOp::RouterFwd, 1), None, "one-shot");
+        let d = FaultPlan::parse("reply_delay:reply=1,ms=7").unwrap();
+        assert_eq!(
+            d.check(FaultOp::RouterReply, 0),
+            Some(FaultAction::Delay(Duration::from_millis(7)))
+        );
+        let c = FaultPlan::parse("conn_drop:reply=1").unwrap();
+        assert_eq!(c.check(FaultOp::RouterReply, 2), Some(FaultAction::DropConn));
     }
 
     #[test]

@@ -1,0 +1,606 @@
+//! Router-tier integration: two real engine backends behind the router,
+//! under cache-aware routing, injected network faults, failover and
+//! graceful drain.
+//!
+//! Every failure is **deterministic**: network faults key on per-backend
+//! op counters ([`FaultPlan`] kinds `conn_drop` / `backend_down` over
+//! the `fwd` / `reply` ops, never wall-clock), the silent-backend test
+//! uses a listener that accepts and never answers, and byte-identity is
+//! always asserted against the single-backend sequential oracle —
+//! greedy decode is deterministic, so any healthy placement (hash
+//! owner, spill target, or failover target) must produce the same
+//! bytes. The acceptance bar (ISSUE 9): under a mid-run `backend_down`,
+//! every request either completes byte-identical to the oracle or gets
+//! an explicit clean error, the router's inflight table drains to zero,
+//! and the surviving backend's KV gauges return exactly to baseline.
+//!
+//! CI runs this file twice: once in the ordinary matrix (each test arms
+//! its own explicit [`Router::with_fault`] plan) and once in the
+//! router-fault leg with `SALR_FAULT=backend_down:backend=0,reply=3`,
+//! where [`router_chaos_under_env_fault_spec`] additionally goes
+//! through the production `Router::new` → env-parsing path.
+
+use salr::data::{detokenize, tokenize};
+use salr::infer::{Backend, Engine, EngineWeights};
+use salr::model::ParamStore;
+use salr::runtime::ModelCfg;
+use salr::server::{serve_on, serve_router_on, BatchPolicy, Batcher, Client, Router, RouterPolicy};
+use salr::util::fault::FaultPlan;
+use salr::util::json::Json;
+use salr::util::rng::Rng;
+use std::net::SocketAddr;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn test_engine() -> Engine {
+    let cfg = ModelCfg {
+        name: "router-e2e".into(),
+        vocab_size: 64,
+        d_model: 32,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq_len: 96,
+        rank: 4,
+        lora_alpha: 8.0,
+        residual_rank: 4,
+        batch_size: 2,
+        ctx_keep: 0.5,
+    };
+    let mut rng = Rng::new(500);
+    let base = ParamStore::init_base(&cfg, &mut rng);
+    Engine::new(EngineWeights::dense_merged(&cfg, &base, None), Backend::Dense)
+}
+
+/// The fault-free single-backend reference bytes for one prompt.
+fn oracle(engine: &Engine, prompt: &str, max_tokens: usize) -> String {
+    let out = engine.generate_batch(&[tokenize(prompt)], max_tokens);
+    detokenize(&out[0])
+}
+
+fn plan(spec: &str) -> Option<FaultPlan> {
+    Some(FaultPlan::parse(spec).expect("test fault spec"))
+}
+
+/// Spin until `cond` holds (heartbeats, drains and gauge publication
+/// all land a hair after the reply frames they follow).
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Engine policy shared by every backend in this file: prefix cache off
+/// so the KV-gauge baseline is exactly zero.
+fn backend_policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 4,
+        engine_workers: 1,
+        prefill_chunk: 4,
+        prefix_cache: false,
+        ..Default::default()
+    }
+}
+
+/// One real engine backend on a private port, fault-free (router tests
+/// inject faults at the router, never in the engines).
+fn start_backend(engine: Engine) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let batcher = Batcher::with_fault(backend_policy(), None);
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        serve_on(engine, "127.0.0.1:0", batcher, Some(tx)).expect("backend serve");
+    });
+    (rx.recv().expect("backend ready"), handle)
+}
+
+/// Fast heartbeat, spill effectively off: placement in these tests is
+/// decided by the hash ring (and faults), never by load.
+fn router_policy() -> RouterPolicy {
+    RouterPolicy {
+        heartbeat_ms: 20,
+        spill_depth: 1_000,
+        ..RouterPolicy::default()
+    }
+}
+
+fn start_router(router: &Arc<Router>) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let r = router.clone();
+    let handle = std::thread::spawn(move || {
+        serve_router_on(r, "127.0.0.1:0", Some(tx)).expect("router serve");
+    });
+    (rx.recv().expect("router ready"), handle)
+}
+
+fn router_over(
+    addrs: &[SocketAddr],
+    policy: RouterPolicy,
+    fault: Option<FaultPlan>,
+) -> Arc<Router> {
+    let strs: Vec<String> = addrs.iter().map(|a| a.to_string()).collect();
+    Router::with_fault(&strs, policy, fault)
+}
+
+/// One backend's object out of the router's metrics reply.
+fn backend_obj(m: &Json, index: usize) -> Json {
+    m.get("backends").and_then(Json::as_arr).expect("backends array")[index].clone()
+}
+
+fn backend_state(m: &Json, index: usize) -> String {
+    backend_obj(m, index)
+        .get("backend_state")
+        .and_then(Json::as_str)
+        .expect("backend_state")
+        .to_string()
+}
+
+fn wait_all_healthy(router_addr: SocketAddr, n: usize) {
+    let mut probe = Client::connect(&router_addr.to_string()).unwrap();
+    wait_until("all backends healthy", || {
+        let m = probe.metrics().unwrap();
+        (0..n).all(|i| backend_state(&m, i) == "healthy")
+    });
+}
+
+/// A prompt whose consistent-hash ring owner is backend `owner`.
+fn prompt_owned_by(router: &Router, owner: usize, tag: &str) -> String {
+    for i in 0..10_000 {
+        let p = format!("Q: {tag}{i}+2=? A: ");
+        if router.owner_of_prompt(&p) == owner {
+            return p;
+        }
+    }
+    panic!("no prompt found with owner {owner}");
+}
+
+fn stop_backend(addr: SocketAddr, handle: std::thread::JoinHandle<()>) {
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+fn stop_router(addr: SocketAddr, handle: std::thread::JoinHandle<()>) {
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// The routing acceptance bar: two backends behind the router serve a
+/// pipelined mixed-owner load with every response byte-identical to the
+/// single-backend sequential oracle, every forward accounted as either
+/// hash-routed or spilled, and the inflight table empty afterwards.
+#[test]
+fn two_backend_routing_is_byte_identical_to_sequential_oracle() {
+    let engine = test_engine();
+    let (a0, h0) = start_backend(engine.fork());
+    let (a1, h1) = start_backend(engine.fork());
+    // Low spill depth on purpose: the concurrent burst pushes owners
+    // over it, so both placement rules run — bytes must not care.
+    let policy = RouterPolicy { spill_depth: 4, ..router_policy() };
+    let router = router_over(&[a0, a1], policy, None);
+    let (ra, rh) = start_router(&router);
+    wait_all_healthy(ra, 2);
+
+    let prompts: Vec<String> = (0..6usize)
+        .map(|i| prompt_owned_by(&router, i % 2, &format!("mix{i}")))
+        .collect();
+    let want: Vec<String> = prompts.iter().map(|p| oracle(&engine, p, 10)).collect();
+
+    let mut c = Client::connect(&ra.to_string()).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        c.send(
+            &Json::obj()
+                .set("id", i as u64)
+                .set("prompt", p.as_str())
+                .set("max_tokens", 10u64),
+        )
+        .unwrap();
+    }
+    for _ in 0..prompts.len() {
+        let r = c.recv().unwrap();
+        assert!(r.get("error").is_none(), "routed request failed: {r:?}");
+        let id = r.get("id").and_then(Json::as_usize).expect("reply id");
+        assert_eq!(
+            r.get("text").and_then(Json::as_str),
+            Some(want[id].as_str()),
+            "request {id} must match the sequential oracle"
+        );
+    }
+
+    let m = c.metrics().unwrap();
+    let routed = m.get("routed").and_then(Json::as_usize).unwrap();
+    let hash_routed = m.get("hash_routed").and_then(Json::as_usize).unwrap();
+    let spilled = m.get("spilled").and_then(Json::as_usize).unwrap();
+    assert_eq!(routed, prompts.len());
+    assert_eq!(hash_routed + spilled, routed, "every forward is one rule or the other");
+    assert_eq!(m.get("failovers").and_then(Json::as_usize), Some(0));
+    assert_eq!(m.get("inflight").and_then(Json::as_usize), Some(0));
+
+    drop(c);
+    stop_router(ra, rh);
+    stop_backend(a0, h0);
+    stop_backend(a1, h1);
+}
+
+/// A backend killed mid-stream (after its first delivered delta) must
+/// produce a clean `{"error":"backend lost","done":true}` final — never
+/// a replayed retry, never silence — leave the router's inflight table
+/// empty, keep its hash range served by the survivor, and leave *both*
+/// engines' KV gauges exactly at the zero baseline (the dead link
+/// cancels the orphaned sequence in the still-running engine process).
+#[test]
+fn mid_stream_backend_down_is_clean_error_with_gauges_at_baseline() {
+    let engine = test_engine();
+    let (a0, h0) = start_backend(engine.fork());
+    let (a1, h1) = start_backend(engine.fork());
+    // Kill backend 0's connection before its 2nd delivered data frame:
+    // exactly one delta reaches the client first.
+    let router = router_over(&[a0, a1], router_policy(), plan("backend_down:backend=0,reply=2"));
+    let (ra, rh) = start_router(&router);
+    wait_all_healthy(ra, 2);
+    let p0 = prompt_owned_by(&router, 0, "doomed");
+    let p1 = prompt_owned_by(&router, 1, "fine");
+
+    let mut c = Client::connect(&ra.to_string()).unwrap();
+    c.send(
+        &Json::obj()
+            .set("id", 7u64)
+            .set("prompt", p0.as_str())
+            .set("max_tokens", 8u64)
+            .set("stream", true),
+    )
+    .unwrap();
+    let mut deltas = 0;
+    let fin = loop {
+        let f = c.recv().unwrap();
+        if f.get("done").and_then(Json::as_bool) == Some(true) {
+            break f;
+        }
+        assert!(f.get("delta").is_some(), "unexpected frame: {f:?}");
+        deltas += 1;
+    };
+    assert_eq!(deltas, 1, "exactly one delta precedes the injected death");
+    assert_eq!(fin.get("error").and_then(Json::as_str), Some("backend lost"));
+    assert_eq!(fin.get("id").and_then(Json::as_usize), Some(7));
+
+    // No orphaned router state, and the loss is observable.
+    let mut probe = Client::connect(&ra.to_string()).unwrap();
+    wait_until("backend 0 marked down", || {
+        backend_state(&probe.metrics().unwrap(), 0) == "down"
+    });
+    let m = probe.metrics().unwrap();
+    assert_eq!(m.get("inflight").and_then(Json::as_usize), Some(0));
+    assert_eq!(backend_state(&m, 1), "healthy");
+
+    // The dead backend's range redistributes: both prompts keep serving
+    // through the router, byte-identical.
+    let r = c.generate(&p0, 8).unwrap();
+    assert_eq!(r.get("text").and_then(Json::as_str), Some(oracle(&engine, &p0, 8).as_str()));
+    let r = c.generate(&p1, 8).unwrap();
+    assert_eq!(r.get("text").and_then(Json::as_str), Some(oracle(&engine, &p1, 8).as_str()));
+
+    // Both engine processes are still running; the severed connection
+    // cancelled backend 0's orphaned sequence. Gauges return to the
+    // prefix-cache-off baseline: exactly zero.
+    for (name, addr) in [("killed", a0), ("surviving", a1)] {
+        let mut direct = Client::connect(&addr.to_string()).unwrap();
+        wait_until("engine gauges at baseline", || {
+            let m = direct.metrics().unwrap();
+            m.get("slots_in_use").and_then(Json::as_usize) == Some(0)
+                && m.get("cache_blocks_in_use").and_then(Json::as_usize) == Some(0)
+        });
+        let m = direct.metrics().unwrap();
+        assert_eq!(
+            m.get("queue_depth").and_then(Json::as_usize),
+            Some(0),
+            "{name} backend admission queue must be empty"
+        );
+    }
+
+    drop(c);
+    drop(probe);
+    stop_router(ra, rh);
+    stop_backend(a0, h0);
+    stop_backend(a1, h1);
+}
+
+/// A connection that dies before the request's first streamed token is
+/// retried exactly once on another healthy backend and the client sees
+/// bytes identical to the oracle — the failover is unobservable. The
+/// dropped backend then reconnects and reintegrates (probe-gated), and
+/// its hash range returns to it.
+#[test]
+fn pre_first_token_failover_is_byte_identical_then_backend_reintegrates() {
+    let engine = test_engine();
+    let (a0, h0) = start_backend(engine.fork());
+    let (a1, h1) = start_backend(engine.fork());
+    // Drop backend 0's connection at the 1st forward: the write fails
+    // before any frame flows, so the request redispatches unstarted.
+    let router = router_over(&[a0, a1], router_policy(), plan("conn_drop:backend=0,fwd=1"));
+    let (ra, rh) = start_router(&router);
+    wait_all_healthy(ra, 2);
+    let p0 = prompt_owned_by(&router, 0, "flaky");
+    let want = oracle(&engine, &p0, 10);
+
+    let mut c = Client::connect(&ra.to_string()).unwrap();
+    let r = c.generate(&p0, 10).unwrap();
+    assert!(r.get("error").is_none(), "failover must be transparent: {r:?}");
+    assert_eq!(r.get("text").and_then(Json::as_str), Some(want.as_str()));
+
+    let m = c.metrics().unwrap();
+    assert_eq!(m.get("failovers").and_then(Json::as_usize), Some(1));
+    assert_eq!(
+        backend_obj(&m, 0).get("failovers").and_then(Json::as_usize),
+        Some(1),
+        "the failover is charged to the backend that lost the request"
+    );
+    assert_eq!(m.get("inflight").and_then(Json::as_usize), Some(0));
+
+    // Unhealthy → reconnect → probe → healthy, all on the heartbeat.
+    let mut probe = Client::connect(&ra.to_string()).unwrap();
+    wait_until("backend 0 reintegration", || {
+        backend_state(&probe.metrics().unwrap(), 0) == "healthy"
+    });
+    let before = backend_obj(&probe.metrics().unwrap(), 0)
+        .get("hash_routed")
+        .and_then(Json::as_usize)
+        .unwrap();
+    let r = c.generate(&p0, 10).unwrap();
+    assert_eq!(r.get("text").and_then(Json::as_str), Some(want.as_str()));
+    let after = backend_obj(&probe.metrics().unwrap(), 0)
+        .get("hash_routed")
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert_eq!(after, before + 1, "the reintegrated owner takes its range back");
+
+    drop(c);
+    drop(probe);
+    stop_router(ra, rh);
+    stop_backend(a0, h0);
+    stop_backend(a1, h1);
+}
+
+/// Graceful drain under pipelined load: `{"cmd":"drain","backend":0}`
+/// racing a 12-request burst loses nothing — every reply arrives
+/// byte-identical (finished on the draining backend, or shed there with
+/// `"shutting down"` and transparently re-dispatched), the drained
+/// backend's process exits, and its hash range moves to the survivor.
+#[test]
+fn drain_under_load_loses_zero_requests() {
+    let engine = test_engine();
+    let (a0, h0) = start_backend(engine.fork());
+    let (a1, h1) = start_backend(engine.fork());
+    let policy = RouterPolicy { heartbeat_ms: 10, ..router_policy() };
+    let router = router_over(&[a0, a1], policy, None);
+    let (ra, rh) = start_router(&router);
+    wait_all_healthy(ra, 2);
+
+    let prompts: Vec<String> = (0..12usize)
+        .map(|i| prompt_owned_by(&router, i % 2, &format!("drain{i}")))
+        .collect();
+    let want: Vec<String> = prompts.iter().map(|p| oracle(&engine, p, 8)).collect();
+
+    let mut c = Client::connect(&ra.to_string()).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        c.send(
+            &Json::obj()
+                .set("id", i as u64)
+                .set("prompt", p.as_str())
+                .set("max_tokens", 8u64),
+        )
+        .unwrap();
+    }
+    // Drain backend 0 from a second connection while the burst is in
+    // flight — requests race the drain on every path there is.
+    let mut admin = Client::connect(&ra.to_string()).unwrap();
+    let ack = admin
+        .call(&Json::obj().set("cmd", "drain").set("backend", 0u64))
+        .unwrap();
+    assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true));
+
+    for _ in 0..prompts.len() {
+        let r = c.recv().unwrap();
+        assert!(r.get("error").is_none(), "drain dropped a request: {r:?}");
+        let id = r.get("id").and_then(Json::as_usize).expect("reply id");
+        assert_eq!(
+            r.get("text").and_then(Json::as_str),
+            Some(want[id].as_str()),
+            "request {id} must survive the drain byte-identically"
+        );
+    }
+
+    // The drained backend finishes, exits, and is retired for good.
+    wait_until("backend 0 drained down", || {
+        backend_state(&admin.metrics().unwrap(), 0) == "down"
+    });
+    h0.join().unwrap();
+    let m = admin.metrics().unwrap();
+    assert_eq!(m.get("inflight").and_then(Json::as_usize), Some(0));
+
+    // Its hash range now lands on the survivor.
+    let p0 = prompt_owned_by(&router, 0, "after");
+    let r = c.generate(&p0, 8).unwrap();
+    assert!(r.get("error").is_none(), "post-drain request failed: {r:?}");
+    assert_eq!(r.get("text").and_then(Json::as_str), Some(oracle(&engine, &p0, 8).as_str()));
+
+    // Draining again (or an unknown index) is refused, not repeated.
+    let ack = admin
+        .call(&Json::obj().set("cmd", "drain").set("backend", 0u64))
+        .unwrap();
+    assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(false));
+    let ack = admin
+        .call(&Json::obj().set("cmd", "drain").set("backend", 9u64))
+        .unwrap();
+    assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(false));
+
+    drop(c);
+    drop(admin);
+    stop_router(ra, rh);
+    stop_backend(a1, h1);
+}
+
+/// The health checker alone: a backend that accepts TCP but never
+/// answers a probe is marked unhealthy after `miss_threshold` beats
+/// (`missed_heartbeats` counts them) and its hash range redistributes —
+/// reintegration is probe-gated, so a connectable-but-silent backend
+/// never becomes routable.
+#[test]
+fn silent_backend_is_marked_unhealthy_and_its_range_redistributes() {
+    let engine = test_engine();
+    let (a0, h0) = start_backend(engine.fork());
+    // Backend 1 accepts connections and then says nothing, forever.
+    let silent = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let a1 = silent.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let mut held = Vec::new();
+        for s in silent.incoming() {
+            match s {
+                Ok(s) => held.push(s),
+                Err(_) => break,
+            }
+        }
+    });
+    let policy = RouterPolicy { miss_threshold: 2, ..router_policy() };
+    let router = router_over(&[a0, a1], policy, None);
+    let (ra, rh) = start_router(&router);
+
+    let mut probe = Client::connect(&ra.to_string()).unwrap();
+    wait_until("backend 0 healthy, backend 1 unhealthy with misses", || {
+        let m = probe.metrics().unwrap();
+        backend_state(&m, 0) == "healthy"
+            && backend_state(&m, 1) == "unhealthy"
+            && backend_obj(&m, 1)
+                .get("missed_heartbeats")
+                .and_then(Json::as_usize)
+                .unwrap_or(0)
+                >= 2
+    });
+
+    // Prompts owned by the silent backend serve on the healthy one.
+    let p1 = prompt_owned_by(&router, 1, "silent");
+    let mut c = Client::connect(&ra.to_string()).unwrap();
+    let r = c.generate(&p1, 8).unwrap();
+    assert!(r.get("error").is_none(), "redistributed request failed: {r:?}");
+    assert_eq!(r.get("text").and_then(Json::as_str), Some(oracle(&engine, &p1, 8).as_str()));
+    let m = probe.metrics().unwrap();
+    assert!(
+        backend_obj(&m, 0).get("hash_routed").and_then(Json::as_usize).unwrap() >= 1,
+        "the silent backend's range is hash-routed to the survivor"
+    );
+    assert_eq!(
+        backend_obj(&m, 1).get("routed").and_then(Json::as_usize),
+        Some(0),
+        "a never-probed backend never receives a request"
+    );
+
+    drop(c);
+    drop(probe);
+    stop_router(ra, rh);
+    stop_backend(a0, h0);
+}
+
+/// The chaos acceptance bar over TCP with the CI router-fault leg's
+/// spec (`backend_down:backend=0,reply=3`): under a pipelined mixed
+/// stream/non-stream load, killing backend 0 before its 3rd delivered
+/// frame, **every** request ends in exactly one final that is either
+/// byte-identical to the sequential oracle (unstarted requests fail
+/// over exactly) or the explicit `"backend lost"` error (started ones)
+/// — zero silent drops, inflight table empty, surviving engine's gauges
+/// exactly at baseline. When `SALR_FAULT` carries this exact spec (the
+/// CI leg) the test goes through the production `Router::new` env path;
+/// otherwise it arms the identical plan explicitly.
+#[test]
+fn router_chaos_under_env_fault_spec() {
+    const SPEC: &str = "backend_down:backend=0,reply=3";
+    let engine = test_engine();
+    let (a0, h0) = start_backend(engine.fork());
+    let (a1, h1) = start_backend(engine.fork());
+    let env_armed = std::env::var("SALR_FAULT")
+        .map(|s| s.trim() == SPEC)
+        .unwrap_or(false);
+    let addrs = [a0.to_string(), a1.to_string()];
+    let router = if env_armed {
+        Router::new(&addrs, router_policy())
+    } else {
+        Router::with_fault(&addrs, router_policy(), plan(SPEC))
+    };
+    let (ra, rh) = start_router(&router);
+    wait_all_healthy(ra, 2);
+
+    // Four streamed requests owned by the doomed backend, two plain
+    // ones owned by the survivor.
+    let prompts: Vec<(String, bool)> = (0..6usize)
+        .map(|i| (prompt_owned_by(&router, usize::from(i >= 4), &format!("chaos{i}")), i < 4))
+        .collect();
+    let want: Vec<String> = prompts.iter().map(|(p, _)| oracle(&engine, p, 6)).collect();
+
+    let mut c = Client::connect(&ra.to_string()).unwrap();
+    for (i, (p, stream)) in prompts.iter().enumerate() {
+        let mut msg = Json::obj()
+            .set("id", i as u64)
+            .set("prompt", p.as_str())
+            .set("max_tokens", 6u64);
+        if *stream {
+            msg = msg.set("stream", true);
+        }
+        c.send(&msg).unwrap();
+    }
+    let mut finals: Vec<Option<Json>> = vec![None; prompts.len()];
+    while finals.iter().any(Option::is_none) {
+        let f = c.recv().unwrap();
+        let id = f.get("id").and_then(Json::as_usize).expect("frame id");
+        if f.get("delta").is_some() {
+            continue;
+        }
+        assert!(finals[id].is_none(), "request {id} got two finals");
+        finals[id] = Some(f);
+    }
+    let mut lost = 0;
+    for (id, f) in finals.iter().enumerate() {
+        let f = f.as_ref().unwrap();
+        match f.get("error").and_then(Json::as_str) {
+            None => assert_eq!(
+                f.get("text").and_then(Json::as_str),
+                Some(want[id].as_str()),
+                "completed request {id} must match the sequential oracle"
+            ),
+            Some("backend lost") => lost += 1,
+            Some(e) => panic!("request {id}: unexpected error {e:?}"),
+        }
+    }
+    // Frames 1–2 delivered before the injected death started at least
+    // one request; everything else either finished or failed over.
+    assert!(lost >= 1, "the injected death must be observed mid-stream");
+    assert!(lost <= 4, "only the doomed backend's streams may be lost");
+
+    let mut probe = Client::connect(&ra.to_string()).unwrap();
+    wait_until("backend 0 down after injected death", || {
+        backend_state(&probe.metrics().unwrap(), 0) == "down"
+    });
+    let m = probe.metrics().unwrap();
+    assert_eq!(m.get("inflight").and_then(Json::as_usize), Some(0), "no orphaned state");
+    assert_eq!(backend_state(&m, 1), "healthy");
+
+    // The whole hash range keeps serving, byte-identical, and the
+    // surviving engine's gauges return exactly to baseline.
+    for (p, _) in &prompts {
+        let r = c.generate(p, 6).unwrap();
+        assert_eq!(r.get("text").and_then(Json::as_str), Some(oracle(&engine, p, 6).as_str()));
+    }
+    let mut direct = Client::connect(&a1.to_string()).unwrap();
+    wait_until("surviving gauges at baseline", || {
+        let m = direct.metrics().unwrap();
+        m.get("slots_in_use").and_then(Json::as_usize) == Some(0)
+            && m.get("cache_blocks_in_use").and_then(Json::as_usize) == Some(0)
+            && m.get("queue_depth").and_then(Json::as_usize) == Some(0)
+    });
+
+    drop(c);
+    drop(probe);
+    drop(direct);
+    stop_router(ra, rh);
+    stop_backend(a0, h0);
+    stop_backend(a1, h1);
+}
