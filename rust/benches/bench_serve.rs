@@ -10,7 +10,10 @@
 //! prefill work is visible, and a **speculative workload** (repeat
 //! traffic, cache on) with `--spec-decode` off / radix / self,
 //! reporting tokens/s plus `drafted_tokens` / `accepted_tokens` /
-//! `spec_rollbacks` — and finally a **router workload** (the same load
+//! `spec_rollbacks` — then a **tracing workload** (the uniform 2-worker
+//! load with span recording off vs on, reporting the tokens/s delta and
+//! `trace_dropped`, so the observability layer's overhead is a measured
+//! number) — and finally a **router workload** (the same load
 //! pushed over TCP through the router tier fronting two real engine
 //! backends), once healthy and once with one backend killed mid-run by
 //! an injected `backend_down` fault, reporting tokens/s plus the
@@ -490,6 +493,25 @@ fn main() {
         faults.accumulate(r.faults);
         spec_rows.push(r);
     }
+    println!("\n# tracing workload: {clients} clients x {reqs} reqs, 2 workers, span recording off vs on");
+    let mut trace_rows = Vec::new();
+    for traced in [false, true] {
+        salr::util::trace::set_enabled(traced);
+        let r = run_load(&template, 2, clients, reqs);
+        println!(
+            "trace={:<5} {:>8.1} tok/s  p50 {:>7.1} ms  p99 {:>7.1} ms  trace_dropped {:>6}",
+            traced,
+            r.tokens as f64 / r.wall_s,
+            r.p50_ms,
+            r.p99_ms,
+            salr::util::trace::dropped(),
+        );
+        faults.accumulate(r.faults);
+        trace_rows.push((traced, r));
+    }
+    // Off again so the router rows below measure untraced serving.
+    salr::util::trace::set_enabled(false);
+
     println!("\n# router workload: {clients} clients x {reqs} reqs over TCP, 2 backends x 1 worker");
     let mut router_rows = Vec::new();
     for degraded in [false, true] {
@@ -546,6 +568,16 @@ fn main() {
                 .set("drafted_tokens", r.drafted)
                 .set("accepted_tokens", r.accepted)
                 .set("spec_rollbacks", r.rollbacks)
+                .set("wall_s", r.wall_s)
+        }));
+        result_rows.extend(trace_rows.iter().map(|(traced, r)| {
+            Json::obj()
+                .set("mode", "traced")
+                .set("engine_workers", 2usize)
+                .set("trace", *traced)
+                .set("tokens_per_sec", r.tokens as f64 / r.wall_s)
+                .set("latency_p50_ms", r.p50_ms)
+                .set("latency_p99_ms", r.p99_ms)
                 .set("wall_s", r.wall_s)
         }));
         result_rows.extend(router_rows.iter().map(|r| {

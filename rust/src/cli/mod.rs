@@ -155,6 +155,24 @@ SERVE FLAGS:
   --spec-k N          max draft tokens verified per sequence per decode
                       iteration (default 4)
 
+OBSERVABILITY FLAGS (serve + router):
+  --trace-out FILE    enable request tracing and dump a Chrome
+                      trace_event JSON (load in chrome://tracing or
+                      Perfetto) to FILE at drain/shutdown. SALR_TRACE=1
+                      enables tracing without the file dump;
+                      SALR_TRACE_RING sets the per-thread span ring
+                      capacity (default 4096 events, oldest overwritten).
+                      Traced requests carry a \"trace\" id on their final
+                      frame; {\"cmd\":\"trace\",\"id\":T} returns that
+                      request's span tree (admit -> prefill_chunk ->
+                      decode_step -> retire, with gemm_call/pack_b kernel
+                      spans nested), stitched across router and backend.
+                      {\"cmd\":\"metrics\"} additionally reports log2
+                      latency histograms (\"hist\"), per-stage span totals
+                      (\"stages\") and the overwrite counter
+                      (\"trace_dropped\"). Tracing never changes output
+                      bytes; disabled sites cost one atomic load.
+
 ROUTER FLAGS:
   --backends LIST     comma-separated backend addresses (required); each
                       is a running `salr serve` process

@@ -25,6 +25,7 @@ use crate::quant::SparseNf4Matrix;
 use crate::sparse::BitmapMatrix;
 use crate::util::arena::{scratch_raw, scratch_undef};
 use crate::util::pool::{SendPtr, WorkerPool};
+use crate::util::trace::{self, TraceKind};
 
 /// Outer cache blocking: M rows per L2 block.
 pub const MC: usize = 64;
@@ -106,6 +107,32 @@ pub fn gemm_f32_acc_pool_with_kernel(
     pool: &WorkerPool,
     kern: Kernel,
 ) {
+    // One `gemm_call` span per entry call (never per band), attributed to
+    // the caller's active trace id. Disabled cost: one relaxed load.
+    if !trace::enabled() {
+        return gemm_f32_acc_inner(a, b, c, m, k, n, pool, kern);
+    }
+    let t0 = trace::now_us();
+    gemm_f32_acc_inner(a, b, c, m, k, n, pool, kern);
+    trace::record_span(
+        TraceKind::GemmCall,
+        trace::current_trace(),
+        t0,
+        (m * n * k) as u64,
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_f32_acc_inner(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &WorkerPool,
+    kern: Kernel,
+) {
     assert!(a.len() >= m * k, "A too small");
     assert!(b.len() >= k * n, "B too small");
     assert!(c.len() >= m * n, "C too small");
@@ -123,6 +150,10 @@ pub fn gemm_f32_acc_pool_with_kernel(
     if bands == 1 || pool.threads() == 1 {
         return gemm_band_acc(a, &src, c, m, k, n, kern);
     }
+    // Pool workers have their own (empty) trace context; carry the
+    // caller's id across the fan-out so band-level `pack_b` spans still
+    // attribute to the request that triggered them.
+    let tid = trace::current_trace();
     let cptr = SendPtr(c.as_mut_ptr());
     pool.run(bands, &|bi| {
         let r0 = bi * BAND;
@@ -131,7 +162,7 @@ pub fn gemm_f32_acc_pool_with_kernel(
         // SAFETY: band `bi` exclusively owns C rows [r0, r1) (and only
         // reads the matching A rows), so bands race on nothing.
         let band_c = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), rows * n) };
-        gemm_band_acc(&a[r0 * k..], &src, band_c, rows, k, n, kern);
+        trace::with_trace(tid, || gemm_band_acc(&a[r0 * k..], &src, band_c, rows, k, n, kern));
     });
 }
 
@@ -416,6 +447,24 @@ pub fn gemm_src_acc_pool_with_kernel<S: PackB + ?Sized>(
     pool: &WorkerPool,
     kern: Kernel,
 ) {
+    // Same one-span-per-entry discipline as the dense path.
+    if !trace::enabled() {
+        return gemm_src_acc_inner(a, src, c, m, pool, kern);
+    }
+    let t0 = trace::now_us();
+    let macs = (m * src.k_rows() * src.n_cols()) as u64;
+    gemm_src_acc_inner(a, src, c, m, pool, kern);
+    trace::record_span(TraceKind::GemmCall, trace::current_trace(), t0, macs);
+}
+
+fn gemm_src_acc_inner<S: PackB + ?Sized>(
+    a: &[f32],
+    src: &S,
+    c: &mut [f32],
+    m: usize,
+    pool: &WorkerPool,
+    kern: Kernel,
+) {
     let k = src.k_rows();
     let n = src.n_cols();
     assert!(a.len() >= m * k, "A too small");
@@ -435,6 +484,9 @@ pub fn gemm_src_acc_pool_with_kernel<S: PackB + ?Sized>(
     if bands == 1 || pool.threads() == 1 {
         return gemm_band_acc(a, src, c, m, k, n, kern);
     }
+    // Carry the caller's trace id across the pool fan-out (see the dense
+    // path).
+    let tid = trace::current_trace();
     let cptr = SendPtr(c.as_mut_ptr());
     pool.run(bands, &|bi| {
         let r0 = bi * BAND;
@@ -443,7 +495,7 @@ pub fn gemm_src_acc_pool_with_kernel<S: PackB + ?Sized>(
         // SAFETY: band `bi` exclusively owns C rows [r0, r1) (and only
         // reads the matching A rows), so bands race on nothing.
         let band_c = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), rows * n) };
-        gemm_band_acc(&a[r0 * k..], src, band_c, rows, k, n, kern);
+        trace::with_trace(tid, || gemm_band_acc(&a[r0 * k..], src, band_c, rows, k, n, kern));
     });
 }
 
@@ -470,7 +522,16 @@ fn gemm_band_acc<S: PackB + ?Sized>(
         let nb = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
             let kb = KC.min(k - pc);
+            let t0 = if trace::enabled() { trace::now_us() } else { 0 };
             src.pack_b_panels(&mut packed_b, pc, jc, kb, nb);
+            if trace::enabled() {
+                trace::record_span(
+                    TraceKind::PackB,
+                    trace::current_trace(),
+                    t0,
+                    (kb * nb) as u64,
+                );
+            }
             for ic in (0..m).step_by(MC) {
                 let mb = MC.min(m - ic);
                 pack_a_panels(a, &mut packed_a, k, ic, pc, mb, kb);

@@ -28,6 +28,7 @@ use crate::gemm::dense::PackB;
 use crate::gemm::sparse::{addmul_stripe, panel_acc, panel_acc_stripe};
 use crate::util::arena;
 use crate::util::pool::{SendPtr, WorkerPool};
+use crate::util::trace::{self, TraceKind};
 use crossbeam_utils::CachePadded;
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -183,7 +184,18 @@ fn decode_role<S: PackB + ?Sized>(
         // held (min_prog handshake), and panel `pi` has exactly one owner,
         // so we have exclusive access to the buffer.
         let buf = unsafe { &mut *slot.buf.get() };
+        let t0 = if trace::enabled() { trace::now_us() } else { 0 };
         w.decode_rows_into(r0, r1, buf);
+        if trace::enabled() {
+            // The pipeline's decode stage is its pack step: one panel
+            // reconstructed from the compressed representation.
+            trace::record_span(
+                TraceKind::PackB,
+                trace::current_trace(),
+                t0,
+                ((r1 - r0) * w.n_cols()) as u64,
+            );
+        }
         slot.ready.store(pi + 1, Ordering::Release);
         pi += stride;
     }
@@ -259,9 +271,13 @@ fn run_pipelined<S: PackB + ?Sized>(
         .collect();
     let ring = PanelRing::new(bufs, consumers);
     let cptr = SendPtr(c.as_mut_ptr());
+    // Stage workers run on pool threads with no trace context of their
+    // own; carry the caller's id across so decode-stage `pack_b` spans
+    // attribute to the request.
+    let tid = trace::current_trace();
     pool.run(decoders + consumers, &|role| {
         if role < decoders {
-            decode_role(&ring, w, panel_k, npanels, role, decoders);
+            trace::with_trace(tid, || decode_role(&ring, w, panel_k, npanels, role, decoders));
         } else {
             let ci = role - decoders;
             let j0 = ci * n / consumers;
@@ -365,6 +381,29 @@ pub fn salr_gemm_pipelined_pool<S: PackB + ?Sized>(
     cfg: PipelineConfig,
     pool: &WorkerPool,
 ) {
+    // One `gemm_call` span per pipelined entry (both public wrappers
+    // funnel here, so no duplicates); disabled cost is one relaxed load.
+    if !trace::enabled() {
+        return salr_pipelined_inner(x, w, a_cat, b_cat, rank_total, c, m, cfg, pool);
+    }
+    let t0 = trace::now_us();
+    let macs = (m * w.k_rows() * w.n_cols()) as u64;
+    salr_pipelined_inner(x, w, a_cat, b_cat, rank_total, c, m, cfg, pool);
+    trace::record_span(TraceKind::GemmCall, trace::current_trace(), t0, macs);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn salr_pipelined_inner<S: PackB + ?Sized>(
+    x: &[f32],
+    w: &S,
+    a_cat: &[f32],
+    b_cat: &[f32],
+    rank_total: usize,
+    c: &mut [f32],
+    m: usize,
+    cfg: PipelineConfig,
+    pool: &WorkerPool,
+) {
     let (k, n) = (w.k_rows(), w.n_cols());
     c[..m * n].fill(0.0);
     if m == 0 || n == 0 {
@@ -395,7 +434,16 @@ pub fn salr_gemm_pipelined_pool<S: PackB + ?Sized>(
         while r0 < k {
             let r1 = (r0 + panel_k).min(k);
             let kb = r1 - r0;
+            let t0 = if trace::enabled() { trace::now_us() } else { 0 };
             w.decode_rows_into(r0, r1, &mut scratch);
+            if trace::enabled() {
+                trace::record_span(
+                    TraceKind::PackB,
+                    trace::current_trace(),
+                    t0,
+                    (kb * n) as u64,
+                );
+            }
             panel_acc(x, &scratch[..kb * n], c, m, k, n, r0, kb);
             r0 = r1;
         }

@@ -1232,6 +1232,48 @@ mod tests {
     }
 
     #[test]
+    fn steady_state_decode_zero_alloc_with_tracing_enabled() {
+        // The observability acceptance bar: tracing must not perturb the
+        // zero-allocation decode loop. Span recording writes into
+        // pre-sized per-thread rings (seqlock slots, no Vec growth) and
+        // never touches the scratch arena, so the same steady-state
+        // counter check as above must hold with tracing on and a live
+        // trace context. The ring itself is heap-allocated once at lazy
+        // registration — the warmup step (run with tracing already
+        // enabled) covers that, exactly like it covers slab sizing.
+        crate::util::trace::set_enabled(true);
+        let engine = salr_engine(1, 433);
+        let mut kv = engine.new_slot_pool(2);
+        let slots: Vec<usize> = (0..2).map(|_| kv.alloc().unwrap()).collect();
+        let mut current: Vec<i32> = Vec::new();
+        for (s, prompt) in [vec![2i32, 7, 1], vec![8, 2, 8]].iter().enumerate() {
+            current.push(crate::util::trace::with_trace(0xA11C_E700 + s as u64, || {
+                engine.prefill(prompt, slots[s], &mut kv)
+            }));
+        }
+        current = engine.decode_step(&current, &slots, &mut kv);
+        let before = crate::util::arena::thread_allocated_bytes();
+        for _ in 0..10 {
+            current = crate::util::trace::with_trace(0xA11C_E7FF, || {
+                engine.decode_step(&current, &slots, &mut kv)
+            });
+        }
+        assert_eq!(
+            crate::util::arena::thread_allocated_bytes(),
+            before,
+            "decode_step with tracing enabled allocated arena slabs in steady state"
+        );
+        // And the kernel tiers actually recorded under the trace context.
+        let spans = crate::util::trace::spans_for(0xA11C_E7FF);
+        assert!(
+            spans
+                .iter()
+                .any(|(_, s)| s.kind == crate::util::trace::TraceKind::GemmCall),
+            "traced decode steps must record gemm_call spans"
+        );
+    }
+
+    #[test]
     fn steady_state_decode_zero_alloc_on_wide_pool() {
         // Same bar with a 4-thread engine pool and a single sequence: the
         // direct kernel's column stripes borrow the caller's working set

@@ -54,6 +54,12 @@ fn run(args: &Args) -> Result<()> {
     if threads > 0 {
         WorkerPool::set_global_threads(threads);
     }
+    // Tracing: SALR_TRACE=1 enables recording; --trace-out FILE enables
+    // it *and* dumps a Chrome trace_event JSON at drain/shutdown.
+    salr::util::trace::init_from_env();
+    if let Some(path) = args.flag("trace-out") {
+        salr::util::trace::set_trace_out(path);
+    }
     match args.command.as_str() {
         "exp" => {
             let ctx = ctx_from(args)?;

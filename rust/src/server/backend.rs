@@ -99,6 +99,10 @@ pub(crate) struct Inflight {
     pub(crate) started: bool,
     /// Already failed over once; a second loss is a `backend lost`.
     pub(crate) retried: bool,
+    /// The request's trace id (0 = tracing disabled at submission).
+    /// Survives failover unchanged: both dispatch attempts — and the
+    /// `failover` span between them — stitch into one span tree.
+    pub(crate) trace: u64,
     /// The owning client connection's bounded reply sender.
     pub(crate) tx: FrameTx,
     /// The owning client connection's id → (backend, router id) map,

@@ -71,6 +71,8 @@
 use crate::data::{detokenize, token_byte, tokenize};
 use crate::infer::{Engine, KvCacheConfig, KvSlotPool, SpecMode};
 use crate::util::fault::{FaultAction, FaultOp, FaultPlan};
+use crate::util::hist::Hist;
+use crate::util::trace::{self, TraceKind};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -125,6 +127,12 @@ pub struct Request {
     /// `cancel()` it to retire the request at its next scheduler
     /// boundary with `error: "cancelled"`.
     pub cancel: Option<CancelToken>,
+    /// End-to-end trace id (see [`crate::util::trace`]): every span this
+    /// request produces — batcher scheduling, engine forwards, kernel
+    /// pack/GEMM work — carries this id, so the spans stitch across tiers
+    /// (and across the router process, which mints the id and forwards it
+    /// on the wire). `0` = untraced.
+    pub trace: u64,
 }
 
 /// The server's reply.
@@ -231,7 +239,13 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Aggregate serving metrics (lock-free counters; latencies under a lock).
+/// Aggregate serving metrics. Everything here is **lock-free**: counters
+/// and gauges are relaxed atomics, latencies go into fixed-bucket log2
+/// [`Hist`]ograms (allocation-free at record time, mergeable). The
+/// heartbeat thread probes `{"cmd":"metrics"}` every `--heartbeat-ms`,
+/// so a metrics snapshot must never contend with the serving hot path —
+/// the old `Mutex<Vec<u64>>` latency log (cloned and sorted per probe)
+/// is exactly what this replaces.
 #[derive(Default)]
 pub struct ServerMetrics {
     /// Completed requests.
@@ -292,9 +306,20 @@ pub struct ServerMetrics {
     pub spec_rollbacks: AtomicU64,
     /// Highest batch occupancy any worker reached.
     pub max_occupancy: AtomicU64,
-    /// Per-request end-to-end latencies (µs), for percentile queries.
-    pub latencies_us: Mutex<Vec<u64>>,
-    started: Mutex<Option<Instant>>,
+    /// Queue wait per completed request (enqueue → prefill start), µs.
+    pub queue_wait: Hist,
+    /// Time to first token per request (enqueue → first emitted token), µs.
+    pub ttft: Hist,
+    /// Inter-token latency: gap between consecutive emitted tokens of one
+    /// sequence, µs. Speculative decode emits accepted runs back-to-back,
+    /// which shows up here as a bimodal shape — that is the point.
+    pub per_token: Hist,
+    /// End-to-end latency per completed request (enqueue → reply), µs.
+    pub e2e: Hist,
+    /// First-admission stamp on the [`trace::now_us`] clock (0 = never
+    /// started) — the lock-free replacement for the old
+    /// `Mutex<Option<Instant>>`.
+    started_us: AtomicU64,
 }
 
 impl ServerMetrics {
@@ -302,8 +327,9 @@ impl ServerMetrics {
     pub fn record(&self, resp: &Response) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.tokens_out.fetch_add(resp.tokens as u64, Ordering::Relaxed);
-        let total_us = ((resp.queue_ms + resp.compute_ms) * 1000.0) as u64;
-        self.latencies_us.lock().unwrap().push(total_us);
+        self.queue_wait.record((resp.queue_ms * 1000.0) as u64);
+        self.e2e
+            .record(((resp.queue_ms + resp.compute_ms) * 1000.0) as u64);
     }
 
     /// Record one decode iteration over `occupancy` live sequences.
@@ -314,33 +340,35 @@ impl ServerMetrics {
     }
 
     fn mark_started(&self) {
-        let mut st = self.started.lock().unwrap();
-        if st.is_none() {
-            *st = Some(Instant::now());
-        }
+        // CAS from the 0 sentinel; `.max(1)` keeps a first admission in
+        // the epoch's first microsecond from reading as "never started".
+        let _ = self.started_us.compare_exchange(
+            0,
+            trace::now_us().max(1),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
     }
 
     /// Generated tokens per second since the first admission.
     pub fn tokens_per_sec(&self) -> f64 {
-        let st = self.started.lock().unwrap();
-        match *st {
-            Some(t0) => {
-                self.tokens_out.load(Ordering::Relaxed) as f64
-                    / t0.elapsed().as_secs_f64().max(1e-9)
-            }
-            None => 0.0,
+        let t0 = self.started_us.load(Ordering::Relaxed);
+        if t0 == 0 {
+            return 0.0;
         }
+        let elapsed_s = trace::now_us().saturating_sub(t0) as f64 / 1e6;
+        self.tokens_out.load(Ordering::Relaxed) as f64 / elapsed_s.max(1e-9)
     }
 
     /// End-to-end latency percentiles in milliseconds: (p50, p90, p99).
+    /// Read from the log2 histogram, so each value is the upper bound of
+    /// the bucket the true percentile falls in (≤ 2x; see [`Hist`]).
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
-        let mut v = self.latencies_us.lock().unwrap().clone();
-        if v.is_empty() {
-            return (0.0, 0.0, 0.0);
-        }
-        v.sort_unstable();
-        let pick = |p: f64| v[((v.len() - 1) as f64 * p) as usize] as f64 / 1000.0;
-        (pick(0.5), pick(0.9), pick(0.99))
+        (
+            self.e2e.percentile(0.5) / 1000.0,
+            self.e2e.percentile(0.9) / 1000.0,
+            self.e2e.percentile(0.99) / 1000.0,
+        )
     }
 
     /// Mean decode-batch occupancy: live sequences per decode step,
@@ -369,6 +397,46 @@ pub struct WorkerMetrics {
     /// every iteration; returns to 0 whenever the worker drains, however
     /// its sequences exited (retired, cancelled, timed out, panic-failed).
     pub slots_in_use: u64,
+}
+
+/// Atomic backing store for one worker's [`WorkerMetrics`]: the worker
+/// publishes with relaxed stores once per scheduler iteration, the
+/// heartbeat path reads with relaxed loads — no lock on either side
+/// (the old storage was a `Mutex<Vec<WorkerMetrics>>` locked per probe
+/// *and* per iteration). Fields transiently disagree mid-publish; each
+/// is individually coherent, which is all a gauge snapshot promises.
+#[derive(Default)]
+struct WorkerGauges {
+    steps: AtomicU64,
+    tokens: AtomicU64,
+    retired: AtomicU64,
+    prefix_hit_tokens: AtomicU64,
+    cache_blocks_in_use: AtomicU64,
+    slots_in_use: AtomicU64,
+}
+
+impl WorkerGauges {
+    fn store(&self, m: &WorkerMetrics) {
+        self.steps.store(m.steps, Ordering::Relaxed);
+        self.tokens.store(m.tokens, Ordering::Relaxed);
+        self.retired.store(m.retired, Ordering::Relaxed);
+        self.prefix_hit_tokens
+            .store(m.prefix_hit_tokens, Ordering::Relaxed);
+        self.cache_blocks_in_use
+            .store(m.cache_blocks_in_use, Ordering::Relaxed);
+        self.slots_in_use.store(m.slots_in_use, Ordering::Relaxed);
+    }
+
+    fn load(&self) -> WorkerMetrics {
+        WorkerMetrics {
+            steps: self.steps.load(Ordering::Relaxed),
+            tokens: self.tokens.load(Ordering::Relaxed),
+            retired: self.retired.load(Ordering::Relaxed),
+            prefix_hit_tokens: self.prefix_hit_tokens.load(Ordering::Relaxed),
+            cache_blocks_in_use: self.cache_blocks_in_use.load(Ordering::Relaxed),
+            slots_in_use: self.slots_in_use.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// Reply callback: invoked exactly once with the finished [`Response`].
@@ -449,10 +517,15 @@ fn failure_kind(
 struct LiveSeq {
     slot: usize,
     id: u64,
+    /// The request's end-to-end trace id ([`Request::trace`]).
+    trace: u64,
     reply: ReplyFn,
     stream: Option<StreamFn>,
     enqueued: Instant,
     admitted: Instant,
+    /// When this sequence last emitted a token (= `admitted` until the
+    /// first one); the inter-token histogram measures gaps against it.
+    last_token: Instant,
     deadline: Option<Instant>,
     cancel: Option<CancelToken>,
     /// Tokenized prompt; `prefilled` counts how many of these are already
@@ -470,6 +543,25 @@ struct LiveSeq {
 impl LiveSeq {
     fn prefill_done(&self) -> bool {
         self.prefilled >= self.prompt.len()
+    }
+
+    /// Record a generated token: time-to-first-token or inter-token gap
+    /// into the latency histograms (always on — two relaxed `fetch_add`s,
+    /// no lock, no allocation), then append and stream it.
+    fn emit_token(&mut self, tok: i32, metrics: &ServerMetrics) {
+        let now = Instant::now();
+        if self.out.is_empty() {
+            metrics
+                .ttft
+                .record(now.saturating_duration_since(self.enqueued).as_micros() as u64);
+        } else {
+            metrics
+                .per_token
+                .record(now.saturating_duration_since(self.last_token).as_micros() as u64);
+        }
+        self.last_token = now;
+        self.out.push(tok);
+        self.stream_token(tok);
     }
 
     /// Record a newly generated token and stream its text delta, if this
@@ -582,7 +674,12 @@ pub struct Batcher {
     boards: Mutex<Vec<VecDeque<Pending>>>,
     /// Aggregate metrics across all engine workers.
     pub metrics: ServerMetrics,
-    worker_metrics: Mutex<Vec<WorkerMetrics>>,
+    /// One atomic gauge block per worker id, preallocated for the
+    /// policy's worker count so publish/read never locks. A worker id
+    /// past the preallocation (only reachable by driving
+    /// [`Batcher::worker_loop`] by hand with an out-of-range id) is
+    /// served but not gauge-tracked.
+    worker_gauges: Vec<WorkerGauges>,
     shutdown: AtomicBool,
     /// Armed fault-injection plan (`SALR_FAULT`, or explicit in tests);
     /// `None` in production — the checks cost one branch per op.
@@ -609,7 +706,7 @@ impl Batcher {
             policy,
             boards: Mutex::new((0..workers).map(|_| VecDeque::new()).collect()),
             metrics: ServerMetrics::default(),
-            worker_metrics: Mutex::new(Vec::new()),
+            worker_gauges: (0..workers).map(|_| WorkerGauges::default()).collect(),
             shutdown: AtomicBool::new(false),
             fault,
         })
@@ -751,9 +848,11 @@ impl Batcher {
         n
     }
 
-    /// Snapshot of per-worker counters, indexed by worker id.
+    /// Snapshot of per-worker counters, indexed by worker id. Lock-free:
+    /// each gauge is a relaxed atomic load (this runs on every heartbeat
+    /// probe, concurrent with the serving hot path).
     pub fn worker_metrics(&self) -> Vec<WorkerMetrics> {
-        self.worker_metrics.lock().unwrap().clone()
+        self.worker_gauges.iter().map(WorkerGauges::load).collect()
     }
 
     /// Requests admitted but not yet scheduled: the shared queue plus
@@ -855,19 +954,11 @@ impl Batcher {
         self.boards.lock().unwrap().get_mut(worker)?.pop_front()
     }
 
-    /// Make `worker`'s metrics and claim-board slots exist.
+    /// Make `worker`'s claim-board slot exist (gauges are preallocated).
     fn register_worker(&self, worker: usize) {
-        {
-            let mut wm = self.worker_metrics.lock().unwrap();
-            if wm.len() <= worker {
-                wm.resize(worker + 1, WorkerMetrics::default());
-            }
-        }
-        {
-            let mut boards = self.boards.lock().unwrap();
-            if boards.len() <= worker {
-                boards.resize_with(worker + 1, VecDeque::new);
-            }
+        let mut boards = self.boards.lock().unwrap();
+        if boards.len() <= worker {
+            boards.resize_with(worker + 1, VecDeque::new);
         }
     }
 
@@ -897,13 +988,16 @@ impl Batcher {
         }
     }
 
-    /// Publish a worker's per-iteration gauges and counters.
+    /// Publish a worker's per-iteration gauges and counters (lock-free
+    /// relaxed stores into the worker's preallocated gauge block).
     fn publish_worker_metrics(&self, worker: usize, state: &WorkerState) {
         let mut local = state.local;
         local.prefix_hit_tokens = state.kv.prefix_hit_tokens();
         local.cache_blocks_in_use = state.kv.blocks_in_use() as u64;
         local.slots_in_use = state.live.len() as u64;
-        self.worker_metrics.lock().unwrap()[worker] = local;
+        if let Some(g) = self.worker_gauges.get(worker) {
+            g.store(&local);
+        }
     }
 
     /// The continuous-batching engine worker loop, **unsupervised**: a
@@ -1024,6 +1118,7 @@ impl Batcher {
                             .spec_k
                             .min(seq.budget.saturating_sub(seq.out.len() + 1))
                             .min(kv.remaining(seq.slot).saturating_sub(1));
+                        let (tid, slot, cur) = (seq.trace, seq.slot, seq.current);
                         let draft = if k == 0 {
                             Vec::new()
                         } else {
@@ -1033,8 +1128,14 @@ impl Batcher {
                                 Vec::with_capacity(seq.prompt.len() + seq.out.len());
                             hist.extend_from_slice(&seq.prompt);
                             hist.extend_from_slice(&seq.out);
-                            let mut d = drafter.draft(engine, kv, seq.slot, &hist, k);
+                            // `with_trace`: kernel spans the draft forward
+                            // records (self-drafting runs base-only GEMMs)
+                            // inherit this sequence's trace id.
+                            let t0 = trace::now_us();
+                            let mut d =
+                                trace::with_trace(tid, || drafter.draft(engine, kv, slot, &hist, k));
                             d.truncate(k); // defensive: the clamp is load-bearing
+                            trace::record_span(TraceKind::SpecDraft, tid, t0, d.len() as u64);
                             d
                         };
                         // Fault point between draft and verify: the draft
@@ -1043,7 +1144,10 @@ impl Batcher {
                         // is verified — a panic here is the worst spot
                         // for speculative KV accounting.
                         self.fault_point(FaultOp::VerifyStep, worker);
-                        let v = engine.decode_verify(seq.current, &draft, seq.slot, kv);
+                        let t0 = trace::now_us();
+                        let v =
+                            trace::with_trace(tid, || engine.decode_verify(cur, &draft, slot, kv));
+                        trace::record_span(TraceKind::SpecVerify, tid, t0, v.accepted as u64);
                         self.metrics
                             .drafted_tokens
                             .fetch_add(draft.len() as u64, Ordering::Relaxed);
@@ -1054,20 +1158,37 @@ impl Batcher {
                             self.metrics.spec_rollbacks.fetch_add(1, Ordering::Relaxed);
                         }
                         for &tok in draft[..v.accepted].iter().chain([v.next].iter()) {
-                            seq.out.push(tok);
-                            seq.stream_token(tok);
+                            seq.emit_token(tok, &self.metrics);
                         }
                         seq.current = v.next;
                     }
                 } else {
                     let current: Vec<i32> = ready.iter().map(|&i| live[i].current).collect();
                     let slots: Vec<usize> = ready.iter().map(|&i| live[i].slot).collect();
+                    // The batched forward belongs to every ready sequence
+                    // at once, so it runs under trace id 0 (kernel spans
+                    // attach to the step, not one request) and the step
+                    // interval is then recorded once per ready sequence —
+                    // each request's tree shows every decode step it was
+                    // part of, stamped with the batch occupancy.
+                    let t0 = trace::now_us();
                     let next = engine.decode_step(&current, &slots, kv);
+                    if trace::enabled() {
+                        let t1 = trace::now_us();
+                        for &i in &ready {
+                            trace::record_span_at(
+                                TraceKind::DecodeStep,
+                                live[i].trace,
+                                t0,
+                                t1,
+                                ready.len() as u64,
+                            );
+                        }
+                    }
                     for (j, &i) in ready.iter().enumerate() {
                         let seq = &mut live[i];
                         seq.current = next[j];
-                        seq.out.push(next[j]);
-                        seq.stream_token(next[j]);
+                        seq.emit_token(next[j], &self.metrics);
                     }
                 }
                 // Retire immediately after the step, so a finished
@@ -1076,12 +1197,14 @@ impl Batcher {
                 // freed slots count toward the next round's room.
                 self.retire_finished(live, kv, local);
             }
-            // Publish per-worker counters (cheap: one short lock per
-            // iteration, far below the forward-pass cost).
+            // Publish per-worker counters (six relaxed stores — no lock
+            // for the heartbeat's reader to contend on).
             local.prefix_hit_tokens = kv.prefix_hit_tokens();
             local.cache_blocks_in_use = kv.blocks_in_use() as u64;
             local.slots_in_use = live.len() as u64;
-            self.worker_metrics.lock().unwrap()[worker] = *local;
+            if let Some(g) = self.worker_gauges.get(worker) {
+                g.store(local);
+            }
         }
     }
 
@@ -1160,13 +1283,26 @@ impl Batcher {
                                 .prefix_hit_tokens
                                 .fetch_add(hit as u64, Ordering::Relaxed);
                         }
+                        if trace::enabled() {
+                            let t = trace::now_us();
+                            trace::record_span_at(
+                                TraceKind::Admit,
+                                p.req.trace,
+                                t,
+                                t,
+                                toks.len() as u64,
+                            );
+                        }
+                        let now = Instant::now();
                         live.push(LiveSeq {
                             slot,
                             id: p.req.id,
+                            trace: p.req.trace,
                             reply: p.reply,
                             stream: p.stream,
                             enqueued: p.enqueued,
-                            admitted: Instant::now(),
+                            admitted: now,
+                            last_token: now,
                             deadline: p.deadline,
                             cancel: p.cancel,
                             prompt: toks,
@@ -1190,12 +1326,19 @@ impl Batcher {
         let remaining = seq.prompt.len() - seq.prefilled;
         let take = if chunk == 0 { remaining } else { chunk.min(remaining) };
         let last = seq.prefilled + take == seq.prompt.len();
-        let res = engine.prefill_chunk(
-            &seq.prompt[seq.prefilled..seq.prefilled + take],
-            seq.slot,
-            kv,
-            last,
-        );
+        // `with_trace`: the chunk's GEMM/pack kernel spans inherit this
+        // sequence's trace id on whatever pool thread they run.
+        let (tid, slot) = (seq.trace, seq.slot);
+        let t0 = trace::now_us();
+        let res = trace::with_trace(tid, || {
+            engine.prefill_chunk(
+                &seq.prompt[seq.prefilled..seq.prefilled + take],
+                slot,
+                kv,
+                last,
+            )
+        });
+        trace::record_span(TraceKind::PrefillChunk, tid, t0, take as u64);
         self.metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
         match res {
             Ok(first) => {
@@ -1208,8 +1351,7 @@ impl Batcher {
                 seq.prefilled += take;
                 if let Some(tok) = first {
                     seq.current = tok;
-                    seq.out.push(tok);
-                    seq.stream_token(tok);
+                    seq.emit_token(tok, &self.metrics);
                 }
                 // The whole prompt is cached now: publish its full blocks
                 // to this worker's prefix cache so later requests sharing
@@ -1264,6 +1406,16 @@ impl Batcher {
                 kv.free(seq.slot);
                 local.retired += 1;
                 local.tokens += seq.out.len() as u64;
+                if trace::enabled() {
+                    let t = trace::now_us();
+                    trace::record_span_at(
+                        TraceKind::Retire,
+                        seq.trace,
+                        t,
+                        t,
+                        seq.out.len() as u64,
+                    );
+                }
                 let resp = Response {
                     id: seq.id,
                     text: detokenize(&seq.out),

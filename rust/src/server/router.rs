@@ -46,14 +46,23 @@
 //! `backend_down`) key on per-backend counters of the router's two op
 //! points — `fwd` (a request forward) and `reply` (a backend data
 //! frame) — see [`crate::util::fault`].
+//!
+//! * **tracing**: with tracing enabled (see [`crate::util::trace`]) the
+//!   router mints a trace id per request (its globally unique router
+//!   id), injects it as `"trace"` into the re-keyed forwarded line, and
+//!   records `admit`/`failover`/`heartbeat` spans under it; the id
+//!   survives failover, so both dispatch attempts stitch into one span
+//!   tree, answerable at the router via `{"cmd":"trace","id":T}`
+//!   (router spans merged with the owning backend's).
 
 use super::backend::{Backend, BackendState, Inflight};
 use super::tcp::{parse_id, FrameTx};
 use crate::util::fault::{FaultAction, FaultOp, FaultPlan};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::trace::{self, TraceKind};
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -140,7 +149,21 @@ pub struct Router {
     fault: Option<FaultPlan>,
     shutdown: AtomicBool,
     heartbeat: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Which backend last owned each traced request (FIFO-bounded), so
+    /// `{"cmd":"trace","id":T}` can be answered after the request
+    /// completed and left the inflight tables.
+    trace_seen: Mutex<TraceSeen>,
 }
+
+/// FIFO-bounded trace id → owning backend map (see [`Router::trace_seen`]).
+#[derive(Default)]
+struct TraceSeen {
+    map: HashMap<u64, usize>,
+    order: VecDeque<u64>,
+}
+
+/// Retention bound for completed traces the router can still stitch.
+const TRACE_SEEN_CAP: usize = 1024;
 
 /// FNV-1a, the codebase's standing choice for cheap stable hashing.
 fn fnv1a(bytes: &[u8]) -> u64 {
@@ -190,6 +213,7 @@ impl Router {
             fault,
             shutdown: AtomicBool::new(false),
             heartbeat: Mutex::new(None),
+            trace_seen: Mutex::new(TraceSeen::default()),
         });
         let hb = {
             // A `Weak` breaks the Router → JoinHandle → Arc<Router>
@@ -330,7 +354,16 @@ impl Router {
         let stream = msg.get("stream").and_then(Json::as_bool).unwrap_or(false);
         let prompt = msg.get("prompt").and_then(Json::as_str).unwrap_or("").to_string();
         let rid = self.next_rid.fetch_add(1, Ordering::Relaxed);
-        let line = msg.set("id", rid).to_string_compact();
+        // The router is the first tier that sees the request, so it
+        // mints the trace id (= its globally unique router id) and
+        // injects it into the re-keyed line; the backend honors it and
+        // echoes it on the final frame, which flows back unchanged.
+        let trace_id = if trace::enabled() { rid } else { 0 };
+        let mut fwd = msg.set("id", rid);
+        if trace_id != 0 {
+            fwd = fwd.set("trace", trace_id);
+        }
+        let line = fwd.to_string_compact();
         let Some(b) = self.route(&prompt) else {
             let mut j = Json::obj().set("id", client_id).set("error", "no healthy backend");
             if stream {
@@ -339,12 +372,18 @@ impl Router {
             let _ = tx.send(j.to_string_compact());
             return;
         };
+        if trace_id != 0 {
+            let t = trace::now_us();
+            trace::record_span_at(TraceKind::Admit, trace_id, t, t, b.index as u64);
+            self.note_trace(trace_id, b.index);
+        }
         let entry = Inflight {
             line: line.clone(),
             client_id,
             stream,
             started: false,
             retried: false,
+            trace: trace_id,
             tx: tx.clone(),
             conn_map: conn_map.clone(),
         };
@@ -388,6 +427,14 @@ impl Router {
             "failing request {rid} over from backend {from} to backend {}",
             t.index
         );
+        if e.trace != 0 {
+            // Same trace id on both attempts: the span tree shows the
+            // first admit, this failover marker, and the retry's spans
+            // as one request.
+            let now = trace::now_us();
+            trace::record_span_at(TraceKind::Failover, e.trace, now, now, t.index as u64);
+            self.note_trace(e.trace, t.index);
+        }
         self.metrics.routed.fetch_add(1, Ordering::Relaxed);
         t.counters.routed.fetch_add(1, Ordering::Relaxed);
         let line = e.line.clone();
@@ -481,6 +528,87 @@ impl Router {
         }
     }
 
+    /// Remember which backend owns traced request `trace_id` (bounded,
+    /// FIFO eviction) so its span tree can be stitched after completion.
+    fn note_trace(&self, trace_id: u64, backend: usize) {
+        if trace_id == 0 {
+            return;
+        }
+        let mut seen = self.trace_seen.lock().unwrap();
+        if seen.map.insert(trace_id, backend).is_none() {
+            seen.order.push_back(trace_id);
+            if seen.order.len() > TRACE_SEEN_CAP {
+                if let Some(old) = seen.order.pop_front() {
+                    seen.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Answer `{"cmd":"trace","id":T}` at the router: the router's own
+    /// spans for `T` merged with the owning backend's (fetched over a
+    /// fresh short-lived connection, so the reply never rides the
+    /// multiplexed pump where it would be misrouted by id). Roots are
+    /// deduplicated by value — when router and backend share a process
+    /// (in-process tests), both snapshots see the same rings.
+    pub fn trace_json(&self, tid: Option<u64>) -> Json {
+        if !trace::enabled() {
+            return Json::obj()
+                .set("cmd", "trace")
+                .set("error", "tracing disabled (set SALR_TRACE=1 or --trace-out)");
+        }
+        let Some(tid) = tid else {
+            return Json::obj().set("cmd", "trace").set("error", "missing id");
+        };
+        let local = trace::span_tree_json(tid, "router");
+        let owner = self.trace_seen.lock().unwrap().map.get(&tid).copied();
+        let remote = owner.and_then(|i| self.fetch_backend_trace(i, tid));
+        let mut roots: Vec<Json> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for tree in std::iter::once(local).chain(remote) {
+            if let Some(arr) = tree.get("tree").and_then(Json::as_arr) {
+                for n in arr {
+                    if seen.insert(n.to_string_compact()) {
+                        roots.push(n.clone());
+                    }
+                }
+            }
+        }
+        roots.sort_by(|a, b| {
+            let t = |n: &Json| n.get("t_start_us").and_then(Json::as_f64).unwrap_or(0.0);
+            t(a).partial_cmp(&t(b)).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        fn nodes(n: &Json) -> usize {
+            1 + n
+                .get("children")
+                .and_then(Json::as_arr)
+                .map_or(0, |kids| kids.iter().map(nodes).sum())
+        }
+        let count: usize = roots.iter().map(nodes).sum();
+        Json::obj()
+            .set("cmd", "trace")
+            .set("id", tid)
+            .set("count", count as f64)
+            .set("tree", Json::Arr(roots))
+    }
+
+    /// One-shot `{"cmd":"trace"}` query against backend `index` over its
+    /// own connection (timeout-bounded; `None` on any failure).
+    fn fetch_backend_trace(&self, index: usize, tid: u64) -> Option<Json> {
+        use std::io::Write;
+        let addr = &self.backends.get(index)?.addr;
+        let timeout = Duration::from_millis(self.policy.connect_timeout_ms.max(1));
+        let sa = addr.to_socket_addrs().ok()?.next()?;
+        let stream = TcpStream::connect_timeout(&sa, timeout).ok()?;
+        stream.set_read_timeout(Some(timeout)).ok()?;
+        let mut w = stream.try_clone().ok()?;
+        let req = Json::obj().set("cmd", "trace").set("id", tid);
+        writeln!(w, "{}", req.to_string_compact()).ok()?;
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).ok()?;
+        Json::parse(line.trim()).ok()
+    }
+
     /// Begin draining backend `index`: stop routing new requests to it
     /// and forward `{"cmd":"drain"}` so it finishes in-flight work and
     /// exits. Returns `false` for an unknown index or a backend
@@ -537,6 +665,8 @@ impl Router {
             .set("spilled", self.metrics.spilled.load(Ordering::Relaxed))
             .set("failovers", self.metrics.failovers.load(Ordering::Relaxed))
             .set("inflight", inflight_total)
+            .set("stages", trace::kind_totals_json())
+            .set("trace_dropped", trace::dropped())
             .set("backends", backends)
     }
 
@@ -682,6 +812,7 @@ fn heartbeat_loop(weak: &std::sync::Weak<Router>) {
 /// One heartbeat pass over every backend (see [`heartbeat_loop`]).
 fn heartbeat_tick(router: &Arc<Router>, rngs: &mut [Rng]) {
     let policy = router.policy;
+    let t0 = trace::now_us();
     {
         for b in &router.backends {
             match b.state() {
@@ -754,6 +885,14 @@ fn heartbeat_tick(router: &Arc<Router>, rngs: &mut [Rng]) {
             }
         }
     }
+    if trace::enabled() {
+        let healthy = router
+            .backends
+            .iter()
+            .filter(|b| b.state() == BackendState::Healthy)
+            .count() as u64;
+        trace::record_span(TraceKind::Heartbeat, 0, t0, healthy);
+    }
 }
 
 fn dial(addr: &str, timeout_ms: u64) -> std::io::Result<TcpStream> {
@@ -784,6 +923,7 @@ pub fn serve_router_on(
     addr: &str,
     ready: Option<Sender<std::net::SocketAddr>>,
 ) -> Result<()> {
+    trace::init_from_env();
     let listener = TcpListener::bind(addr).with_context(|| format!("binding router {addr}"))?;
     let local = listener.local_addr()?;
     log::info!(
@@ -819,6 +959,7 @@ pub fn serve_router_on(
         });
     }
     router.stop();
+    trace::dump_trace_out("router");
     Ok(())
 }
 
@@ -868,6 +1009,10 @@ fn handle_client(router: &Arc<Router>, stream: TcpStream) -> Result<bool> {
             }
             Some("metrics") => {
                 let _ = reply_tx.send(router.metrics_json().to_string_compact());
+            }
+            Some("trace") => {
+                let reply = router.trace_json(parse_id(&msg));
+                let _ = reply_tx.send(reply.to_string_compact());
             }
             Some("drain") => {
                 // `{"cmd":"drain","backend":N}`: decommission one

@@ -64,12 +64,26 @@
 //! every request already admitted finishes and delivers its reply
 //! (streamed frames included), then the process exits. Nothing in
 //! flight is aborted; this is the backend half of router-driven drain.
+//!
+//! **Tracing** (see `util::trace`): when enabled (`SALR_TRACE=1` or
+//! `--trace-out`), a generation request may carry `"trace": T` — the
+//! router injects this on every forward — and the id is echoed on the
+//! final frame. A request arriving without one is assigned a
+//! server-minted id (high-bit-tagged so it cannot collide with
+//! router-minted ids). `{"cmd": "trace", "id": T}` returns the request's
+//! span tree: `{"cmd":"trace","id":T,"count":N,"tree":[...]}`, spans
+//! nested by interval containment, each with
+//! `kind/lane/proc/t_start_us/dur_us/op/arg/children`. The metrics reply
+//! additionally carries log2 latency histograms (`"hist"`), per-stage
+//! span totals (`"stages"`) and the ring-overwrite counter
+//! (`"trace_dropped"`).
 
 use super::batcher::{
     spawn_engine_workers, BatchPolicy, Batcher, CancelToken, Request, Response,
 };
 use crate::infer::Engine;
 use crate::util::json::Json;
+use crate::util::trace;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
@@ -155,6 +169,7 @@ pub fn serve_on(
     batcher: Arc<Batcher>,
     ready: Option<Sender<std::net::SocketAddr>>,
 ) -> Result<()> {
+    trace::init_from_env();
     let policy = *batcher.policy();
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
@@ -208,14 +223,19 @@ pub fn serve_on(
     if dropped > 0 {
         log::warn!("dropped {dropped} request(s) queued after shutdown");
     }
+    // `--trace-out`: every ring has gone quiet (workers joined), so the
+    // Chrome trace dump is a consistent snapshot of the whole run.
+    trace::dump_trace_out("serve");
     Ok(())
 }
 
 /// The final reply frame for a completed (or rejected) request.
 /// `done_marker` (streamed requests) tags the frame `"done": true` —
 /// error frames included, so a streaming client waiting on the
-/// documented terminator never hangs on a rejected request.
-fn final_frame(resp: Response, done_marker: bool) -> Json {
+/// documented terminator never hangs on a rejected request. A non-zero
+/// `trace_id` (tracing enabled at submission) is echoed so the client
+/// can fetch the span tree with `{"cmd":"trace","id":T}`.
+fn final_frame(resp: Response, done_marker: bool, trace_id: u64) -> Json {
     let mut j = Json::obj().set("id", resp.id);
     j = match resp.error {
         Some(err) => j.set("error", err),
@@ -225,11 +245,39 @@ fn final_frame(resp: Response, done_marker: bool) -> Json {
             .set("compute_ms", resp.compute_ms)
             .set("tokens", resp.tokens),
     };
+    if trace_id != 0 {
+        j = j.set("trace", trace_id);
+    }
     if done_marker {
         j.set("done", true)
     } else {
         j
     }
+}
+
+/// Counter behind server-minted trace ids. The high tag bit keeps them
+/// disjoint from router-minted ids (small integers from the router's
+/// request counter) while staying well under the codec's 2^53 integer
+/// ceiling, so a serve-local request and a router-forwarded one can
+/// never alias the same span tree.
+static TRACE_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// Trace id tag bit for ids minted by the serve tier itself.
+const TRACE_LOCAL_TAG: u64 = 1 << 40;
+
+/// The trace id for a generation request: the wire-supplied `"trace"`
+/// field when present and valid (the router always injects one), else a
+/// freshly minted local id. Zero — tracing disabled — means "record
+/// nothing for this request".
+fn assign_trace(msg: &Json) -> u64 {
+    if !trace::enabled() {
+        return 0;
+    }
+    msg.get("trace")
+        .and_then(Json::as_f64)
+        .filter(|n| n.fract() == 0.0 && *n > 0.0 && *n <= 9_007_199_254_740_992.0)
+        .map(|n| n as u64)
+        .unwrap_or_else(|| TRACE_LOCAL_TAG | TRACE_SEQ.fetch_add(1, Ordering::Relaxed))
 }
 
 /// Handle one connection; returns Ok(true) if a shutdown was requested.
@@ -318,6 +366,23 @@ fn handle_conn(
             Some("metrics") => {
                 let _ = reply_tx.send(render_metrics(batcher).to_string_compact());
             }
+            Some("trace") => {
+                // The span tree of one traced request (`id` = trace id,
+                // as echoed on its final frame). Replies carry
+                // `"cmd":"trace"` so a pipelining client can tell them
+                // apart from generation completions.
+                let reply = if !trace::enabled() {
+                    Json::obj()
+                        .set("cmd", "trace")
+                        .set("error", "tracing disabled (set SALR_TRACE=1 or --trace-out)")
+                } else {
+                    match parse_id(&msg) {
+                        Some(tid) => trace::span_tree_json(tid, "serve").set("cmd", "trace"),
+                        None => Json::obj().set("cmd", "trace").set("error", "missing id"),
+                    }
+                };
+                let _ = reply_tx.send(reply.to_string_compact());
+            }
             Some("cancel") => {
                 // Latch the token of one of *this connection's* in-flight
                 // requests. `ok: false` = no such request (unknown id,
@@ -352,6 +417,7 @@ fn handle_conn(
                     .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n <= 9_007_199_254_740_992.0)
                     .map(|n| n as u64);
                 let id = parse_id(&msg).unwrap_or_else(|| next_id.fetch_add(1, Ordering::Relaxed));
+                let trace_id = assign_trace(&msg);
                 let token = CancelToken::new();
                 inflight.lock().unwrap().insert(id, token.clone());
                 let req = Request {
@@ -360,12 +426,13 @@ fn handle_conn(
                     max_tokens,
                     timeout_ms,
                     cancel: Some(token),
+                    trace: trace_id,
                 };
                 let tx = reply_tx.clone();
                 let inflight_done = inflight.clone();
                 let reply = Box::new(move |resp: Response| {
                     inflight_done.lock().unwrap().remove(&resp.id);
-                    let _ = tx.send(final_frame(resp, streaming).to_string_compact());
+                    let _ = tx.send(final_frame(resp, streaming, trace_id).to_string_compact());
                 });
                 // Rejections (shutdown, queue shedding) fire `reply`
                 // themselves — error text, done marker and the inflight
@@ -497,6 +564,18 @@ fn render_metrics(batcher: &Batcher) -> Json {
         .set("latency_p50_ms", p50)
         .set("latency_p90_ms", p90)
         .set("latency_p99_ms", p99)
+        // Log2-bucket latency histograms (µs), mergeable across
+        // backends by summing per-bucket counts.
+        .set(
+            "hist",
+            Json::obj()
+                .set("queue_wait", batcher.metrics.queue_wait.to_json())
+                .set("ttft", batcher.metrics.ttft.to_json())
+                .set("per_token", batcher.metrics.per_token.to_json())
+                .set("e2e", batcher.metrics.e2e.to_json()),
+        )
+        .set("stages", trace::kind_totals_json())
+        .set("trace_dropped", trace::dropped())
         .set("workers", workers)
 }
 
@@ -585,6 +664,12 @@ impl Client {
     /// Fetch aggregate serving metrics.
     pub fn metrics(&mut self) -> Result<Json> {
         self.call(&Json::obj().set("cmd", "metrics"))
+    }
+
+    /// Fetch the span tree of a traced request (`trace_id` as echoed in
+    /// the request's final frame). Requires tracing enabled server-side.
+    pub fn trace(&mut self, trace_id: u64) -> Result<Json> {
+        self.call(&Json::obj().set("cmd", "trace").set("id", trace_id))
     }
 
     /// Ask the server to stop (replies `{"ok": true}` first). Everything

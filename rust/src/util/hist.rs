@@ -1,0 +1,254 @@
+//! Fixed-bucket log2 latency histograms: lock-free, allocation-free at
+//! record time, mergeable across workers.
+//!
+//! `Hist` replaces the old `Mutex<Vec<u64>>` latency path in
+//! `ServerMetrics`: the heartbeat thread probes `{"cmd":"metrics"}` every
+//! `--heartbeat-ms`, and snapshotting a mutex-guarded growing vector on
+//! that cadence both contends with the retire path and allocates per
+//! probe. A histogram record is two relaxed `fetch_add`s on preallocated
+//! atomics; a snapshot is 66 relaxed loads. The price is resolution:
+//! values are bucketed by bit length (power-of-two boundaries), so a
+//! reported percentile is the *upper bound* of the bucket the true
+//! percentile falls in — at most 2x the true value, which is the right
+//! trade for latency telemetry (we care about orders of magnitude and
+//! tail shape, not microsecond exactness).
+//!
+//! Bucket `0` holds exactly the value `0`; bucket `i >= 1` holds values
+//! `v` with `2^(i-1) <= v < 2^i` (i.e. bit length `i`), saturating at the
+//! last bucket. With 64 buckets a `u64` of microseconds can never
+//! overflow the range.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Number of buckets: one zero bucket + one per possible `u64` bit length.
+pub const NBUCKETS: usize = 64;
+
+/// A mergeable log2 histogram of `u64` samples (microseconds by
+/// convention in the serving tier). All operations are lock-free; `record`
+/// never allocates.
+pub struct Hist {
+    buckets: [AtomicU64; NBUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    /// An empty histogram.
+    pub fn new() -> Hist {
+        Hist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a sample: 0 for 0, else the bit length of `v`
+    /// capped to the last bucket.
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros() as usize).min(NBUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` (the largest sample it holds).
+    pub fn bucket_upper(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one sample. Lock-free, allocation-free, wait-free.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples (same unit as the samples).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Mean sample, or 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Fold another histogram's counts into this one (both keep serving
+    /// concurrent records; the merge is a relaxed read-add per bucket).
+    pub fn merge_from(&self, other: &Hist) {
+        for i in 0..NBUCKETS {
+            let c = other.buckets[i].load(Ordering::Relaxed);
+            if c > 0 {
+                self.buckets[i].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// The `p`-quantile (`0.0 < p <= 1.0`) as the upper bound of the
+    /// bucket the quantile sample falls in. Empty histograms report 0.0.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        // Rank of the quantile sample, 1-based, clamped into [1, n] so
+        // p=1.0 lands exactly on the max sample's bucket.
+        let rank = ((p * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for i in 0..NBUCKETS {
+            seen += self.buckets[i].load(Ordering::Relaxed);
+            if seen >= rank {
+                return Self::bucket_upper(i) as f64;
+            }
+        }
+        Self::bucket_upper(NBUCKETS - 1) as f64
+    }
+
+    /// Snapshot of the raw bucket counts (for tests and merges).
+    pub fn snapshot(&self) -> [u64; NBUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Compact JSON for the metrics reply: count, sum, mean and the
+    /// populated buckets as `[upper_bound, count]` pairs (empty buckets
+    /// are elided so the reply stays small).
+    pub fn to_json(&self) -> Json {
+        let mut buckets = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 {
+                buckets.push(Json::Arr(vec![
+                    Json::Num(Self::bucket_upper(i) as f64),
+                    Json::Num(c as f64),
+                ]));
+            }
+        }
+        Json::obj()
+            .set("count", self.count() as f64)
+            .set("sum_us", self.sum() as f64)
+            .set("mean_us", self.mean())
+            .set("p50_us", self.percentile(0.50))
+            .set("p90_us", self.percentile(0.90))
+            .set("p99_us", self.percentile(0.99))
+            .set("buckets", Json::Arr(buckets))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        // 0 is its own bucket; powers of two open a new bucket.
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 1);
+        assert_eq!(Hist::bucket_of(2), 2);
+        assert_eq!(Hist::bucket_of(3), 2);
+        assert_eq!(Hist::bucket_of(4), 3);
+        assert_eq!(Hist::bucket_of(7), 3);
+        assert_eq!(Hist::bucket_of(8), 4);
+        assert_eq!(Hist::bucket_of(u64::MAX), NBUCKETS - 1);
+        // Upper bounds are inclusive maxima of their buckets.
+        assert_eq!(Hist::bucket_upper(0), 0);
+        assert_eq!(Hist::bucket_upper(1), 1);
+        assert_eq!(Hist::bucket_upper(2), 3);
+        assert_eq!(Hist::bucket_upper(3), 7);
+        for v in [0u64, 1, 2, 3, 4, 5, 100, 1 << 20, u64::MAX - 1] {
+            let b = Hist::bucket_of(v);
+            assert!(v <= Hist::bucket_upper(b), "v={v} above its bucket cap");
+            if b > 0 {
+                assert!(v > Hist::bucket_upper(b - 1), "v={v} fits a lower bucket");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_percentile_is_zero() {
+        let h = Hist::new();
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.percentile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn percentiles_hit_bucket_upper_bounds() {
+        let h = Hist::new();
+        // 90 samples of 10us (bucket 4, upper 15), 10 samples of 1000us
+        // (bucket 10, upper 1023).
+        for _ in 0..90 {
+            h.record(10);
+        }
+        for _ in 0..10 {
+            h.record(1000);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.percentile(0.50), 15.0);
+        assert_eq!(h.percentile(0.90), 15.0);
+        assert_eq!(h.percentile(0.91), 1023.0);
+        assert_eq!(h.percentile(0.99), 1023.0);
+        assert_eq!(h.percentile(1.0), 1023.0);
+        assert_eq!(h.sum(), 90 * 10 + 10 * 1000);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let a = Hist::new();
+        let b = Hist::new();
+        a.record(0);
+        a.record(5);
+        b.record(5);
+        b.record(1 << 30);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.sum(), 5 + 5 + (1 << 30));
+        let snap = a.snapshot();
+        assert_eq!(snap[0], 1); // the zero
+        assert_eq!(snap[Hist::bucket_of(5)], 2);
+        assert_eq!(snap[Hist::bucket_of(1 << 30)], 1);
+        // Merging an empty histogram is a no-op.
+        a.merge_from(&Hist::new());
+        assert_eq!(a.count(), 4);
+    }
+
+    #[test]
+    fn json_elides_empty_buckets() {
+        let h = Hist::new();
+        h.record(3);
+        h.record(3);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_f64().unwrap(), 2.0);
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].as_arr().unwrap()[0].as_f64().unwrap(), 3.0);
+        assert_eq!(buckets[0].as_arr().unwrap()[1].as_f64().unwrap(), 2.0);
+    }
+}

@@ -1,44 +1,144 @@
-//! Simple leveled stderr logger wired into the `log` facade.
+//! Leveled logger wired into the `log` facade, with a swappable sink.
+//!
+//! `log::set_boxed_logger` can only ever succeed once per process, so the
+//! installed logger delegates every record to a process-global *sink*
+//! that can be swapped at runtime: stderr in normal operation (level
+//! filtered by `SALR_LOG`), or an in-memory capture buffer so tests can
+//! assert on emitted events — in particular the span-close debug lines
+//! the trace layer emits under the `salr::trace` target.
 
 use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
 
-struct StderrLogger {
-    level: Level,
+/// Active level as a u8 (Level::Error=1 .. Level::Trace=5), swappable
+/// without a lock on the `enabled` fast path.
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// A handle to captured log lines (each rendered as `LEVEL target message`).
+#[derive(Clone, Default)]
+pub struct Capture {
+    lines: Arc<Mutex<Vec<String>>>,
 }
 
-impl log::Log for StderrLogger {
+impl Capture {
+    /// Snapshot of everything captured so far.
+    pub fn lines(&self) -> Vec<String> {
+        self.lines.lock().unwrap().clone()
+    }
+
+    /// True if any captured line contains `needle`.
+    pub fn contains(&self, needle: &str) -> bool {
+        self.lines.lock().unwrap().iter().any(|l| l.contains(needle))
+    }
+}
+
+enum Sink {
+    Stderr,
+    Capture(Capture),
+}
+
+static SINK: once_cell::sync::Lazy<Mutex<Sink>> =
+    once_cell::sync::Lazy::new(|| Mutex::new(Sink::Stderr));
+
+struct SalrLogger;
+
+impl log::Log for SalrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.level
+        metadata.level() as u8 <= LEVEL.load(Ordering::Relaxed)
     }
 
     fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            eprintln!(
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        match &*SINK.lock().unwrap() {
+            Sink::Stderr => eprintln!(
                 "[{:>9.3}s {:<5} {}] {}",
                 START.elapsed().as_secs_f64(),
                 record.level(),
                 record.target().split("::").last().unwrap_or(""),
                 record.args()
-            );
+            ),
+            Sink::Capture(cap) => cap.lines.lock().unwrap().push(format!(
+                "{} {} {}",
+                record.level(),
+                record.target(),
+                record.args()
+            )),
         }
     }
 
     fn flush(&self) {}
 }
 
-/// Install the logger. Level comes from `SALR_LOG` (error..trace), default info.
-pub fn init() {
-    let level = match std::env::var("SALR_LOG").as_deref() {
+fn level_from_env() -> Level {
+    match std::env::var("SALR_LOG").as_deref() {
         Ok("error") => Level::Error,
         Ok("warn") => Level::Warn,
         Ok("debug") => Level::Debug,
         Ok("trace") => Level::Trace,
         _ => Level::Info,
-    };
-    let _ = log::set_boxed_logger(Box::new(StderrLogger { level }));
+    }
+}
+
+/// Install the logger. Level comes from `SALR_LOG` (error..trace),
+/// default info. Idempotent: the boxed logger installs once, later calls
+/// only refresh the level from the environment.
+pub fn init() {
+    LEVEL.store(level_from_env() as u8, Ordering::Relaxed);
+    let _ = log::set_boxed_logger(Box::new(SalrLogger));
     log::set_max_level(LevelFilter::Trace);
     once_cell::sync::Lazy::force(&START);
+}
+
+/// Override the active level filter (tests; `SALR_LOG` sets it at init).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Route all log output into an in-memory buffer and return the handle.
+/// Installs the logger if needed and raises the level to `Debug` so the
+/// trace layer's span lines are observable. Tests serialize around this
+/// (the sink is process-global); call [`uncapture`] when done.
+pub fn capture() -> Capture {
+    init();
+    set_level(Level::Debug);
+    let cap = Capture::default();
+    *SINK.lock().unwrap() = Sink::Capture(cap.clone());
+    cap
+}
+
+/// Restore the stderr sink and the `SALR_LOG` level after a [`capture`].
+pub fn uncapture() {
+    *SINK.lock().unwrap() = Sink::Stderr;
+    LEVEL.store(level_from_env() as u8, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_sees_trace_span_lines() {
+        let cap = capture();
+        crate::util::trace::set_enabled(true);
+        let t0 = crate::util::trace::now_us();
+        crate::util::trace::record_span_at(
+            crate::util::trace::TraceKind::Heartbeat,
+            987_654_301,
+            t0,
+            t0 + 3,
+            2,
+        );
+        assert!(
+            cap.contains("span heartbeat trace=987654301"),
+            "span debug line not captured: {:?}",
+            cap.lines()
+        );
+        uncapture();
+    }
 }

@@ -11,6 +11,9 @@ pub mod bench;
 // Same documented-API guarantee as `arena`.
 #[warn(missing_docs)]
 pub mod fault;
+// Same documented-API guarantee as `arena`.
+#[warn(missing_docs)]
+pub mod hist;
 pub mod json;
 pub mod logger;
 pub mod mem;
@@ -19,8 +22,12 @@ pub mod mem;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+// Same documented-API guarantee as `arena`.
+#[warn(missing_docs)]
+pub mod trace;
 
 pub use bench::Bench;
+pub use hist::Hist;
 pub use json::Json;
 pub use pool::WorkerPool;
 pub use rng::Rng;

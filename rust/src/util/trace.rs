@@ -1,0 +1,692 @@
+//! End-to-end request tracing: per-thread lock-free span rings, a
+//! propagated trace id, and Chrome `trace_event` export.
+//!
+//! Every tier of the serving path records typed span events — the
+//! batcher's `admit`/`prefill_chunk`/`decode_step`/`spec_draft`/
+//! `spec_verify`/`retire`, the router's `failover`/`heartbeat`, and the
+//! kernel tier's `pack_b`/`gemm_call` — into a ring buffer owned by the
+//! recording thread. A single [`enabled`] load guards every site, so the
+//! disabled cost is one relaxed atomic read and the *hot path never
+//! changes shape*: tracing reads clocks and writes to preallocated rings,
+//! it never takes a lock, allocates (after a ring's one-time lazy
+//! registration), or reorders work, which is why it cannot perturb the
+//! byte-identity determinism invariant.
+//!
+//! Events carry two stamps: a monotonic microsecond clock (`t_start_us`,
+//! for timelines and histograms) and a deterministic per-thread op
+//! counter (`op`, mirroring the `util::fault` idiom) so two traces of the
+//! same workload are diffable even though wall-clock stamps differ.
+//!
+//! The trace id is minted at the first tier that sees the request (the
+//! router, or `serve` for direct submissions), travels on the wire as a
+//! `"trace"` field — surviving the router's request re-keying — and flows
+//! to worker and pool threads through a thread-local context
+//! ([`with_trace`]), which is how a `pack_b` span recorded on a GEMM pool
+//! thread stitches to the request that triggered it. Batched decode steps
+//! run under trace id 0 (a step belongs to every ready sequence); the
+//! batcher records one `decode_step` span per ready sequence instead.
+//!
+//! Rings are fixed-capacity (`SALR_TRACE_RING`, default 4096 events) and
+//! overwrite oldest-first; the number of overwritten events is reported
+//! as `trace_dropped`. Readers use a seqlock per slot: a torn read (slot
+//! mid-rewrite) is skipped, never blocked on.
+
+use std::cell::{Cell, OnceCell, UnsafeCell};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// The span taxonomy. One variant per traced operation; the numeric value
+/// indexes the per-kind aggregate table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TraceKind {
+    /// Request accepted into a worker's decode batch (serve) or routed to
+    /// a backend (router). `arg` = prompt tokens (serve) / backend index
+    /// (router).
+    Admit = 0,
+    /// One chunked-prefill slice of a prompt. `arg` = chunk tokens.
+    PrefillChunk = 1,
+    /// One decode iteration, recorded per ready sequence. `arg` = batch
+    /// occupancy for that step.
+    DecodeStep = 2,
+    /// Draft-token proposal for one sequence. `arg` = drafted tokens.
+    SpecDraft = 3,
+    /// Batched verify forward for one sequence. `arg` = accepted tokens.
+    SpecVerify = 4,
+    /// Request retired (final reply fired). `arg` = generated tokens.
+    Retire = 5,
+    /// Router re-dispatched a request to a new backend before its first
+    /// token. `arg` = the replacement backend index.
+    Failover = 6,
+    /// One router heartbeat probe round. `arg` = healthy backend count.
+    Heartbeat = 7,
+    /// One B-panel pack (dense copy or fused bitmap/NF4 decode) inside
+    /// the blocked GEMM. `arg` = packed `kb * nb` element count.
+    PackB = 8,
+    /// One GEMM entry call. `arg` = `m * n * k` MAC count.
+    GemmCall = 9,
+}
+
+/// Number of span kinds (size of the aggregate table).
+pub const NKINDS: usize = 10;
+
+impl TraceKind {
+    /// Wire/JSON name of the kind.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceKind::Admit => "admit",
+            TraceKind::PrefillChunk => "prefill_chunk",
+            TraceKind::DecodeStep => "decode_step",
+            TraceKind::SpecDraft => "spec_draft",
+            TraceKind::SpecVerify => "spec_verify",
+            TraceKind::Retire => "retire",
+            TraceKind::Failover => "failover",
+            TraceKind::Heartbeat => "heartbeat",
+            TraceKind::PackB => "pack_b",
+            TraceKind::GemmCall => "gemm_call",
+        }
+    }
+
+    /// All kinds, in aggregate-table order.
+    pub const ALL: [TraceKind; NKINDS] = [
+        TraceKind::Admit,
+        TraceKind::PrefillChunk,
+        TraceKind::DecodeStep,
+        TraceKind::SpecDraft,
+        TraceKind::SpecVerify,
+        TraceKind::Retire,
+        TraceKind::Failover,
+        TraceKind::Heartbeat,
+        TraceKind::PackB,
+        TraceKind::GemmCall,
+    ];
+}
+
+/// One recorded span. Fixed-size and `Copy` so ring slots never allocate.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    /// The request's trace id (0 = process-level, not tied to a request).
+    pub trace_id: u64,
+    /// What happened.
+    pub kind: TraceKind,
+    /// Start stamp, microseconds on the process-monotonic trace clock.
+    pub t_start_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+    /// Deterministic per-thread op counter at record time.
+    pub op: u64,
+    /// Kind-specific payload (see [`TraceKind`]).
+    pub arg: u64,
+}
+
+const BLANK: SpanEvent = SpanEvent {
+    trace_id: 0,
+    kind: TraceKind::Admit,
+    t_start_us: 0,
+    dur_us: 0,
+    op: 0,
+    arg: 0,
+};
+
+/// One ring slot: a seqlock sequence word plus the event payload. The
+/// sequence is odd while the owning thread rewrites the slot; readers
+/// skip slots whose sequence is odd or changes across the read.
+struct Slot {
+    seq: AtomicU64,
+    ev: UnsafeCell<SpanEvent>,
+}
+
+// SAFETY: `ev` is only written by the ring's owning thread under the
+// odd/even seqlock protocol; concurrent readers detect torn reads via
+// `seq` and discard them.
+unsafe impl Sync for Slot {}
+
+/// A single-producer span ring. The owning thread is the only writer
+/// ([`Ring::push`]); any thread may snapshot it. Capacity is fixed at
+/// construction — recording never allocates.
+pub struct Ring {
+    name: String,
+    slots: Box<[Slot]>,
+    /// Total events ever pushed (monotonic; `widx - capacity` of the
+    /// oldest retained event's index once wrapped).
+    widx: AtomicU64,
+    /// Deterministic op counter for this thread's spans.
+    ops: AtomicU64,
+}
+
+impl Ring {
+    /// A ring with `capacity` preallocated slots, labelled `name` (the
+    /// lane name in exported traces).
+    pub fn new(name: &str, capacity: usize) -> Ring {
+        let cap = capacity.max(2);
+        Ring {
+            name: name.to_string(),
+            slots: (0..cap)
+                .map(|_| Slot {
+                    seq: AtomicU64::new(0),
+                    ev: UnsafeCell::new(BLANK),
+                })
+                .collect(),
+            widx: AtomicU64::new(0),
+            ops: AtomicU64::new(0),
+        }
+    }
+
+    /// Lane name (the owning thread's name at registration).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Events overwritten so far (oldest-first once the ring wraps).
+    pub fn dropped(&self) -> u64 {
+        self.widx
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Next deterministic op stamp. Only the owning thread calls this.
+    pub fn next_op(&self) -> u64 {
+        self.ops.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Append an event, overwriting the oldest once full. MUST only be
+    /// called by the ring's owning thread (single producer).
+    pub fn push(&self, ev: SpanEvent) {
+        let w = self.widx.load(Ordering::Relaxed);
+        let slot = &self.slots[(w % self.slots.len() as u64) as usize];
+        let s = slot.seq.load(Ordering::Relaxed);
+        slot.seq.store(s + 1, Ordering::Relaxed); // odd: mid-write
+        fence(Ordering::Release);
+        // SAFETY: single producer (owning thread); readers discard torn
+        // reads via the seqlock.
+        unsafe { *slot.ev.get() = ev };
+        slot.seq.store(s + 2, Ordering::Release);
+        self.widx.store(w + 1, Ordering::Release);
+    }
+
+    /// Snapshot the retained events, oldest first. Slots caught
+    /// mid-rewrite are skipped (bounded staleness, never a block).
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let w = self.widx.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let lo = w.saturating_sub(cap);
+        let mut out = Vec::with_capacity((w - lo) as usize);
+        for i in lo..w {
+            let slot = &self.slots[(i % cap) as usize];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                continue;
+            }
+            // SAFETY: a torn read is detected by the seq re-check below
+            // and discarded; read_volatile keeps the compiler from
+            // caching across the fence.
+            let ev = unsafe { std::ptr::read_volatile(slot.ev.get()) };
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) == s1 {
+                out.push(ev);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global state: enablement, clock, registry, per-kind aggregates.
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+static EPOCH: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+static REGISTRY: once_cell::sync::Lazy<Mutex<Vec<std::sync::Arc<Ring>>>> =
+    once_cell::sync::Lazy::new(|| Mutex::new(Vec::new()));
+static LANE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Per-kind running totals (count + total duration), powering the
+/// per-stage section of the `{"cmd":"metrics"}` reply without a ring walk.
+struct KindAgg {
+    count: AtomicU64,
+    total_us: AtomicU64,
+}
+const AGG_ZERO: KindAgg = KindAgg {
+    count: AtomicU64::new(0),
+    total_us: AtomicU64::new(0),
+};
+static AGG: [KindAgg; NKINDS] = [AGG_ZERO; NKINDS];
+
+thread_local! {
+    /// The request trace id active on this thread (0 = none).
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+    /// This thread's span ring, registered on first record.
+    static RING: OnceCell<std::sync::Arc<Ring>> = const { OnceCell::new() };
+}
+
+/// Is tracing on? One relaxed load — the whole cost of a disabled span
+/// site. `#[inline]` so call sites reduce to a load + branch.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on/off programmatically (tests, `--trace-out`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Enable tracing if `SALR_TRACE` is truthy. Idempotent; never *disables*
+/// (so a programmatic enable survives).
+pub fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        if std::env::var("SALR_TRACE").is_ok_and(|v| crate::util::truthy(&v)) {
+            ENABLED.store(true, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Microseconds on the process-monotonic trace clock.
+#[inline]
+pub fn now_us() -> u64 {
+    EPOCH.elapsed().as_micros() as u64
+}
+
+/// The trace id active on this thread (0 = none).
+#[inline]
+pub fn current_trace() -> u64 {
+    CURRENT.with(|c| c.get())
+}
+
+/// Run `f` with `id` as the thread's active trace id, restoring the
+/// previous id after — the propagation hop that carries a request's id
+/// into engine calls and GEMM pool closures.
+pub fn with_trace<R>(id: u64, f: impl FnOnce() -> R) -> R {
+    let prev = CURRENT.with(|c| c.replace(id));
+    let out = f();
+    CURRENT.with(|c| c.set(prev));
+    out
+}
+
+fn ring_capacity() -> usize {
+    static CAP: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
+        std::env::var("SALR_TRACE_RING")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(4096)
+            .max(2)
+    });
+    *CAP
+}
+
+fn with_ring<R>(f: impl FnOnce(&Ring) -> R) -> R {
+    RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let lane = LANE_SEQ.fetch_add(1, Ordering::Relaxed);
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("lane-{lane}"));
+            let ring = std::sync::Arc::new(Ring::new(&name, ring_capacity()));
+            REGISTRY.lock().unwrap().push(ring.clone());
+            ring
+        });
+        f(ring)
+    })
+}
+
+/// Record a span that started at `start_us` and ends now.
+#[inline]
+pub fn record_span(kind: TraceKind, trace_id: u64, start_us: u64, arg: u64) {
+    record_span_at(kind, trace_id, start_us, now_us(), arg);
+}
+
+/// Record a span with an explicit end stamp (the batcher records one
+/// `decode_step` span per ready sequence over the same measured interval).
+/// No-op when tracing is disabled.
+pub fn record_span_at(kind: TraceKind, trace_id: u64, start_us: u64, end_us: u64, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    let dur_us = end_us.saturating_sub(start_us);
+    with_ring(|ring| {
+        let op = ring.next_op();
+        ring.push(SpanEvent {
+            trace_id,
+            kind,
+            t_start_us: start_us,
+            dur_us,
+            op,
+            arg,
+        });
+        // Span-close debug line through the `log` facade, so tests (and
+        // SALR_LOG=debug operators) can observe emitted events. Gated on
+        // the level check: the formatting allocation only happens when a
+        // debug sink is actually listening.
+        if log::log_enabled!(target: "salr::trace", log::Level::Debug) {
+            log::debug!(
+                target: "salr::trace",
+                "span {} trace={} op={} dur_us={} arg={}",
+                kind.as_str(),
+                trace_id,
+                op,
+                dur_us,
+                arg
+            );
+        }
+    });
+    let agg = &AGG[kind as usize];
+    agg.count.fetch_add(1, Ordering::Relaxed);
+    agg.total_us.fetch_add(dur_us, Ordering::Relaxed);
+}
+
+/// Total spans overwritten (dropped oldest-first) across all rings.
+pub fn dropped() -> u64 {
+    REGISTRY.lock().unwrap().iter().map(|r| r.dropped()).sum()
+}
+
+/// Per-kind `{count, total_us}` aggregates as a JSON object — the
+/// `"stages"` section of the extended metrics reply.
+pub fn kind_totals_json() -> Json {
+    let mut obj = Json::obj();
+    for k in TraceKind::ALL {
+        let agg = &AGG[k as usize];
+        let count = agg.count.load(Ordering::Relaxed);
+        if count > 0 {
+            obj = obj.set(
+                k.as_str(),
+                Json::obj()
+                    .set("count", count as f64)
+                    .set("total_us", agg.total_us.load(Ordering::Relaxed) as f64),
+            );
+        }
+    }
+    obj
+}
+
+/// Snapshot every ring: `(lane_name, events_oldest_first)`.
+pub fn snapshot_all() -> Vec<(String, Vec<SpanEvent>)> {
+    let rings: Vec<std::sync::Arc<Ring>> = REGISTRY.lock().unwrap().clone();
+    rings
+        .iter()
+        .map(|r| (r.name().to_string(), r.snapshot()))
+        .collect()
+}
+
+/// All retained spans for one trace id, as `(lane, event)` sorted by
+/// start stamp.
+pub fn spans_for(trace_id: u64) -> Vec<(String, SpanEvent)> {
+    let mut out: Vec<(String, SpanEvent)> = Vec::new();
+    for (lane, evs) in snapshot_all() {
+        for ev in evs {
+            if ev.trace_id == trace_id {
+                out.push((lane.clone(), ev));
+            }
+        }
+    }
+    out.sort_by_key(|(_, ev)| (ev.t_start_us, u64::MAX - ev.dur_us));
+    out
+}
+
+fn span_json(lane: &str, proc_name: &str, ev: &SpanEvent, children: Vec<Json>) -> Json {
+    Json::obj()
+        .set("kind", ev.kind.as_str())
+        .set("lane", lane)
+        .set("proc", proc_name)
+        .set("t_start_us", ev.t_start_us as f64)
+        .set("dur_us", ev.dur_us as f64)
+        .set("op", ev.op as f64)
+        .set("arg", ev.arg as f64)
+        .set("children", Json::Arr(children))
+}
+
+/// The span tree for one trace id: spans nested by interval containment
+/// (a kernel `pack_b` span sits under the `prefill_chunk` that ran it),
+/// roots in start order. `proc_name` tags every span with the process
+/// tier that recorded it ("serve" / "router") so a router-merged tree
+/// keeps its provenance.
+pub fn span_tree_json(trace_id: u64, proc_name: &str) -> Json {
+    let spans = spans_for(trace_id);
+    // Nodes are built bottom-up with an interval-containment stack:
+    // spans arrive sorted by (start asc, dur desc), so a span's parent
+    // is the nearest stack entry whose interval still contains it.
+    struct Node {
+        lane: String,
+        ev: SpanEvent,
+        children: Vec<Node>,
+    }
+    fn to_json(n: &Node, proc_name: &str) -> Json {
+        let kids = n.children.iter().map(|c| to_json(c, proc_name)).collect();
+        span_json(&n.lane, proc_name, &n.ev, kids)
+    }
+    fn count_nodes(n: &Node) -> usize {
+        1 + n.children.iter().map(count_nodes).sum::<usize>()
+    }
+    let mut roots: Vec<Node> = Vec::new();
+    let mut stack: Vec<Node> = Vec::new();
+    let end = |n: &Node| n.ev.t_start_us + n.ev.dur_us;
+    for (lane, ev) in spans {
+        let node = Node {
+            lane,
+            ev,
+            children: Vec::new(),
+        };
+        while let Some(top) = stack.last() {
+            let contains = top.ev.t_start_us <= node.ev.t_start_us && end(top) >= end(&node);
+            if contains {
+                break;
+            }
+            let done = stack.pop().unwrap();
+            match stack.last_mut() {
+                Some(parent) => parent.children.push(done),
+                None => roots.push(done),
+            }
+        }
+        stack.push(node);
+    }
+    while let Some(done) = stack.pop() {
+        match stack.last_mut() {
+            Some(parent) => parent.children.push(done),
+            None => roots.push(done),
+        }
+    }
+    Json::obj()
+        .set("id", trace_id as f64)
+        .set("count", roots.iter().map(count_nodes).sum::<usize>() as f64)
+        .set(
+            "tree",
+            Json::Arr(roots.iter().map(|n| to_json(n, proc_name)).collect()),
+        )
+}
+
+/// Chrome `trace_event` JSON for every retained span: one `ph:"X"`
+/// complete event per span (ts/dur in microseconds, as the format wants)
+/// plus `ph:"M"` thread-name metadata per lane, wrapped in the
+/// `{"traceEvents":[...]}` object form `chrome://tracing` and Perfetto
+/// accept.
+pub fn chrome_trace_json(proc_name: &str) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    for (tid, (lane, evs)) in snapshot_all().into_iter().enumerate() {
+        events.push(
+            Json::obj()
+                .set("name", "thread_name")
+                .set("ph", "M")
+                .set("pid", 0.0)
+                .set("tid", tid as f64)
+                .set("args", Json::obj().set("name", lane.as_str())),
+        );
+        for ev in evs {
+            events.push(
+                Json::obj()
+                    .set("name", ev.kind.as_str())
+                    .set("cat", proc_name)
+                    .set("ph", "X")
+                    .set("ts", ev.t_start_us as f64)
+                    .set("dur", ev.dur_us as f64)
+                    .set("pid", 0.0)
+                    .set("tid", tid as f64)
+                    .set(
+                        "args",
+                        Json::obj()
+                            .set("trace", ev.trace_id as f64)
+                            .set("op", ev.op as f64)
+                            .set("arg", ev.arg as f64),
+                    ),
+            );
+        }
+    }
+    Json::obj()
+        .set("traceEvents", Json::Arr(events))
+        .to_string_compact()
+}
+
+/// Dump [`chrome_trace_json`] to `path` (the `--trace-out` sink, called
+/// at drain/shutdown).
+pub fn write_chrome_trace(path: &str, proc_name: &str) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json(proc_name))
+}
+
+static TRACE_OUT: once_cell::sync::Lazy<Mutex<Option<String>>> =
+    once_cell::sync::Lazy::new(|| Mutex::new(None));
+
+/// Arm `--trace-out`: enables tracing and remembers `path` so the serving
+/// tier can dump the Chrome trace at drain/shutdown ([`dump_trace_out`]).
+/// Process-global because `BatchPolicy`/`RouterPolicy` are `Copy` structs
+/// and cannot carry the path.
+pub fn set_trace_out(path: &str) {
+    set_enabled(true);
+    *TRACE_OUT.lock().unwrap() = Some(path.to_string());
+}
+
+/// Write the Chrome trace to the armed `--trace-out` path, if any.
+/// Idempotent-safe to call from every tier's shutdown tail: the dump
+/// re-runs (later snapshots strictly extend earlier ones), a missing
+/// path is a no-op, and an I/O failure is logged, never fatal.
+pub fn dump_trace_out(proc_name: &str) {
+    let path = TRACE_OUT.lock().unwrap().clone();
+    if let Some(path) = path {
+        match write_chrome_trace(&path, proc_name) {
+            Ok(()) => log::info!("wrote chrome trace to {path}"),
+            Err(e) => log::warn!("failed writing chrome trace to {path}: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_dropping_oldest_and_counts_dropped() {
+        let r = Ring::new("test", 4);
+        for i in 0..7u64 {
+            r.push(SpanEvent {
+                trace_id: i,
+                kind: TraceKind::DecodeStep,
+                t_start_us: i,
+                dur_us: 1,
+                op: r.next_op(),
+                arg: 0,
+            });
+        }
+        assert_eq!(r.dropped(), 3);
+        let snap = r.snapshot();
+        // Oldest three (0,1,2) overwritten; 3..7 retained in order.
+        assert_eq!(snap.len(), 4);
+        let ids: Vec<u64> = snap.iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, vec![3, 4, 5, 6]);
+        // Op stamps are the deterministic push order.
+        let ops: Vec<u64> = snap.iter().map(|e| e.op).collect();
+        assert_eq!(ops, vec![3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn ring_snapshot_below_capacity() {
+        let r = Ring::new("test", 8);
+        assert!(r.snapshot().is_empty());
+        assert_eq!(r.dropped(), 0);
+        r.push(SpanEvent {
+            trace_id: 42,
+            kind: TraceKind::Admit,
+            t_start_us: 5,
+            dur_us: 2,
+            op: 0,
+            arg: 9,
+        });
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].trace_id, 42);
+        assert_eq!(snap[0].arg, 9);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn with_trace_scopes_and_restores() {
+        assert_eq!(current_trace(), 0);
+        let inner = with_trace(7, || {
+            let mid = current_trace();
+            let nested = with_trace(9, current_trace);
+            (mid, nested, current_trace())
+        });
+        assert_eq!(inner, (7, 9, 7));
+        assert_eq!(current_trace(), 0);
+    }
+
+    #[test]
+    fn record_and_query_span_tree() {
+        set_enabled(true);
+        // Unique trace id so parallel tests in this binary can't collide.
+        let tid = 0xA11CE_0001;
+        let t0 = now_us();
+        // Outer span [t0, t0+100], child [t0+10, t0+40], sibling after.
+        record_span_at(TraceKind::PrefillChunk, tid, t0, t0 + 100, 3);
+        record_span_at(TraceKind::PackB, tid, t0 + 10, t0 + 40, 64);
+        record_span_at(TraceKind::Retire, tid, t0 + 200, t0 + 210, 1);
+        let tree = span_tree_json(tid, "serve");
+        assert_eq!(tree.get("count").unwrap().as_f64().unwrap(), 3.0);
+        let roots = tree.get("tree").unwrap().as_arr().unwrap();
+        assert_eq!(roots.len(), 2);
+        assert_eq!(roots[0].get("kind").unwrap().as_str().unwrap(), "prefill_chunk");
+        let kids = roots[0].get("children").unwrap().as_arr().unwrap();
+        assert_eq!(kids.len(), 1);
+        assert_eq!(kids[0].get("kind").unwrap().as_str().unwrap(), "pack_b");
+        assert_eq!(roots[1].get("kind").unwrap().as_str().unwrap(), "retire");
+        assert_eq!(roots[1].get("proc").unwrap().as_str().unwrap(), "serve");
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_thread_metadata() {
+        set_enabled(true);
+        let tid = 0xA11CE_0002;
+        record_span_at(TraceKind::GemmCall, tid, now_us(), now_us() + 5, 4096);
+        let text = chrome_trace_json("serve");
+        let parsed = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events
+            .iter()
+            .any(|e| e.get("ph").map(|p| p.as_str()) == Some(Some("M"))));
+        let ours = events
+            .iter()
+            .find(|e| {
+                e.at(&["args", "trace"]).and_then(Json::as_f64) == Some(tid as f64)
+            })
+            .expect("our span exported");
+        assert_eq!(ours.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(ours.get("name").unwrap().as_str().unwrap(), "gemm_call");
+        assert!(ours.get("ts").is_some() && ours.get("dur").is_some());
+    }
+
+    #[test]
+    fn disabled_record_is_a_noop() {
+        // Never *disable* globally (parallel tests): use a raw ring-free
+        // check instead — record under a unique id while toggling through
+        // the public API would race other tests, so assert the guard
+        // logic directly.
+        let tid = 0xA11CE_0003;
+        if !enabled() {
+            record_span_at(TraceKind::Admit, tid, 0, 10, 0);
+            assert!(spans_for(tid).is_empty());
+        }
+        set_enabled(true);
+        record_span_at(TraceKind::Admit, tid, 0, 10, 0);
+        assert_eq!(spans_for(tid).len(), 1);
+    }
+}
